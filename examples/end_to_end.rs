@@ -1,0 +1,114 @@
+//! End-to-end driver: the full three-layer system on the paper's workload.
+//!
+//! Exercises every layer in one run:
+//!   L1/L2 — the AOT artifacts (Pallas kernels inside JAX graphs, lowered
+//!           to HLO text by `make artifacts`) execute every gradient and
+//!           the parity encode via PJRT;
+//!   L3    — the rust coordinator solves the Eq. 13–16 policy, simulates
+//!           the §II-A wireless edge, runs the deadline-gated epoch loop,
+//!           and logs the NMSE curve.
+//!
+//! Workload: the paper's §IV setup (24 devices, ℓᵢ=300, d=500, SNR 0 dB,
+//! ν=(0.2,0.2)) — a 500-parameter regression over 7200 points, trained to
+//! NMSE ≤ 3·10⁻⁴, CFL vs uncoded, with the loss curves written to CSV.
+//! Falls back to the native backend (with a notice) if artifacts are
+//! missing. Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+
+use cfl::config::ExperimentConfig;
+use cfl::coordinator::SimCoordinator;
+use cfl::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.max_epochs = 3_000;
+
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.txt").exists() {
+        cfg.artifacts_dir = Some(art.to_str().unwrap().to_string());
+    } else {
+        eprintln!("NOTE: artifacts/ not built — using the native fallback backend.");
+        eprintln!("      run `make artifacts` for the full three-layer path.\n");
+    }
+
+    let mut sim = SimCoordinator::new(&cfg)?;
+    println!(
+        "end-to-end: {} devices × {} points, d = {}, backend = {}",
+        cfg.n_devices,
+        cfg.points_per_device,
+        cfg.model_dim,
+        sim.backend_name()
+    );
+
+    let policy = sim.policy()?;
+    println!(
+        "policy: δ = {:.3} (c = {}), t* = {:.2} s, E[R] = {:.0}/{}\n",
+        policy.delta,
+        policy.parity_rows,
+        policy.epoch_deadline,
+        policy.expected_return,
+        cfg.total_points()
+    );
+
+    let t0 = std::time::Instant::now();
+    let coded = sim.train_cfl()?;
+    let uncoded = sim.train_uncoded()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let ls = sim.ls_bound()?;
+
+    std::fs::create_dir_all("results").ok();
+    coded.trace.write_csv("results/end_to_end_cfl.csv")?;
+    uncoded.trace.write_csv("results/end_to_end_uncoded.csv")?;
+
+    // log a readable excerpt of the loss curves
+    println!("loss curve (decimated):");
+    let mut table = Table::new(&[
+        "t_cfl (s)", "epoch", "CFL NMSE", "|", "t_unc (s)", "epoch", "uncoded NMSE",
+    ]);
+    let (ct, ut) = (coded.trace.decimate(12), uncoded.trace.decimate(12));
+    for i in 0..ct.points.len().max(ut.points.len()) {
+        let c = ct.points.get(i);
+        let u = ut.points.get(i);
+        table.row(&[
+            c.map(|p| format!("{:.0}", p.time_s)).unwrap_or_default(),
+            c.map(|p| format!("{}", p.epoch)).unwrap_or_default(),
+            c.map(|p| format!("{:.3e}", p.nmse)).unwrap_or_default(),
+            "|".into(),
+            u.map(|p| format!("{:.0}", p.time_s)).unwrap_or_default(),
+            u.map(|p| format!("{}", p.epoch)).unwrap_or_default(),
+            u.map(|p| format!("{:.3e}", p.nmse)).unwrap_or_default(),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let tc = coded.time_to(cfg.target_nmse);
+    let tu = uncoded.time_to(cfg.target_nmse);
+    println!(
+        "CFL:     setup {:.0}s + {} epochs × t*={:.1}s → NMSE {:.2e}",
+        coded.setup_secs,
+        coded.epoch_times.len(),
+        coded.epoch_deadline,
+        coded.trace.final_nmse().unwrap()
+    );
+    println!(
+        "uncoded: {} epochs (mean {:.1}s) → NMSE {:.2e}",
+        uncoded.epoch_times.len(),
+        uncoded.epoch_times.iter().sum::<f64>() / uncoded.epoch_times.len().max(1) as f64,
+        uncoded.trace.final_nmse().unwrap()
+    );
+    println!("LS bound: {ls:.2e}");
+    match (tc, tu) {
+        (Some(tc), Some(tu)) => println!(
+            "\nconvergence to NMSE ≤ {:.0e}: CFL {tc:.0}s vs uncoded {tu:.0}s → coding gain {:.2}×",
+            cfg.target_nmse,
+            tu / tc
+        ),
+        _ => println!("\n(one of the runs did not reach the target NMSE)"),
+    }
+    println!("(host wall time {wall:.1}s; traces → results/end_to_end_*.csv)");
+
+    anyhow::ensure!(coded.converged.is_some(), "CFL failed to converge");
+    anyhow::ensure!(uncoded.converged.is_some(), "uncoded failed to converge");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Heterogeneity sweep: how the coding gain and the optimizer's policy
+//! respond as the edge gets more unequal (a fast, small-scale cousin of
+//! the Fig. 4 bench, with policy introspection the figure doesn't show).
+//!
+//! Run: `cargo run --release --example heterogeneity_sweep`
+
+use cfl::config::ExperimentConfig;
+use cfl::coordinator::SimCoordinator;
+use cfl::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    println!("heterogeneity sweep (small scale: 8 devices × 60 points, d = 40)\n");
+    let mut table = Table::new(&[
+        "ν", "δ*", "t* (s)", "punctured devices", "t_CFL (s)", "t_unc (s)", "gain",
+    ]);
+    for &nu in &[0.0, 0.1, 0.2, 0.3, 0.4] {
+        let mut cfg = ExperimentConfig::small();
+        cfg.nu_comp = nu;
+        cfg.nu_link = nu;
+        cfg.max_epochs = 6_000;
+        let mut sim = SimCoordinator::new(&cfg)?;
+        let policy = sim.policy()?;
+        // devices the optimizer fully punctures (all parity, no local work)
+        let idle = policy.device_loads.iter().filter(|&&l| l == 0).count();
+        let coded = sim.train_cfl()?;
+        let uncoded = sim.train_uncoded()?;
+        let (tc, tu) = (coded.time_to(cfg.target_nmse), uncoded.time_to(cfg.target_nmse));
+        table.row(&[
+            format!("{nu:.1}"),
+            format!("{:.3}", policy.delta),
+            format!("{:.2}", policy.epoch_deadline),
+            format!("{idle}/{}", cfg.n_devices),
+            tc.map(|t| format!("{t:.0}")).unwrap_or("—".into()),
+            tu.map(|t| format!("{t:.0}")).unwrap_or("—".into()),
+            match (tc, tu) {
+                (Some(tc), Some(tu)) => format!("{:.2}", tu / tc),
+                _ => "—".into(),
+            },
+        ]);
+    }
+    println!("{}", table.render());
+    println!("reading: as ν grows the optimizer punctures more of the slow tail,");
+    println!("the deadline t* shrinks relative to the uncoded wait-for-all epoch,");
+    println!("and the coding gain rises — the paper's Fig. 4 mechanism.");
+    Ok(())
+}

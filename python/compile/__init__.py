@@ -1,0 +1,6 @@
+"""Build-time compile path for CFL: JAX model (L2) + Pallas kernels (L1).
+
+Nothing in this package is imported at runtime — ``aot.py`` lowers the
+computations to HLO text once (``make artifacts``) and the rust coordinator
+loads the artifacts through PJRT.
+"""

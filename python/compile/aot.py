@@ -1,0 +1,121 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Each artifact is lowered for a fixed *padded* shape; the rust runtime
+zero-pads logical operands up to the artifact shape (exact for every graph
+here — see model.py docstring) and slices the result. Padded shapes are
+multiples of 128 to match the Pallas block size and TPU lane width.
+
+Outputs (``<out>/``):
+  <name>.hlo.txt       one per artifact
+  manifest.txt         "name kind file dims..." lines the rust runtime parses
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Padded artifact sizes. Paper setup (§IV): d = 500 → D = 512; per-device
+# shard ℓi = 300 → L = 512; composite parity c ≤ 0.28·7200 ≈ 2016 → C = 2048.
+# The *_s variants keep tests and the quickstart example fast.
+D, L, C = 512, 512, 2048
+DS, LS, CS = 128, 128, 128
+
+# CPU-artifact tile sizes (§Perf): interpret-mode Pallas lowers the grid
+# to an HLO loop whose per-step dynamic-slice copies dominate on the CPU
+# backend, so the AOT artifacts use the largest tiles that still fit the
+# (generous) CPU cache budget — one step for the 512-row gradient, four
+# for the 2048-row parity gradient. TPU builds would keep 128.
+_grad_cpu = functools.partial(model.device_grad, block_rows=512)
+_pgrad_cpu = functools.partial(model.server_parity_grad, block_rows=512)
+_encode_cpu = functools.partial(model.encode_parity, block_c=512, block_l=512)
+
+# name → (kind, fn, example_args, dims)
+#   kind encodes the operand convention the rust runtime implements.
+ARTIFACTS = {
+    "grad_dev": (
+        "grad", _grad_cpu,
+        (spec(L, D), spec(D, 1), spec(L, 1), spec(L, 1)), (L, D)),
+    "grad_dev_s": (
+        "grad", model.device_grad,
+        (spec(LS, DS), spec(DS, 1), spec(LS, 1), spec(LS, 1)), (LS, DS)),
+    "grad_srv": (
+        "pgrad", _pgrad_cpu,
+        (spec(C, D), spec(D, 1), spec(C, 1), spec(1, 1)), (C, D)),
+    "grad_srv_s": (
+        "pgrad", model.server_parity_grad,
+        (spec(CS, DS), spec(DS, 1), spec(CS, 1), spec(1, 1)), (CS, DS)),
+    "encode_dev": (
+        "encode", _encode_cpu,
+        (spec(C, L), spec(L, 1), spec(L, D), spec(L, 1)), (C, L, D)),
+    "encode_dev_s": (
+        "encode", model.encode_parity,
+        (spec(CS, LS), spec(LS, 1), spec(LS, DS), spec(LS, 1)), (CS, LS, DS)),
+    "gd_step": (
+        "gd_step", model.gd_step,
+        (spec(D, 1), spec(D, 1), spec(1, 1)), (D,)),
+    "nmse": (
+        "nmse", model.nmse,
+        (spec(D, 1), spec(D, 1)), (D,)),
+}
+
+
+def build(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (kind, fn, args, dims) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {kind} {fname} " + " ".join(map(str, dims)))
+        print(f"  {name:14s} kind={kind:8s} dims={dims}  {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name kind file dims...\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    build(args.out, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

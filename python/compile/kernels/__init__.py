@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for Coded Federated Learning (build-time only)."""
+
+from .encode import encode
+from .partial_grad import partial_grad
+
+__all__ = ["encode", "partial_grad"]

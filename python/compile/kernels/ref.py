@@ -1,0 +1,37 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against (pytest +
+hypothesis), and they double as documentation of the math:
+
+* ``partial_grad``  — Eq. (2) inner sum of the paper, for one data shard:
+  ``g = Xᵀ (X β − y)``.
+* ``encode``        — Eq. (9): parity generation from weighted raw data,
+  ``X̃ = G (w ⊙ X)``, ``ỹ = G (w ⊙ y)`` with ``w`` the diagonal of the
+  weight matrix ``W``.
+
+Shapes (all ``float32``):
+  X: (L, D)   β: (D, 1)   y: (L, 1)   G: (C, L)   w: (L, 1)
+"""
+
+import jax.numpy as jnp
+
+
+def partial_grad(x, beta, y):
+    """g = Xᵀ(Xβ − y);  x:(L,D), beta:(D,1), y:(L,1) → (D,1)."""
+    r = x @ beta - y
+    return x.T @ r
+
+
+def encode(g, w, x, y):
+    """Parity data (X̃, ỹ) = (G(w⊙X), G(w⊙y)).
+
+    g:(C,L), w:(L,1), x:(L,D), y:(L,1) → ((C,D), (C,1)).
+    """
+    xw = w * x
+    yw = w * y
+    return g @ xw, g @ yw
+
+
+def gd_step(beta, grad, lr_over_m):
+    """β ← β − (μ/m)·g — Eq. (3)."""
+    return beta - lr_over_m * grad

@@ -1,0 +1,82 @@
+"""L2 JAX model for Coded Federated Learning (build-time only).
+
+The paper's workload is full-batch linear-regression gradient descent
+(§II). The L2 graphs below are the units the rust coordinator executes via
+PJRT each epoch / at setup:
+
+* ``device_grad``   — Eq. (2) inner sum over one device's systematic shard,
+  with an optional row-validity mask so one padded artifact shape serves
+  every logical shard size. Calls the L1 ``partial_grad`` Pallas kernel.
+* ``server_parity_grad`` — Eq. (18) numerator: the master's redundant
+  gradient over the composite parity set, *normalized by the logical parity
+  count c* (passed as a scalar operand so the same artifact serves any c).
+* ``encode_parity`` — Eq. (9): one-time parity generation on a device.
+  Calls the L1 ``encode`` Pallas kernel.
+* ``gd_step``       — Eq. (3) model update (kept separate so the rust
+  coordinator can combine coded/uncoded gradients per Eqs. 18–19 first).
+
+Masking conventions (all exact, no approximation):
+  - Padded X rows are zero and their y entries zero → contribute 0 to g.
+  - Padded model columns are zero in X and β → g entries are 0 there.
+  - Parity-row padding: G rows beyond c are zero.
+The rust runtime zero-fills, so no mask operand is needed for correctness;
+``device_grad`` still takes a row mask to support *puncturing* (§III-C)
+without re-uploading a differently-padded shard.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import encode as _encode_kernel
+from .kernels import partial_grad as _grad_kernel
+
+
+def device_grad(x, beta, y, row_mask, *, block_rows=128):
+    """Partial gradient over a (possibly punctured) systematic shard.
+
+    g = Xᵀ diag(mask) (Xβ − y), computed as the Pallas kernel over the
+    mask-scaled rows. mask entries are 0.0 (punctured / padding) or 1.0.
+
+    ``block_rows`` is the L1 kernel's row-tile height — 128 targets TPU
+    VMEM; the AOT path lowers CPU artifacts with larger tiles (§Perf:
+    interpret-mode Pallas becomes an HLO loop whose per-step slice copies
+    dominate on CPU, so fewer/larger steps win there).
+
+    Shapes: x (L, D), beta (D, 1), y (L, 1), row_mask (L, 1) → (D, 1).
+    """
+    xm = x * row_mask
+    ym = y * row_mask
+    return _grad_kernel(xm, beta, ym, block_rows=block_rows)
+
+
+def server_parity_grad(xt, beta, yt, inv_c, *, block_rows=128):
+    """Normalized parity gradient (Eq. 18 LHS): (1/c)·X̃ᵀ(X̃β − ỹ).
+
+    ``inv_c`` is the scalar 1/c (shape (1, 1)) so one artifact covers every
+    redundancy level; padded parity rows are zero and drop out.
+
+    Shapes: xt (C, D), beta (D, 1), yt (C, 1), inv_c (1, 1) → (D, 1).
+    """
+    g = _grad_kernel(xt, beta, yt, block_rows=block_rows)
+    return g * inv_c
+
+
+def encode_parity(g, w, x, y, *, block_c=128, block_l=128):
+    """One-time device-side parity generation (Eq. 9).
+
+    Shapes: g (C, L), w (L, 1), x (L, D), y (L, 1) → ((C, D), (C, 1)).
+    """
+    return _encode_kernel(g, w, x, y, block_c=block_c, block_l=block_l)
+
+
+def gd_step(beta, grad, lr_over_m):
+    """β ← β − (μ/m)·g (Eq. 3). lr_over_m shape (1, 1)."""
+    return beta - lr_over_m * grad
+
+
+def nmse(beta_hat, beta_star):
+    """Normalized MSE ‖β̂ − β‖²/‖β‖² (§IV). Shapes (D,1),(D,1) → (1,1)."""
+    diff = beta_hat - beta_star
+    num = jnp.sum(diff * diff)
+    den = jnp.sum(beta_star * beta_star)
+    return (num / den).reshape(1, 1)

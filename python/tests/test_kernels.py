@@ -1,0 +1,169 @@
+"""L1 kernel validation: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (multiples of the block size and block-edge
+cases), seeds, and block parameters; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import encode, partial_grad, ref
+
+# Keep hypothesis example counts modest: interpret-mode Pallas re-traces per
+# shape, and each trace is seconds. Coverage comes from shape diversity.
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def rnd(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# partial_grad
+# ---------------------------------------------------------------------------
+
+class TestPartialGrad:
+    @given(
+        lblocks=st.integers(1, 4),
+        d=st.sampled_from([8, 128, 256]),
+        bm=st.sampled_from([8, 64, 128]),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, lblocks, d, bm, seed):
+        rng = np.random.default_rng(seed)
+        l = lblocks * bm
+        x, beta, y = rnd(rng, l, d), rnd(rng, d, 1), rnd(rng, l, 1)
+        got = partial_grad(jnp.asarray(x), jnp.asarray(beta), jnp.asarray(y), block_rows=bm)
+        want = ref.partial_grad(x, beta, y)
+        scale = max(1.0, float(np.abs(want).max()))
+        assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4 * scale, rtol=2e-4)
+
+    def test_single_block(self):
+        rng = np.random.default_rng(7)
+        x, beta, y = rnd(rng, 128, 64), rnd(rng, 64, 1), rnd(rng, 128, 1)
+        got = partial_grad(jnp.asarray(x), jnp.asarray(beta), jnp.asarray(y), block_rows=128)
+        assert_allclose(np.asarray(got), np.asarray(ref.partial_grad(x, beta, y)), rtol=2e-4, atol=1e-3)
+
+    def test_zero_row_padding_is_exact(self):
+        """Padded (zero) rows must not perturb the gradient."""
+        rng = np.random.default_rng(1)
+        x, beta, y = rnd(rng, 128, 32), rnd(rng, 32, 1), rnd(rng, 128, 1)
+        xp = np.concatenate([x, np.zeros((128, 32), np.float32)])
+        yp = np.concatenate([y, np.zeros((128, 1), np.float32)])
+        g0 = partial_grad(jnp.asarray(x), jnp.asarray(beta), jnp.asarray(y), block_rows=64)
+        g1 = partial_grad(jnp.asarray(xp), jnp.asarray(beta), jnp.asarray(yp), block_rows=64)
+        assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-6, atol=1e-6)
+
+    def test_zero_col_padding_is_exact(self):
+        """Padded (zero) model columns must yield zero gradient entries."""
+        rng = np.random.default_rng(2)
+        x, beta, y = rnd(rng, 64, 16), rnd(rng, 16, 1), rnd(rng, 64, 1)
+        xp = np.concatenate([x, np.zeros((64, 16), np.float32)], axis=1)
+        bp = np.concatenate([beta, np.zeros((16, 1), np.float32)])
+        g = np.asarray(partial_grad(jnp.asarray(xp), jnp.asarray(bp), jnp.asarray(y), block_rows=64))
+        assert_allclose(g[:16], np.asarray(ref.partial_grad(x, beta, y)), rtol=2e-4, atol=1e-4)
+        assert_allclose(g[16:], 0.0, atol=1e-6)
+
+    def test_rejects_misaligned_rows(self):
+        x = jnp.zeros((100, 16), jnp.float32)
+        with pytest.raises(ValueError, match="divisible"):
+            partial_grad(x, jnp.zeros((16, 1)), jnp.zeros((100, 1)), block_rows=64)
+
+    def test_zero_inputs(self):
+        g = partial_grad(jnp.zeros((64, 8)), jnp.zeros((8, 1)), jnp.zeros((64, 1)), block_rows=64)
+        assert float(jnp.abs(g).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# encode
+# ---------------------------------------------------------------------------
+
+class TestEncode:
+    @given(
+        cblocks=st.integers(1, 3),
+        lblocks=st.integers(1, 3),
+        d=st.sampled_from([8, 64, 128]),
+        blk=st.sampled_from([32, 128]),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, cblocks, lblocks, d, blk, seed):
+        rng = np.random.default_rng(seed)
+        c, l = cblocks * blk, lblocks * blk
+        g, x, y = rnd(rng, c, l), rnd(rng, l, d), rnd(rng, l, 1)
+        w = rng.uniform(0, 1, size=(l, 1)).astype(np.float32)
+        xt, yt = encode(jnp.asarray(g), jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                        block_c=blk, block_l=blk)
+        rxt, ryt = ref.encode(g, w, x, y)
+        assert_allclose(np.asarray(xt), np.asarray(rxt), rtol=3e-4, atol=3e-4 * max(1.0, float(np.abs(rxt).max())))
+        assert_allclose(np.asarray(yt), np.asarray(ryt), rtol=3e-4, atol=3e-4 * max(1.0, float(np.abs(ryt).max())))
+
+    def test_weight_fusion_equals_two_pass(self):
+        """G @ (w⊙X) computed fused must equal the unfused two-pass result."""
+        rng = np.random.default_rng(3)
+        g, x, y = rnd(rng, 64, 64), rnd(rng, 64, 32), rnd(rng, 64, 1)
+        w = rng.uniform(size=(64, 1)).astype(np.float32)
+        xt, yt = encode(jnp.asarray(g), jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                        block_c=32, block_l=32)
+        assert_allclose(np.asarray(xt), g @ (w * x), rtol=2e-4, atol=1e-3)
+        assert_allclose(np.asarray(yt), g @ (w * y), rtol=2e-4, atol=1e-3)
+
+    def test_linearity_in_generator(self):
+        """encode(G1+G2) == encode(G1) + encode(G2) — the property that makes
+        composite parity (Eq. 10) equal encoding over the concatenated data."""
+        rng = np.random.default_rng(4)
+        g1, g2 = rnd(rng, 32, 32), rnd(rng, 32, 32)
+        x, y = rnd(rng, 32, 16), rnd(rng, 32, 1)
+        w = rng.uniform(size=(32, 1)).astype(np.float32)
+        a = encode(jnp.asarray(g1 + g2), jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                   block_c=32, block_l=32)
+        b1 = encode(jnp.asarray(g1), jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                    block_c=32, block_l=32)
+        b2 = encode(jnp.asarray(g2), jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                    block_c=32, block_l=32)
+        assert_allclose(np.asarray(a[0]), np.asarray(b1[0]) + np.asarray(b2[0]), rtol=1e-4, atol=1e-3)
+        assert_allclose(np.asarray(a[1]), np.asarray(b1[1]) + np.asarray(b2[1]), rtol=1e-4, atol=1e-3)
+
+    def test_zero_padding_parity_rows(self):
+        """Zero generator rows (C padding) produce exactly zero parity."""
+        rng = np.random.default_rng(5)
+        g = rnd(rng, 32, 32)
+        g[16:] = 0.0
+        x, y = rnd(rng, 32, 16), rnd(rng, 32, 1)
+        w = np.ones((32, 1), np.float32)
+        xt, yt = encode(jnp.asarray(g), jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                        block_c=16, block_l=16)
+        assert float(np.abs(np.asarray(xt)[16:]).max()) == 0.0
+        assert float(np.abs(np.asarray(yt)[16:]).max()) == 0.0
+
+    def test_rejects_misaligned(self):
+        with pytest.raises(ValueError, match="divisible"):
+            encode(jnp.zeros((33, 32)), jnp.zeros((32, 1)), jnp.zeros((32, 8)),
+                   jnp.zeros((32, 1)), block_c=32, block_l=32)
+
+
+# ---------------------------------------------------------------------------
+# statistical property behind Eq. (18): GᵀG/c ≈ I for Gaussian G
+# ---------------------------------------------------------------------------
+
+class TestCodingIdentity:
+    def test_parity_gradient_approximates_weighted_gradient(self):
+        """(1/c)X̃ᵀ(X̃β−ỹ) → XᵀW²(Xβ−y) as c grows (weak LLN, Eq. 18)."""
+        rng = np.random.default_rng(6)
+        l, d = 64, 16
+        x, beta, y = rnd(rng, l, d), rnd(rng, d, 1), rnd(rng, l, 1)
+        w = rng.uniform(0.3, 1.0, size=(l, 1)).astype(np.float32)
+        errs = []
+        for c in (128, 1024, 4096):
+            g = rng.normal(size=(c, l)).astype(np.float32)
+            xt, yt = ref.encode(g, w, x, y)
+            parity_grad = np.asarray(xt).T @ (np.asarray(xt) @ beta - np.asarray(yt)) / c
+            target = x.T @ ((w ** 2) * (x @ beta - y))
+            errs.append(float(np.linalg.norm(parity_grad - target) / np.linalg.norm(target)))
+        assert errs[2] < errs[0], f"error should shrink with c: {errs}"
+        assert errs[2] < 0.2

@@ -1,0 +1,78 @@
+"""L2 model-graph tests: masking/puncturing semantics, update step, NMSE."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rnd(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+class TestDeviceGrad:
+    def test_full_mask_equals_plain_gradient(self):
+        rng = np.random.default_rng(0)
+        x, b, y = rnd(rng, 128, 64), rnd(rng, 64, 1), rnd(rng, 128, 1)
+        m = np.ones((128, 1), np.float32)
+        got = model.device_grad(jnp.asarray(x), jnp.asarray(b), jnp.asarray(y), jnp.asarray(m))
+        assert_allclose(np.asarray(got), ref.partial_grad(x, b, y), rtol=2e-4, atol=1e-3)
+
+    @given(seed=st.integers(0, 2**32 - 1), keep=st.integers(0, 128))
+    @settings(max_examples=6, deadline=None)
+    def test_puncturing_mask(self, seed, keep):
+        """Masked-out rows are excluded exactly (§III-C puncturing)."""
+        rng = np.random.default_rng(seed)
+        x, b, y = rnd(rng, 128, 32), rnd(rng, 32, 1), rnd(rng, 128, 1)
+        m = np.zeros((128, 1), np.float32)
+        m[:keep] = 1.0
+        got = model.device_grad(jnp.asarray(x), jnp.asarray(b), jnp.asarray(y), jnp.asarray(m))
+        want = ref.partial_grad(x[:keep], b, y[:keep]) if keep else np.zeros((32, 1), np.float32)
+        scale = max(1.0, float(np.abs(want).max()))
+        assert_allclose(np.asarray(got), want, atol=3e-4 * scale, rtol=3e-4)
+
+    def test_mask_scaling_is_quadratic_free(self):
+        """mask ∈ {0,1} ⇒ masking X and y once is exact (no mask² effect on
+        the residual term, because masked rows have both Xrow=0 and y=0)."""
+        rng = np.random.default_rng(1)
+        x, b, y = rnd(rng, 64, 16), rnd(rng, 16, 1), rnd(rng, 64, 1)
+        m = (rng.uniform(size=(64, 1)) < 0.5).astype(np.float32)
+        got = model.device_grad(jnp.asarray(x), jnp.asarray(b), jnp.asarray(y), jnp.asarray(m))
+        want = (m * x).T @ ((m * x) @ b - m * y)
+        assert_allclose(np.asarray(got), want, rtol=2e-4, atol=1e-3)
+
+
+class TestServerParityGrad:
+    def test_normalization_by_c(self):
+        rng = np.random.default_rng(2)
+        xt, b, yt = rnd(rng, 128, 32), rnd(rng, 32, 1), rnd(rng, 128, 1)
+        inv_c = np.array([[1.0 / 96.0]], np.float32)  # logical c < padded C
+        got = model.server_parity_grad(jnp.asarray(xt), jnp.asarray(b), jnp.asarray(yt), jnp.asarray(inv_c))
+        want = ref.partial_grad(xt, b, yt) / 96.0
+        assert_allclose(np.asarray(got), want, rtol=2e-4, atol=1e-3)
+
+
+class TestGdStepAndNmse:
+    @given(seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_gd_step(self, seed):
+        rng = np.random.default_rng(seed)
+        b, g = rnd(rng, 64, 1), rnd(rng, 64, 1)
+        lr = np.array([[0.0085 / 7200.0]], np.float32)
+        got = model.gd_step(jnp.asarray(b), jnp.asarray(g), jnp.asarray(lr))
+        assert_allclose(np.asarray(got), b - lr * g, rtol=1e-6, atol=1e-7)
+
+    def test_nmse_definition(self):
+        rng = np.random.default_rng(3)
+        bh, bs = rnd(rng, 32, 1), rnd(rng, 32, 1)
+        got = float(np.asarray(model.nmse(jnp.asarray(bh), jnp.asarray(bs)))[0, 0])
+        want = np.linalg.norm(bh - bs) ** 2 / np.linalg.norm(bs) ** 2
+        assert abs(got - want) < 1e-5 * max(1.0, want)
+
+    def test_nmse_zero_at_truth(self):
+        b = rnd(np.random.default_rng(4), 16, 1)
+        assert float(np.asarray(model.nmse(jnp.asarray(b), jnp.asarray(b)))[0, 0]) == 0.0

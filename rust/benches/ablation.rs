@@ -1,0 +1,122 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Setup-cost accounting** (the paper's under-specified model): how
+//!    the coding gain at each δ changes under base-rate vs adapted-rate
+//!    vs per-packet parity-upload accounting. Under the pessimistic
+//!    models, large δ stops paying (interior/edge optima move) and the
+//!    paper's "uncoded wins early" crossing re-appears.
+//! 2. **Generator distribution** (§III-A offers both): Gaussian vs
+//!    Bernoulli(½)/Rademacher codes — convergence must be statistically
+//!    indistinguishable (both satisfy GᵀG/c → I).
+//! 3. **Weighting (Eq. 17) on/off**: dropping the weight matrix biases
+//!    the combined gradient; measured as the NMSE floor it converges to.
+//!
+//! Run: `cargo bench --bench ablation` (reduced sweep with `-- --quick`).
+
+mod common;
+
+use cfl::config::{ExperimentConfig, GeneratorKind, SetupCostKind};
+use cfl::coordinator::SimCoordinator;
+use cfl::metrics::Table;
+
+fn main() {
+    common::banner("ablation", "setup-cost models, generator kinds, Eq. 17 weighting");
+    let quick = common::quick_mode();
+
+    // --- 1. setup-cost accounting ----------------------------------------
+    println!("\n[1] setup-cost accounting vs coding gain (ν = (0.2, 0.2), target 3e-4)");
+    let deltas: &[f64] = if quick { &[0.065, 0.28] } else { &[0.065, 0.13, 0.28] };
+    let mut table = Table::new(&["setup model", "δ", "setup (s)", "t→target (s)", "gain"]);
+    let mut base_small_delta_gain = 0.0;
+    let mut perpkt_small_delta_gain = 0.0;
+    let mut perpkt_large_delta_gain = f64::NAN;
+    for kind in [SetupCostKind::BaseRate, SetupCostKind::AdaptedRate, SetupCostKind::PerPacket] {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.setup_cost = kind;
+        cfg.max_epochs = if quick { 900 } else { 2_000 };
+        let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
+        let uncoded = sim.train_uncoded().expect("uncoded");
+        let tu = uncoded.time_to(cfg.target_nmse).expect("uncoded converged");
+        for &delta in deltas {
+            sim.cfg.delta = Some(delta);
+            let run = sim.train_cfl().expect("cfl");
+            let (t, gain) = match run.time_to(cfg.target_nmse) {
+                Some(t) => (t, tu / t),
+                None => (f64::NAN, f64::NAN),
+            };
+            table.row(&[
+                format!("{kind:?}"),
+                format!("{delta:.3}"),
+                format!("{:.0}", run.setup_secs),
+                format!("{t:.0}"),
+                format!("{gain:.2}"),
+            ]);
+            match (kind, delta) {
+                (SetupCostKind::BaseRate, d) if d < 0.1 => base_small_delta_gain = gain,
+                (SetupCostKind::PerPacket, d) if d < 0.1 => perpkt_small_delta_gain = gain,
+                (SetupCostKind::PerPacket, d) if d > 0.2 => perpkt_large_delta_gain = gain,
+                _ => {}
+            }
+        }
+    }
+    println!("{}", table.render());
+    let ordering_flips = perpkt_large_delta_gain < perpkt_small_delta_gain;
+    println!(
+        "  per-packet accounting punishes large δ (gain {:.2} < {:.2}): {}",
+        perpkt_large_delta_gain,
+        perpkt_small_delta_gain,
+        if ordering_flips { "PASS" } else { "FAIL" }
+    );
+    let _ = base_small_delta_gain;
+
+    // --- 2. generator distribution ---------------------------------------
+    println!("\n[2] Gaussian vs Bernoulli(1/2) generator (δ = 0.13, small scale)");
+    let mut table = Table::new(&["generator", "epochs", "final NMSE"]);
+    let mut finals = Vec::new();
+    for kind in [GeneratorKind::Gaussian, GeneratorKind::Bernoulli] {
+        let mut cfg = ExperimentConfig::small();
+        cfg.generator = kind;
+        cfg.delta = Some(0.13);
+        cfg.max_epochs = 2_500;
+        cfg.target_nmse = 0.0;
+        let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
+        let run = sim.train_cfl().expect("cfl");
+        let f = run.trace.final_nmse().unwrap();
+        finals.push(f);
+        table.row(&[format!("{kind:?}"), format!("{}", run.epoch_times.len()), format!("{f:.3e}")]);
+    }
+    println!("{}", table.render());
+    let same_decade = (finals[0].log10() - finals[1].log10()).abs() < 0.5;
+    println!("  codes statistically equivalent: {}", if same_decade { "PASS" } else { "FAIL" });
+
+    // --- 3. Eq. 17 weighting on/off --------------------------------------
+    // "off" is emulated by δ large + weights forced to 1 via a miss-prob
+    // of 0 — the parity gradient then double-counts the on-time devices.
+    println!("\n[3] Eq. 17 weighting (unbiasedness ablation, small scale)");
+    let mut cfg = ExperimentConfig::small();
+    cfg.delta = Some(0.2);
+    cfg.max_epochs = 2_500;
+    cfg.target_nmse = 0.0;
+    let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
+    let weighted = sim.train_cfl().expect("weighted");
+    let unweighted = {
+        let mut policy = sim.policy().expect("policy");
+        for p in policy.miss_probs.iter_mut() {
+            *p = 1.0; // w_ik = 1 everywhere → parity counts every point fully
+        }
+        sim.train_cfl_with_policy(&policy).expect("unweighted")
+    };
+    let (fw, fu) = (
+        weighted.trace.final_nmse().unwrap(),
+        unweighted.trace.final_nmse().unwrap(),
+    );
+    println!("  weighted   final NMSE: {fw:.3e}");
+    println!("  unweighted final NMSE: {fu:.3e} (double-counts on-time devices)");
+    // the unweighted combiner over-counts on-time devices by up to (1+Pᵢ);
+    // at small scale that shows up as a ~1.2–1.5× worse stationary floor
+    let bias_visible = fu > fw * 1.2;
+    println!("  weighting improves the floor: {}", if bias_visible { "PASS" } else { "FAIL" });
+
+    assert!(ordering_flips && same_decade && bias_visible, "ablation checks failed");
+    println!("\ndone.");
+}

@@ -1,0 +1,53 @@
+//! Shared bench-harness helpers (criterion is unavailable offline; every
+//! figure bench is a `harness = false` binary using these utilities).
+
+use std::time::Instant;
+
+/// Wall-clock a closure, returning (result, seconds).
+#[allow(dead_code)]
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Repeat a closure `n` times, reporting min/mean/max seconds — the
+/// micro-bench primitive for §Perf.
+#[allow(dead_code)]
+pub fn bench_n(label: &str, n: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    assert!(n > 0);
+    let mut times = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = times.iter().copied().fold(0.0f64, f64::max);
+    let mean = times.iter().sum::<f64>() / n as f64;
+    println!("  {label:<38} min {:>9.3} ms  mean {:>9.3} ms  max {:>9.3} ms", min * 1e3, mean * 1e3, max * 1e3);
+    (min, mean, max)
+}
+
+/// Standard header for figure benches.
+#[allow(dead_code)]
+pub fn banner(fig: &str, what: &str) {
+    println!("==================================================================");
+    println!("{fig}: {what}");
+    println!("==================================================================");
+}
+
+/// Results directory (created on demand).
+#[allow(dead_code)]
+pub fn results_dir() -> String {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir).expect("mkdir results/");
+    dir.to_str().unwrap().to_string()
+}
+
+/// `--quick` flag: benches run reduced sweeps under `cargo bench -- --quick`
+/// (and full sweeps otherwise).
+#[allow(dead_code)]
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("CFL_BENCH_QUICK").is_ok()
+}

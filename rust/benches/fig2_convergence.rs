@@ -1,0 +1,98 @@
+//! Fig. 2 — Convergence (NMSE vs training time) of CFL for different
+//! coding-redundancy values, against uncoded FL and the LS bound.
+//!
+//! Paper setup: ν = (0.2, 0.2), δ ∈ {0 (uncoded), 0.065, 0.13, 0.16,
+//! 0.28}; coded curves start late (parity upload) but clip the straggler
+//! tail and overtake at low NMSE; at NMSE 0.1 uncoded wins, at 10⁻³ a
+//! coded curve wins.
+//!
+//! Writes one CSV per curve under `results/fig2/`.
+
+mod common;
+
+use cfl::config::ExperimentConfig;
+use cfl::coordinator::SimCoordinator;
+use cfl::metrics::Table;
+
+fn main() {
+    common::banner("Fig. 2", "NMSE vs training time for δ sweeps, ν=(0.2,0.2)");
+    let mut cfg = ExperimentConfig::paper();
+    cfg.max_epochs = if common::quick_mode() { 900 } else { 3_000 };
+    cfg.target_nmse = 2e-4; // run past 3e-4 so the curves cross the floor region
+    let deltas = [0.065, 0.13, 0.16, 0.28];
+
+    let dir = common::results_dir();
+    std::fs::create_dir_all(format!("{dir}/fig2")).unwrap();
+    let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
+    let ls = sim.ls_bound().expect("ls bound");
+
+    let (mut runs, secs) = common::timed(|| {
+        let mut runs = Vec::new();
+        let uncoded = sim.train_uncoded().expect("uncoded run");
+        uncoded.trace.write_csv(&format!("{dir}/fig2/uncoded.csv")).unwrap();
+        runs.push(uncoded);
+        for &delta in &deltas {
+            sim.cfg.delta = Some(delta);
+            let policy = sim.policy().expect("policy");
+            let run = sim.train_cfl_with_policy(&policy).expect("cfl run");
+            run.trace.write_csv(&format!("{dir}/fig2/cfl_delta{delta}.csv")).unwrap();
+            runs.push(run);
+        }
+        runs
+    });
+
+    // paper-style summary: time to reach several NMSE levels per curve
+    let levels = [1e-1, 1e-2, 1e-3, 3e-4];
+    let mut table = Table::new(&[
+        "curve", "setup (s)", "t*(s)", "t→1e-1", "t→1e-2", "t→1e-3", "t→3e-4", "final NMSE",
+    ]);
+    for run in &runs {
+        let mut cells = vec![
+            run.label.clone(),
+            format!("{:.0}", run.setup_secs),
+            if run.epoch_deadline.is_finite() {
+                format!("{:.1}", run.epoch_deadline)
+            } else {
+                "inf".into()
+            },
+        ];
+        for &lv in &levels {
+            cells.push(
+                run.trace.time_to_nmse(lv).map(|t| format!("{t:.0}")).unwrap_or("—".into()),
+            );
+        }
+        cells.push(format!("{:.2e}", run.trace.final_nmse().unwrap()));
+        table.row(&cells);
+    }
+    println!("{}", table.render());
+    println!("LS bound NMSE: {ls:.3e}");
+
+    // Shape checks against the paper's narrative. Note on the paper's
+    // "uncoded outperforms at NMSE 0.1" crossing: it requires the parity
+    // upload to cost thousands of seconds, which the paper's figure
+    // magnitudes elsewhere contradict (see DESIGN.md §Substitutions) —
+    // with base-rate setup accounting the offsets are real but small, so
+    // the robust, checkable structure is (a) coded pays an upfront offset
+    // ordered by δ, (b) the advantage of coding *grows* as the NMSE target
+    // tightens (coding pays off late), (c) a coded curve wins at 1e-3.
+    let uncoded = runs.remove(0);
+    let t_u_fine = uncoded.trace.time_to_nmse(1e-3);
+    let fine_winner_is_coded = runs
+        .iter()
+        .filter_map(|r| r.trace.time_to_nmse(1e-3))
+        .any(|t| t_u_fine.map(|tu| t < tu).unwrap_or(true));
+    let offsets_ordered = runs.windows(2).all(|w| w[0].setup_secs <= w[1].setup_secs)
+        && runs.iter().all(|r| r.setup_secs > 0.0);
+    // larger δ ⇒ shorter deadline ⇒ faster convergence at fine targets
+    // (with base-rate setup the offsets never dominate, so the ordering is
+    // monotone in δ; under per-packet accounting large δ loses instead —
+    // see the `ablation` bench)
+    let t3: Vec<f64> = runs.iter().filter_map(|r| r.trace.time_to_nmse(1e-3)).collect();
+    let delta_ordering = t3.len() == runs.len() && t3.windows(2).all(|w| w[1] <= w[0] + 1e-9);
+    println!("\nshape checks (coding pays upfront, wins late; offsets ordered by δ):");
+    println!("  t→1e-3 monotone ↓ in δ:        {}", if delta_ordering { "PASS" } else { "FAIL" });
+    println!("  a coded curve fastest to 1e-3: {}", if fine_winner_is_coded { "PASS" } else { "FAIL" });
+    println!("  setup offsets ordered by δ:    {}", if offsets_ordered { "PASS" } else { "FAIL" });
+    println!("({secs:.1}s; CSVs → {dir}/fig2/)");
+    assert!(delta_ordering && fine_winner_is_coded && offsets_ordered);
+}

@@ -1,0 +1,77 @@
+//! Fig. 4 — Coding gain across heterogeneity levels.
+//!
+//! Paper: the ratio of uncoded to CFL convergence time (to NMSE ≤ 3·10⁻⁴)
+//! over the grid (ν_comp, ν_link) ∈ {0, 0.1, 0.2}²: ≈ 1 at (0,0) and up
+//! to "nearly 4×" at (0.2, 0.2), monotone-ish in both axes. CFL here uses
+//! the optimizer's own δ (Eqs. 14–16), as in the paper.
+//!
+//! Writes `results/fig4_coding_gain.csv`.
+
+mod common;
+
+use cfl::config::ExperimentConfig;
+use cfl::coordinator::SimCoordinator;
+use cfl::metrics::{CsvWriter, Table};
+
+fn main() {
+    common::banner("Fig. 4", "coding gain vs heterogeneity (target NMSE 3e-4)");
+    let grid = [0.0, 0.1, 0.2];
+    let quick = common::quick_mode();
+
+    let dir = common::results_dir();
+    let mut csv = CsvWriter::create(
+        format!("{dir}/fig4_coding_gain.csv"),
+        &["nu_comp", "nu_link", "delta_opt", "t_cfl_s", "t_uncoded_s", "gain"],
+    )
+    .unwrap();
+
+    let mut table = Table::new(&["ν_comp", "ν_link", "δ*", "t_CFL (s)", "t_unc (s)", "gain"]);
+    let mut gains = std::collections::BTreeMap::new();
+    let (_, secs) = common::timed(|| {
+        for &nu_comp in &grid {
+            for &nu_link in &grid {
+                let mut cfg = ExperimentConfig::paper();
+                cfg.nu_comp = nu_comp;
+                cfg.nu_link = nu_link;
+                cfg.max_epochs = if quick { 1_200 } else { 3_000 };
+                let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
+                let coded = sim.train_cfl().expect("cfl");
+                let uncoded = sim.train_uncoded().expect("uncoded");
+                let (tc, tu) = (
+                    coded.time_to(cfg.target_nmse).unwrap_or(f64::NAN),
+                    uncoded.time_to(cfg.target_nmse).unwrap_or(f64::NAN),
+                );
+                let gain = tu / tc;
+                gains.insert(((nu_comp * 10.0) as u32, (nu_link * 10.0) as u32), gain);
+                csv.write_row(&[nu_comp, nu_link, coded.delta, tc, tu, gain]).unwrap();
+                table.row(&[
+                    format!("{nu_comp:.1}"),
+                    format!("{nu_link:.1}"),
+                    format!("{:.3}", coded.delta),
+                    format!("{tc:.0}"),
+                    format!("{tu:.0}"),
+                    format!("{gain:.2}"),
+                ]);
+            }
+        }
+    });
+    csv.flush().unwrap();
+    println!("{}", table.render());
+
+    let g00 = gains[&(0, 0)];
+    let g11 = gains[&(1, 1)];
+    let g22 = gains[&(2, 2)];
+    let min_gain = gains.values().cloned().fold(f64::INFINITY, f64::min);
+    println!("shape checks (paper: ≈1 at (0,0), growing with heterogeneity — 'nearly 4' at (0.2,0.2)):");
+    let homogeneous_near_one = g00 < 1.6;
+    let homogeneous_is_min = (g00 - min_gain).abs() < 1e-9;
+    let diagonal_grows = g00 < g11 && g11 < g22 && g22 > 1.5;
+    println!("  gain(0,0) ≈ 1 (got {g00:.2}):            {}", if homogeneous_near_one { "PASS" } else { "FAIL" });
+    println!("  gain(0,0) is the grid minimum:           {}", if homogeneous_is_min { "PASS" } else { "FAIL" });
+    println!("  diagonal grows {g00:.2} → {g11:.2} → {g22:.2}:   {}", if diagonal_grows { "PASS" } else { "FAIL" });
+    println!("({secs:.1}s; CSV → {dir}/fig4_coding_gain.csv)");
+    assert!(
+        homogeneous_near_one && homogeneous_is_min && diagonal_grows,
+        "Fig. 4 shape check failed"
+    );
+}

@@ -1,0 +1,97 @@
+//! Micro-benchmarks of the hot paths (§Perf): the gradient kernels
+//! (native and PJRT), parity encode, the optimizer, and one full epoch.
+//!
+//! Run: `cargo bench --bench micro_hotpath` (add `-- --quick` for a short
+//! pass). Results feed EXPERIMENTS.md §Perf.
+
+mod common;
+
+use cfl::config::ExperimentConfig;
+use cfl::coordinator::SimCoordinator;
+use cfl::fl::{GradBackend, NativeBackend};
+use cfl::lb;
+use cfl::linalg::Mat;
+use cfl::rng::Rng;
+use cfl::simnet::Fleet;
+
+fn main() {
+    common::banner("micro", "hot-path kernels and epoch step");
+    let n = if common::quick_mode() { 5 } else { 20 };
+    let mut rng = Rng::new(1);
+
+    // --- L3-native gradient kernels (paper shapes) -----------------------
+    let x = Mat::randn(7200, 500, &mut rng);
+    let beta = Mat::randn(500, 1, &mut rng);
+    let y = Mat::randn(7200, 1, &mut rng);
+    let mut native = NativeBackend;
+    println!("\nnative kernels:");
+    let mut sink = 0.0f32;
+    common::bench_n("partial_grad 7200x500 (uncoded epoch)", n, || {
+        sink += native.partial_grad(&x, &beta, &y).unwrap()[(0, 0)];
+    });
+    let x_dev = Mat::randn(300, 500, &mut rng);
+    let y_dev = Mat::randn(300, 1, &mut rng);
+    common::bench_n("partial_grad 300x500 (device shard)", n, || {
+        sink += native.partial_grad(&x_dev, &beta, &y_dev).unwrap()[(0, 0)];
+    });
+    let xt = Mat::randn(936, 500, &mut rng);
+    let yt = Mat::randn(936, 1, &mut rng);
+    common::bench_n("parity_grad 936x500 (master, δ=0.13)", n, || {
+        sink += native.parity_grad(&xt, &beta, &yt, 936).unwrap()[(0, 0)];
+    });
+    let g = Mat::randn(936, 300, &mut rng);
+    let w: Vec<f32> = (0..300).map(|i| 0.5 + (i % 7) as f32 * 0.05).collect();
+    common::bench_n("encode 936x300x500 (device setup)", n, || {
+        sink += native.encode(&g, &w, &x_dev, &y_dev).unwrap().0[(0, 0)];
+    });
+
+    // --- PJRT kernels (when artifacts are built) -------------------------
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.txt").exists() {
+        let mut pjrt = cfl::runtime::PjrtBackend::load(art.to_str().unwrap()).unwrap();
+        println!("\npjrt kernels (AOT artifacts, includes pad/copy):");
+        // warm the executable cache out of band
+        pjrt.partial_grad(&x_dev, &beta, &y_dev).unwrap();
+        common::bench_n("partial_grad 300x500 → grad_dev", n, || {
+            sink += pjrt.partial_grad(&x_dev, &beta, &y_dev).unwrap()[(0, 0)];
+        });
+        pjrt.parity_grad(&xt, &beta, &yt, 936).unwrap();
+        common::bench_n("parity_grad 936x500 → grad_srv", n, || {
+            sink += pjrt.parity_grad(&xt, &beta, &yt, 936).unwrap()[(0, 0)];
+        });
+        pjrt.encode(&g, &w, &x_dev, &y_dev).unwrap();
+        common::bench_n("encode 936x300x500 → encode_dev", n, || {
+            sink += pjrt.encode(&g, &w, &x_dev, &y_dev).unwrap().0[(0, 0)];
+        });
+        // §Perf fast path: device-resident operands, β-only upload per call
+        let h = pjrt.register_shard(&x_dev, &y_dev).unwrap().expect("registered");
+        common::bench_n("partial_grad 300x500 registered", n, || {
+            sink += pjrt.partial_grad_registered(h, &beta).unwrap()[(0, 0)];
+        });
+        let hp = pjrt.register_parity(&xt, &yt, 936).unwrap().expect("registered parity");
+        common::bench_n("parity_grad 936x500 registered", n, || {
+            sink += pjrt.parity_grad_registered(hp, &beta).unwrap()[(0, 0)];
+        });
+    } else {
+        println!("\n(pjrt kernels skipped: run `make artifacts`)");
+    }
+
+    // --- optimizer and epoch step ----------------------------------------
+    println!("\ncoordination:");
+    let cfg = ExperimentConfig::paper();
+    let fleet = Fleet::from_config(&cfg, &mut Rng::new(2));
+    common::bench_n("optimizer Eqs.13-16 (24 devices)", n, || {
+        sink += lb::optimize(&fleet, 2160, 1.0).unwrap().epoch_deadline as f32;
+    });
+
+    let mut cfg_epoch = ExperimentConfig::paper();
+    cfg_epoch.max_epochs = 25;
+    cfg_epoch.target_nmse = 0.0;
+    let mut sim = SimCoordinator::new(&cfg_epoch).unwrap();
+    common::bench_n("25 CFL epochs, paper scale (native)", 3.min(n), || {
+        sink += sim.train_cfl().unwrap().trace.final_nmse().unwrap() as f32;
+    });
+
+    std::hint::black_box(sink);
+    println!("\ndone.");
+}

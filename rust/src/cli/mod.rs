@@ -1,0 +1,168 @@
+//! Dependency-free command-line parsing (clap is unavailable offline).
+//!
+//! Supports the subset the `cfl` binary and examples need: subcommands,
+//! `--flag`, `--key value` / `--key=value` options, typed lookups with
+//! defaults, positional arguments, and generated `--help` text.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for help text and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Rendered in help; also used to mark value-taking options.
+    pub value_hint: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Command-line parser with a declared option set.
+pub struct Parser {
+    about: &'static str,
+    subcommands: Vec<(&'static str, &'static str)>,
+    opts: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(about: &'static str) -> Self {
+        Self { about, subcommands: Vec::new(), opts: Vec::new() }
+    }
+
+    /// Declare a subcommand (first bare word on the command line).
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    /// Declare a `--key <value>` option.
+    pub fn opt(mut self, name: &'static str, value_hint: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, value_hint: Some(value_hint) });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, value_hint: None });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self, program: &str) -> String {
+        let mut s = format!("{}\n\nUsage: {program}", self.about);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <command>");
+        }
+        s.push_str(" [options]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nCommands:\n");
+            for (name, help) in &self.subcommands {
+                s.push_str(&format!("  {name:<22} {help}\n"));
+            }
+        }
+        s.push_str("\nOptions:\n");
+        for o in &self.opts {
+            let lhs = match o.value_hint {
+                Some(hint) => format!("--{} <{}>", o.name, hint),
+                None => format!("--{}", o.name),
+            };
+            s.push_str(&format!("  {lhs:<22} {}\n", o.help));
+        }
+        s.push_str("  --help                 show this message\n");
+        s
+    }
+
+    /// Parse an argument vector (argv[0] included).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args {
+            program: argv.first().cloned().unwrap_or_else(|| "cfl".into()),
+            ..Default::default()
+        };
+        let mut it = argv.iter().skip(1).peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                println!("{}", self.help(&args.program));
+                std::process::exit(0);
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let Some(spec) = self.opts.iter().find(|o| o.name == name) else {
+                    bail!("unknown option --{name} (see --help)");
+                };
+                if spec.value_hint.is_some() {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => match it.next() {
+                            Some(v) => v.clone(),
+                            None => bail!("option --{name} requires a value"),
+                        },
+                    };
+                    args.options.insert(name, value);
+                } else {
+                    if inline.is_some() {
+                        bail!("flag --{name} takes no value");
+                    }
+                    args.flags.push(name);
+                }
+            } else if args.subcommand.is_none()
+                && args.positional.is_empty()
+                && self.subcommands.iter().any(|(n, _)| n == tok)
+            {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`.
+    pub fn parse_env(&self) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().collect();
+        self.parse(&argv)
+    }
+}
+
+impl Args {
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{name} '{s}': {e}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests;

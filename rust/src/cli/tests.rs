@@ -1,0 +1,69 @@
+use super::*;
+
+fn parser() -> Parser {
+    Parser::new("test tool")
+        .subcommand("train", "run training")
+        .subcommand("optimize", "run the load optimizer")
+        .opt("seed", "u64", "root seed")
+        .opt("delta", "f64", "coding redundancy")
+        .flag("verbose", "chatty output")
+}
+
+fn argv(s: &str) -> Vec<String> {
+    std::iter::once("cfl".to_string()).chain(s.split_whitespace().map(String::from)).collect()
+}
+
+#[test]
+fn parses_subcommand_options_flags() {
+    let a = parser().parse(&argv("train --seed 42 --delta=0.13 --verbose extra1 extra2")).unwrap();
+    assert_eq!(a.subcommand(), Some("train"));
+    assert_eq!(a.get_or("seed", 0u64).unwrap(), 42);
+    assert_eq!(a.get_or("delta", 0.0f64).unwrap(), 0.13);
+    assert!(a.has_flag("verbose"));
+    assert_eq!(a.positional(), &["extra1".to_string(), "extra2".to_string()]);
+}
+
+#[test]
+fn defaults_apply_when_absent() {
+    let a = parser().parse(&argv("optimize")).unwrap();
+    assert_eq!(a.subcommand(), Some("optimize"));
+    assert_eq!(a.get_or("seed", 7u64).unwrap(), 7);
+    assert!(!a.has_flag("verbose"));
+}
+
+#[test]
+fn unknown_option_rejected() {
+    assert!(parser().parse(&argv("train --bogus 1")).is_err());
+}
+
+#[test]
+fn missing_value_rejected() {
+    assert!(parser().parse(&argv("train --seed")).is_err());
+}
+
+#[test]
+fn flag_with_value_rejected() {
+    assert!(parser().parse(&argv("train --verbose=yes")).is_err());
+}
+
+#[test]
+fn type_error_reported_with_context() {
+    let a = parser().parse(&argv("train --seed abc")).unwrap();
+    let err = a.get_or("seed", 0u64).unwrap_err().to_string();
+    assert!(err.contains("--seed"), "{err}");
+}
+
+#[test]
+fn non_subcommand_word_is_positional() {
+    let a = parser().parse(&argv("somefile.ini --seed 1")).unwrap();
+    assert_eq!(a.subcommand(), None);
+    assert_eq!(a.positional(), &["somefile.ini".to_string()]);
+}
+
+#[test]
+fn help_text_lists_everything() {
+    let h = parser().help("cfl");
+    for needle in ["train", "optimize", "--seed", "--delta", "--verbose", "--help"] {
+        assert!(h.contains(needle), "help missing {needle}:\n{h}");
+    }
+}

@@ -1,0 +1,71 @@
+//! Per-device code material: generator matrix, weights, puncturing.
+
+use crate::config::GeneratorKind;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::simnet::DeviceProfile;
+
+/// A device's private code: the generator matrix, the weight-matrix
+/// diagonal, and the systematic/punctured split.
+///
+/// Everything in here stays on the device in a real deployment; only the
+/// encoded parity (`encode_device`) is ever shared.
+#[derive(Clone, Debug)]
+pub struct DeviceCode {
+    /// Generator matrix Gᵢ, c×ℓᵢ (zero-mean, unit-variance entries so that
+    /// GᵀG/c → I — the Eq. 18 identity).
+    pub generator: Mat,
+    /// Weight-matrix diagonal w_ik, length ℓᵢ, in *local row order*.
+    pub weights: Vec<f32>,
+    /// Private permutation of local rows; the first `systematic_count`
+    /// entries are processed locally each epoch, the rest are punctured.
+    pub permutation: Vec<usize>,
+    /// ℓᵢ*(t*) — systematic load assigned by the optimizer.
+    pub systematic_count: usize,
+}
+
+impl DeviceCode {
+    /// Draw a fresh private code for a device holding `points` rows.
+    ///
+    /// * `parity_rows` — c, the optimizer's coding redundancy.
+    /// * `systematic_count` — ℓᵢ*(t*).
+    /// * `prob_miss` — P{Tᵢ ≥ t*} at the assigned load (Eq. 17 weight²).
+    pub fn draw(
+        points: usize,
+        parity_rows: usize,
+        systematic_count: usize,
+        prob_miss: f64,
+        kind: GeneratorKind,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(systematic_count <= points, "load exceeds local data");
+        let generator = match kind {
+            GeneratorKind::Gaussian => Mat::randn(parity_rows, points, rng),
+            GeneratorKind::Bernoulli => Mat::rademacher(parity_rows, points, rng),
+        };
+        let mut permutation: Vec<usize> = (0..points).collect();
+        rng.shuffle(&mut permutation);
+        let mut weights = vec![1.0f32; points]; // punctured default (Eq. 17)
+        let w_sys = (prob_miss.clamp(0.0, 1.0)).sqrt() as f32;
+        for &row in permutation.iter().take(systematic_count) {
+            weights[row] = w_sys;
+        }
+        Self { generator, weights, permutation, systematic_count }
+    }
+
+    /// Local row indices processed each epoch (systematic set).
+    pub fn systematic_rows(&self) -> &[usize] {
+        &self.permutation[..self.systematic_count]
+    }
+
+    /// Local row indices never processed locally (punctured set).
+    pub fn punctured_rows(&self) -> &[usize] {
+        &self.permutation[self.systematic_count..]
+    }
+}
+
+/// Eq. (17) weight for a device: `√P{T ≥ t*}` evaluated at its assigned
+/// systematic load.
+pub fn make_weights(profile: &DeviceProfile, load: usize, t_star: f64) -> f64 {
+    profile.prob_miss(load, t_star).clamp(0.0, 1.0).sqrt()
+}

@@ -1,0 +1,24 @@
+//! Distributed random linear coding (§III of the paper).
+//!
+//! Each device privately draws a generator matrix `Gᵢ (c×ℓᵢ)` and a weight
+//! matrix `Wᵢ = diag(w_ik)` and uploads the parity data
+//! `(X̃ⁱ, ỹⁱ) = (GᵢWᵢXⁱ, GᵢWᵢyⁱ)` once (Eq. 9). The master sums parity
+//! across devices into the composite set (Eq. 10) — linearity makes the
+//! sum equal to encoding the concatenated global dataset with the
+//! block-row generator `G = [G₁ … G_n]` (Eq. 11), while `Gᵢ`, `Wᵢ`, and
+//! the raw data never leave the device.
+//!
+//! Weights (Eq. 17): systematic points carry `w_ik = √P{Tᵢ ≥ t*}` so the
+//! parity gradient supplies exactly the *expected missing fraction* of each
+//! point's gradient; punctured points (never processed locally) carry
+//! `w_ik = 1` so parity supplies them entirely. Puncturing position is a
+//! private per-device permutation — a second privacy layer (§III-C).
+
+mod code;
+mod parity;
+
+pub use code::{make_weights, DeviceCode};
+pub use parity::{encode_device, CompositeParity};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,45 @@
+//! Parity generation and composite aggregation (Eqs. 9–12).
+
+use super::DeviceCode;
+use crate::data::Shard;
+use crate::fl::GradBackend;
+use crate::linalg::Mat;
+use anyhow::Result;
+
+/// The master's composite parity set (X̃, ỹ) — the sum over devices of
+/// their parity uploads (Eq. 10).
+#[derive(Clone, Debug)]
+pub struct CompositeParity {
+    pub xt: Mat,
+    pub yt: Mat,
+}
+
+impl CompositeParity {
+    /// Empty accumulator for `parity_rows` rows and model dim `d`.
+    pub fn zeros(parity_rows: usize, d: usize) -> Self {
+        Self { xt: Mat::zeros(parity_rows, d), yt: Mat::zeros(parity_rows, 1) }
+    }
+
+    /// Fold in one device's parity upload (the master's Eq. 10 sum).
+    pub fn accumulate(&mut self, xt_i: &Mat, yt_i: &Mat) {
+        self.xt.add_assign(xt_i);
+        self.yt.add_assign(yt_i);
+    }
+
+    pub fn rows(&self) -> usize {
+        self.xt.rows()
+    }
+}
+
+/// Device-side encode (Eq. 9): (X̃ⁱ, ỹⁱ) = (GᵢWᵢXⁱ, GᵢWᵢyⁱ).
+///
+/// Runs through the backend so the PJRT `encode_dev` artifact (the L1
+/// Pallas kernel) does the math when artifacts are loaded, with the
+/// native fused path as oracle/fallback.
+pub fn encode_device(
+    shard: &Shard,
+    code: &DeviceCode,
+    backend: &mut dyn GradBackend,
+) -> Result<(Mat, Mat)> {
+    backend.encode(&code.generator, &code.weights, &shard.x, &shard.y)
+}

@@ -1,0 +1,201 @@
+use super::*;
+use crate::config::GeneratorKind;
+use crate::data::{split, Dataset};
+use crate::fl::{GradBackend, NativeBackend};
+use crate::linalg::{matmul, Mat};
+use crate::rng::Rng;
+use crate::simnet::{ComputeModel, DeviceProfile, LinkModel};
+use crate::testing::prop::{self, assert_that};
+
+fn test_profile() -> DeviceProfile {
+    DeviceProfile {
+        compute: ComputeModel { secs_per_point: 0.002, mem_rate: 1000.0 },
+        link: LinkModel { secs_per_packet: 0.05, erasure_prob: 0.1 },
+        points: 100,
+    }
+}
+
+#[test]
+fn device_code_shapes_and_weight_assignment() {
+    let mut rng = Rng::new(1);
+    let code = DeviceCode::draw(100, 30, 60, 0.25, GeneratorKind::Gaussian, &mut rng);
+    assert_eq!(code.generator.rows(), 30);
+    assert_eq!(code.generator.cols(), 100);
+    assert_eq!(code.weights.len(), 100);
+    assert_eq!(code.systematic_rows().len(), 60);
+    assert_eq!(code.punctured_rows().len(), 40);
+    // systematic rows carry √0.25 = 0.5; punctured carry 1.0 (Eq. 17)
+    for &r in code.systematic_rows() {
+        assert!((code.weights[r] - 0.5).abs() < 1e-6);
+    }
+    for &r in code.punctured_rows() {
+        assert_eq!(code.weights[r], 1.0);
+    }
+}
+
+#[test]
+fn permutation_is_private_per_draw() {
+    let c1 = DeviceCode::draw(50, 10, 25, 0.5, GeneratorKind::Gaussian, &mut Rng::new(2));
+    let c2 = DeviceCode::draw(50, 10, 25, 0.5, GeneratorKind::Gaussian, &mut Rng::new(3));
+    assert_ne!(c1.permutation, c2.permutation);
+    // and is a permutation
+    let mut sorted = c1.permutation.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+}
+
+#[test]
+fn bernoulli_generator_is_rademacher() {
+    let code = DeviceCode::draw(20, 8, 10, 0.3, GeneratorKind::Bernoulli, &mut Rng::new(4));
+    assert!(code.generator.as_slice().iter().all(|&v| v == 1.0 || v == -1.0));
+}
+
+#[test]
+fn make_weights_matches_profile_miss_prob() {
+    let p = test_profile();
+    let t = p.mean_total_delay(80);
+    let w = make_weights(&p, 80, t);
+    assert!((w * w - p.prob_miss(80, t)).abs() < 1e-12);
+}
+
+#[test]
+fn composite_parity_accumulates_device_sums() {
+    // Eq. 10/11: Σᵢ GᵢWᵢXⁱ must equal the block-matrix product G·W·X
+    let mut rng = Rng::new(5);
+    let ds = Dataset::generate(60, 8, 10.0, &mut rng);
+    let shards = split(&ds, &[20, 25, 15]);
+    let mut backend = NativeBackend;
+    let c = 12;
+
+    let mut composite = CompositeParity::zeros(c, 8);
+    let mut codes = Vec::new();
+    for sh in &shards {
+        let code = DeviceCode::draw(sh.rows(), c, sh.rows() / 2, 0.4, GeneratorKind::Gaussian, &mut rng);
+        let (xt, yt) = encode_device(sh, &code, &mut backend).unwrap();
+        composite.accumulate(&xt, &yt);
+        codes.push(code);
+    }
+
+    // block-matrix reference: G = [G₁ G₂ G₃], W block-diagonal
+    let mut xw_all = Mat::zeros(60, 8);
+    let mut yw_all = Mat::zeros(60, 1);
+    let mut g_all = Mat::zeros(c, 60);
+    let mut off = 0;
+    for (sh, code) in shards.iter().zip(&codes) {
+        for r in 0..sh.rows() {
+            let w = code.weights[r];
+            for col in 0..8 {
+                xw_all[(off + r, col)] = sh.x[(r, col)] * w;
+            }
+            yw_all[(off + r, 0)] = sh.y[(r, 0)] * w;
+            for cr in 0..c {
+                g_all[(cr, off + r)] = code.generator[(cr, r)];
+            }
+        }
+        off += sh.rows();
+    }
+    let want_xt = matmul(&g_all, &xw_all);
+    let want_yt = matmul(&g_all, &yw_all);
+    assert!(composite.xt.max_abs_diff(&want_xt) < 1e-3);
+    assert!(composite.yt.max_abs_diff(&want_yt) < 1e-3);
+}
+
+#[test]
+fn parity_gradient_lln_identity() {
+    // Eq. 18: (1/c)·X̃ᵀ(X̃β − ỹ) → XᵀW²(Xβ − y) as c grows.
+    let mut rng = Rng::new(6);
+    let ds = Dataset::generate(40, 10, 20.0, &mut rng);
+    let shards = split(&ds, &[40]);
+    let beta = Mat::randn(10, 1, &mut rng);
+    let mut backend = NativeBackend;
+
+    let target = {
+        // XᵀW²(Xβ − y) with the code's weights
+        let code = DeviceCode::draw(40, 4096, 20, 0.36, GeneratorKind::Gaussian, &mut Rng::new(7));
+        let mut xw = shards[0].x.clone();
+        let w2: Vec<f32> = code.weights.iter().map(|w| w * w).collect();
+        let mut resid = matmul(&shards[0].x, &beta);
+        resid.axpy(-1.0, &shards[0].y);
+        resid.scale_rows(&w2);
+        let t = crate::linalg::matmul_at_b(&xw, &resid);
+        xw.scale(1.0); // silence unused-mut lint path
+        (code, t)
+    };
+    let (code, want) = target;
+
+    let mut errs = Vec::new();
+    for &c in &[64usize, 1024, 4096] {
+        let sub = Mat::from_vec(
+            c,
+            40,
+            code.generator.as_slice()[..c * 40].to_vec(),
+        );
+        let subcode = DeviceCode {
+            generator: sub,
+            weights: code.weights.clone(),
+            permutation: code.permutation.clone(),
+            systematic_count: code.systematic_count,
+        };
+        let (xt, yt) = encode_device(&shards[0], &subcode, &mut backend).unwrap();
+        let got = backend.parity_grad(&xt, &beta, &yt, c).unwrap();
+        errs.push((got.dist_sq(&want) / want.norm_sq()).sqrt());
+    }
+    assert!(errs[2] < errs[0], "error must shrink with c: {errs:?}");
+    assert!(errs[2] < 0.25, "c=4096 relative error too large: {}", errs[2]);
+}
+
+#[test]
+fn prop_encode_is_linear_in_generator() {
+    prop::check("encode linearity", prop::cfg_cases(20), |g| {
+        let l = g.size_in(4, 30);
+        let d = g.size_in(1, 10);
+        let c = g.size_in(1, 12);
+        let mut rng = g.rng();
+        let ds = Dataset::generate(l, d, 10.0, &mut rng);
+        let shards = split(&ds, &[l]);
+        let mut backend = NativeBackend;
+        let mk = |rng: &mut Rng| DeviceCode::draw(l, c, l / 2, 0.5, GeneratorKind::Gaussian, rng);
+        let mut c1 = mk(&mut rng);
+        let c2 = {
+            let mut c2 = mk(&mut rng);
+            // same weights/permutation so only G differs
+            c2.weights = c1.weights.clone();
+            c2.permutation = c1.permutation.clone();
+            c2
+        };
+        let (x1, y1) = encode_device(&shards[0], &c1, &mut backend).unwrap();
+        let (x2, y2) = encode_device(&shards[0], &c2, &mut backend).unwrap();
+        let mut csum = c1.clone();
+        csum.generator.add_assign(&c2.generator);
+        let (xs, ys) = encode_device(&shards[0], &csum, &mut backend).unwrap();
+        let mut x12 = x1.clone();
+        x12.add_assign(&x2);
+        let mut y12 = y1.clone();
+        y12.add_assign(&y2);
+        c1.weights = vec![]; // moved-from marker, silence clippy-by-use
+        assert_that(xs.max_abs_diff(&x12) < 1e-3, "X̃ additivity")?;
+        assert_that(ys.max_abs_diff(&y12) < 1e-3, "ỹ additivity")
+    });
+}
+
+#[test]
+fn parity_reveals_no_raw_row_trivially() {
+    // sanity privacy check: with c < ℓ the parity rows are random mixtures;
+    // no parity row should be (anywhere near) proportional to a raw row.
+    let mut rng = Rng::new(8);
+    let ds = Dataset::generate(50, 12, 20.0, &mut rng);
+    let shards = split(&ds, &[50]);
+    let code = DeviceCode::draw(50, 10, 25, 0.5, GeneratorKind::Gaussian, &mut rng);
+    let (xt, _) = encode_device(&shards[0], &code, &mut NativeBackend).unwrap();
+    for pr in 0..xt.rows() {
+        for rr in 0..50 {
+            let p = xt.row(pr);
+            let r = shards[0].x.row(rr);
+            let dot: f32 = p.iter().zip(r).map(|(a, b)| a * b).sum();
+            let np: f32 = p.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let nr: f32 = r.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let cos = (dot / (np * nr)).abs();
+            assert!(cos < 0.95, "parity row {pr} ≈ raw row {rr} (cos={cos})");
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Line-oriented `key = value` config parser with `[section]` support.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed INI document: `section → key → value`. Keys outside any section
+/// live in the `""` section. Later duplicates override earlier ones.
+#[derive(Clone, Debug, Default)]
+pub struct Ini {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Ini {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut sections: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section header", lineno + 1))?;
+                current = name.trim().to_string();
+                sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            sections
+                .entry(current.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { sections })
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&text)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("[{section}] {key} = '{s}': {e}")),
+        }
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// All keys of a section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment configuration: typed config structs + an INI-style parser.
+//!
+//! No `serde`/`toml` in the offline sandbox, so configs are a small
+//! line-oriented format (`key = value`, `[section]` headers, `#` comments)
+//! parsed by [`ini::Ini`]. [`ExperimentConfig`] holds every knob of the
+//! paper's §IV setup with the paper's values as defaults, so
+//! `ExperimentConfig::paper()` *is* the published experiment.
+
+mod experiment;
+mod ini;
+
+pub use experiment::{ExperimentConfig, GeneratorKind, SetupCostKind, ShardingKind};
+pub use ini::Ini;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,104 @@
+use super::*;
+
+#[test]
+fn ini_parses_sections_keys_comments() {
+    let doc = Ini::parse(
+        "# top comment\n\
+         root_key = 1\n\
+         [experiment]\n\
+         n_devices = 12   # trailing comment\n\
+         sharding = powerlaw:1.5\n\
+         \n\
+         [other]\n\
+         x = hello world\n",
+    )
+    .unwrap();
+    assert_eq!(doc.get("", "root_key"), Some("1"));
+    assert_eq!(doc.get("experiment", "n_devices"), Some("12"));
+    assert_eq!(doc.get("other", "x"), Some("hello world"));
+    assert_eq!(doc.get("missing", "x"), None);
+    let mut sections: Vec<_> = doc.sections().collect();
+    sections.sort();
+    assert_eq!(sections, vec!["", "experiment", "other"]);
+}
+
+#[test]
+fn ini_rejects_bad_lines() {
+    assert!(Ini::parse("just a line").is_err());
+    assert!(Ini::parse("[unterminated").is_err());
+}
+
+#[test]
+fn ini_typed_get_or() {
+    let doc = Ini::parse("[s]\na = 2.5\nb = oops\n").unwrap();
+    assert_eq!(doc.get_or("s", "a", 0.0).unwrap(), 2.5);
+    assert_eq!(doc.get_or::<f64>("s", "missing", 7.0).unwrap(), 7.0);
+    assert!(doc.get_or("s", "b", 0.0).is_err());
+}
+
+#[test]
+fn ini_duplicate_key_last_wins() {
+    let doc = Ini::parse("[s]\nk = 1\nk = 2\n").unwrap();
+    assert_eq!(doc.get("s", "k"), Some("2"));
+}
+
+#[test]
+fn paper_config_matches_section_iv() {
+    let c = ExperimentConfig::paper();
+    assert_eq!(c.n_devices, 24);
+    assert_eq!(c.points_per_device, 300);
+    assert_eq!(c.model_dim, 500);
+    assert_eq!(c.snr_db, 0.0);
+    assert_eq!(c.learning_rate, 0.0085);
+    assert_eq!(c.base_mac_rate_kmacs, 1536.0);
+    assert_eq!(c.master_speedup, 10.0);
+    assert_eq!(c.base_throughput_kbps, 216.0);
+    assert_eq!(c.erasure_prob, 0.1);
+    assert_eq!(c.total_points(), 7200);
+    c.validate().unwrap();
+}
+
+#[test]
+fn apply_ini_overrides_and_validates() {
+    let mut c = ExperimentConfig::paper();
+    let ini = Ini::parse(
+        "[experiment]\nn_devices = 8\ndelta = 0.13\ngenerator = bernoulli\nsharding = dirichlet:0.5\n",
+    )
+    .unwrap();
+    c.apply_ini(&ini).unwrap();
+    assert_eq!(c.n_devices, 8);
+    assert_eq!(c.delta, Some(0.13));
+    assert_eq!(c.generator, GeneratorKind::Bernoulli);
+    assert!(matches!(c.sharding, ShardingKind::Dirichlet(a) if (a - 0.5).abs() < 1e-12));
+    // untouched keys keep paper defaults
+    assert_eq!(c.model_dim, 500);
+}
+
+#[test]
+fn apply_ini_rejects_invalid() {
+    let mut c = ExperimentConfig::paper();
+    let ini = Ini::parse("[experiment]\nnu_comp = 1.5\n").unwrap();
+    assert!(c.apply_ini(&ini).is_err());
+}
+
+#[test]
+fn delta_auto_resets_to_optimizer() {
+    let mut c = ExperimentConfig::paper();
+    c.delta = Some(0.2);
+    let ini = Ini::parse("[experiment]\ndelta = auto\n").unwrap();
+    c.apply_ini(&ini).unwrap();
+    assert_eq!(c.delta, None);
+}
+
+#[test]
+fn sharding_parse_errors() {
+    assert!("powerlaw:abc".parse::<ShardingKind>().is_err());
+    assert!("nope".parse::<ShardingKind>().is_err());
+    assert!("equal".parse::<ShardingKind>().is_ok());
+}
+
+#[test]
+fn generator_parse_aliases() {
+    assert_eq!("normal".parse::<GeneratorKind>().unwrap(), GeneratorKind::Gaussian);
+    assert_eq!("rademacher".parse::<GeneratorKind>().unwrap(), GeneratorKind::Bernoulli);
+}

@@ -1,0 +1,23 @@
+//! Training coordination: the master's event loop.
+//!
+//! Two coordinators share the same numerics ([`crate::fl`]) and policy
+//! ([`crate::lb`]):
+//!
+//! * [`SimCoordinator`] — discrete-event-simulated time (the paper's
+//!   evaluation methodology): per-epoch device delays are sampled from
+//!   §II-A's models and fed through the DES queue; gradients are computed
+//!   for real (PJRT artifacts or native). All five figures come from this
+//!   path, deterministically per seed.
+//! * [`LiveCoordinator`] — real concurrency: one `std::thread` per device,
+//!   channels to the master, wall-clock deadlines scaled down from the
+//!   policy. Demonstrates that the coordination logic is not
+//!   simulation-bound (see `examples/live_cluster.rs`).
+
+mod live;
+mod sim;
+
+pub use live::{LiveCoordinator, LiveReport};
+pub use sim::{RunResult, SimCoordinator};
+
+#[cfg(test)]
+mod tests;

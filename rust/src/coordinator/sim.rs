@@ -1,0 +1,422 @@
+//! DES-driven training coordinator (the paper's evaluation harness).
+
+use crate::coding::{CompositeParity, DeviceCode};
+use crate::config::ExperimentConfig;
+use crate::data::{shard_sizes, split, Dataset, Shard};
+use crate::des::Simulator;
+use crate::fl::{assemble_coded_gradient, GlobalModel, GradBackend, NativeBackend};
+use crate::lb::{optimize, optimize_fixed_c, LoadPolicy};
+use crate::linalg::{solve_ls, Mat};
+use crate::metrics::ConvergenceTrace;
+use crate::rng::Rng;
+use crate::simnet::Fleet;
+use anyhow::{Context, Result};
+
+/// Outcome of one training run (one curve of Fig. 2, one cell of Fig. 4/5).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub label: String,
+    /// NMSE vs simulated time (time includes `setup_secs` for CFL — the
+    /// Fig. 2 initial offsets).
+    pub trace: ConvergenceTrace,
+    /// Per-epoch gather durations (Fig. 3 histograms).
+    pub epoch_times: Vec<f64>,
+    /// One-time parity-transfer delay before epoch 0 (0 for uncoded).
+    pub setup_secs: f64,
+    /// Bits uploaded as parity during setup (0 for uncoded).
+    pub parity_upload_bits: f64,
+    /// Round-trip model/gradient bits per epoch, summed over devices.
+    pub per_epoch_bits: f64,
+    /// (epoch, simulated time) at which `target_nmse` was first reached.
+    pub converged: Option<(usize, f64)>,
+    /// δ actually used (0 for uncoded).
+    pub delta: f64,
+    /// t* actually used (∞ for uncoded).
+    pub epoch_deadline: f64,
+    /// For CFL: per-epoch times until the devices alone had returned
+    /// m − c points (Fig. 3 bottom); +∞ when an epoch never got there.
+    pub gather_mc_times: Vec<f64>,
+}
+
+impl RunResult {
+    /// Convergence time to a target NMSE (Figs. 4/5 metric).
+    pub fn time_to(&self, target: f64) -> Option<f64> {
+        self.trace.time_to_nmse(target)
+    }
+}
+
+/// Per-device state frozen at setup time.
+struct DeviceState {
+    /// Systematic submatrix (the rows processed each epoch), ℓᵢ*×d.
+    x_sys: Mat,
+    y_sys: Mat,
+    /// Assigned systematic load ℓᵢ*(t*).
+    load: usize,
+    /// Backend fast-path handle (PJRT: device-resident buffers) — §Perf.
+    handle: Option<u64>,
+}
+
+/// DES-driven coordinator. Owns the problem instance (fleet, data,
+/// shards), the gradient backend, and the randomness streams.
+pub struct SimCoordinator {
+    pub cfg: ExperimentConfig,
+    pub fleet: Fleet,
+    pub dataset: Dataset,
+    shards: Vec<Shard>,
+    backend: Box<dyn GradBackend>,
+    root_rng: Rng,
+    run_counter: u64,
+}
+
+impl SimCoordinator {
+    /// Build the problem instance from a config. Loads PJRT artifacts when
+    /// `cfg.artifacts_dir` is set, otherwise uses the native backend.
+    pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let backend: Box<dyn GradBackend> = match &cfg.artifacts_dir {
+            Some(dir) => Box::new(
+                crate::runtime::PjrtBackend::load(dir)
+                    .with_context(|| format!("loading artifacts from {dir}"))?,
+            ),
+            None => Box::new(NativeBackend),
+        };
+        Self::with_backend(cfg, backend)
+    }
+
+    /// Build with an explicit backend (tests inject oracles/mocks here).
+    pub fn with_backend(cfg: &ExperimentConfig, backend: Box<dyn GradBackend>) -> Result<Self> {
+        cfg.validate()?;
+        let mut root_rng = Rng::new(cfg.seed);
+        let mut fleet = Fleet::from_config(cfg, &mut root_rng);
+        let dataset =
+            Dataset::generate(cfg.total_points(), cfg.model_dim, cfg.snr_db, &mut root_rng);
+        let sizes = shard_sizes(cfg.sharding, cfg.total_points(), cfg.n_devices, &mut root_rng);
+        fleet.set_points(&sizes);
+        let shards = split(&dataset, &sizes);
+        Ok(Self { cfg: cfg.clone(), fleet, dataset, shards, backend, root_rng, run_counter: 0 })
+    }
+
+    /// The backend actually in use ("native" or "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Fresh RNG stream per run so `train_cfl(); train_uncoded()` order
+    /// doesn't couple their noise.
+    fn run_rng(&mut self) -> Rng {
+        self.run_counter += 1;
+        self.root_rng.split(0x5EED_0000 + self.run_counter)
+    }
+
+    /// Solve the CFL load/redundancy policy: `cfg.delta = None` runs the
+    /// full Eq. 16 optimization; `Some(δ)` pins c = δ·m (Fig. 2/5 sweeps).
+    pub fn policy(&self) -> Result<LoadPolicy> {
+        let m = self.fleet.total_points();
+        match self.cfg.delta {
+            None => {
+                let c_up = (self.cfg.c_up_fraction * m as f64).round() as usize;
+                optimize(&self.fleet, c_up, self.cfg.epsilon)
+            }
+            Some(delta) => {
+                let c = (delta * m as f64).round() as usize;
+                anyhow::ensure!(c > 0, "delta={delta} gives zero parity rows; use train_uncoded");
+                optimize_fixed_c(&self.fleet, c, self.cfg.epsilon)
+            }
+        }
+    }
+
+    /// Closed-form least-squares NMSE — the Fig. 2 lower bound.
+    pub fn ls_bound(&self) -> Result<f64> {
+        let ls = solve_ls(&self.dataset.x, &self.dataset.y)?;
+        Ok(ls.nmse(&self.dataset.beta_star))
+    }
+
+    // ---------------------------------------------------------------------
+    // CFL setup phase (§III-A): draw codes, encode, upload, composite.
+    // ---------------------------------------------------------------------
+
+    /// Returns (composite parity, device states, setup seconds, parity bits).
+    fn setup_cfl(
+        &mut self,
+        policy: &LoadPolicy,
+        rng: &mut Rng,
+    ) -> Result<(CompositeParity, Vec<DeviceState>, f64, f64)> {
+        let d = self.cfg.model_dim;
+        let c = policy.parity_rows;
+        let mut composite = CompositeParity::zeros(c, d);
+        let mut states = Vec::with_capacity(self.shards.len());
+        let mut setup_secs = 0.0f64;
+        let mut parity_bits = 0.0f64;
+        // one parity row = d features + 1 label, with header overhead
+        let row_bits = (d as f64 + 1.0) * 32.0 * (1.0 + self.cfg.header_overhead);
+
+        for (i, shard) in self.shards.iter().enumerate() {
+            let load = policy.device_loads[i];
+            let code = DeviceCode::draw(
+                shard.rows(),
+                c,
+                load,
+                policy.miss_probs[i],
+                self.cfg.generator,
+                rng,
+            );
+            let (xt, yt) = self.backend.encode(&code.generator, &code.weights, &shard.x, &shard.y)?;
+            composite.accumulate(&xt, &yt);
+
+            // parity upload: c rows over this device's link, all devices in
+            // parallel → setup time is the slowest upload (Fig. 2 offsets)
+            let upload = self.fleet.sample_parity_upload_secs(i, c, row_bits, rng);
+            setup_secs = setup_secs.max(upload);
+            parity_bits += c as f64 * row_bits;
+
+            // freeze the systematic submatrix (private permutation order)
+            let mut x_sys = Mat::zeros(load, d);
+            let mut y_sys = Mat::zeros(load, 1);
+            for (r, &src) in code.systematic_rows().iter().enumerate() {
+                x_sys.row_mut(r).copy_from_slice(shard.x.row(src));
+                y_sys[(r, 0)] = shard.y[(src, 0)];
+            }
+            let handle =
+                if load > 0 { self.backend.register_shard(&x_sys, &y_sys)? } else { None };
+            states.push(DeviceState { x_sys, y_sys, load, handle });
+        }
+        Ok((composite, states, setup_secs, parity_bits))
+    }
+
+    // ---------------------------------------------------------------------
+    // Training runs
+    // ---------------------------------------------------------------------
+
+    /// Train with Coded Federated Learning (§III). Simulated time starts
+    /// at the parity-upload completion and advances t* per epoch.
+    pub fn train_cfl(&mut self) -> Result<RunResult> {
+        let policy = self.policy()?;
+        self.train_cfl_with_policy(&policy)
+    }
+
+    /// CFL with an explicit policy (benches sweep δ through here).
+    pub fn train_cfl_with_policy(&mut self, policy: &LoadPolicy) -> Result<RunResult> {
+        let mut rng = self.run_rng();
+        let (composite, states, setup_secs, parity_bits) = self.setup_cfl(policy, &mut rng)?;
+        let d = self.cfg.model_dim;
+        let m = self.fleet.total_points();
+        let c = policy.parity_rows;
+        let t_star = policy.epoch_deadline;
+
+        let mut model = GlobalModel::zeros(d, self.cfg.learning_rate, m);
+        let mut trace = ConvergenceTrace::new(format!("cfl δ={:.3}", policy.delta));
+        let mut epoch_times = Vec::new();
+        let mut gather_mc_times = Vec::new();
+        let mut converged = None;
+        let mut now = setup_secs;
+        trace.push(now, 0, model.nmse(&self.dataset.beta_star));
+        // §Perf: keep the composite parity device-resident (PJRT fast path)
+        let parity_handle = self.backend.register_parity(&composite.xt, &composite.yt, c)?;
+
+        /// DES event payload: who finished computing.
+        #[derive(Clone, Copy, PartialEq)]
+        enum Actor {
+            Device(usize),
+            Master,
+        }
+
+        // client selection (§V extension): sample k of n devices per epoch
+        let n = self.fleet.n_devices();
+        let k = ((self.cfg.client_fraction * n as f64).round() as usize).clamp(1, n);
+
+        for epoch in 0..self.cfg.max_epochs {
+            // --- timing: schedule every completion, gather until t* ------
+            let selected: Option<Vec<bool>> = if k < n {
+                let mut mask = vec![false; n];
+                for i in rng.sample_indices(n, k) {
+                    mask[i] = true;
+                }
+                Some(mask)
+            } else {
+                None
+            };
+            let mut sim = Simulator::new();
+            for (i, (dev, st)) in self.fleet.devices.iter().zip(&states).enumerate() {
+                if st.load == 0 || selected.as_ref().is_some_and(|m| !m[i]) {
+                    continue;
+                }
+                let t = dev.sample_total_delay(st.load, &mut rng);
+                sim.schedule_at(t, Actor::Device(i));
+            }
+            let t_master = self.fleet.master.sample_total_delay(c, &mut rng);
+            sim.schedule_at(t_master, Actor::Master);
+
+            // Fig. 3 bottom: when would the devices alone have covered
+            // m − c points? (diagnostic; computed from the same samples)
+            {
+                let mut returned = 0usize;
+                let mut t_mc = f64::INFINITY;
+                let mut pending: Vec<(f64, usize)> = sim
+                    .snapshot()
+                    .into_iter()
+                    .filter_map(|(t, a)| match a {
+                        Actor::Device(i) => Some((t, states[i].load)),
+                        Actor::Master => None,
+                    })
+                    .collect();
+                pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for (t, pts) in pending {
+                    returned += pts;
+                    if returned >= m.saturating_sub(c) {
+                        t_mc = t;
+                        break;
+                    }
+                }
+                gather_mc_times.push(t_mc);
+            }
+
+            let arrived = sim.run_until(t_star);
+
+            // --- numerics: Eq. 18 + 19 -----------------------------------
+            let mut parity_grad: Option<Mat> = None;
+            let mut device_grads: Vec<Mat> = Vec::new();
+            for ev in &arrived {
+                match ev.payload {
+                    Actor::Master => {
+                        parity_grad = Some(match parity_handle {
+                            Some(h) => self.backend.parity_grad_registered(h, &model.beta)?,
+                            None => self.backend.parity_grad(
+                                &composite.xt,
+                                &model.beta,
+                                &composite.yt,
+                                c,
+                            )?,
+                        });
+                    }
+                    Actor::Device(i) => {
+                        let st = &states[i];
+                        let mut g = match st.handle {
+                            Some(h) => self.backend.partial_grad_registered(h, &model.beta)?,
+                            None => {
+                                self.backend.partial_grad(&st.x_sys, &model.beta, &st.y_sys)?
+                            }
+                        };
+                        if k < n {
+                            // inverse-probability weighting keeps the
+                            // combined estimate unbiased under selection
+                            g.scale(n as f32 / k as f32);
+                        }
+                        device_grads.push(g);
+                    }
+                }
+            }
+            let grad_refs: Vec<&Mat> = device_grads.iter().collect();
+            let grad = assemble_coded_gradient(d, parity_grad.as_ref(), &grad_refs);
+            model.apply_gradient(&grad);
+
+            now += t_star;
+            epoch_times.push(t_star);
+            let nmse = model.nmse(&self.dataset.beta_star);
+            trace.push(now, epoch + 1, nmse);
+            if converged.is_none() && nmse <= self.cfg.target_nmse {
+                converged = Some((epoch + 1, now));
+                break;
+            }
+        }
+
+        Ok(RunResult {
+            label: trace.label.clone(),
+            trace,
+            epoch_times,
+            setup_secs,
+            parity_upload_bits: parity_bits,
+            per_epoch_bits: self.round_trip_bits(&policy.device_loads),
+            converged,
+            delta: policy.delta,
+            epoch_deadline: t_star,
+            gather_mc_times,
+        })
+    }
+
+    /// Train uncoded FL: full loads, the master waits for all m partial
+    /// gradients each epoch (Fig. 3 top's heavy-tailed gather).
+    pub fn train_uncoded(&mut self) -> Result<RunResult> {
+        let mut rng = self.run_rng();
+        let d = self.cfg.model_dim;
+        let m = self.fleet.total_points();
+
+        let mut model = GlobalModel::zeros(d, self.cfg.learning_rate, m);
+        let mut trace = ConvergenceTrace::new("uncoded");
+        let mut epoch_times = Vec::new();
+        let mut converged = None;
+        let mut now = 0.0f64;
+        trace.push(now, 0, model.nmse(&self.dataset.beta_star));
+
+        // §Perf: pre-register the full dataset in row chunks so the exact
+        // full gradient is a handful of β-only PJRT calls per epoch
+        // (native backend: returns None, slow path below)
+        let chunk = 512;
+        let mut chunk_handles: Vec<(u64, usize)> = Vec::new(); // (handle, start)
+        let mut all_registered = true;
+        {
+            let mut start = 0;
+            while start < self.dataset.rows() {
+                let end = (start + chunk).min(self.dataset.rows());
+                match self.backend.register_shard(
+                    &self.dataset.x.slice_rows(start, end),
+                    &self.dataset.y.slice_rows(start, end),
+                )? {
+                    Some(h) => chunk_handles.push((h, start)),
+                    None => {
+                        all_registered = false;
+                        break;
+                    }
+                }
+                start = end;
+            }
+        }
+
+        for epoch in 0..self.cfg.max_epochs {
+            // epoch duration = slowest device (wait-for-all)
+            let mut epoch_len = 0.0f64;
+            for dev in &self.fleet.devices {
+                epoch_len = epoch_len.max(dev.sample_total_delay(dev.points, &mut rng));
+            }
+            // exact full gradient over the global data (Σᵢ inner sums)
+            let grad = if all_registered {
+                let mut acc = Mat::zeros(d, 1);
+                for &(h, _) in &chunk_handles {
+                    acc.add_assign(&self.backend.partial_grad_registered(h, &model.beta)?);
+                }
+                acc
+            } else {
+                self.backend.partial_grad(&self.dataset.x, &model.beta, &self.dataset.y)?
+            };
+            model.apply_gradient(&grad);
+
+            now += epoch_len;
+            epoch_times.push(epoch_len);
+            let nmse = model.nmse(&self.dataset.beta_star);
+            trace.push(now, epoch + 1, nmse);
+            if converged.is_none() && nmse <= self.cfg.target_nmse {
+                converged = Some((epoch + 1, now));
+                break;
+            }
+        }
+
+        let full_loads: Vec<usize> = self.fleet.devices.iter().map(|p| p.points).collect();
+        Ok(RunResult {
+            label: "uncoded".into(),
+            trace,
+            epoch_times,
+            setup_secs: 0.0,
+            parity_upload_bits: 0.0,
+            per_epoch_bits: self.round_trip_bits(&full_loads),
+            converged,
+            delta: 0.0,
+            epoch_deadline: f64::INFINITY,
+            gather_mc_times: Vec::new(),
+        })
+    }
+
+    /// Round-trip traffic per epoch: every participating device downloads
+    /// the model and uploads a gradient (2 packets).
+    fn round_trip_bits(&self, loads: &[usize]) -> f64 {
+        loads.iter().filter(|&&l| l > 0).count() as f64 * 2.0 * self.fleet.packet_bits
+    }
+}

@@ -1,0 +1,177 @@
+use super::*;
+use crate::config::ExperimentConfig;
+use crate::fl::NativeBackend;
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::small();
+    cfg.seed = 77;
+    cfg
+}
+
+#[test]
+fn cfl_converges_on_small_problem() {
+    let mut sim = SimCoordinator::new(&small_cfg()).unwrap();
+    let run = sim.train_cfl().unwrap();
+    assert!(
+        run.converged.is_some(),
+        "CFL did not reach NMSE {} (final {:?})",
+        small_cfg().target_nmse,
+        run.trace.final_nmse()
+    );
+    assert!(run.setup_secs > 0.0, "parity upload must take time");
+    assert!(run.parity_upload_bits > 0.0);
+    assert!(run.delta > 0.0);
+    assert!(run.epoch_deadline.is_finite());
+    // trace times strictly increase by t* per epoch after setup
+    let pts = &run.trace.points;
+    assert!((pts[1].time_s - pts[0].time_s - run.epoch_deadline).abs() < 1e-9);
+}
+
+#[test]
+fn uncoded_converges_and_has_no_setup() {
+    let mut sim = SimCoordinator::new(&small_cfg()).unwrap();
+    let run = sim.train_uncoded().unwrap();
+    assert!(run.converged.is_some(), "uncoded did not converge");
+    assert_eq!(run.setup_secs, 0.0);
+    assert_eq!(run.parity_upload_bits, 0.0);
+    assert_eq!(run.delta, 0.0);
+    assert!(run.epoch_deadline.is_infinite());
+    // epoch times vary (max of sampled delays) and are all positive
+    assert!(run.epoch_times.iter().all(|&t| t > 0.0));
+    let first = run.epoch_times[0];
+    assert!(run.epoch_times.iter().any(|&t| (t - first).abs() > 1e-12));
+}
+
+#[test]
+fn runs_are_seed_reproducible() {
+    let mut a = SimCoordinator::new(&small_cfg()).unwrap();
+    let mut b = SimCoordinator::new(&small_cfg()).unwrap();
+    let ra = a.train_cfl().unwrap();
+    let rb = b.train_cfl().unwrap();
+    assert_eq!(ra.trace.points.len(), rb.trace.points.len());
+    for (pa, pb) in ra.trace.points.iter().zip(&rb.trace.points) {
+        assert_eq!(pa.time_s, pb.time_s);
+        assert_eq!(pa.nmse, pb.nmse);
+    }
+}
+
+#[test]
+fn cfl_and_uncoded_reach_similar_floors() {
+    // both are unbiased estimators of the same GD dynamics; their final
+    // NMSE (epoch-limited) should land in the same decade
+    let mut cfg = small_cfg();
+    cfg.max_epochs = 2500;
+    cfg.target_nmse = 0.0; // run to the epoch cap
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    let coded = sim.train_cfl().unwrap();
+    let uncoded = sim.train_uncoded().unwrap();
+    let (nc, nu) = (coded.trace.final_nmse().unwrap(), uncoded.trace.final_nmse().unwrap());
+    assert!(nc < 1e-2, "coded floor too high: {nc:.2e}");
+    assert!(nu < 1e-2, "uncoded floor too high: {nu:.2e}");
+    assert!((nc.log10() - nu.log10()).abs() < 1.5, "floors diverge: {nc:.2e} vs {nu:.2e}");
+}
+
+#[test]
+fn fixed_delta_is_respected() {
+    let mut cfg = small_cfg();
+    cfg.delta = Some(0.15);
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    let run = sim.train_cfl().unwrap();
+    assert!((run.delta - 0.15).abs() < 0.01, "delta {} != 0.15", run.delta);
+}
+
+#[test]
+fn gather_mc_times_recorded_per_epoch() {
+    let mut cfg = small_cfg();
+    cfg.max_epochs = 50;
+    cfg.target_nmse = 0.0;
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    let run = sim.train_cfl().unwrap();
+    assert_eq!(run.gather_mc_times.len(), run.epoch_times.len());
+    // finite gathers must be positive
+    assert!(run.gather_mc_times.iter().all(|&t| t > 0.0));
+}
+
+#[test]
+fn ls_bound_is_below_targets() {
+    let sim = SimCoordinator::new(&small_cfg()).unwrap();
+    let ls = sim.ls_bound().unwrap();
+    assert!(ls > 0.0 && ls < small_cfg().target_nmse, "LS bound {ls:.3e} not a floor");
+}
+
+#[test]
+fn with_backend_injection_works() {
+    let sim = SimCoordinator::with_backend(&small_cfg(), Box::new(NativeBackend)).unwrap();
+    assert_eq!(sim.backend_name(), "native");
+}
+
+#[test]
+fn invalid_config_rejected() {
+    let mut cfg = small_cfg();
+    cfg.nu_comp = 1.5;
+    assert!(SimCoordinator::new(&cfg).is_err());
+}
+
+#[test]
+fn live_coordinator_runs_and_learns() {
+    let mut cfg = small_cfg();
+    cfg.n_devices = 4;
+    cfg.points_per_device = 40;
+    cfg.model_dim = 16;
+    let live = LiveCoordinator::new(&cfg, 1e-4);
+    let report = live.run(40).unwrap();
+    assert_eq!(report.epochs, 40);
+    assert!(report.final_nmse < 0.9, "live run did not learn: {}", report.final_nmse);
+    assert!(report.on_time_gradients > 0, "no gradients arrived on time");
+    assert!(report.wall_secs < 60.0);
+}
+
+/// Failure injection: a backend that errors after N calls.
+struct FailingBackend {
+    inner: NativeBackend,
+    calls_left: std::cell::Cell<u32>,
+}
+
+impl crate::fl::GradBackend for FailingBackend {
+    fn partial_grad(
+        &mut self,
+        x: &crate::linalg::Mat,
+        beta: &crate::linalg::Mat,
+        y: &crate::linalg::Mat,
+    ) -> anyhow::Result<crate::linalg::Mat> {
+        let left = self.calls_left.get();
+        anyhow::ensure!(left > 0, "injected backend failure");
+        self.calls_left.set(left - 1);
+        self.inner.partial_grad(x, beta, y)
+    }
+    fn parity_grad(
+        &mut self,
+        xt: &crate::linalg::Mat,
+        beta: &crate::linalg::Mat,
+        yt: &crate::linalg::Mat,
+        c: usize,
+    ) -> anyhow::Result<crate::linalg::Mat> {
+        self.inner.parity_grad(xt, beta, yt, c)
+    }
+    fn encode(
+        &mut self,
+        g: &crate::linalg::Mat,
+        w: &[f32],
+        x: &crate::linalg::Mat,
+        y: &crate::linalg::Mat,
+    ) -> anyhow::Result<(crate::linalg::Mat, crate::linalg::Mat)> {
+        self.inner.encode(g, w, x, y)
+    }
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+}
+
+#[test]
+fn backend_failure_propagates_cleanly() {
+    let cfg = small_cfg();
+    let backend = FailingBackend { inner: NativeBackend, calls_left: std::cell::Cell::new(30) };
+    let mut sim = SimCoordinator::with_backend(&cfg, Box::new(backend)).unwrap();
+    let err = sim.train_cfl().unwrap_err().to_string();
+    assert!(err.contains("injected backend failure"), "lost error context: {err}");
+}

@@ -1,0 +1,49 @@
+//! Global dataset generation.
+
+use crate::linalg::{matmul, Mat};
+use crate::rng::Rng;
+
+/// The global linear-regression problem: features, labels, ground truth.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Features, m×d, iid N(0,1).
+    pub x: Mat,
+    /// Labels, m×1: y = Xβ* + z.
+    pub y: Mat,
+    /// Ground-truth model β*, d×1 — the NMSE reference of §IV.
+    pub beta_star: Mat,
+    /// Noise standard deviation actually used.
+    pub noise_std: f64,
+}
+
+impl Dataset {
+    /// Generate a dataset: `m` rows, `d` features, AWGN at `snr_db`
+    /// (per-element convention, see module docs).
+    pub fn generate(m: usize, d: usize, snr_db: f64, rng: &mut Rng) -> Self {
+        let mut data_rng = rng.split(0xDA7A);
+        let x = Mat::randn(m, d, &mut data_rng);
+        let beta_star = Mat::randn(d, 1, &mut data_rng);
+        let noise_std = 10f64.powf(-snr_db / 20.0);
+        let mut y = matmul(&x, &beta_star);
+        for v in y.as_mut_slice() {
+            *v += (noise_std * data_rng.normal()) as f32;
+        }
+        Self { x, y, beta_star, noise_std }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Empirical SNR: ‖Xβ*‖² / ‖y − Xβ*‖² scaled per element
+    /// (diagnostic; ≈ 10^(snr_db/10) · d for the per-element convention).
+    pub fn empirical_snr(&self) -> f64 {
+        let signal = matmul(&self.x, &self.beta_star);
+        let noise_sq = self.y.dist_sq(&signal);
+        signal.norm_sq() / noise_sq
+    }
+}

@@ -1,0 +1,113 @@
+//! Sharding: distributing the global dataset across devices.
+
+use super::Dataset;
+use crate::config::ShardingKind;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// One device's local database (Xⁱ, yⁱ) plus its offset into the global
+/// row order (used by tests to reassemble the global problem).
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub x: Mat,
+    pub y: Mat,
+    /// First global row index of this shard.
+    pub offset: usize,
+}
+
+impl Shard {
+    pub fn rows(&self) -> usize {
+        self.x.rows()
+    }
+}
+
+/// Compute per-device shard sizes for `n` devices totalling `m` rows.
+///
+/// * `Equal` — m/n each (requires n | m, as in the paper's 24×300).
+/// * `PowerLaw(α)` — sizes ∝ (i+1)^−α, largest first, shuffled; every
+///   device keeps at least 1 row; rounding remainder goes to the largest.
+/// * `Dirichlet(α)` — sizes ∝ Gamma(α) draws (symmetric Dirichlet);
+///   α → ∞ approaches equal, small α is highly skewed.
+pub fn shard_sizes(kind: ShardingKind, m: usize, n: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(n > 0 && m >= n, "need at least one row per device");
+    match kind {
+        ShardingKind::Equal => {
+            assert!(m % n == 0, "equal sharding requires n | m ({m} rows, {n} devices)");
+            vec![m / n; n]
+        }
+        ShardingKind::PowerLaw(alpha) => {
+            let weights: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(alpha)).collect();
+            let mut sizes = apportion(&weights, m, n);
+            rng.shuffle(&mut sizes);
+            sizes
+        }
+        ShardingKind::Dirichlet(alpha) => {
+            // Gamma(α) via Marsaglia–Tsang for α ≥ 1, boosted for α < 1.
+            let weights: Vec<f64> = (0..n).map(|_| sample_gamma(alpha, rng)).collect();
+            apportion(&weights, m, n)
+        }
+    }
+}
+
+/// Largest-remainder apportionment of `m` rows by weights, each ≥ 1.
+fn apportion(weights: &[f64], m: usize, n: usize) -> Vec<usize> {
+    let total: f64 = weights.iter().sum();
+    // reserve one row per device, apportion the rest fractionally
+    let spare = m - n;
+    let mut sizes: Vec<usize> = vec![1; n];
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(n);
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let exact = spare as f64 * w / total;
+        let base = exact.floor() as usize;
+        sizes[i] += base;
+        assigned += base;
+        fracs.push((exact - base as f64, i));
+    }
+    // distribute the remainder to the largest fractional parts
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    for k in 0..(spare - assigned) {
+        sizes[fracs[k % n].1] += 1;
+    }
+    sizes
+}
+
+fn sample_gamma(alpha: f64, rng: &mut Rng) -> f64 {
+    assert!(alpha > 0.0);
+    if alpha < 1.0 {
+        // Johnk boost: Gamma(α) = Gamma(α+1) · U^(1/α)
+        let g = sample_gamma(alpha + 1.0, rng);
+        return g * rng.next_f64_open().powf(1.0 / alpha);
+    }
+    // Marsaglia–Tsang squeeze
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64_open();
+        if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Split a dataset into shards of the given sizes (contiguous row blocks;
+/// rows of X are iid so contiguity loses no generality for iid sharding).
+pub fn split(ds: &Dataset, sizes: &[usize]) -> Vec<Shard> {
+    assert_eq!(sizes.iter().sum::<usize>(), ds.rows(), "sizes must cover the dataset");
+    let mut shards = Vec::with_capacity(sizes.len());
+    let mut offset = 0;
+    for &s in sizes {
+        shards.push(Shard {
+            x: ds.x.slice_rows(offset, offset + s),
+            y: ds.y.slice_rows(offset, offset + s),
+            offset,
+        });
+        offset += s;
+    }
+    shards
+}

@@ -1,0 +1,138 @@
+use super::*;
+use crate::config::ShardingKind;
+use crate::linalg::solve_ls;
+use crate::rng::Rng;
+use crate::testing::prop::{self, assert_that};
+
+#[test]
+fn dataset_shapes_and_determinism() {
+    let mut rng = Rng::new(1);
+    let ds = Dataset::generate(120, 10, 0.0, &mut rng);
+    assert_eq!(ds.rows(), 120);
+    assert_eq!(ds.dim(), 10);
+    assert_eq!(ds.y.rows(), 120);
+    assert_eq!(ds.beta_star.rows(), 10);
+    let ds2 = Dataset::generate(120, 10, 0.0, &mut Rng::new(1));
+    assert_eq!(ds.x, ds2.x);
+    assert_eq!(ds.y, ds2.y);
+}
+
+#[test]
+fn snr_convention_gives_paper_ls_floor() {
+    // m=7200, d=500, 0 dB per-element ⇒ LS NMSE ≈ σ²·d/(m·‖β‖²) ≈ 1.4e-4
+    let mut rng = Rng::new(2);
+    let ds = Dataset::generate(7200, 500, 0.0, &mut rng);
+    let ls = solve_ls(&ds.x, &ds.y).unwrap();
+    let nmse = ls.nmse(&ds.beta_star);
+    assert!(
+        (5e-5..5e-4).contains(&nmse),
+        "LS NMSE {nmse:.3e} outside the paper's ~1.4e-4 ballpark"
+    );
+}
+
+#[test]
+fn noise_std_follows_snr() {
+    let mut rng = Rng::new(3);
+    let ds0 = Dataset::generate(100, 5, 0.0, &mut rng);
+    assert!((ds0.noise_std - 1.0).abs() < 1e-12);
+    let ds20 = Dataset::generate(100, 5, 20.0, &mut Rng::new(3));
+    assert!((ds20.noise_std - 0.1).abs() < 1e-12);
+}
+
+#[test]
+fn empirical_snr_tracks_config() {
+    let mut rng = Rng::new(4);
+    let d = 50;
+    let ds = Dataset::generate(4000, d, 0.0, &mut rng);
+    // per-element 0 dB ⇒ row signal power ≈ ‖β‖² ≈ d, noise power 1
+    let got = ds.empirical_snr();
+    let want = d as f64;
+    assert!((got / want - 1.0).abs() < 0.3, "snr={got} want≈{want}");
+}
+
+#[test]
+fn equal_sharding_matches_paper() {
+    let mut rng = Rng::new(5);
+    let sizes = shard_sizes(ShardingKind::Equal, 7200, 24, &mut rng);
+    assert_eq!(sizes, vec![300; 24]);
+}
+
+#[test]
+#[should_panic(expected = "requires n | m")]
+fn equal_sharding_requires_divisibility() {
+    shard_sizes(ShardingKind::Equal, 100, 7, &mut Rng::new(0));
+}
+
+#[test]
+fn power_law_sharding_sums_and_skews() {
+    let mut rng = Rng::new(6);
+    let sizes = shard_sizes(ShardingKind::PowerLaw(1.2), 7200, 24, &mut rng);
+    assert_eq!(sizes.iter().sum::<usize>(), 7200);
+    assert!(sizes.iter().all(|&s| s >= 1));
+    let max = *sizes.iter().max().unwrap();
+    let min = *sizes.iter().min().unwrap();
+    assert!(max > 4 * min, "power law should be skewed: max={max} min={min}");
+}
+
+#[test]
+fn dirichlet_sharding_alpha_controls_skew() {
+    let mut rng = Rng::new(7);
+    let skew = |alpha: f64, rng: &mut Rng| {
+        let sizes = shard_sizes(ShardingKind::Dirichlet(alpha), 7200, 24, rng);
+        assert_eq!(sizes.iter().sum::<usize>(), 7200);
+        let max = *sizes.iter().max().unwrap() as f64;
+        let min = *sizes.iter().min().unwrap() as f64;
+        max / min
+    };
+    let tight = skew(100.0, &mut rng);
+    let loose = skew(0.3, &mut rng);
+    assert!(tight < 2.0, "alpha=100 should be near-equal, ratio={tight}");
+    assert!(loose > 5.0, "alpha=0.3 should be skewed, ratio={loose}");
+}
+
+#[test]
+fn prop_sharding_always_partitions() {
+    prop::check("shard partition", prop::cfg_cases(60), |g| {
+        let n = g.size_in(1, 40);
+        let per = g.size_in(1, 50);
+        let m = n * per + g.size_in(0, n - 1) * usize::from(!matches!(0, 0usize)); // n·per + extra<n
+        let m = m.max(n);
+        let kind = *g.choose(&[
+            ShardingKind::PowerLaw(1.0),
+            ShardingKind::PowerLaw(2.5),
+            ShardingKind::Dirichlet(0.5),
+            ShardingKind::Dirichlet(5.0),
+        ]);
+        let mut rng = g.rng();
+        let sizes = shard_sizes(kind, m, n, &mut rng);
+        assert_that(sizes.len() == n, "one size per device")?;
+        assert_that(sizes.iter().sum::<usize>() == m, "sizes must sum to m")?;
+        assert_that(sizes.iter().all(|&s| s >= 1), "every device keeps ≥1 row")
+    });
+}
+
+#[test]
+fn split_reassembles_dataset() {
+    let mut rng = Rng::new(8);
+    let ds = Dataset::generate(60, 4, 10.0, &mut rng);
+    let sizes = vec![10, 20, 30];
+    let shards = split(&ds, &sizes);
+    assert_eq!(shards.len(), 3);
+    assert_eq!(shards[1].offset, 10);
+    let mut row = 0;
+    for sh in &shards {
+        for r in 0..sh.rows() {
+            assert_eq!(sh.x.row(r), ds.x.row(row));
+            assert_eq!(sh.y.row(r), ds.y.row(row));
+            row += 1;
+        }
+    }
+    assert_eq!(row, 60);
+}
+
+#[test]
+#[should_panic(expected = "cover the dataset")]
+fn split_rejects_bad_sizes() {
+    let ds = Dataset::generate(10, 2, 0.0, &mut Rng::new(9));
+    split(&ds, &[3, 3]);
+}

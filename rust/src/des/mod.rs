@@ -1,0 +1,23 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper's time axis is *simulated* wireless-edge time, not host
+//! wall-clock: per-epoch device delays are drawn from §II-A's models and
+//! the training clock advances by deadline/straggler arithmetic. This
+//! engine gives that arithmetic an explicit, deterministic event queue:
+//!
+//! * events are `(time, seq, payload)` ordered by time with FIFO
+//!   tie-breaking on `seq`, so identical seeds give identical traces;
+//! * the queue is a binary heap — O(log n) schedule/pop;
+//! * [`Simulator::run_until`] drains events up to a deadline, which is
+//!   exactly the master's "wait until t*" gather (Eq. 16's epoch window).
+//!
+//! The engine is generic over the payload so the unit tests, the epoch
+//! simulator ([`crate::coordinator`]) and ad-hoc experiment harnesses can
+//! each define their own event vocabulary.
+
+mod sim;
+
+pub use sim::{ScheduledEvent, Simulator};
+
+#[cfg(test)]
+mod tests;

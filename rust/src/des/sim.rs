@@ -1,0 +1,155 @@
+//! Event queue + virtual clock.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event drawn from the queue.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduledEvent<T> {
+    pub time: f64,
+    /// Monotone sequence number: schedule order, used as tie-break.
+    pub seq: u64,
+    pub payload: T,
+}
+
+// BinaryHeap is a max-heap; invert ordering for earliest-first.
+struct HeapEntry<T>(ScheduledEvent<T>);
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.time == other.0.time && self.0.seq == other.0.seq
+    }
+}
+impl<T> Eq for HeapEntry<T> {}
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: smaller time (then smaller seq) = "greater" for the heap
+        other
+            .0
+            .time
+            .partial_cmp(&self.0.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+/// Deterministic discrete-event simulator with a virtual clock.
+pub struct Simulator<T> {
+    heap: BinaryHeap<HeapEntry<T>>,
+    now: f64,
+    next_seq: u64,
+    processed: u64,
+}
+
+impl<T> Default for Simulator<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Simulator<T> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0.0, next_seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending event count.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `payload` at absolute time `at` (must not precede the
+    /// current clock — the past is immutable).
+    pub fn schedule_at(&mut self, at: f64, payload: T) {
+        assert!(at.is_finite(), "event time must be finite");
+        assert!(
+            at >= self.now,
+            "cannot schedule into the past: at={at} < now={}",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(HeapEntry(ScheduledEvent { time: at, seq, payload }));
+    }
+
+    /// Schedule `payload` after a relative delay.
+    pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn next_event(&mut self) -> Option<ScheduledEvent<T>> {
+        let e = self.heap.pop()?.0;
+        self.now = e.time;
+        self.processed += 1;
+        Some(e)
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.time)
+    }
+
+    /// Drain all events with `time ≤ deadline`, advancing the clock to each
+    /// in turn, then set the clock to `deadline`. Returns the drained
+    /// events in timestamp order. This is the master's deadline gather:
+    /// everything arriving by t* is collected, stragglers stay queued.
+    pub fn run_until(&mut self, deadline: f64) -> Vec<ScheduledEvent<T>> {
+        assert!(deadline >= self.now, "deadline in the past");
+        let mut out = Vec::new();
+        while let Some(t) = self.peek_time() {
+            if t > deadline {
+                break;
+            }
+            out.push(self.next_event().expect("peeked event must pop"));
+        }
+        self.now = deadline;
+        out
+    }
+
+    /// Drain the whole queue (the uncoded master's "wait for everyone").
+    pub fn run_to_completion(&mut self) -> Vec<ScheduledEvent<T>> {
+        let mut out = Vec::new();
+        while let Some(e) = self.next_event() {
+            out.push(e);
+        }
+        out
+    }
+
+    /// Unordered snapshot of pending `(time, payload)` pairs (diagnostics;
+    /// does not disturb the queue).
+    pub fn snapshot(&self) -> Vec<(f64, T)>
+    where
+        T: Clone,
+    {
+        self.heap.iter().map(|e| (e.0.time, e.0.payload.clone())).collect()
+    }
+
+    /// Drop every pending event (epoch reset) without touching the clock.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    /// Reset clock and queue (new simulation run).
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        self.now = 0.0;
+        self.next_seq = 0;
+        self.processed = 0;
+    }
+}

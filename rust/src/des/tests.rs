@@ -1,0 +1,136 @@
+use super::*;
+use crate::testing::prop::{self, assert_that};
+
+#[test]
+fn events_pop_in_time_order() {
+    let mut sim = Simulator::new();
+    sim.schedule_at(3.0, "c");
+    sim.schedule_at(1.0, "a");
+    sim.schedule_at(2.0, "b");
+    let order: Vec<&str> = std::iter::from_fn(|| sim.next_event().map(|e| e.payload)).collect();
+    assert_eq!(order, vec!["a", "b", "c"]);
+    assert_eq!(sim.now(), 3.0);
+    assert_eq!(sim.processed(), 3);
+}
+
+#[test]
+fn ties_break_fifo() {
+    let mut sim = Simulator::new();
+    for i in 0..10 {
+        sim.schedule_at(1.0, i);
+    }
+    let order: Vec<i32> = std::iter::from_fn(|| sim.next_event().map(|e| e.payload)).collect();
+    assert_eq!(order, (0..10).collect::<Vec<_>>());
+}
+
+#[test]
+fn run_until_partitions_at_deadline() {
+    let mut sim = Simulator::new();
+    for i in 1..=10 {
+        sim.schedule_at(i as f64, i);
+    }
+    let early = sim.run_until(4.5);
+    assert_eq!(early.iter().map(|e| e.payload).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+    assert_eq!(sim.now(), 4.5);
+    assert_eq!(sim.pending(), 6);
+    // deadline-boundary event is included (≤, matching P{T ≤ t*})
+    sim.schedule_at(5.0, 99);
+    let mid = sim.run_until(5.0);
+    assert_eq!(mid.iter().map(|e| e.payload).collect::<Vec<_>>(), vec![5, 99]);
+}
+
+#[test]
+fn run_to_completion_drains_everything() {
+    let mut sim = Simulator::new();
+    sim.schedule_at(2.0, "x");
+    sim.schedule_at(1.0, "y");
+    let all = sim.run_to_completion();
+    assert_eq!(all.len(), 2);
+    assert_eq!(sim.pending(), 0);
+    assert_eq!(sim.now(), 2.0);
+}
+
+#[test]
+fn schedule_in_is_relative() {
+    let mut sim = Simulator::new();
+    sim.schedule_at(5.0, "first");
+    sim.next_event();
+    sim.schedule_in(2.5, "second");
+    let e = sim.next_event().unwrap();
+    assert_eq!(e.time, 7.5);
+}
+
+#[test]
+#[should_panic(expected = "past")]
+fn scheduling_into_past_panics() {
+    let mut sim = Simulator::new();
+    sim.schedule_at(5.0, ());
+    sim.next_event();
+    sim.schedule_at(4.0, ());
+}
+
+#[test]
+#[should_panic(expected = "finite")]
+fn scheduling_nan_panics() {
+    let mut sim: Simulator<()> = Simulator::new();
+    sim.schedule_at(f64::NAN, ());
+}
+
+#[test]
+fn clear_and_reset() {
+    let mut sim = Simulator::new();
+    sim.schedule_at(1.0, ());
+    sim.schedule_at(2.0, ());
+    sim.next_event();
+    sim.clear();
+    assert_eq!(sim.pending(), 0);
+    assert_eq!(sim.now(), 1.0); // clear keeps the clock
+    sim.reset();
+    assert_eq!(sim.now(), 0.0);
+    assert_eq!(sim.processed(), 0);
+}
+
+#[test]
+fn prop_pop_order_is_sorted_and_clock_monotone() {
+    prop::check("des ordering", prop::cfg_cases(50), |g| {
+        let mut sim = Simulator::new();
+        let n = g.size_in(1, 60);
+        for i in 0..n {
+            sim.schedule_at(g.f64_in(0.0, 100.0), i);
+        }
+        let mut last = f64::NEG_INFINITY;
+        let mut count = 0;
+        while let Some(e) = sim.next_event() {
+            assert_that(e.time >= last, format!("time went backwards: {} < {last}", e.time))?;
+            assert_that(sim.now() == e.time, "clock must track event time")?;
+            last = e.time;
+            count += 1;
+        }
+        assert_that(count == n, format!("popped {count} of {n}"))
+    });
+}
+
+#[test]
+fn prop_run_until_equals_filtered_pop() {
+    prop::check("run_until equivalence", prop::cfg_cases(40), |g| {
+        let n = g.size_in(1, 40);
+        let deadline = g.f64_in(0.0, 50.0);
+        let times: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 100.0)).collect();
+
+        let mut sim_a = Simulator::new();
+        let mut sim_b = Simulator::new();
+        for (i, &t) in times.iter().enumerate() {
+            sim_a.schedule_at(t, i);
+            sim_b.schedule_at(t, i);
+        }
+        let drained: Vec<usize> = sim_a.run_until(deadline).into_iter().map(|e| e.payload).collect();
+        let mut expected: Vec<(f64, usize)> =
+            times.iter().copied().enumerate().filter(|&(_, t)| t <= deadline).map(|(i, t)| (t, i)).collect();
+        expected.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let expected: Vec<usize> = expected.into_iter().map(|(_, i)| i).collect();
+        assert_that(drained == expected, format!("{drained:?} != {expected:?}"))?;
+        assert_that(sim_a.now() == deadline, "clock must land on deadline")?;
+        let _ = sim_b;
+        Ok(())
+    });
+}

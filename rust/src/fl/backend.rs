@@ -1,0 +1,84 @@
+//! Gradient-compute backends.
+
+use crate::linalg::{self, Mat};
+use anyhow::Result;
+
+/// The three compute graphs of the system (mirroring
+/// `python/compile/model.py` one-to-one). Implementations: the native
+/// fused kernels below (oracle / fallback) and the PJRT artifact runtime.
+pub trait GradBackend {
+    /// Device partial gradient over a systematic shard:
+    /// g = Xᵀ(Xβ − y) (Eq. 2 inner sum). `x` already contains only the
+    /// rows being processed (masking happened upstream).
+    fn partial_grad(&mut self, x: &Mat, beta: &Mat, y: &Mat) -> Result<Mat>;
+
+    /// Master parity gradient, normalized (Eq. 18 LHS):
+    /// (1/c)·X̃ᵀ(X̃β − ỹ) with `c` the *logical* parity count.
+    fn parity_grad(&mut self, xt: &Mat, beta: &Mat, yt: &Mat, c: usize) -> Result<Mat>;
+
+    /// Device-side parity encode (Eq. 9): (G(w⊙X), G(w⊙y)).
+    fn encode(&mut self, g: &Mat, w: &[f32], x: &Mat, y: &Mat) -> Result<(Mat, Mat)>;
+
+    /// Hot-path optimization hook: register a *static* shard (X, y) whose
+    /// gradient will be requested every epoch with a changing β. Backends
+    /// that benefit (PJRT: pre-pad once, keep device-resident buffers so
+    /// only β crosses the host boundary per epoch) return a handle;
+    /// the default says "no fast path" and the caller falls back to
+    /// [`GradBackend::partial_grad`].
+    fn register_shard(&mut self, _x: &Mat, _y: &Mat) -> Result<Option<u64>> {
+        Ok(None)
+    }
+
+    /// Gradient of a shard registered via [`GradBackend::register_shard`].
+    fn partial_grad_registered(&mut self, _handle: u64, _beta: &Mat) -> Result<Mat> {
+        anyhow::bail!("backend has no registered-shard fast path")
+    }
+
+    /// Like [`GradBackend::register_shard`] for the master's composite
+    /// parity set (normalized-by-c gradient each epoch).
+    fn register_parity(&mut self, _xt: &Mat, _yt: &Mat, _c: usize) -> Result<Option<u64>> {
+        Ok(None)
+    }
+
+    /// Normalized parity gradient of a set registered via
+    /// [`GradBackend::register_parity`].
+    fn parity_grad_registered(&mut self, _handle: u64, _beta: &Mat) -> Result<Mat> {
+        anyhow::bail!("backend has no registered-parity fast path")
+    }
+
+    /// Human-readable backend name (logging / EXPERIMENTS.md provenance).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust backend built on [`crate::linalg`]'s fused kernels.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl GradBackend for NativeBackend {
+    fn partial_grad(&mut self, x: &Mat, beta: &Mat, y: &Mat) -> Result<Mat> {
+        Ok(linalg::partial_grad(x, beta, y))
+    }
+
+    fn parity_grad(&mut self, xt: &Mat, beta: &Mat, yt: &Mat, c: usize) -> Result<Mat> {
+        anyhow::ensure!(c > 0, "parity count must be positive");
+        let mut g = linalg::partial_grad(xt, beta, yt);
+        g.scale(1.0 / c as f32);
+        Ok(g)
+    }
+
+    fn encode(&mut self, g: &Mat, w: &[f32], x: &Mat, y: &Mat) -> Result<(Mat, Mat)> {
+        anyhow::ensure!(g.cols() == x.rows(), "G cols must match X rows");
+        anyhow::ensure!(w.len() == x.rows(), "weight diagonal length");
+        // fused G·diag(w): scale a copy of X/y rows once, then GEMM —
+        // mirrors the Pallas kernel's w-fused tile loop.
+        let mut xw = x.clone();
+        xw.scale_rows(w);
+        let mut yw = y.clone();
+        yw.scale_rows(w);
+        Ok((linalg::matmul(g, &xw), linalg::matmul(g, &yw)))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}

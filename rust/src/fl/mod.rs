@@ -1,0 +1,22 @@
+//! Federated-learning engine: gradient backends, the model update rule,
+//! and the gradient-assembly math of Eqs. (2)–(3) and (18)–(19).
+//!
+//! The *timing* of federated learning (who returns by when) lives in
+//! [`crate::coordinator`]; this module owns the *numerics*:
+//!
+//! * [`GradBackend`] — the three compute graphs every epoch needs
+//!   (device partial gradient, normalized parity gradient, parity encode),
+//!   implemented natively ([`NativeBackend`], the oracle) and via PJRT
+//!   artifacts ([`crate::runtime::PjrtBackend`]).
+//! * [`GlobalModel`] — β and the Eq. (3) update `β ← β − (μ/m)·g`.
+//! * [`assemble_coded_gradient`] — the master's Eq. 18+19 combination:
+//!   normalized parity gradient + the on-time device partial gradients.
+
+mod backend;
+mod model;
+
+pub use backend::{GradBackend, NativeBackend};
+pub use model::{assemble_coded_gradient, GlobalModel};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,55 @@
+//! Global model state and the master's gradient combination.
+
+use crate::linalg::Mat;
+
+/// The global model β and its update rule.
+#[derive(Clone, Debug)]
+pub struct GlobalModel {
+    pub beta: Mat,
+    /// Learning rate μ (Eq. 3 divides by m at update time).
+    pub learning_rate: f64,
+    /// Total raw points m.
+    pub total_points: usize,
+}
+
+impl GlobalModel {
+    /// β⁽⁰⁾ = 0 (the paper allows arbitrary init; zero is standard and
+    /// makes NMSE start at exactly 1).
+    pub fn zeros(dim: usize, learning_rate: f64, total_points: usize) -> Self {
+        Self { beta: Mat::zeros(dim, 1), learning_rate, total_points }
+    }
+
+    /// Eq. (3): β ← β − (μ/m)·g.
+    pub fn apply_gradient(&mut self, grad: &Mat) {
+        let scale = -(self.learning_rate / self.total_points as f64) as f32;
+        self.beta.axpy(scale, grad);
+    }
+
+    /// NMSE against the ground truth (§IV metric).
+    pub fn nmse(&self, beta_star: &Mat) -> f64 {
+        self.beta.nmse(beta_star)
+    }
+}
+
+/// Eq. 18 + Eq. 19 combination: the parity gradient (already normalized by
+/// c) estimates `XᵀWᵀW(Xβ−y)`; the received device gradients contribute
+/// the `(1 − w²)` complement in expectation. Their sum estimates the full
+/// gradient of Eq. (2).
+///
+/// `device_grads` holds the partial gradients that arrived by t*;
+/// `parity_grad` is `None` on the (rare, off-policy) epochs where the
+/// master's own parity computation missed the deadline.
+pub fn assemble_coded_gradient(
+    dim: usize,
+    parity_grad: Option<&Mat>,
+    device_grads: &[&Mat],
+) -> Mat {
+    let mut g = Mat::zeros(dim, 1);
+    if let Some(p) = parity_grad {
+        g.add_assign(p);
+    }
+    for dg in device_grads {
+        g.add_assign(dg);
+    }
+    g
+}

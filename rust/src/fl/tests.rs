@@ -1,0 +1,168 @@
+use super::*;
+use crate::data::Dataset;
+use crate::linalg::{matmul, matmul_at_b, Mat};
+use crate::rng::Rng;
+use crate::testing::prop::{self, assert_that};
+
+#[test]
+fn native_partial_grad_matches_formula() {
+    let mut rng = Rng::new(1);
+    let x = Mat::randn(30, 8, &mut rng);
+    let beta = Mat::randn(8, 1, &mut rng);
+    let y = Mat::randn(30, 1, &mut rng);
+    let mut b = NativeBackend;
+    let got = b.partial_grad(&x, &beta, &y).unwrap();
+    let mut resid = matmul(&x, &beta);
+    resid.axpy(-1.0, &y);
+    let want = matmul_at_b(&x, &resid);
+    assert!(got.max_abs_diff(&want) < 1e-4);
+}
+
+#[test]
+fn native_parity_grad_normalizes_by_c() {
+    let mut rng = Rng::new(2);
+    let xt = Mat::randn(64, 8, &mut rng);
+    let beta = Mat::randn(8, 1, &mut rng);
+    let yt = Mat::randn(64, 1, &mut rng);
+    let mut b = NativeBackend;
+    let unnorm = b.partial_grad(&xt, &beta, &yt).unwrap();
+    let got = b.parity_grad(&xt, &beta, &yt, 48).unwrap(); // logical c < rows
+    let mut want = unnorm.clone();
+    want.scale(1.0 / 48.0);
+    assert!(got.max_abs_diff(&want) < 1e-6);
+    assert!(b.parity_grad(&xt, &beta, &yt, 0).is_err());
+}
+
+#[test]
+fn native_encode_matches_two_pass() {
+    let mut rng = Rng::new(3);
+    let g = Mat::randn(6, 20, &mut rng);
+    let x = Mat::randn(20, 5, &mut rng);
+    let y = Mat::randn(20, 1, &mut rng);
+    let w: Vec<f32> = (0..20).map(|i| 0.1 + 0.04 * i as f32).collect();
+    let mut b = NativeBackend;
+    let (xt, yt) = b.encode(&g, &w, &x, &y).unwrap();
+    let mut xw = x.clone();
+    xw.scale_rows(&w);
+    let mut yw = y.clone();
+    yw.scale_rows(&w);
+    assert!(xt.max_abs_diff(&matmul(&g, &xw)) < 1e-5);
+    assert!(yt.max_abs_diff(&matmul(&g, &yw)) < 1e-5);
+    // dimension mismatches are rejected
+    assert!(b.encode(&g, &w[..10], &x, &y).is_err());
+}
+
+#[test]
+fn model_update_is_eq3() {
+    let mut m = GlobalModel::zeros(4, 0.1, 100);
+    let g = Mat::col_vec(&[1.0, -2.0, 0.0, 4.0]);
+    m.apply_gradient(&g);
+    // β ← 0 − (0.1/100)·g
+    assert!((m.beta[(0, 0)] + 0.001).abs() < 1e-9);
+    assert!((m.beta[(1, 0)] - 0.002).abs() < 1e-9);
+    assert!((m.beta[(3, 0)] + 0.004).abs() < 1e-9);
+}
+
+#[test]
+fn model_nmse_starts_at_one_with_zero_init() {
+    let mut rng = Rng::new(4);
+    let beta_star = Mat::randn(16, 1, &mut rng);
+    let m = GlobalModel::zeros(16, 0.01, 10);
+    assert!((m.nmse(&beta_star) - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn assemble_combines_parity_and_devices() {
+    let p = Mat::col_vec(&[1.0, 1.0]);
+    let d1 = Mat::col_vec(&[0.5, 0.0]);
+    let d2 = Mat::col_vec(&[0.0, 0.25]);
+    let g = assemble_coded_gradient(2, Some(&p), &[&d1, &d2]);
+    assert_eq!(g.as_slice(), &[1.5, 1.25]);
+    let g2 = assemble_coded_gradient(2, None, &[&d1]);
+    assert_eq!(g2.as_slice(), &[0.5, 0.0]);
+    let g3 = assemble_coded_gradient(2, None, &[]);
+    assert_eq!(g3.as_slice(), &[0.0, 0.0]);
+}
+
+#[test]
+fn full_batch_gd_converges_on_clean_data() {
+    // closed-loop sanity: iterating Eq. 2+3 on noiseless data drives NMSE→0
+    let mut rng = Rng::new(5);
+    let d = 12;
+    let ds = Dataset::generate(240, d, 80.0, &mut rng); // ~noiseless
+    let mut model = GlobalModel::zeros(d, 0.05, 240);
+    let mut backend = NativeBackend;
+    for _ in 0..600 {
+        let g = backend.partial_grad(&ds.x, &model.beta, &ds.y).unwrap();
+        model.apply_gradient(&g);
+    }
+    let nmse = model.nmse(&ds.beta_star);
+    assert!(nmse < 1e-6, "GD did not converge: NMSE = {nmse:.3e}");
+}
+
+#[test]
+fn prop_gd_step_is_linear_in_gradient() {
+    prop::check("gd step linearity", prop::cfg_cases(30), |g| {
+        let d = g.size_in(1, 16);
+        let lr = g.f64_in(0.001, 0.5);
+        let mpts = g.size_in(1, 500);
+        let mut rng = g.rng();
+        let ga = Mat::randn(d, 1, &mut rng);
+        let gb = Mat::randn(d, 1, &mut rng);
+        // apply(ga) then apply(gb) == apply(ga + gb)
+        let mut m1 = GlobalModel::zeros(d, lr, mpts);
+        m1.apply_gradient(&ga);
+        m1.apply_gradient(&gb);
+        let mut m2 = GlobalModel::zeros(d, lr, mpts);
+        let mut gsum = ga.clone();
+        gsum.add_assign(&gb);
+        m2.apply_gradient(&gsum);
+        assert_that(m1.beta.max_abs_diff(&m2.beta) < 1e-5, "update not additive")
+    });
+}
+
+#[test]
+fn coded_gradient_is_unbiased_estimate_of_full_gradient() {
+    // The Eq. 18+19 claim, tested end-to-end over the randomness of both
+    // the code (G) and the Bernoulli returns: averaging the assembled
+    // coded gradient over many independent draws must approach the exact
+    // full-data gradient Xᵀ(Xβ − y).
+    use crate::coding::DeviceCode;
+    use crate::config::GeneratorKind;
+
+    let mut rng = Rng::new(11);
+    let (l, d) = (60usize, 12usize);
+    let ds = Dataset::generate(l, d, 10.0, &mut rng);
+    let beta = Mat::randn(d, 1, &mut rng);
+    let mut backend = NativeBackend;
+    let full = backend.partial_grad(&ds.x, &beta, &ds.y).unwrap();
+
+    let c = 512;
+    let load = 40; // systematic points; the other 20 are punctured
+    let p_return = 0.7; // P{T ≤ t*} ⇒ prob_miss = 0.3 ⇒ w² = 0.3
+    let trials = 600;
+    let mut mean = Mat::zeros(d, 1);
+    for t in 0..trials {
+        let mut trial_rng = Rng::new(1000 + t as u64);
+        let code =
+            DeviceCode::draw(l, c, load, 1.0 - p_return, GeneratorKind::Gaussian, &mut trial_rng);
+        let (xt, yt) =
+            backend.encode(&code.generator, &code.weights, &ds.x, &ds.y).unwrap();
+        let parity = backend.parity_grad(&xt, &beta, &yt, c).unwrap();
+        let mut combined = parity;
+        if trial_rng.bernoulli(p_return) {
+            // device made the deadline: its systematic partial gradient
+            let mut xs = Mat::zeros(load, d);
+            let mut ys = Mat::zeros(load, 1);
+            for (r, &src) in code.systematic_rows().iter().enumerate() {
+                xs.row_mut(r).copy_from_slice(ds.x.row(src));
+                ys[(r, 0)] = ds.y[(src, 0)];
+            }
+            let dev = backend.partial_grad(&xs, &beta, &ys).unwrap();
+            combined.add_assign(&dev);
+        }
+        mean.axpy(1.0 / trials as f32, &combined);
+    }
+    let rel = (mean.dist_sq(&full) / full.norm_sq()).sqrt();
+    assert!(rel < 0.12, "coded gradient biased: rel err {rel:.3}");
+}

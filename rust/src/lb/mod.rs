@@ -1,0 +1,24 @@
+//! Load balancing & coding-redundancy optimization (§III-B, Eqs. 13–16).
+//!
+//! The two-step optimization adapted from Reisizadeh et al. [6]:
+//!
+//! 1. For a candidate epoch deadline `t`, each device's optimal systematic
+//!    load is `ℓᵢ*(t) = argmax_{0≤ℓ̃≤ℓᵢ} E[R(t; ℓ̃)]` (Eq. 14) where
+//!    `E[R] = ℓ̃ · P{T(ℓ̃) ≤ t}` — concave-shaped with an interior max
+//!    (Fig. 1). The master's parity load is maximized the same way up to
+//!    the cap `c^up` (Eq. 15).
+//! 2. The epoch deadline is the smallest `t` whose expected aggregate
+//!    return reaches the total data count: `m ≤ E[R(t; ℓ*(t))] ≤ m + ε`
+//!    (Eq. 16). Since every `E[Rᵢ(t; ℓᵢ*(t))]` is nondecreasing in `t`,
+//!    the aggregate is monotone and bisection converges.
+//!
+//! The coding redundancy is then `c = ℓ*_{n+1}(t*)` and `δ = c/m`.
+//! [`optimize_fixed_c`] solves the Fig. 2/5 variant where δ (hence c) is
+//! pinned and only `t*` and the device loads are optimized.
+
+mod optimizer;
+
+pub use optimizer::{optimal_load, optimize, optimize_fixed_c, LoadPolicy};
+
+#[cfg(test)]
+mod tests;

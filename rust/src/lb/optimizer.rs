@@ -1,0 +1,174 @@
+//! The Eq. 13–16 optimizer.
+
+use crate::simnet::{DeviceProfile, Fleet};
+use anyhow::Result;
+
+/// Output of the load/redundancy optimization: everything the coordinator
+/// needs to configure an epoch.
+#[derive(Clone, Debug)]
+pub struct LoadPolicy {
+    /// ℓᵢ*(t*) — systematic points each device processes per epoch.
+    pub device_loads: Vec<usize>,
+    /// c = ℓ*_{n+1}(t*) — parity rows each device uploads once and the
+    /// master processes per epoch.
+    pub parity_rows: usize,
+    /// t* — the master's per-epoch deadline (seconds).
+    pub epoch_deadline: f64,
+    /// Redundancy metric δ = c/m (§IV).
+    pub delta: f64,
+    /// E[R(t*; ℓ*)] — expected aggregate return at the chosen point.
+    pub expected_return: f64,
+    /// Per-device P{Tᵢ ≥ t*} at the assigned loads (Eq. 17 weights²,
+    /// cached here because both the weight matrices and the analysis
+    /// benches need them).
+    pub miss_probs: Vec<f64>,
+}
+
+impl LoadPolicy {
+    /// The uncoded-FL policy (δ = 0): every device processes its full
+    /// shard, no deadline (the master waits for all m partial gradients).
+    pub fn uncoded(fleet: &Fleet) -> Self {
+        Self {
+            device_loads: fleet.devices.iter().map(|p| p.points).collect(),
+            parity_rows: 0,
+            epoch_deadline: f64::INFINITY,
+            delta: 0.0,
+            expected_return: fleet.total_points() as f64,
+            miss_probs: vec![0.0; fleet.n_devices()],
+        }
+    }
+}
+
+/// Eq. 14/15: maximize `ℓ̃ · P{T(ℓ̃) ≤ t}` over `ℓ̃ ∈ [0, cap]`.
+///
+/// Exhaustive scan: the expected-return curve is unimodal in practice
+/// (Fig. 1) but cheap enough (cap ≤ a few thousand, CDF is closed-form)
+/// that assuming unimodality buys nothing and risks missing the true max
+/// on the stepped boundary where `kmax` changes.
+pub fn optimal_load(profile: &DeviceProfile, t: f64, cap: usize) -> (usize, f64) {
+    let mut best = (0usize, 0.0f64);
+    for l in 1..=cap {
+        let r = profile.expected_return(l, t);
+        if r > best.1 {
+            best = (l, r);
+        }
+        // early exit: once the deterministic compute time alone exceeds t,
+        // every larger load returns 0
+        if (l as f64) * profile.compute.secs_per_point > t {
+            break;
+        }
+    }
+    best
+}
+
+/// Expected aggregate return at deadline `t` with per-step optimal loads
+/// (the objective of Eq. 16). Returns (aggregate, device loads, master
+/// load). `fixed_c` pins the master's parity load instead of optimizing.
+fn aggregate_at(
+    fleet: &Fleet,
+    t: f64,
+    c_up: usize,
+    fixed_c: Option<usize>,
+) -> (f64, Vec<usize>, usize) {
+    let mut total = 0.0;
+    let mut loads = Vec::with_capacity(fleet.n_devices());
+    for dev in &fleet.devices {
+        let (l, r) = optimal_load(dev, t, dev.points);
+        loads.push(l);
+        total += r;
+    }
+    let master_load = match fixed_c {
+        Some(c) => c,
+        None => optimal_load(&fleet.master, t, c_up).0,
+    };
+    total += fleet.master.expected_return(master_load, t);
+    (total, loads, master_load)
+}
+
+/// Eq. 16: the full two-step optimization.
+///
+/// * `c_up` — the master-side parity cap c^up (Eq. 15).
+/// * `epsilon` — tolerance on the expected aggregate return, in points.
+///
+/// Bisection on `t`: the aggregate is nondecreasing in `t` and reaches
+/// `m + c_up ≥ m` as `t → ∞`, so a bracket always exists.
+pub fn optimize(fleet: &Fleet, c_up: usize, epsilon: f64) -> Result<LoadPolicy> {
+    optimize_inner(fleet, c_up, epsilon, None)
+}
+
+/// Fig. 2/5 variant: δ (hence c) is pinned; optimize loads and t* only.
+pub fn optimize_fixed_c(fleet: &Fleet, c: usize, epsilon: f64) -> Result<LoadPolicy> {
+    // δ = 0 can only reach E[R] = m in the t → ∞ limit (every device at
+    // full load with certain return) — that is uncoded FL, a different
+    // policy (`LoadPolicy::uncoded`), not a degenerate bisection answer.
+    anyhow::ensure!(c > 0, "c = 0 is uncoded FL; use LoadPolicy::uncoded");
+    optimize_inner(fleet, c, epsilon, Some(c))
+}
+
+fn optimize_inner(
+    fleet: &Fleet,
+    c_up: usize,
+    epsilon: f64,
+    fixed_c: Option<usize>,
+) -> Result<LoadPolicy> {
+    let m = fleet.total_points() as f64;
+    anyhow::ensure!(m > 0.0, "fleet holds no data");
+    anyhow::ensure!(epsilon >= 0.0, "epsilon must be nonnegative");
+
+    // bracket: grow t until the aggregate reaches m
+    let mut lo = 0.0f64;
+    let mut hi = fleet
+        .devices
+        .iter()
+        .map(|p| p.mean_total_delay(p.points))
+        .fold(0.0f64, f64::max)
+        .max(1e-6);
+    let mut hi_agg = aggregate_at(fleet, hi, c_up, fixed_c).0;
+    let mut guard = 0;
+    while hi_agg < m {
+        hi *= 2.0;
+        hi_agg = aggregate_at(fleet, hi, c_up, fixed_c).0;
+        guard += 1;
+        anyhow::ensure!(
+            guard <= 60,
+            "cannot reach aggregate return m={m}: the fleet cannot return all \
+             data in finite time (got {hi_agg} at t={hi})"
+        );
+    }
+
+    // bisect to the smallest t with aggregate ≥ m (within ε or time-res)
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        let agg = aggregate_at(fleet, mid, c_up, fixed_c).0;
+        if agg >= m {
+            hi = mid;
+            hi_agg = agg;
+            if agg <= m + epsilon {
+                break; // inside the Eq. 16 tolerance band
+            }
+        } else {
+            lo = mid;
+        }
+        if hi - lo < 1e-9 * hi.max(1.0) {
+            break;
+        }
+    }
+
+    let t_star = hi;
+    let (expected_return, device_loads, master_load) = aggregate_at(fleet, t_star, c_up, fixed_c);
+    debug_assert!((expected_return - hi_agg).abs() < 1e-6);
+    let miss_probs = fleet
+        .devices
+        .iter()
+        .zip(&device_loads)
+        .map(|(p, &l)| p.prob_miss(l, t_star))
+        .collect();
+    Ok(LoadPolicy {
+        device_loads,
+        parity_rows: master_load,
+        epoch_deadline: t_star,
+        delta: master_load as f64 / m,
+        expected_return,
+        miss_probs,
+    })
+}

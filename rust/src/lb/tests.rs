@@ -1,0 +1,163 @@
+use super::*;
+use crate::config::ExperimentConfig;
+use crate::rng::Rng;
+use crate::simnet::Fleet;
+use crate::testing::prop::{self, assert_that};
+
+fn paper_fleet(seed: u64) -> Fleet {
+    let cfg = ExperimentConfig::paper();
+    Fleet::from_config(&cfg, &mut Rng::new(seed))
+}
+
+#[test]
+fn optimal_load_matches_brute_force() {
+    let fleet = paper_fleet(1);
+    for dev in fleet.devices.iter().step_by(6) {
+        let t = 0.8 * dev.mean_total_delay(dev.points);
+        let (l, r) = optimal_load(dev, t, dev.points);
+        // brute force without the early-exit shortcut
+        let mut best = (0usize, 0.0f64);
+        for cand in 1..=dev.points {
+            let ret = dev.expected_return(cand, t);
+            if ret > best.1 {
+                best = (cand, ret);
+            }
+        }
+        assert_eq!(l, best.0);
+        assert!((r - best.1).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn optimal_load_zero_when_deadline_unreachable() {
+    let fleet = paper_fleet(2);
+    let dev = &fleet.devices[0];
+    // deadline below the minimum possible round trip: nothing can return
+    let (l, r) = optimal_load(dev, 1e-9, dev.points);
+    assert_eq!(l, 0);
+    assert_eq!(r, 0.0);
+}
+
+#[test]
+fn optimize_reaches_m_within_tolerance() {
+    let fleet = paper_fleet(3);
+    let m = fleet.total_points() as f64;
+    let c_up = (0.3 * m) as usize;
+    let policy = optimize(&fleet, c_up, 1.0).unwrap();
+    assert!(
+        policy.expected_return >= m && policy.expected_return <= m + 25.0,
+        "E[R] = {} not ≈ m = {m}",
+        policy.expected_return
+    );
+    assert!(policy.epoch_deadline.is_finite() && policy.epoch_deadline > 0.0);
+    assert!(policy.parity_rows > 0, "heterogeneous fleet should want parity");
+    assert!(policy.parity_rows <= c_up);
+    assert!((policy.delta - policy.parity_rows as f64 / m).abs() < 1e-12);
+}
+
+#[test]
+fn optimize_loads_respect_local_data() {
+    let fleet = paper_fleet(4);
+    let policy = optimize(&fleet, 2000, 1.0).unwrap();
+    for (load, dev) in policy.device_loads.iter().zip(&fleet.devices) {
+        assert!(*load <= dev.points, "load {load} exceeds shard {}", dev.points);
+    }
+    assert_eq!(policy.miss_probs.len(), fleet.n_devices());
+    for p in &policy.miss_probs {
+        assert!((0.0..=1.0).contains(p));
+    }
+}
+
+#[test]
+fn optimize_fixed_c_hits_requested_delta() {
+    let fleet = paper_fleet(5);
+    let m = fleet.total_points();
+    let c = (0.13 * m as f64) as usize;
+    let policy = optimize_fixed_c(&fleet, c, 1.0).unwrap();
+    assert_eq!(policy.parity_rows, c);
+    assert!((policy.delta - 0.13).abs() < 0.001);
+    assert!(policy.expected_return >= m as f64);
+}
+
+#[test]
+fn fixed_c_zero_errors_out() {
+    // δ = 0 cannot reach E[R] = m at finite t — the optimizer must say so
+    // (the caller should use LoadPolicy::uncoded instead).
+    let fleet = paper_fleet(6);
+    assert!(optimize_fixed_c(&fleet, 0, 1.0).is_err());
+}
+
+#[test]
+fn uncoded_policy_is_full_load_no_deadline() {
+    let fleet = paper_fleet(7);
+    let p = LoadPolicy::uncoded(&fleet);
+    assert_eq!(p.parity_rows, 0);
+    assert_eq!(p.delta, 0.0);
+    assert!(p.epoch_deadline.is_infinite());
+    assert_eq!(p.device_loads, vec![300; 24]);
+}
+
+#[test]
+fn deadline_decreases_with_more_redundancy_allowed() {
+    // more parity capacity ⇒ the master substitutes for more stragglers ⇒
+    // the deadline needed to gather an expected m returns shrinks
+    let fleet = paper_fleet(8);
+    let m = fleet.total_points() as f64;
+    let t_small = optimize_fixed_c(&fleet, (0.05 * m) as usize, 1.0).unwrap().epoch_deadline;
+    let t_large = optimize_fixed_c(&fleet, (0.25 * m) as usize, 1.0).unwrap().epoch_deadline;
+    assert!(
+        t_large < t_small,
+        "t*(δ=0.25) = {t_large} should be < t*(δ=0.05) = {t_small}"
+    );
+}
+
+#[test]
+fn homogeneous_fleet_needs_little_parity() {
+    // Fig. 4 at (0,0): coding gain ≈ 1 — the optimizer should want little
+    // redundancy relative to the heterogeneous case
+    let mut cfg = ExperimentConfig::paper();
+    cfg.nu_comp = 0.0;
+    cfg.nu_link = 0.0;
+    let homo = Fleet::from_config(&cfg, &mut Rng::new(9));
+    let hetero = paper_fleet(9);
+    let c_up = (0.3 * homo.total_points() as f64) as usize;
+    let p_homo = optimize(&homo, c_up, 1.0).unwrap();
+    let p_hetero = optimize(&hetero, c_up, 1.0).unwrap();
+    assert!(
+        p_homo.delta <= p_hetero.delta + 1e-9,
+        "homogeneous δ = {} should not exceed heterogeneous δ = {}",
+        p_homo.delta,
+        p_hetero.delta
+    );
+}
+
+#[test]
+fn prop_optimizer_invariants() {
+    prop::check("optimizer invariants", prop::cfg_cases(12), |g| {
+        let mut cfg = ExperimentConfig::paper();
+        cfg.n_devices = g.size_in(2, 12);
+        cfg.points_per_device = g.size_in(20, 120);
+        cfg.nu_comp = g.f64_in(0.0, 0.5);
+        cfg.nu_link = g.f64_in(0.0, 0.5);
+        let mut rng = g.rng();
+        let fleet = Fleet::from_config(&cfg, &mut rng);
+        let m = fleet.total_points() as f64;
+        let c_up = (0.4 * m).ceil() as usize;
+        let policy = optimize(&fleet, c_up, 1.0)
+            .map_err(|e| format!("optimize failed: {e}"))?;
+        assert_that(policy.expected_return >= m - 1e-6, "aggregate must reach m")?;
+        assert_that(policy.parity_rows <= c_up, "c within cap")?;
+        assert_that(
+            policy.device_loads.iter().zip(&fleet.devices).all(|(&l, d)| l <= d.points),
+            "loads within shards",
+        )?;
+        assert_that(policy.epoch_deadline > 0.0, "positive deadline")?;
+        // miss probabilities consistent with the returned loads/deadline
+        for (i, (&l, dev)) in policy.device_loads.iter().zip(&fleet.devices).enumerate() {
+            let want = dev.prob_miss(l, policy.epoch_deadline);
+            let got = policy.miss_probs[i];
+            assert_that((want - got).abs() < 1e-9, format!("miss prob mismatch dev {i}"))?;
+        }
+        Ok(())
+    });
+}

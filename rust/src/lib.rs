@@ -1,0 +1,49 @@
+//! # cfl — Coded Federated Learning
+//!
+//! A reproduction of *Coded Federated Learning* (Dhakal, Prakash, Yona,
+//! Talwar, Himayat — IEEE GLOBECOM Workshops 2019) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination contribution: master/device
+//!   topology, the per-device load & coding-redundancy optimizer
+//!   (Eqs. 13–16), parity encoding and composite aggregation (Eqs. 9–12),
+//!   deadline-gated gradient aggregation (Eqs. 18–19), delay simulation
+//!   (§II-A), and the uncoded-FL / least-squares baselines.
+//! * **L2 (python/compile/model.py)** — the linear-regression gradient and
+//!   parity-encode graphs, lowered once to HLO-text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the gradient and
+//!   encode hot-spots, validated against a jnp oracle.
+//!
+//! The [`runtime`] module loads the artifacts via PJRT (`xla` crate) so the
+//! entire training hot path runs in rust; [`linalg`] provides a native
+//! oracle/fallback.
+//!
+//! Quick tour (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use cfl::config::ExperimentConfig;
+//! use cfl::coordinator::SimCoordinator;
+//!
+//! let cfg = ExperimentConfig::small();
+//! let mut sim = SimCoordinator::new(&cfg).unwrap();
+//! let coded = sim.train_cfl().unwrap();
+//! let uncoded = sim.train_uncoded().unwrap();
+//! println!("CFL reached NMSE {:.2e}", coded.trace.final_nmse().unwrap());
+//! # let _ = uncoded;
+//! ```
+
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod des;
+pub mod fl;
+pub mod lb;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod simnet;
+pub mod stats;
+pub mod testing;

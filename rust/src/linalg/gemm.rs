@@ -1,0 +1,98 @@
+//! Blocked GEMM and the fused partial-gradient kernel.
+//!
+//! Hot-path notes (§Perf): the native path serves two jobs — the test
+//! oracle, and the gradient fallback when artifacts are absent. The GEMM
+//! uses i-k-j loop order (unit-stride inner loop over B's and C's rows)
+//! with L1-sized k×j tiling; the fused [`partial_grad`] streams each row of
+//! X exactly twice (once for the residual dot, once for the rank-1 gradient
+//! update) with the residual kept in registers — the same fusion the L1
+//! Pallas kernel performs in VMEM.
+
+use super::Mat;
+
+/// Cache block edge for the k (reduction) dimension.
+const BK: usize = 64;
+/// Cache block edge for the j (output-column) dimension.
+const BJ: usize = 256;
+
+/// C = A·B (blocked, row-major).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul inner dims: {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for j0 in (0..n).step_by(BJ) {
+            let j1 = (j0 + BJ).min(n);
+            for i in 0..m {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue; // zero-padded operands are common
+                    }
+                    let brow = b.row(kk);
+                    for j in j0..j1 {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ·B without materializing Aᵀ (A is consumed row-wise, so this is a
+/// sum of rank-1 outer products — unit stride throughout).
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b row dims");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for r in 0..k {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for i in 0..m {
+            let ari = arow[i];
+            if ari == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += ari * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Fused partial gradient g = Xᵀ(Xβ − y) — native twin of the L1 Pallas
+/// kernel (Eq. 2 inner sum / Eq. 18 numerator).
+///
+/// One pass per row: residual rᵢ = xᵢ·β − yᵢ (dot product), then
+/// g += rᵢ·xᵢ (axpy). X is streamed once; g (d floats) stays hot.
+pub fn partial_grad(x: &Mat, beta: &Mat, y: &Mat) -> Mat {
+    assert_eq!(beta.cols(), 1, "beta must be a column vector");
+    assert_eq!(y.cols(), 1, "y must be a column vector");
+    assert_eq!(x.cols(), beta.rows(), "X/β dims");
+    assert_eq!(x.rows(), y.rows(), "X/y dims");
+    let d = x.cols();
+    let mut g = Mat::zeros(d, 1);
+    let bcol = beta.as_slice();
+    let gcol = g.as_mut_slice();
+    for r in 0..x.rows() {
+        let xrow = x.row(r);
+        let mut dot = 0.0f32;
+        for (xv, bv) in xrow.iter().zip(bcol) {
+            dot += xv * bv;
+        }
+        let resid = dot - y.as_slice()[r];
+        if resid == 0.0 {
+            continue;
+        }
+        for (gv, xv) in gcol.iter_mut().zip(xrow) {
+            *gv += resid * xv;
+        }
+    }
+    g
+}

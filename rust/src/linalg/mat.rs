@@ -1,0 +1,213 @@
+//! Row-major dense matrix.
+
+use crate::rng::Rng;
+
+/// Dense row-major `f32` matrix.
+///
+/// Row-major matches both the C-order numpy arrays the artifacts were
+/// lowered for and the PJRT literal layout, so hand-off between the native
+/// path and the runtime is a straight memcpy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer len != rows*cols");
+        Self { rows, cols, data }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix of iid standard normals.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal_f32(&mut m.data);
+        m
+    }
+
+    /// Matrix of iid Rademacher ±1 entries (Bernoulli(½) generator).
+    pub fn rademacher(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.rademacher() as f32;
+        }
+        m
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(v: &[f32]) -> Self {
+        Self::from_vec(v.len(), 1, v.to_vec())
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Select a contiguous row range as a new matrix.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Mat {
+        assert!(start <= end && end <= self.rows);
+        Mat::from_vec(end - start, self.cols, self.data[start * self.cols..end * self.cols].to_vec())
+    }
+
+    /// Transpose (out-of-place).
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// Zero-pad to a larger shape (exactness argument: see model.py).
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Mat {
+        assert!(rows >= self.rows && cols >= self.cols, "pad_to must grow");
+        let mut out = Mat::zeros(rows, cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Top-left sub-matrix (inverse of [`Mat::pad_to`]).
+    pub fn crop_to(&self, rows: usize, cols: usize) -> Mat {
+        assert!(rows <= self.rows && cols <= self.cols, "crop_to must shrink");
+        let mut out = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[..cols]);
+        }
+        out
+    }
+
+    /// a ← a + b
+    pub fn add_assign(&mut self, b: &Mat) {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        for (x, y) in self.data.iter_mut().zip(&b.data) {
+            *x += y;
+        }
+    }
+
+    /// a ← a + s·b (axpy)
+    pub fn axpy(&mut self, s: f32, b: &Mat) {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        for (x, y) in self.data.iter_mut().zip(&b.data) {
+            *x += s * y;
+        }
+    }
+
+    /// Scale every entry.
+    pub fn scale(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// Scale each row `r` by `w[r]` (diagonal weighting, Eq. 9's `W_i X`).
+    pub fn scale_rows(&mut self, w: &[f32]) {
+        assert_eq!(w.len(), self.rows);
+        for (r, &s) in w.iter().enumerate() {
+            for x in self.row_mut(r) {
+                *x *= s;
+            }
+        }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// ‖a − b‖² (Frobenius).
+    pub fn dist_sq(&self, b: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(&x, &y)| {
+                let d = (x - y) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// Normalized MSE ‖a − b‖²/‖b‖² — the paper's §IV metric.
+    pub fn nmse(&self, truth: &Mat) -> f64 {
+        self.dist_sq(truth) / truth.norm_sq()
+    }
+
+    /// Maximum absolute entry difference (test helper).
+    pub fn max_abs_diff(&self, b: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(&x, &y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl core::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl core::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}

@@ -1,0 +1,24 @@
+//! Dense linear algebra substrate (row-major `f32`).
+//!
+//! Two roles:
+//!
+//! 1. **Oracle / fallback** for the PJRT runtime: every artifact graph has
+//!    a native implementation here ([`partial_grad`], [`encode`] in
+//!    `coding`), used by `cargo test` cross-checks and by hosts without
+//!    built artifacts.
+//! 2. **Baselines**: the closed-form least-squares bound of Fig. 2 needs a
+//!    normal-equations solve ([`solve_ls`], Cholesky).
+//!
+//! The GEMM is cache-blocked and the gradient kernel is fused (residual
+//! never materializes in a second pass over memory) — see `gemm.rs`.
+
+mod gemm;
+mod mat;
+mod solve;
+
+pub use gemm::{matmul, matmul_at_b, partial_grad};
+pub use mat::Mat;
+pub use solve::{cholesky_solve_in_place, solve_ls};
+
+#[cfg(test)]
+mod tests;

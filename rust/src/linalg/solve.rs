@@ -1,0 +1,65 @@
+//! Normal-equations least-squares solve (the Fig. 2 "LS bound" baseline).
+
+use super::{matmul_at_b, Mat};
+use anyhow::{bail, Result};
+
+/// Solve A·x = b in place for symmetric positive-definite A via Cholesky
+/// (A = L·Lᵀ). `a` is overwritten with L in its lower triangle. f64
+/// accumulation — the normal equations square the condition number, and
+/// the LS bound anchors every convergence plot.
+pub fn cholesky_solve_in_place(a: &mut [f64], b: &mut [f64], n: usize) -> Result<()> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    // factorize
+    for j in 0..n {
+        let mut diag = a[j * n + j];
+        for k in 0..j {
+            let ljk = a[j * n + k];
+            diag -= ljk * ljk;
+        }
+        if diag <= 0.0 {
+            bail!("matrix not positive definite at pivot {j} (diag={diag})");
+        }
+        let ljj = diag.sqrt();
+        a[j * n + j] = ljj;
+        for i in (j + 1)..n {
+            let mut v = a[i * n + j];
+            for k in 0..j {
+                v -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = v / ljj;
+        }
+    }
+    // forward substitution L·z = b
+    for i in 0..n {
+        let mut v = b[i];
+        for k in 0..i {
+            v -= a[i * n + k] * b[k];
+        }
+        b[i] = v / a[i * n + i];
+    }
+    // back substitution Lᵀ·x = z
+    for i in (0..n).rev() {
+        let mut v = b[i];
+        for k in (i + 1)..n {
+            v -= a[k * n + i] * b[k];
+        }
+        b[i] = v / a[i * n + i];
+    }
+    Ok(())
+}
+
+/// Least-squares estimate β̂ = (XᵀX)⁻¹Xᵀy — the best linear unbiased
+/// estimate the gradient iterations converge toward; its NMSE is the noise
+/// floor drawn in Fig. 2.
+pub fn solve_ls(x: &Mat, y: &Mat) -> Result<Mat> {
+    assert_eq!(y.cols(), 1);
+    assert_eq!(x.rows(), y.rows());
+    let d = x.cols();
+    let xtx = matmul_at_b(x, x); // d×d
+    let xty = matmul_at_b(x, y); // d×1
+    let mut a: Vec<f64> = xtx.as_slice().iter().map(|&v| v as f64).collect();
+    let mut b: Vec<f64> = xty.as_slice().iter().map(|&v| v as f64).collect();
+    cholesky_solve_in_place(&mut a, &mut b, d)?;
+    Ok(Mat::from_vec(d, 1, b.into_iter().map(|v| v as f32).collect()))
+}

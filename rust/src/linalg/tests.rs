@@ -1,0 +1,208 @@
+//! linalg unit tests: construction, GEMM vs naive, fused gradient, solver.
+
+use super::*;
+use crate::rng::Rng;
+
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0f64;
+            for k in 0..a.cols() {
+                s += a[(i, k)] as f64 * b[(k, j)] as f64;
+            }
+            c[(i, j)] = s as f32;
+        }
+    }
+    c
+}
+
+#[test]
+fn mat_construction_and_indexing() {
+    let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+    assert_eq!(m[(0, 0)], 1.0);
+    assert_eq!(m[(1, 2)], 6.0);
+    assert_eq!(m.row(1), &[4., 5., 6.]);
+    assert_eq!(m.rows(), 2);
+    assert_eq!(m.cols(), 3);
+}
+
+#[test]
+#[should_panic(expected = "buffer len")]
+fn mat_from_vec_rejects_bad_len() {
+    Mat::from_vec(2, 3, vec![1.0; 5]);
+}
+
+#[test]
+fn eye_and_matmul_identity() {
+    let mut r = Rng::new(0);
+    let a = Mat::randn(7, 7, &mut r);
+    let i = Mat::eye(7);
+    assert!(matmul(&a, &i).max_abs_diff(&a) < 1e-6);
+    assert!(matmul(&i, &a).max_abs_diff(&a) < 1e-6);
+}
+
+#[test]
+fn blocked_matmul_matches_naive() {
+    let mut r = Rng::new(1);
+    for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (70, 129, 65), (128, 300, 64)] {
+        let a = Mat::randn(m, k, &mut r);
+        let b = Mat::randn(k, n, &mut r);
+        let got = matmul(&a, &b);
+        let want = naive_matmul(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-3 * (k as f32).sqrt(), "({m},{k},{n})");
+    }
+}
+
+#[test]
+fn matmul_at_b_matches_transpose_matmul() {
+    let mut r = Rng::new(2);
+    for &(k, m, n) in &[(5, 3, 4), (64, 32, 16), (300, 50, 1)] {
+        let a = Mat::randn(k, m, &mut r);
+        let b = Mat::randn(k, n, &mut r);
+        let got = matmul_at_b(&a, &b);
+        let want = matmul(&a.transpose(), &b);
+        assert!(got.max_abs_diff(&want) < 1e-3 * (k as f32).sqrt(), "({k},{m},{n})");
+    }
+}
+
+#[test]
+fn partial_grad_matches_composed_ops() {
+    let mut r = Rng::new(3);
+    for &(l, d) in &[(1, 1), (10, 4), (300, 500), (128, 65)] {
+        let x = Mat::randn(l, d, &mut r);
+        let beta = Mat::randn(d, 1, &mut r);
+        let y = Mat::randn(l, 1, &mut r);
+        let mut xb = matmul(&x, &beta);
+        xb.axpy(-1.0, &y);
+        let want = matmul_at_b(&x, &xb);
+        let got = partial_grad(&x, &beta, &y);
+        let scale = want.as_slice().iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+        assert!(got.max_abs_diff(&want) < 2e-4 * scale, "({l},{d})");
+    }
+}
+
+#[test]
+fn partial_grad_zero_row_padding_exact() {
+    let mut r = Rng::new(4);
+    let x = Mat::randn(40, 8, &mut r);
+    let beta = Mat::randn(8, 1, &mut r);
+    let y = Mat::randn(40, 1, &mut r);
+    let g0 = partial_grad(&x, &beta, &y);
+    let g1 = partial_grad(&x.pad_to(64, 8), &beta, &y.pad_to(64, 1));
+    assert_eq!(g0, g1);
+}
+
+#[test]
+fn partial_grad_zero_col_padding_exact() {
+    let mut r = Rng::new(5);
+    let x = Mat::randn(20, 6, &mut r);
+    let beta = Mat::randn(6, 1, &mut r);
+    let y = Mat::randn(20, 1, &mut r);
+    let g0 = partial_grad(&x, &beta, &y);
+    let g1 = partial_grad(&x.pad_to(20, 10), &beta.pad_to(10, 1), &y);
+    assert_eq!(g1.crop_to(6, 1), g0);
+    for i in 6..10 {
+        assert_eq!(g1[(i, 0)], 0.0);
+    }
+}
+
+#[test]
+fn pad_crop_roundtrip() {
+    let mut r = Rng::new(6);
+    let m = Mat::randn(5, 7, &mut r);
+    assert_eq!(m.pad_to(8, 16).crop_to(5, 7), m);
+}
+
+#[test]
+fn transpose_involution() {
+    let mut r = Rng::new(7);
+    let m = Mat::randn(9, 4, &mut r);
+    assert_eq!(m.transpose().transpose(), m);
+}
+
+#[test]
+fn scale_rows_matches_diagonal_matmul() {
+    let mut r = Rng::new(8);
+    let mut m = Mat::randn(6, 5, &mut r);
+    let w: Vec<f32> = (0..6).map(|i| 0.5 + i as f32 * 0.1).collect();
+    let mut diag = Mat::zeros(6, 6);
+    for i in 0..6 {
+        diag[(i, i)] = w[i];
+    }
+    let want = matmul(&diag, &m);
+    m.scale_rows(&w);
+    assert!(m.max_abs_diff(&want) < 1e-6);
+}
+
+#[test]
+fn norms_and_nmse() {
+    let a = Mat::col_vec(&[3.0, 4.0]);
+    assert!((a.norm_sq() - 25.0).abs() < 1e-9);
+    let b = Mat::col_vec(&[3.0, 0.0]);
+    assert!((a.dist_sq(&b) - 16.0).abs() < 1e-9);
+    assert!((b.nmse(&a) - 16.0 / 25.0).abs() < 1e-9);
+    assert_eq!(a.nmse(&a), 0.0);
+}
+
+#[test]
+fn slice_rows_extracts_block() {
+    let m = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+    let s = m.slice_rows(1, 3);
+    assert_eq!(s, Mat::from_vec(2, 2, vec![3., 4., 5., 6.]));
+}
+
+#[test]
+fn cholesky_solves_known_system() {
+    // A = [[4,2],[2,3]], b = [1, 2] → x = [−1/8, 3/4]
+    let mut a = vec![4.0, 2.0, 2.0, 3.0];
+    let mut b = vec![1.0, 2.0];
+    cholesky_solve_in_place(&mut a, &mut b, 2).unwrap();
+    assert!((b[0] + 0.125).abs() < 1e-12);
+    assert!((b[1] - 0.75).abs() < 1e-12);
+}
+
+#[test]
+fn cholesky_rejects_indefinite() {
+    let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, −1
+    let mut b = vec![1.0, 1.0];
+    assert!(cholesky_solve_in_place(&mut a, &mut b, 2).is_err());
+}
+
+#[test]
+fn solve_ls_recovers_noiseless_model() {
+    let mut r = Rng::new(9);
+    let d = 20;
+    let x = Mat::randn(200, d, &mut r);
+    let beta = Mat::randn(d, 1, &mut r);
+    let y = matmul(&x, &beta);
+    let hat = solve_ls(&x, &y).unwrap();
+    assert!(hat.nmse(&beta) < 1e-8, "nmse={}", hat.nmse(&beta));
+}
+
+#[test]
+fn solve_ls_beats_noise_floor() {
+    // with noise, LS should land near the CRB-ish floor, far below NMSE=1
+    let mut r = Rng::new(10);
+    let d = 30;
+    let x = Mat::randn(600, d, &mut r);
+    let beta = Mat::randn(d, 1, &mut r);
+    let mut y = matmul(&x, &beta);
+    for v in y.as_mut_slice() {
+        *v += r.normal() as f32; // SNR ≈ d (≫ 0 dB) per row
+    }
+    let hat = solve_ls(&x, &y).unwrap();
+    assert!(hat.nmse(&beta) < 1e-2);
+}
+
+#[test]
+fn add_assign_axpy_scale() {
+    let mut a = Mat::col_vec(&[1.0, 2.0]);
+    let b = Mat::col_vec(&[10.0, 20.0]);
+    a.add_assign(&b);
+    assert_eq!(a.as_slice(), &[11.0, 22.0]);
+    a.axpy(-1.0, &b);
+    assert_eq!(a.as_slice(), &[1.0, 2.0]);
+    a.scale(3.0);
+    assert_eq!(a.as_slice(), &[3.0, 6.0]);
+}

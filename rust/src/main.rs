@@ -1,0 +1,174 @@
+//! `cfl` — Coded Federated Learning coordinator CLI.
+//!
+//! Subcommands:
+//! * `train`    — run CFL (and optionally the uncoded baseline) on a
+//!   configured problem; prints the convergence summary and writes
+//!   NMSE-vs-time CSV traces.
+//! * `optimize` — solve the Eq. 13–16 load/redundancy policy and print it.
+//! * `live`     — run the threaded live-cluster demo.
+//!
+//! Configuration: paper-scale defaults (`--paper`) or test-scale
+//! (`--small`, default), overridable by an INI file (`--config`) and then
+//! by individual flags.
+
+use anyhow::Result;
+use cfl::cli::Parser;
+use cfl::config::{ExperimentConfig, Ini};
+use cfl::coordinator::{LiveCoordinator, SimCoordinator};
+use cfl::metrics::Table;
+
+fn parser() -> Parser {
+    Parser::new("cfl — Coded Federated Learning (Dhakal et al., GLOBECOM'19 Workshops)")
+        .subcommand("train", "train CFL (+ uncoded baseline) and report convergence")
+        .subcommand("optimize", "print the load/redundancy policy (Eqs. 13-16)")
+        .subcommand("live", "threaded live-cluster demo")
+        .opt("config", "file.ini", "INI config file ([experiment] section)")
+        .opt("seed", "u64", "root seed (default from config)")
+        .opt("delta", "f64|auto", "coding redundancy δ = c/m (default: optimizer)")
+        .opt("nu-comp", "f64", "compute heterogeneity in [0,1)")
+        .opt("nu-link", "f64", "link heterogeneity in [0,1)")
+        .opt("epochs", "usize", "max training epochs")
+        .opt("target-nmse", "f64", "stopping NMSE")
+        .opt("artifacts", "dir", "PJRT artifacts directory (default: native backend)")
+        .opt("out", "dir", "output directory for CSV traces (default: results)")
+        .opt("time-scale", "f64", "live mode: simulated→wall seconds factor")
+        .flag("paper", "use the paper's §IV scale (24 devices, d=500)")
+        .flag("skip-uncoded", "train: skip the uncoded baseline")
+        .flag("quiet", "suppress the per-curve trace files")
+}
+
+fn build_config(args: &cfl::cli::Args) -> Result<ExperimentConfig> {
+    let mut cfg =
+        if args.has_flag("paper") { ExperimentConfig::paper() } else { ExperimentConfig::small() };
+    if let Some(path) = args.get("config") {
+        cfg.apply_ini(&Ini::load(path)?)?;
+    }
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    if let Some(s) = args.get("delta") {
+        cfg.delta = if s.eq_ignore_ascii_case("auto") { None } else { Some(s.parse()?) };
+    }
+    cfg.nu_comp = args.get_or("nu-comp", cfg.nu_comp)?;
+    cfg.nu_link = args.get_or("nu-link", cfg.nu_link)?;
+    cfg.max_epochs = args.get_or("epochs", cfg.max_epochs)?;
+    cfg.target_nmse = args.get_or("target-nmse", cfg.target_nmse)?;
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = Some(dir.to_string());
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &cfl::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let out_dir = args.get_or("out", "results".to_string())?;
+    let mut sim = SimCoordinator::new(&cfg)?;
+    println!(
+        "cfl train: n={} d={} m={} ν=({}, {}) backend={} seed={:#x}",
+        cfg.n_devices,
+        cfg.model_dim,
+        cfg.total_points(),
+        cfg.nu_comp,
+        cfg.nu_link,
+        sim.backend_name(),
+        cfg.seed
+    );
+
+    let ls = sim.ls_bound()?;
+    let coded = sim.train_cfl()?;
+    let mut table = Table::new(&[
+        "run", "δ", "t* (s)", "setup (s)", "epochs", "final NMSE", "t→target (s)",
+    ]);
+    let fmt_run = |r: &cfl::coordinator::RunResult| -> Vec<String> {
+        vec![
+            r.label.clone(),
+            format!("{:.3}", r.delta),
+            if r.epoch_deadline.is_finite() {
+                format!("{:.3}", r.epoch_deadline)
+            } else {
+                "inf".into()
+            },
+            format!("{:.1}", r.setup_secs),
+            format!("{}", r.epoch_times.len()),
+            format!("{:.3e}", r.trace.final_nmse().unwrap_or(f64::NAN)),
+            r.time_to(cfg.target_nmse).map(|t| format!("{t:.1}")).unwrap_or("—".into()),
+        ]
+    };
+    table.row(&fmt_run(&coded));
+    if !args.has_flag("quiet") {
+        coded.trace.write_csv(&format!("{out_dir}/trace_cfl.csv"))?;
+    }
+
+    if !args.has_flag("skip-uncoded") {
+        let uncoded = sim.train_uncoded()?;
+        table.row(&fmt_run(&uncoded));
+        if !args.has_flag("quiet") {
+            uncoded.trace.write_csv(&format!("{out_dir}/trace_uncoded.csv"))?;
+        }
+        if let (Some(tc), Some(tu)) =
+            (coded.time_to(cfg.target_nmse), uncoded.time_to(cfg.target_nmse))
+        {
+            println!("coding gain at NMSE ≤ {:.1e}: {:.2}×", cfg.target_nmse, tu / tc);
+        }
+    }
+    println!("LS bound NMSE: {ls:.3e}");
+    println!("{}", table.render());
+    if !args.has_flag("quiet") {
+        println!("traces written to {out_dir}/");
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &cfl::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let sim = SimCoordinator::new(&cfg)?;
+    let policy = sim.policy()?;
+    println!(
+        "policy: c = {} parity rows (δ = {:.3}), t* = {:.3} s, E[R] = {:.1} of m = {}",
+        policy.parity_rows,
+        policy.delta,
+        policy.epoch_deadline,
+        policy.expected_return,
+        cfg.total_points()
+    );
+    let mut table = Table::new(&["device", "points", "load*", "P{miss}"]);
+    for (i, (&load, &miss)) in policy.device_loads.iter().zip(&policy.miss_probs).enumerate() {
+        table.row(&[
+            format!("{i}"),
+            format!("{}", sim.fleet.devices[i].points),
+            format!("{load}"),
+            format!("{miss:.3}"),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_live(args: &cfl::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let scale = args.get_or("time-scale", 1e-3)?;
+    let epochs = args.get_or("epochs", 100usize)?;
+    println!("live cluster: {} device threads, time scale {scale}", cfg.n_devices);
+    let report = LiveCoordinator::new(&cfg, scale).run(epochs)?;
+    println!(
+        "epochs={} wall={:.2}s on-time={} late={} final NMSE={:.3e}",
+        report.epochs,
+        report.wall_secs,
+        report.on_time_gradients,
+        report.late_gradients,
+        report.final_nmse
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = parser().parse_env()?;
+    match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("live") => cmd_live(&args),
+        _ => {
+            println!("{}", parser().help("cfl"));
+            Ok(())
+        }
+    }
+}

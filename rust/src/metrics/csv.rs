@@ -1,0 +1,74 @@
+//! Tiny CSV writer (quoting rules for the subset we emit: numbers and
+//! simple labels; anything containing a comma/quote/newline is quoted).
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Buffered CSV writer.
+pub struct CsvWriter {
+    out: Box<dyn Write>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create a file (parent directories are created as needed) and write
+    /// the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).with_context(|| format!("mkdir -p {dir:?}"))?;
+        }
+        let file = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        let mut w = Self { out: Box::new(std::io::BufWriter::new(file)), cols: header.len() };
+        w.write_row_str(header)?;
+        Ok(w)
+    }
+
+    /// In-memory writer (tests).
+    pub fn in_memory(header: &[&str]) -> (Self, std::rc::Rc<std::cell::RefCell<Vec<u8>>>) {
+        let buf = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        struct Shared(std::rc::Rc<std::cell::RefCell<Vec<u8>>>);
+        impl Write for Shared {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.borrow_mut().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = Self { out: Box::new(Shared(buf.clone())), cols: header.len() };
+        w.write_row_str(header).expect("in-memory write");
+        (w, buf)
+    }
+
+    fn escape(field: &str) -> String {
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    /// Write a row of string fields.
+    pub fn write_row_str(&mut self, fields: &[&str]) -> Result<()> {
+        anyhow::ensure!(fields.len() == self.cols, "row has {} fields, header {}", fields.len(), self.cols);
+        let line =
+            fields.iter().map(|f| Self::escape(f)).collect::<Vec<_>>().join(",");
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    /// Write a row of f64 values (full precision).
+    pub fn write_row(&mut self, fields: &[f64]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.write_row_str(&refs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}

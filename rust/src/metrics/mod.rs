@@ -1,0 +1,16 @@
+//! Experiment output: convergence traces, CSV files, markdown tables.
+//!
+//! Every bench/figure harness writes (a) a human-readable table on stdout
+//! and (b) a CSV under `results/` so curves can be re-plotted; the
+//! markdown emitters feed EXPERIMENTS.md directly.
+
+mod csv;
+mod table;
+mod trace;
+
+pub use csv::CsvWriter;
+pub use table::Table;
+pub use trace::{ConvergenceTrace, TracePoint};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,72 @@
+//! Aligned text / markdown table rendering for bench output.
+
+/// Simple column-aligned table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width != header width");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row of formatted f64s with the given precision.
+    pub fn row_f(&mut self, cells: &[f64], prec: usize) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|v| format!("{v:.prec$}")).collect();
+        self.row(&cells)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:>width$}", width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut s = fmt_row(&self.header);
+        s.push('\n');
+        s.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Render as a GitHub-markdown table (EXPERIMENTS.md format).
+    pub fn render_markdown(&self) -> String {
+        let mut s = format!("| {} |\n", self.header.join(" | "));
+        s.push_str(&format!("|{}\n", "---|".repeat(self.header.len())));
+        for row in &self.rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+}

@@ -1,0 +1,92 @@
+use super::*;
+
+#[test]
+fn csv_escaping_and_rows() {
+    let (mut w, buf) = CsvWriter::in_memory(&["a", "b,with comma", "c"]);
+    w.write_row_str(&["1", "he said \"hi\"", "plain"]).unwrap();
+    w.write_row(&[1.5, 2.0, -3.25]).unwrap();
+    w.flush().unwrap();
+    let text = String::from_utf8(buf.borrow().clone()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines[0], "a,\"b,with comma\",c");
+    assert_eq!(lines[1], "1,\"he said \"\"hi\"\"\",plain");
+    assert_eq!(lines[2], "1.5,2,-3.25");
+}
+
+#[test]
+fn csv_rejects_wrong_width() {
+    let (mut w, _) = CsvWriter::in_memory(&["a", "b"]);
+    assert!(w.write_row_str(&["only one"]).is_err());
+}
+
+#[test]
+fn csv_create_writes_file() {
+    let dir = std::env::temp_dir().join("cfl_csv_test");
+    let path = dir.join("sub/out.csv");
+    let mut w = CsvWriter::create(&path, &["x"]).unwrap();
+    w.write_row(&[42.0]).unwrap();
+    w.flush().unwrap();
+    drop(w);
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text, "x\n42\n");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn table_renders_aligned_and_markdown() {
+    let mut t = Table::new(&["name", "value"]);
+    t.row(&["alpha".into(), "1".into()]);
+    t.row_f(&[2.5, 3.25], 2);
+    let text = t.render();
+    assert!(text.contains("name"));
+    assert!(text.lines().count() == 4);
+    let md = t.render_markdown();
+    assert!(md.starts_with("| name | value |"));
+    assert!(md.contains("|---|---|"));
+    assert!(md.contains("| alpha | 1 |"));
+}
+
+#[test]
+#[should_panic(expected = "row width")]
+fn table_rejects_wrong_width() {
+    Table::new(&["a"]).row(&["x".into(), "y".into()]);
+}
+
+#[test]
+fn trace_time_to_nmse() {
+    let mut tr = ConvergenceTrace::new("test");
+    tr.push(0.0, 0, 1.0);
+    tr.push(10.0, 1, 0.5);
+    tr.push(20.0, 2, 0.01);
+    assert_eq!(tr.time_to_nmse(0.5), Some(10.0));
+    assert_eq!(tr.time_to_nmse(0.02), Some(20.0));
+    assert_eq!(tr.time_to_nmse(1e-9), None);
+    assert_eq!(tr.final_nmse(), Some(0.01));
+    assert_eq!(tr.nmse_at_time(15.0), Some(0.01));
+}
+
+#[test]
+fn trace_decimate_keeps_ends() {
+    let mut tr = ConvergenceTrace::new("d");
+    for i in 0..100 {
+        tr.push(i as f64, i, 1.0 / (i + 1) as f64);
+    }
+    let thin = tr.decimate(10);
+    assert_eq!(thin.points.len(), 10);
+    assert_eq!(thin.points[0], tr.points[0]);
+    assert_eq!(thin.points[9], tr.points[99]);
+    // short traces pass through
+    assert_eq!(tr.decimate(1000).points.len(), 100);
+}
+
+#[test]
+fn trace_csv_roundtrip() {
+    let dir = std::env::temp_dir().join("cfl_trace_test");
+    let path = dir.join("trace.csv");
+    let mut tr = ConvergenceTrace::new("t");
+    tr.push(1.0, 1, 0.5);
+    tr.write_csv(path.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text, "time_s,epoch,nmse\n1,1,0.5\n");
+    std::fs::remove_dir_all(&dir).ok();
+}

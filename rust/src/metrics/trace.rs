@@ -1,0 +1,73 @@
+//! Convergence traces: (virtual time, epoch, NMSE) series — the raw
+//! material of Figs. 2, 4, 5.
+
+use super::CsvWriter;
+use anyhow::Result;
+
+/// One point on a convergence curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    /// Virtual wall-clock (simulated seconds since training start,
+    /// including any parity-transfer setup delay).
+    pub time_s: f64,
+    pub epoch: usize,
+    pub nmse: f64,
+}
+
+/// A labelled convergence curve.
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceTrace {
+    pub label: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl ConvergenceTrace {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, time_s: f64, epoch: usize, nmse: f64) {
+        self.points.push(TracePoint { time_s, epoch, nmse });
+    }
+
+    /// First simulated time at which the curve reaches `target` NMSE
+    /// (the Fig. 4/5 "convergence time"). `None` if never reached.
+    pub fn time_to_nmse(&self, target: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.nmse <= target).map(|p| p.time_s)
+    }
+
+    /// Final NMSE value.
+    pub fn final_nmse(&self) -> Option<f64> {
+        self.points.last().map(|p| p.nmse)
+    }
+
+    /// NMSE at (or right after) a given virtual time — for aligned
+    /// cross-curve comparisons.
+    pub fn nmse_at_time(&self, t: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.time_s >= t).map(|p| p.nmse)
+    }
+
+    /// Thin the trace to at most `n` points (plot-friendly decimation;
+    /// always keeps the first and last point).
+    pub fn decimate(&self, n: usize) -> Self {
+        assert!(n >= 2);
+        if self.points.len() <= n {
+            return self.clone();
+        }
+        let stride = (self.points.len() - 1) as f64 / (n - 1) as f64;
+        let mut pts = Vec::with_capacity(n);
+        for i in 0..n {
+            pts.push(self.points[(i as f64 * stride).round() as usize]);
+        }
+        Self { label: self.label.clone(), points: pts }
+    }
+
+    /// Write `time_s,epoch,nmse` rows to CSV.
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let mut w = CsvWriter::create(path, &["time_s", "epoch", "nmse"])?;
+        for p in &self.points {
+            w.write_row(&[p.time_s, p.epoch as f64, p.nmse])?;
+        }
+        w.flush()
+    }
+}

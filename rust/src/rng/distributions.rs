@@ -1,0 +1,114 @@
+//! Sampling routines for the distributions in the paper's models.
+//!
+//! * [`normal`] — standard normal via Box–Muller (generator matrices §III-A,
+//!   training data §IV).
+//! * [`exponential`] — rate-λ exponential (stochastic compute component
+//!   `T_{c_{i,2}}`, Eq. 4).
+//! * [`geometric`] — number of transmissions until first success, support
+//!   {1, 2, …} (Eq. 5).
+//! * [`bernoulli`] / [`rademacher`] — coin flips; Rademacher (±1) is the
+//!   normalized Bernoulli(½) generator-matrix variant.
+//! * [`shuffle`] — Fisher–Yates, used to "randomly assign a unique value to
+//!   each edge device" (§IV heterogeneity ladders).
+
+use super::Rng;
+
+impl Rng {
+    /// Standard normal N(0, 1) via Box–Muller.
+    ///
+    /// The second variate of the pair is deliberately discarded: keeping a
+    /// one-sample cache would make substream derivation (`split`) and
+    /// clone-reproducibility subtly stateful for a ~1.6× speedup we don't
+    /// need (gradient math runs through PJRT, not the RNG).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64_open();
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (core::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/λ).
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0, "exponential rate must be positive");
+        -self.next_f64_open().ln() / lambda
+    }
+
+    /// Geometric number of trials until first success, P{N = t} =
+    /// p^(t−1)(1−p), t ≥ 1 — Eq. (5) with `p` the link erasure probability.
+    ///
+    /// Sampled by inversion: N = ⌈ln U / ln p⌉ clamped to ≥ 1, which is
+    /// exact for the ceiling parameterization.
+    #[inline]
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        debug_assert!((0.0..1.0).contains(&p), "erasure probability in [0,1)");
+        if p == 0.0 {
+            return 1;
+        }
+        let u = self.next_f64_open();
+        let n = (u.ln() / p.ln()).ceil();
+        if n < 1.0 {
+            1
+        } else {
+            n as u64
+        }
+    }
+
+    /// Bernoulli(p) coin flip.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Rademacher ±1 (fair coin), the Bernoulli(½) generator-matrix entry
+    /// normalized to zero mean and unit variance.
+    #[inline]
+    pub fn rademacher(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Fill a slice with standard-normal f32 samples (bulk helper for
+    /// data/generator-matrix construction).
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (client-selection extension).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct of {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher–Yates: only the first k positions are needed
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}

@@ -1,0 +1,22 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The sandbox has no `rand` crate, so this module is a first-class
+//! substrate: a xoshiro256++ core seeded via splitmix64, plus the exact
+//! distributions the paper's models need — uniform, standard normal
+//! (Box–Muller), exponential (compute-time tail, Eq. 4), geometric
+//! (retransmission count, Eq. 5), Bernoulli/Rademacher (generator
+//! matrices, §III-A) — and Fisher–Yates shuffling (the §IV "randomly
+//! assign a unique value to each device" ladders).
+//!
+//! Every experiment takes an explicit `u64` seed; independent substreams
+//! are derived with [`Rng::split`] so component randomness (data, codes,
+//! delays) is decoupled — re-running any figure with the same seed is
+//! bit-reproducible.
+
+mod distributions; // impl blocks on Rng (normal, exponential, geometric, …)
+mod xoshiro;
+
+pub use xoshiro::Rng;
+
+#[cfg(test)]
+mod tests;

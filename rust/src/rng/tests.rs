@@ -1,0 +1,208 @@
+//! Statistical and determinism tests for the RNG substrate.
+
+use super::Rng;
+
+fn moments(samples: &[f64]) -> (f64, f64) {
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var)
+}
+
+#[test]
+fn deterministic_for_seed() {
+    let mut a = Rng::new(42);
+    let mut b = Rng::new(42);
+    for _ in 0..1000 {
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut a = Rng::new(1);
+    let mut b = Rng::new(2);
+    let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+    assert_eq!(same, 0);
+}
+
+#[test]
+fn split_streams_are_decorrelated() {
+    let root = Rng::new(7);
+    let mut s1 = root.split(1);
+    let mut s2 = root.split(2);
+    let x1: Vec<f64> = (0..4096).map(|_| s1.next_f64()).collect();
+    let x2: Vec<f64> = (0..4096).map(|_| s2.next_f64()).collect();
+    let (m1, _) = moments(&x1);
+    let (m2, _) = moments(&x2);
+    let cov: f64 = x1
+        .iter()
+        .zip(&x2)
+        .map(|(a, b)| (a - m1) * (b - m2))
+        .sum::<f64>()
+        / 4095.0;
+    assert!(cov.abs() < 0.01, "cov={cov}");
+}
+
+#[test]
+fn split_is_pure() {
+    let root = Rng::new(9);
+    let mut a = root.split(3);
+    let mut b = root.split(3);
+    assert_eq!(a.next_u64(), b.next_u64());
+}
+
+#[test]
+fn uniform_f64_in_range_and_mean() {
+    let mut r = Rng::new(3);
+    let xs: Vec<f64> = (0..20000).map(|_| r.next_f64()).collect();
+    assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+    let (mean, var) = moments(&xs);
+    assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+}
+
+#[test]
+fn normal_moments() {
+    let mut r = Rng::new(4);
+    let xs: Vec<f64> = (0..50000).map(|_| r.normal()).collect();
+    let (mean, var) = moments(&xs);
+    assert!(mean.abs() < 0.02, "mean={mean}");
+    assert!((var - 1.0).abs() < 0.03, "var={var}");
+}
+
+#[test]
+fn normal_scaled_moments() {
+    let mut r = Rng::new(5);
+    let xs: Vec<f64> = (0..50000).map(|_| r.normal_scaled(3.0, 2.0)).collect();
+    let (mean, var) = moments(&xs);
+    assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+    assert!((var - 4.0).abs() < 0.15, "var={var}");
+}
+
+#[test]
+fn exponential_moments() {
+    let mut r = Rng::new(6);
+    let lambda = 2.5;
+    let xs: Vec<f64> = (0..50000).map(|_| r.exponential(lambda)).collect();
+    let (mean, var) = moments(&xs);
+    assert!((mean - 1.0 / lambda).abs() < 0.01, "mean={mean}");
+    assert!((var - 1.0 / (lambda * lambda)).abs() < 0.02, "var={var}");
+    assert!(xs.iter().all(|&x| x >= 0.0));
+}
+
+#[test]
+fn geometric_mean_and_support() {
+    let mut r = Rng::new(7);
+    let p = 0.1; // paper's link erasure probability
+    let xs: Vec<f64> = (0..50000).map(|_| r.geometric(p) as f64).collect();
+    assert!(xs.iter().all(|&x| x >= 1.0));
+    let (mean, _) = moments(&xs);
+    // E[N] = 1/(1−p) for "trials until first success" with failure prob p
+    assert!((mean - 1.0 / (1.0 - p)).abs() < 0.01, "mean={mean}");
+}
+
+#[test]
+fn geometric_zero_erasure_always_one() {
+    let mut r = Rng::new(8);
+    assert!((0..100).all(|_| r.geometric(0.0) == 1));
+}
+
+#[test]
+fn geometric_matches_pmf() {
+    let mut r = Rng::new(9);
+    let p: f64 = 0.3;
+    let n = 100000;
+    let mut counts = [0usize; 6];
+    for _ in 0..n {
+        let t = r.geometric(p) as usize;
+        if t < counts.len() {
+            counts[t] += 1;
+        }
+    }
+    for t in 1..5 {
+        let want = p.powi(t as i32 - 1) * (1.0 - p);
+        let got = counts[t] as f64 / n as f64;
+        assert!((got - want).abs() < 0.01, "t={t} got={got} want={want}");
+    }
+}
+
+#[test]
+fn bernoulli_frequency() {
+    let mut r = Rng::new(10);
+    let hits = (0..50000).filter(|_| r.bernoulli(0.3)).count() as f64 / 50000.0;
+    assert!((hits - 0.3).abs() < 0.01, "hits={hits}");
+}
+
+#[test]
+fn rademacher_zero_mean_unit_var() {
+    let mut r = Rng::new(11);
+    let xs: Vec<f64> = (0..50000).map(|_| r.rademacher()).collect();
+    assert!(xs.iter().all(|&x| x == 1.0 || x == -1.0));
+    let (mean, var) = moments(&xs);
+    assert!(mean.abs() < 0.02);
+    assert!((var - 1.0).abs() < 0.01);
+}
+
+#[test]
+fn shuffle_is_permutation() {
+    let mut r = Rng::new(12);
+    let mut v: Vec<usize> = (0..100).collect();
+    r.shuffle(&mut v);
+    let mut sorted = v.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+}
+
+#[test]
+fn shuffle_uniformity_first_position() {
+    // each element should land in position 0 with probability ~1/4
+    let mut r = Rng::new(13);
+    let mut counts = [0usize; 4];
+    for _ in 0..40000 {
+        let mut v = [0usize, 1, 2, 3];
+        r.shuffle(&mut v);
+        counts[v[0]] += 1;
+    }
+    for &c in &counts {
+        let f = c as f64 / 40000.0;
+        assert!((f - 0.25).abs() < 0.02, "f={f}");
+    }
+}
+
+#[test]
+fn next_below_unbiased_small_range() {
+    let mut r = Rng::new(14);
+    let mut counts = [0usize; 3];
+    for _ in 0..30000 {
+        counts[r.next_below(3) as usize] += 1;
+    }
+    for &c in &counts {
+        assert!((c as f64 / 30000.0 - 1.0 / 3.0).abs() < 0.02);
+    }
+}
+
+#[test]
+fn sample_indices_distinct_and_in_range() {
+    let mut r = Rng::new(15);
+    for _ in 0..100 {
+        let idx = r.sample_indices(24, 10);
+        assert_eq!(idx.len(), 10);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10, "indices must be distinct");
+        assert!(idx.iter().all(|&i| i < 24));
+    }
+}
+
+#[test]
+fn fill_normal_f32_moments() {
+    let mut r = Rng::new(16);
+    let mut buf = vec![0f32; 40000];
+    r.fill_normal_f32(&mut buf);
+    let xs: Vec<f64> = buf.iter().map(|&x| x as f64).collect();
+    let (mean, var) = moments(&xs);
+    assert!(mean.abs() < 0.02 && (var - 1.0).abs() < 0.05);
+}

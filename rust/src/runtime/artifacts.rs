@@ -1,0 +1,114 @@
+//! Artifact manifest parsing.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What computation an artifact implements (mirrors `aot.py`'s registry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Device partial gradient: (X, β, y, mask) → g. Dims: [L, D].
+    Grad,
+    /// Master parity gradient: (X̃, β, ỹ, 1/c) → g. Dims: [C, D].
+    ParityGrad,
+    /// Parity encode: (G, w, X, y) → (X̃, ỹ). Dims: [C, L, D].
+    Encode,
+    /// Model update: (β, g, μ/m) → β′. Dims: [D].
+    GdStep,
+    /// NMSE: (β̂, β*) → scalar. Dims: [D].
+    Nmse,
+}
+
+impl std::str::FromStr for ArtifactKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "grad" => Self::Grad,
+            "pgrad" => Self::ParityGrad,
+            "encode" => Self::Encode,
+            "gd_step" => Self::GdStep,
+            "nmse" => Self::Nmse,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub path: PathBuf,
+    /// Padded dims, kind-specific (see [`ArtifactKind`]).
+    pub dims: Vec<usize>,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`. Format: `name kind file dims...` lines,
+    /// `#` comments.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        let mut artifacts = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() < 4 {
+                bail!("manifest line {}: expected 'name kind file dims...'", lineno + 1);
+            }
+            let kind: ArtifactKind = fields[1].parse()?;
+            let dims: Vec<usize> = fields[3..]
+                .iter()
+                .map(|s| s.parse().with_context(|| format!("line {}: bad dim", lineno + 1)))
+                .collect::<Result<_>>()?;
+            let expect = match kind {
+                ArtifactKind::Grad | ArtifactKind::ParityGrad => 2,
+                ArtifactKind::Encode => 3,
+                ArtifactKind::GdStep | ArtifactKind::Nmse => 1,
+            };
+            if dims.len() != expect {
+                bail!("manifest line {}: kind {:?} needs {expect} dims, got {}", lineno + 1, kind, dims.len());
+            }
+            artifacts.push(ArtifactSpec {
+                name: fields[0].to_string(),
+                kind,
+                path: dir.join(fields[2]),
+                dims,
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    /// Smallest `Grad` artifact with L ≥ rows and D ≥ dim (best-fit keeps
+    /// padding waste low across the small/large artifact pair).
+    pub fn best_grad(&self, rows: usize, dim: usize) -> Option<&ArtifactSpec> {
+        self.best_fit(ArtifactKind::Grad, &[rows, dim])
+    }
+
+    /// Smallest `ParityGrad` artifact with C ≥ rows and D ≥ dim.
+    pub fn best_parity_grad(&self, rows: usize, dim: usize) -> Option<&ArtifactSpec> {
+        self.best_fit(ArtifactKind::ParityGrad, &[rows, dim])
+    }
+
+    /// Smallest `Encode` artifact covering (c, l, d).
+    pub fn best_encode(&self, c: usize, l: usize, d: usize) -> Option<&ArtifactSpec> {
+        self.best_fit(ArtifactKind::Encode, &[c, l, d])
+    }
+
+    fn best_fit(&self, kind: ArtifactKind, need: &[usize]) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.dims.iter().zip(need).all(|(&have, &n)| have >= n))
+            .min_by_key(|a| a.dims.iter().product::<usize>())
+    }
+}

@@ -1,0 +1,344 @@
+//! The PJRT-backed [`GradBackend`] implementation.
+
+use super::{ArtifactSpec, Manifest};
+use crate::fl::GradBackend;
+use crate::linalg::Mat;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// Executes the AOT artifacts through the PJRT CPU client.
+///
+/// Executables are compiled once per artifact and cached; operands are
+/// zero-padded to the artifact's shape (exact — see module docs) and
+/// results cropped back to logical shapes.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// name → compiled executable (compiled lazily on first use so that
+    /// loading a manifest with many artifacts stays cheap).
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Registered static shards: device-resident (X, y, mask) buffers so
+    /// the per-epoch gradient only uploads β (§Perf: saves the ~1 MiB
+    /// pad+copy+transfer per device per epoch).
+    registered: Vec<RegisteredShard>,
+    /// Cumulative PJRT executions (perf accounting).
+    pub executions: u64,
+}
+
+struct RegisteredShard {
+    spec_name: String,
+    x: xla::PjRtBuffer,
+    y: xla::PjRtBuffer,
+    /// Row mask (grad artifacts) or the 1/c scalar (pgrad artifacts).
+    aux: xla::PjRtBuffer,
+    /// pgrad (true) vs grad (false) — operand orders happen to coincide
+    /// ((X, β, y, aux)); kept for introspection/debugging.
+    #[allow(dead_code)]
+    is_parity: bool,
+    /// (padded D, logical D) for β padding and output cropping.
+    dp: usize,
+    d: usize,
+}
+
+impl PjrtBackend {
+    /// Load a manifest directory and initialize the PJRT CPU client.
+    pub fn load(dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        anyhow::ensure!(!manifest.artifacts.is_empty(), "manifest at {dir} lists no artifacts");
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: HashMap::new(), registered: Vec::new(), executions: 0 })
+    }
+
+    /// The parsed manifest (introspection/tests).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn ensure_compiled(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        if !self.cache.contains_key(&spec.name) {
+            let path = spec
+                .path
+                .to_str()
+                .with_context(|| format!("non-utf8 artifact path {:?}", spec.path))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{}'", spec.name))?;
+            self.cache.insert(spec.name.clone(), exe);
+        }
+        Ok(())
+    }
+
+    /// Pad `m` to (rows, cols) and convert to a PJRT literal.
+    fn literal(m: &Mat, rows: usize, cols: usize) -> Result<xla::Literal> {
+        let padded;
+        let src = if m.rows() == rows && m.cols() == cols {
+            m
+        } else {
+            padded = m.pad_to(rows, cols);
+            &padded
+        };
+        Ok(xla::Literal::vec1(src.as_slice()).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    fn run(
+        &mut self,
+        spec_name: &str,
+        spec: &ArtifactSpec,
+        inputs: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        self.ensure_compiled(spec)?;
+        self.executions += 1;
+        let exe = &self.cache[&spec.name];
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{spec_name}'"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{spec_name}'"))?;
+        Ok(lit)
+    }
+
+    fn crop(lit_vec: Vec<f32>, padded_rows: usize, cols: usize, rows: usize) -> Mat {
+        let full = Mat::from_vec(padded_rows, cols, lit_vec);
+        if padded_rows == rows {
+            full
+        } else {
+            full.crop_to(rows, cols)
+        }
+    }
+}
+
+impl PjrtBackend {
+    /// Largest row capacity among artifacts of the given selector.
+    fn max_rows(&self, kind: super::ArtifactKind, d: usize) -> Option<usize> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.dims[1] >= d)
+            .map(|a| a.dims[0])
+            .max()
+    }
+
+    /// Sum a row-chunked gradient: the partial gradient is additive over
+    /// row blocks, so inputs taller than every artifact are split into
+    /// artifact-sized chunks and accumulated (exact — no approximation).
+    fn chunked<F>(&mut self, rows: usize, chunk: usize, d: usize, mut one: F) -> Result<Mat>
+    where
+        F: FnMut(&mut Self, usize, usize) -> Result<Mat>,
+    {
+        let mut acc = Mat::zeros(d, 1);
+        let mut start = 0;
+        while start < rows {
+            let end = (start + chunk).min(rows);
+            let g = one(self, start, end)?;
+            acc.add_assign(&g);
+            start = end;
+        }
+        Ok(acc)
+    }
+}
+
+impl GradBackend for PjrtBackend {
+    fn partial_grad(&mut self, x: &Mat, beta: &Mat, y: &Mat) -> Result<Mat> {
+        let (l, d) = (x.rows(), x.cols());
+        let spec = match self.manifest.best_grad(l, d) {
+            Some(s) => s.clone(),
+            None => {
+                // taller than every artifact: chunk over rows
+                let cap = self
+                    .max_rows(super::ArtifactKind::Grad, d)
+                    .with_context(|| format!("no grad artifact fits D={d}"))?;
+                return self.chunked(l, cap, d, |me, s, e| {
+                    me.partial_grad(&x.slice_rows(s, e), beta, &y.slice_rows(s, e))
+                });
+            }
+        };
+        let (lp, dp) = (spec.dims[0], spec.dims[1]);
+        // mask: 1 for live rows, 0 for padding (padding rows are zero
+        // anyway; the mask operand exists for puncturing flexibility)
+        let mut mask = Mat::zeros(lp, 1);
+        for r in 0..l {
+            mask[(r, 0)] = 1.0;
+        }
+        let inputs = [
+            Self::literal(x, lp, dp)?,
+            Self::literal(beta, dp, 1)?,
+            Self::literal(y, lp, 1)?,
+            xla::Literal::vec1(mask.as_slice()).reshape(&[lp as i64, 1])?,
+        ];
+        let out = self.run("grad", &spec, &inputs)?.to_tuple1()?;
+        Ok(Self::crop(out.to_vec::<f32>()?, dp, 1, d))
+    }
+
+    fn parity_grad(&mut self, xt: &Mat, beta: &Mat, yt: &Mat, c: usize) -> Result<Mat> {
+        anyhow::ensure!(c > 0, "parity count must be positive");
+        let (rows, d) = (xt.rows(), xt.cols());
+        let spec = match self.manifest.best_parity_grad(rows, d) {
+            Some(s) => s.clone(),
+            None => {
+                // each chunk is normalized by the same 1/c, so the chunk sum
+                // equals the full normalized parity gradient
+                let cap = self
+                    .max_rows(super::ArtifactKind::ParityGrad, d)
+                    .with_context(|| format!("no pgrad artifact fits D={d}"))?;
+                return self.chunked(rows, cap, d, |me, s, e| {
+                    me.parity_grad(&xt.slice_rows(s, e), beta, &yt.slice_rows(s, e), c)
+                });
+            }
+        };
+        let (cp, dp) = (spec.dims[0], spec.dims[1]);
+        let inv_c = Mat::from_vec(1, 1, vec![1.0 / c as f32]);
+        let inputs = [
+            Self::literal(xt, cp, dp)?,
+            Self::literal(beta, dp, 1)?,
+            Self::literal(yt, cp, 1)?,
+            Self::literal(&inv_c, 1, 1)?,
+        ];
+        let out = self.run("pgrad", &spec, &inputs)?.to_tuple1()?;
+        Ok(Self::crop(out.to_vec::<f32>()?, dp, 1, d))
+    }
+
+    fn encode(&mut self, g: &Mat, w: &[f32], x: &Mat, y: &Mat) -> Result<(Mat, Mat)> {
+        anyhow::ensure!(g.cols() == x.rows(), "G cols must match X rows");
+        anyhow::ensure!(w.len() == x.rows(), "weight diagonal length");
+        let (c, l, d) = (g.rows(), x.rows(), x.cols());
+        let spec = match self.manifest.best_encode(c, l, d) {
+            Some(s) => s.clone(),
+            None => {
+                // more parity rows than any artifact: each parity row only
+                // depends on its own G row, so chunk over C and stack
+                let cap = self
+                    .manifest
+                    .artifacts
+                    .iter()
+                    .filter(|a| {
+                        a.kind == super::ArtifactKind::Encode && a.dims[1] >= l && a.dims[2] >= d
+                    })
+                    .map(|a| a.dims[0])
+                    .max()
+                    .with_context(|| format!("no encode artifact fits L={l}, D={d}"))?;
+                anyhow::ensure!(cap > 0 && cap < c, "encode chunking logic");
+                let mut xt = Mat::zeros(c, d);
+                let mut yt = Mat::zeros(c, 1);
+                let mut start = 0;
+                while start < c {
+                    let end = (start + cap).min(c);
+                    let (xc, yc) = self.encode(&g.slice_rows(start, end), w, x, y)?;
+                    for r in start..end {
+                        xt.row_mut(r).copy_from_slice(xc.row(r - start));
+                        yt[(r, 0)] = yc[(r - start, 0)];
+                    }
+                    start = end;
+                }
+                return Ok((xt, yt));
+            }
+        };
+        let (cp, lp, dp) = (spec.dims[0], spec.dims[1], spec.dims[2]);
+        let wm = Mat::from_vec(l, 1, w.to_vec());
+        let inputs = [
+            Self::literal(g, cp, lp)?,
+            Self::literal(&wm, lp, 1)?,
+            Self::literal(x, lp, dp)?,
+            Self::literal(y, lp, 1)?,
+        ];
+        let (xt_l, yt_l) = self.run("encode", &spec, &inputs)?.to_tuple2()?;
+        let xt = Self::crop(xt_l.to_vec::<f32>()?, cp, dp, c).crop_to(c, d);
+        let yt = Self::crop(yt_l.to_vec::<f32>()?, cp, 1, c);
+        Ok((xt, yt))
+    }
+
+    fn register_shard(&mut self, x: &Mat, y: &Mat) -> Result<Option<u64>> {
+        let (l, d) = (x.rows(), x.cols());
+        let spec = match self.manifest.best_grad(l, d) {
+            Some(s) => s.clone(),
+            None => return Ok(None), // taller than every artifact: slow path
+        };
+        self.ensure_compiled(&spec)?;
+        let (lp, dp) = (spec.dims[0], spec.dims[1]);
+        let xp = x.pad_to(lp, dp);
+        let yp = y.pad_to(lp, 1);
+        let mut mask = Mat::zeros(lp, 1);
+        for r in 0..l {
+            mask[(r, 0)] = 1.0;
+        }
+        let xb = self.client.buffer_from_host_buffer(xp.as_slice(), &[lp, dp], None)?;
+        let yb = self.client.buffer_from_host_buffer(yp.as_slice(), &[lp, 1], None)?;
+        let mb = self.client.buffer_from_host_buffer(mask.as_slice(), &[lp, 1], None)?;
+        self.registered.push(RegisteredShard {
+            spec_name: spec.name.clone(),
+            x: xb,
+            y: yb,
+            aux: mb,
+            is_parity: false,
+            dp,
+            d,
+        });
+        Ok(Some(self.registered.len() as u64 - 1))
+    }
+
+    fn partial_grad_registered(&mut self, handle: u64, beta: &Mat) -> Result<Mat> {
+        self.run_registered(handle, beta)
+    }
+
+    fn register_parity(&mut self, xt: &Mat, yt: &Mat, c: usize) -> Result<Option<u64>> {
+        anyhow::ensure!(c > 0, "parity count must be positive");
+        let (rows, d) = (xt.rows(), xt.cols());
+        let spec = match self.manifest.best_parity_grad(rows, d) {
+            Some(s) => s.clone(),
+            None => return Ok(None),
+        };
+        self.ensure_compiled(&spec)?;
+        let (cp, dp) = (spec.dims[0], spec.dims[1]);
+        let xp = xt.pad_to(cp, dp);
+        let yp = yt.pad_to(cp, 1);
+        let inv_c = [1.0f32 / c as f32];
+        let xb = self.client.buffer_from_host_buffer(xp.as_slice(), &[cp, dp], None)?;
+        let yb = self.client.buffer_from_host_buffer(yp.as_slice(), &[cp, 1], None)?;
+        let cb = self.client.buffer_from_host_buffer(&inv_c[..], &[1, 1], None)?;
+        self.registered.push(RegisteredShard {
+            spec_name: spec.name.clone(),
+            x: xb,
+            y: yb,
+            aux: cb,
+            is_parity: true,
+            dp,
+            d,
+        });
+        Ok(Some(self.registered.len() as u64 - 1))
+    }
+
+    fn parity_grad_registered(&mut self, handle: u64, beta: &Mat) -> Result<Mat> {
+        self.run_registered(handle, beta)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+impl PjrtBackend {
+    fn run_registered(&mut self, handle: u64, beta: &Mat) -> Result<Mat> {
+        let idx = handle as usize;
+        anyhow::ensure!(idx < self.registered.len(), "unknown shard handle {handle}");
+        let (dp, d, spec_name) = {
+            let sh = &self.registered[idx];
+            (sh.dp, sh.d, sh.spec_name.clone())
+        };
+        let bp = if beta.rows() == dp { beta.clone() } else { beta.pad_to(dp, 1) };
+        let bb = self.client.buffer_from_host_buffer(bp.as_slice(), &[dp, 1], None)?;
+        self.executions += 1;
+        let sh = &self.registered[idx];
+        let exe = self.cache.get(&spec_name).context("registered executable evicted")?;
+        // operand order mirrors model.py: grad = (X, β, y, mask);
+        // pgrad = (X̃, β, ỹ, 1/c)
+        let outs = exe
+            .execute_b(&[&sh.x, &bb, &sh.y, &sh.aux])
+            .context("executing registered computation")?;
+        let lit = outs[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(Self::crop(lit.to_vec::<f32>()?, dp, 1, d))
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and run them on the
+//! training hot path.
+//!
+//! `make artifacts` (python, build-time only) lowers the L2 JAX graphs —
+//! which call the L1 Pallas kernels — to HLO text under `artifacts/`,
+//! together with a `manifest.txt` describing each artifact's kind and
+//! padded shape. This module:
+//!
+//! * parses the manifest ([`Manifest`]),
+//! * compiles each artifact once on the PJRT CPU client and caches the
+//!   loaded executables ([`PjrtBackend`]),
+//! * adapts logical shapes to artifact shapes by zero padding (exact for
+//!   every graph here — padded rows/columns contribute zero; see
+//!   `python/compile/model.py`) and crops the results back.
+//!
+//! The backend implements [`crate::fl::GradBackend`], so the coordinator
+//! is oblivious to whether gradients come from XLA or the native oracle.
+
+mod artifacts;
+mod backend;
+
+pub use artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+pub use backend::PjrtBackend;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,74 @@
+//! Runtime unit tests: manifest parsing and best-fit selection.
+//!
+//! Numeric parity of the PJRT backend against the native oracle lives in
+//! `rust/tests/pjrt_integration.rs` (it needs built artifacts).
+
+use super::*;
+
+fn write_manifest(dir: &std::path::Path, body: &str) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), body).unwrap();
+}
+
+#[test]
+fn manifest_parses_all_kinds() {
+    let dir = std::env::temp_dir().join("cfl_manifest_ok");
+    write_manifest(
+        &dir,
+        "# comment\n\
+         grad_dev grad grad_dev.hlo.txt 512 512\n\
+         grad_srv pgrad grad_srv.hlo.txt 2048 512\n\
+         encode_dev encode encode_dev.hlo.txt 2048 512 512\n\
+         gd_step gd_step gd_step.hlo.txt 512\n\
+         nmse nmse nmse.hlo.txt 512\n",
+    );
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.artifacts.len(), 5);
+    assert_eq!(m.artifacts[0].kind, ArtifactKind::Grad);
+    assert_eq!(m.artifacts[0].dims, vec![512, 512]);
+    assert_eq!(m.artifacts[2].kind, ArtifactKind::Encode);
+    assert!(m.artifacts[2].path.ends_with("encode_dev.hlo.txt"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_rejects_malformed() {
+    let dir = std::env::temp_dir().join("cfl_manifest_bad1");
+    write_manifest(&dir, "name grad\n");
+    assert!(Manifest::load(&dir).is_err());
+    write_manifest(&dir, "name bogus file.hlo.txt 1 2\n");
+    assert!(Manifest::load(&dir).is_err());
+    write_manifest(&dir, "name grad file.hlo.txt 1 2 3\n"); // wrong arity
+    assert!(Manifest::load(&dir).is_err());
+    write_manifest(&dir, "name grad file.hlo.txt twelve 2\n");
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_missing_dir_is_helpful() {
+    let err = Manifest::load("/nonexistent/cfl_artifacts").unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "unhelpful error: {err}");
+}
+
+#[test]
+fn best_fit_prefers_smallest_covering_artifact() {
+    let dir = std::env::temp_dir().join("cfl_manifest_fit");
+    write_manifest(
+        &dir,
+        "small grad s.hlo.txt 128 128\n\
+         large grad l.hlo.txt 512 512\n\
+         srv pgrad p.hlo.txt 2048 512\n\
+         enc_s encode es.hlo.txt 128 128 128\n\
+         enc_l encode el.hlo.txt 2048 512 512\n",
+    );
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.best_grad(100, 100).unwrap().name, "small");
+    assert_eq!(m.best_grad(129, 100).unwrap().name, "large");
+    assert_eq!(m.best_grad(300, 500).unwrap().name, "large");
+    assert!(m.best_grad(600, 500).is_none(), "nothing fits L=600");
+    assert_eq!(m.best_parity_grad(2000, 500).unwrap().name, "srv");
+    assert_eq!(m.best_encode(128, 100, 64).unwrap().name, "enc_s");
+    assert_eq!(m.best_encode(129, 100, 64).unwrap().name, "enc_l");
+    std::fs::remove_dir_all(&dir).ok();
+}

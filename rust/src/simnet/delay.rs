@@ -1,0 +1,184 @@
+//! Per-device delay models: sampling and analytic distribution functions.
+
+use crate::rng::Rng;
+
+/// Shifted-exponential computation-time model (Eq. 4).
+///
+/// `T_c = ℓ·a + Exp(γ)` with `γ = mu / ℓ`: processing `ℓ` points costs a
+/// deterministic `a` seconds each, plus one exponential term whose mean
+/// `ℓ/mu` scales with the shard (the paper models memory read/write jitter
+/// accumulated over the MAC operations of the whole shard).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeModel {
+    /// Seconds of deterministic compute per training point (aᵢ = d/MACRᵢ).
+    pub secs_per_point: f64,
+    /// Memory access rate μᵢ (points per second); the stochastic component
+    /// for an ℓ-point shard is Exp(μᵢ/ℓ), mean ℓ/μᵢ.
+    pub mem_rate: f64,
+}
+
+impl ComputeModel {
+    /// Sample T_c for a shard of `points` training points.
+    pub fn sample(&self, points: usize, rng: &mut Rng) -> f64 {
+        if points == 0 {
+            return 0.0;
+        }
+        let det = points as f64 * self.secs_per_point;
+        let gamma = self.mem_rate / points as f64;
+        det + rng.exponential(gamma)
+    }
+
+    /// E[T_c] = ℓ(a + 1/μ) — the compute part of Eq. (8).
+    pub fn mean(&self, points: usize) -> f64 {
+        points as f64 * (self.secs_per_point + 1.0 / self.mem_rate)
+    }
+
+    /// P{T_c ≤ t} for an ℓ-point shard.
+    pub fn cdf(&self, points: usize, t: f64) -> f64 {
+        if points == 0 {
+            return if t >= 0.0 { 1.0 } else { 0.0 };
+        }
+        let det = points as f64 * self.secs_per_point;
+        let s = t - det;
+        if s <= 0.0 {
+            return 0.0;
+        }
+        let gamma = self.mem_rate / points as f64;
+        1.0 - (-gamma * s).exp()
+    }
+}
+
+/// Geometric-retransmission link model (Eqs. 5–6).
+///
+/// One packet (a model download or a gradient upload) takes `N·τ` seconds
+/// where `P{N = t} = p^{t−1}(1−p)`. `τ = 0` models the master's in-process
+/// "link" (no network), for which all delays are identically zero.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Seconds per transmission attempt of one packet (τᵢ = x/(rᵢW)).
+    pub secs_per_packet: f64,
+    /// Erasure probability p ∈ [0, 1).
+    pub erasure_prob: f64,
+}
+
+impl LinkModel {
+    /// A degenerate zero-latency link (the master's own gradient path).
+    pub fn zero() -> Self {
+        Self { secs_per_packet: 0.0, erasure_prob: 0.0 }
+    }
+
+    /// Sample the one-way delay of a single packet: N·τ.
+    pub fn sample_one_way(&self, rng: &mut Rng) -> f64 {
+        if self.secs_per_packet == 0.0 {
+            return 0.0;
+        }
+        rng.geometric(self.erasure_prob) as f64 * self.secs_per_packet
+    }
+
+    /// Sample a round trip (download + upload, Eq. 7's T_d + T_u).
+    pub fn sample_round_trip(&self, rng: &mut Rng) -> f64 {
+        self.sample_one_way(rng) + self.sample_one_way(rng)
+    }
+
+    /// E[T_d + T_u] = 2τ/(1−p) — the link part of Eq. (8).
+    pub fn mean_round_trip(&self) -> f64 {
+        if self.secs_per_packet == 0.0 {
+            0.0
+        } else {
+            2.0 * self.secs_per_packet / (1.0 - self.erasure_prob)
+        }
+    }
+
+    /// Seconds to push `bits` of bulk payload one way, *in expectation
+    /// per packet* (each packet of the bulk transfer retransmits
+    /// independently). Used for the one-time parity upload cost.
+    pub fn sample_bulk_transfer(&self, packets: usize, rng: &mut Rng) -> f64 {
+        if self.secs_per_packet == 0.0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for _ in 0..packets {
+            total += self.sample_one_way(rng);
+        }
+        total
+    }
+}
+
+/// Full per-device profile: compute + link (+ identity bookkeeping).
+///
+/// The end-to-end epoch delay (Eq. 7) is
+/// `T = T_d + T_c + T_u = (N_d + N_u)·τ + ℓ·a + Exp(μ/ℓ)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceProfile {
+    pub compute: ComputeModel,
+    pub link: LinkModel,
+    /// Raw training points held by this device (ℓᵢ); the master's profile
+    /// uses the parity cap c^up here.
+    pub points: usize,
+}
+
+impl DeviceProfile {
+    /// Sample the total epoch delay T for a shard of `points` (Eq. 7).
+    pub fn sample_total_delay(&self, points: usize, rng: &mut Rng) -> f64 {
+        self.link.sample_round_trip(rng) + self.compute.sample(points, rng)
+    }
+
+    /// E[T] (Eq. 8).
+    pub fn mean_total_delay(&self, points: usize) -> f64 {
+        self.compute.mean(points) + self.link.mean_round_trip()
+    }
+
+    /// Analytic CDF  P{T ≤ t}  of the total delay for an ℓ-point shard.
+    ///
+    /// T = (N_d + N_u)·τ + D + E with D = ℓa deterministic, E ~ Exp(γ),
+    /// N_d, N_u iid geometric (support ≥ 1). N_d + N_u = k has the
+    /// negative-binomial pmf (k−1)·p^{k−2}·(1−p)² for k ≥ 2, so
+    ///
+    ///   P{T ≤ t} = Σ_{k≥2} (k−1) p^{k−2} (1−p)² · P{E ≤ t − D − kτ}.
+    ///
+    /// The sum terminates once `kτ > t − D` (later terms are zero); for a
+    /// zero-latency link it degenerates to the compute CDF.
+    pub fn delay_cdf(&self, points: usize, t: f64) -> f64 {
+        let tau = self.link.secs_per_packet;
+        if tau == 0.0 {
+            return self.compute.cdf(points, t);
+        }
+        let p = self.link.erasure_prob;
+        let det = points as f64 * self.compute.secs_per_point;
+        let budget = t - det;
+        if budget < 2.0 * tau {
+            return 0.0; // at least one attempt per leg
+        }
+        let kmax = (budget / tau).floor() as u64;
+        let q = 1.0 - p;
+        let mut acc = 0.0;
+        let mut pmf_scale = q * q; // (1−p)² · p^{k−2}, updated per k
+        for k in 2..=kmax {
+            let weight = (k - 1) as f64 * pmf_scale;
+            let s = budget - k as f64 * tau;
+            let e_cdf = if points == 0 {
+                1.0
+            } else {
+                let gamma = self.compute.mem_rate / points as f64;
+                1.0 - (-gamma * s).exp()
+            };
+            acc += weight * e_cdf;
+            pmf_scale *= p;
+            if weight < 1e-15 && k > 16 {
+                break; // geometric tail is numerically dead
+            }
+        }
+        acc.clamp(0.0, 1.0)
+    }
+
+    /// P{T ≥ t} — the weight-matrix quantity of Eq. (17).
+    pub fn prob_miss(&self, points: usize, t: f64) -> f64 {
+        1.0 - self.delay_cdf(points, t)
+    }
+
+    /// Expected return metric E[R(t; ℓ̃)] = ℓ̃ · P{T(ℓ̃) ≤ t} (Eq. 13's
+    /// per-device term; the optimizer maximizes this over ℓ̃ — Eq. 14).
+    pub fn expected_return(&self, points: usize, t: f64) -> f64 {
+        points as f64 * self.delay_cdf(points, t)
+    }
+}

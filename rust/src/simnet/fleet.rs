@@ -1,0 +1,162 @@
+//! Fleet construction: the §IV heterogeneity ladders.
+
+use super::{ComputeModel, DeviceProfile, LinkModel};
+use crate::config::{ExperimentConfig, SetupCostKind};
+use crate::rng::Rng;
+
+/// Bits of one model/gradient packet: d 32-bit floats + header overhead
+/// (§IV: "packet size is calculated accordingly with additional 10%
+/// overhead for header").
+pub fn packet_bits(model_dim: usize, header_overhead: f64) -> f64 {
+    model_dim as f64 * 32.0 * (1.0 + header_overhead)
+}
+
+/// The simulated edge deployment: n device profiles + the master profile.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    /// Edge devices, index 0..n.
+    pub devices: Vec<DeviceProfile>,
+    /// The central server as the (n+1)-th "device" of Eq. (13): 10× the
+    /// fastest device's MAC rate, zero-latency link.
+    pub master: DeviceProfile,
+    /// Link throughputs in bits/s (kept for comm-load accounting).
+    pub throughputs_bps: Vec<f64>,
+    /// Per-packet bits (one model or gradient vector).
+    pub packet_bits: f64,
+    /// Base (best) link throughput in bits/s.
+    pub base_throughput_bps: f64,
+    /// Erasure probability shared by all links.
+    pub erasure_prob: f64,
+    /// Setup-transfer accounting model (see [`SetupCostKind`]).
+    pub setup_cost: SetupCostKind,
+}
+
+impl Fleet {
+    /// Build the paper's fleet from a config:
+    ///
+    /// * MAC rates `MACRᵢ = (1−ν_comp)^i · base`, i = 0..n−1, shuffled —
+    ///   `aᵢ = d / MACRᵢ`, `μᵢ = mem_overhead_factor / aᵢ`.
+    /// * Link throughputs `(1−ν_link)^i · base`, shuffled independently —
+    ///   `τᵢ = packet_bits / throughputᵢ`.
+    /// * Master MAC rate = `master_speedup ×` the *base* (fastest) rate,
+    ///   zero-latency link, same memory-overhead model.
+    pub fn from_config(cfg: &ExperimentConfig, rng: &mut Rng) -> Self {
+        let n = cfg.n_devices;
+        let d = cfg.model_dim as f64;
+        let pkt = packet_bits(cfg.model_dim, cfg.header_overhead);
+
+        // compute ladder
+        let mut mac_rates: Vec<f64> = (0..n)
+            .map(|i| (1.0 - cfg.nu_comp).powi(i as i32) * cfg.base_mac_rate_kmacs * 1000.0)
+            .collect();
+        let mut comp_rng = rng.split(0xFEE7);
+        comp_rng.shuffle(&mut mac_rates);
+
+        // link ladder (independent shuffle)
+        let mut throughputs: Vec<f64> = (0..n)
+            .map(|i| (1.0 - cfg.nu_link).powi(i as i32) * cfg.base_throughput_kbps * 1000.0)
+            .collect();
+        let mut link_rng = rng.split(0x11CC);
+        link_rng.shuffle(&mut throughputs);
+
+        let devices: Vec<DeviceProfile> = (0..n)
+            .map(|i| {
+                let a = d / mac_rates[i];
+                DeviceProfile {
+                    compute: ComputeModel {
+                        secs_per_point: a,
+                        mem_rate: cfg.mem_overhead_factor / a,
+                    },
+                    link: LinkModel {
+                        secs_per_packet: pkt / throughputs[i],
+                        erasure_prob: cfg.erasure_prob,
+                    },
+                    points: cfg.points_per_device,
+                }
+            })
+            .collect();
+
+        let a_master = d / (cfg.master_speedup * cfg.base_mac_rate_kmacs * 1000.0);
+        let master = DeviceProfile {
+            compute: ComputeModel {
+                secs_per_point: a_master,
+                mem_rate: cfg.mem_overhead_factor / a_master,
+            },
+            link: LinkModel::zero(),
+            points: (cfg.c_up_fraction * cfg.total_points() as f64) as usize,
+        };
+
+        Self {
+            devices,
+            master,
+            throughputs_bps: throughputs,
+            packet_bits: pkt,
+            base_throughput_bps: cfg.base_throughput_kbps * 1000.0,
+            erasure_prob: cfg.erasure_prob,
+            setup_cost: cfg.setup_cost,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total raw points held by the edge (m of the paper).
+    pub fn total_points(&self) -> usize {
+        self.devices.iter().map(|p| p.points).sum()
+    }
+
+    /// Override per-device shard sizes (non-equal sharding policies).
+    pub fn set_points(&mut self, points: &[usize]) {
+        assert_eq!(points.len(), self.devices.len());
+        for (dev, &p) in self.devices.iter_mut().zip(points) {
+            dev.points = p;
+        }
+    }
+
+    /// Simulated seconds for device `i` to upload `rows` parity rows —
+    /// the one-time setup cost that delays the start of CFL training
+    /// (the Fig. 2 initial offsets). `row_bits` is the size of one parity
+    /// row ((d+1) floats + header).
+    ///
+    /// The accounting model is configurable (see [`SetupCostKind`]): the
+    /// paper's figures imply base-rate bulk accounting; adapted-rate and
+    /// per-packet are provided for the ablation bench.
+    pub fn sample_parity_upload_secs(
+        &self,
+        device: usize,
+        rows: usize,
+        row_bits: f64,
+        rng: &mut Rng,
+    ) -> f64 {
+        let q = 1.0 - self.erasure_prob;
+        match self.setup_cost {
+            SetupCostKind::BaseRate => rows as f64 * row_bits / self.base_throughput_bps / q,
+            SetupCostKind::AdaptedRate => {
+                rows as f64 * row_bits / self.throughputs_bps[device] / q
+            }
+            SetupCostKind::PerPacket => {
+                // one geometric draw per row at the adapted per-packet time,
+                // scaled to the parity row size
+                let scale = row_bits / self.packet_bits;
+                self.devices[device].link.sample_bulk_transfer(rows, rng) * scale
+            }
+        }
+    }
+
+    /// Expected parity upload seconds (analytic twin of
+    /// [`Fleet::sample_parity_upload_secs`]).
+    pub fn mean_parity_upload_secs(&self, device: usize, rows: usize, row_bits: f64) -> f64 {
+        let q = 1.0 - self.erasure_prob;
+        match self.setup_cost {
+            SetupCostKind::BaseRate => rows as f64 * row_bits / self.base_throughput_bps / q,
+            SetupCostKind::AdaptedRate => {
+                rows as f64 * row_bits / self.throughputs_bps[device] / q
+            }
+            SetupCostKind::PerPacket => {
+                let l = &self.devices[device].link;
+                rows as f64 * l.secs_per_packet * (row_bits / self.packet_bits) / q
+            }
+        }
+    }
+}

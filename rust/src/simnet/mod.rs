@@ -1,0 +1,27 @@
+//! Wireless-edge delay models (§II-A of the paper).
+//!
+//! The paper evaluates CFL against *these exact stochastic models*, so
+//! this module is the substrate on which every figure stands:
+//!
+//! * [`ComputeModel`] — shifted-exponential computation time (Eq. 4):
+//!   deterministic `ℓ·aᵢ` plus `Exp(γᵢ)` with `γᵢ = μᵢ/ℓ` for the MAC
+//!   memory-access jitter.
+//! * [`LinkModel`] — geometric retransmissions (Eq. 5) over a rate-adapted
+//!   link: each of the download/upload legs takes `N·τᵢ` with
+//!   `P{N = t} = pᵗ⁻¹(1−p)` (Eq. 6).
+//! * [`DeviceProfile`] — the tuple the optimizer and simulator consume:
+//!   sampling (`sample_total_delay`), the analytic CDF `P{Tᵢ ≤ t}`
+//!   (negative-binomial × exponential convolution — used by Eq. 14's
+//!   expected return and Eq. 17's weights), and `E[Tᵢ]` (Eq. 8).
+//! * [`Fleet`] — the §IV heterogeneity ladders: MAC rates
+//!   `(1−ν_comp)^i · base` and link throughputs `(1−ν_link)^i · base`,
+//!   shuffled over devices, plus the 10×-faster master node.
+
+mod delay;
+mod fleet;
+
+pub use delay::{ComputeModel, DeviceProfile, LinkModel};
+pub use fleet::{packet_bits, Fleet};
+
+#[cfg(test)]
+mod tests;

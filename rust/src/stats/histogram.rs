@@ -1,0 +1,103 @@
+//! Fixed-bin histogram with text rendering (Fig. 3 is a pair of these).
+
+/// Uniform-bin histogram over [lo, hi); samples outside the range land in
+/// saturating edge bins so tails are never silently dropped (the uncoded-FL
+/// tail beyond the plot edge is exactly what Fig. 3 is about).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let w = (self.hi - self.lo) / n as f64;
+            let idx = (((x - self.lo) / w) as usize).min(n - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    /// (bin center, count) pairs — the plot series.
+    pub fn series(&self) -> Vec<(f64, u64)> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + (i as f64 + 0.5) * w, c))
+            .collect()
+    }
+
+    /// Fraction of samples at or above `x` (empirical tail, Fig. 3's story).
+    pub fn tail_fraction(&self, x: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let mut above = self.overflow;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if self.lo + i as f64 * w >= x {
+                above += c;
+            }
+        }
+        above as f64 / self.count as f64
+    }
+
+    /// Render as ASCII rows: `[lo, hi)  count  bar` (for bench output).
+    pub fn render(&self, max_width: usize) -> String {
+        let peak = self.bins.iter().copied().max().unwrap_or(0).max(1);
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let bar = "#".repeat(((c as f64 / peak as f64) * max_width as f64).round() as usize);
+            out.push_str(&format!(
+                "[{:8.2},{:8.2})  {:6}  {}\n",
+                self.lo + i as f64 * w,
+                self.lo + (i + 1) as f64 * w,
+                c,
+                bar
+            ));
+        }
+        if self.overflow > 0 {
+            out.push_str(&format!("[{:8.2},     inf)  {:6}  (overflow)\n", self.hi, self.overflow));
+        }
+        out
+    }
+}

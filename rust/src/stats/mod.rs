@@ -1,0 +1,11 @@
+//! Descriptive statistics substrate: running moments, histograms,
+//! quantiles, empirical CDFs — everything Figs. 1/3/4/5 report.
+
+mod histogram;
+mod summary;
+
+pub use histogram::Histogram;
+pub use summary::{mean_ci95, quantile, Summary};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,111 @@
+use super::*;
+
+#[test]
+fn summary_known_values() {
+    let mut s = Summary::new();
+    s.extend(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+    assert_eq!(s.count(), 8);
+    assert!((s.mean() - 5.0).abs() < 1e-12);
+    assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+    assert_eq!(s.min(), 2.0);
+    assert_eq!(s.max(), 9.0);
+}
+
+#[test]
+fn summary_single_sample() {
+    let mut s = Summary::new();
+    s.push(3.0);
+    assert_eq!(s.mean(), 3.0);
+    assert_eq!(s.var(), 0.0);
+    assert_eq!(s.std(), 0.0);
+}
+
+#[test]
+fn summary_stability_large_offset() {
+    // Welford must survive a huge common offset
+    let mut s = Summary::new();
+    for i in 0..1000 {
+        s.push(1e12 + (i % 10) as f64);
+    }
+    assert!((s.mean() - (1e12 + 4.5)).abs() < 1e-3);
+    assert!((s.var() - 8.2582582582).abs() < 1e-3, "var={}", s.var());
+}
+
+#[test]
+fn quantile_interpolates() {
+    let xs = [1.0, 2.0, 3.0, 4.0];
+    assert_eq!(quantile(&xs, 0.0), 1.0);
+    assert_eq!(quantile(&xs, 1.0), 4.0);
+    assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+}
+
+#[test]
+fn quantile_unsorted_input() {
+    let xs = [9.0, 1.0, 5.0];
+    assert_eq!(quantile(&xs, 0.5), 5.0);
+}
+
+#[test]
+#[should_panic(expected = "empty")]
+fn quantile_empty_panics() {
+    quantile(&[], 0.5);
+}
+
+#[test]
+fn mean_ci95_shrinks_with_n() {
+    let a: Vec<f64> = (0..100).map(|i| (i % 7) as f64).collect();
+    let b: Vec<f64> = (0..10000).map(|i| (i % 7) as f64).collect();
+    let (_, hw_a) = mean_ci95(&a);
+    let (_, hw_b) = mean_ci95(&b);
+    assert!(hw_b < hw_a / 5.0);
+}
+
+#[test]
+fn histogram_bin_assignment() {
+    let mut h = Histogram::new(0.0, 10.0, 10);
+    h.extend(&[0.0, 0.5, 1.0, 9.99, 5.5]);
+    assert_eq!(h.bins()[0], 2);
+    assert_eq!(h.bins()[1], 1);
+    assert_eq!(h.bins()[9], 1);
+    assert_eq!(h.bins()[5], 1);
+    assert_eq!(h.count(), 5);
+}
+
+#[test]
+fn histogram_overflow_underflow() {
+    let mut h = Histogram::new(0.0, 1.0, 4);
+    h.extend(&[-0.1, 0.5, 1.0, 2.0]);
+    assert_eq!(h.underflow(), 1);
+    assert_eq!(h.overflow(), 2);
+    assert_eq!(h.count(), 4);
+}
+
+#[test]
+fn histogram_tail_fraction() {
+    let mut h = Histogram::new(0.0, 10.0, 10);
+    for i in 0..10 {
+        h.push(i as f64 + 0.5);
+    }
+    h.push(150.0); // far-tail sample
+    assert!((h.tail_fraction(5.0) - 6.0 / 11.0).abs() < 1e-12);
+    assert!((h.tail_fraction(10.0) - 1.0 / 11.0).abs() < 1e-12);
+}
+
+#[test]
+fn histogram_series_centers() {
+    let mut h = Histogram::new(0.0, 4.0, 4);
+    h.push(1.5);
+    let s = h.series();
+    assert_eq!(s.len(), 4);
+    assert!((s[0].0 - 0.5).abs() < 1e-12);
+    assert_eq!(s[1], (1.5, 1));
+}
+
+#[test]
+fn histogram_render_contains_overflow_row() {
+    let mut h = Histogram::new(0.0, 1.0, 2);
+    h.extend(&[0.1, 5.0]);
+    let text = h.render(10);
+    assert!(text.contains("overflow"));
+}

@@ -1,0 +1,21 @@
+//! In-tree property-based testing harness.
+//!
+//! `proptest` is not available in the offline sandbox, so this module
+//! provides the subset the test suite needs: composable generators over a
+//! seeded [`crate::rng::Rng`], a configurable runner that reports the
+//! failing case and its seed, and greedy shrinking for integers, floats
+//! and vectors. Usage mirrors proptest closely:
+//!
+//! ```no_run
+//! use cfl::testing::prop;
+//! prop::check("sum is commutative", prop::cfg(), |g| {
+//!     let a = g.int_in(0, 100);
+//!     let b = g.int_in(0, 100);
+//!     prop::assert_that(a + b == b + a, "a+b != b+a")
+//! });
+//! ```
+
+pub mod prop;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,216 @@
+//! Minimal property-based testing: seeded generation + greedy shrinking.
+
+use crate::rng::Rng;
+
+/// Property outcome: `Ok(())` pass, `Err(msg)` failure (will be shrunk).
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper producing a [`PropResult`].
+pub fn assert_that(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality helper.
+pub fn assert_close(a: f64, b: f64, tol: f64, label: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{label}: {a} != {b} (tol {tol})"))
+    }
+}
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses substream `i`.
+    pub seed: u64,
+    /// Maximum shrink iterations after a failure.
+    pub max_shrink: usize,
+}
+
+/// Default config: 64 cases (each case typically runs a simulation or a
+/// small linalg problem, so this stays fast), seed overridable via
+/// `CFL_PROP_SEED` for reproducing CI failures.
+pub fn cfg() -> Config {
+    let seed = std::env::var("CFL_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0DE);
+    Config { cases: 64, seed, max_shrink: 200 }
+}
+
+/// Config with a custom case count.
+pub fn cfg_cases(cases: usize) -> Config {
+    Config { cases, ..cfg() }
+}
+
+/// Value generator handed to properties. Records every drawn scalar so the
+/// runner can replay and shrink the draw sequence ("choice sequence"
+/// shrinking, the Hypothesis approach in miniature).
+pub struct Gen<'a> {
+    rng: &'a mut Rng,
+    /// Draw log for the current case: (value as canonical u64, lo, hi).
+    log: Vec<Draw>,
+    /// When replaying a shrunk sequence, draws come from here instead.
+    replay: Option<Vec<Draw>>,
+    cursor: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Draw {
+    value: i64,
+    lo: i64,
+    hi: i64,
+}
+
+impl<'a> Gen<'a> {
+    fn new(rng: &'a mut Rng) -> Self {
+        Self { rng, log: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn with_replay(rng: &'a mut Rng, replay: Vec<Draw>) -> Self {
+        Self { rng, log: Vec::new(), replay: Some(replay), cursor: 0 }
+    }
+
+    fn draw(&mut self, lo: i64, hi: i64) -> i64 {
+        let v = if let Some(r) = &self.replay {
+            match r.get(self.cursor) {
+                // replayed draw, clamped into this draw's range in case the
+                // shrunk prefix changed downstream ranges
+                Some(d) => d.value.clamp(lo, hi),
+                None => lo, // exhausted: minimal value
+            }
+        } else {
+            lo + (self.rng.next_below((hi - lo + 1) as u64) as i64)
+        };
+        self.cursor += 1;
+        self.log.push(Draw { value: v, lo, hi });
+        v
+    }
+
+    /// Integer uniform in [lo, hi] (inclusive).
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        self.draw(lo, hi)
+    }
+
+    /// usize uniform in [lo, hi] (inclusive).
+    pub fn size_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.int_in(lo as i64, hi as i64) as usize
+    }
+
+    /// Float uniform in [lo, hi), drawn on a 2^20 lattice so it shrinks.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        const STEPS: i64 = 1 << 20;
+        let t = self.draw(0, STEPS) as f64 / STEPS as f64;
+        lo + (hi - lo) * t
+    }
+
+    /// Bernoulli(1/2) boolean.
+    pub fn bool(&mut self) -> bool {
+        self.draw(0, 1) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'s, T>(&mut self, items: &'s [T]) -> &'s T {
+        assert!(!items.is_empty());
+        &items[self.size_in(0, items.len() - 1)]
+    }
+
+    /// Vector of `n` values from `f`.
+    pub fn vec_of<T>(&mut self, n: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Raw normal sample (not shrinkable — use for payload data, not sizes).
+    pub fn normal(&mut self) -> f64 {
+        // not logged as a draw: shrinking sizes/structure matters, payload
+        // noise does not, and logging every matrix entry would explode the
+        // shrink search space.
+        self.rng.normal()
+    }
+
+    /// Seeded sub-RNG for bulk payload generation inside a property.
+    pub fn rng(&mut self) -> Rng {
+        let stream = self.draw(0, i64::MAX - 1) as u64;
+        Rng::new(stream)
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases; on failure, shrink the draw
+/// sequence and panic with the minimal failing case and reproduction seed.
+pub fn check(name: &str, cfg: Config, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).split(case as u64);
+        let mut g = Gen::new(&mut rng);
+        if let Err(msg) = prop(&mut g) {
+            let draws = g.log.clone();
+            let (min_draws, min_msg) = shrink(&cfg, &mut prop, draws, msg);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, CFL_PROP_SEED={seed}):\n  \
+                 minimal draws: {min_draws:?}\n  error: {min_msg}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Greedy choice-sequence shrinking: try to (a) shorten the sequence from
+/// the tail, (b) move each draw toward its lower bound (halving steps).
+fn shrink(
+    cfg: &Config,
+    prop: &mut impl FnMut(&mut Gen) -> PropResult,
+    mut draws: Vec<Draw>,
+    mut msg: String,
+) -> (Vec<i64>, String) {
+    let mut budget = cfg.max_shrink;
+    let mut fails = |candidate: &[Draw], budget: &mut usize| -> Option<String> {
+        if *budget == 0 {
+            return None;
+        }
+        *budget -= 1;
+        let mut rng = Rng::new(cfg.seed ^ 0xD00D);
+        let mut g = Gen::with_replay(&mut rng, candidate.to_vec());
+        prop(&mut g).err()
+    };
+    // (a) drop tail draws
+    while draws.len() > 1 {
+        let cand = &draws[..draws.len() - 1];
+        if let Some(m) = fails(cand, &mut budget) {
+            draws.pop();
+            msg = m;
+        } else {
+            break;
+        }
+    }
+    // (b) minimize each draw value: bisection toward lo, then a linear
+    // refinement so boundary counterexamples (e.g. "fails iff x ≥ k") land
+    // exactly on k rather than wherever halving stalled.
+    for i in 0..draws.len() {
+        while draws[i].value > draws[i].lo && budget > 0 {
+            let mut cand = draws.clone();
+            let mid = draws[i].lo + (draws[i].value - draws[i].lo) / 2;
+            cand[i].value = mid;
+            if let Some(m) = fails(&cand, &mut budget) {
+                draws = cand;
+                msg = m;
+            } else {
+                break;
+            }
+        }
+        while draws[i].value > draws[i].lo && budget > 0 {
+            let mut cand = draws.clone();
+            cand[i].value -= 1;
+            if let Some(m) = fails(&cand, &mut budget) {
+                draws = cand;
+                msg = m;
+            } else {
+                break;
+            }
+        }
+    }
+    (draws.iter().map(|d| d.value).collect(), msg)
+}

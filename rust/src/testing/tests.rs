@@ -1,0 +1,68 @@
+//! Tests for the property-testing harness itself.
+
+use super::prop::{self, assert_close, assert_that};
+
+#[test]
+fn passing_property_runs_all_cases() {
+    let mut runs = 0;
+    prop::check("tautology", prop::cfg_cases(10), |g| {
+        runs += 1;
+        let a = g.int_in(0, 100);
+        assert_that(a >= 0 && a <= 100, "range")
+    });
+    assert_eq!(runs, 10);
+}
+
+#[test]
+#[should_panic(expected = "property 'always fails' failed")]
+fn failing_property_panics_with_name() {
+    prop::check("always fails", prop::cfg_cases(5), |g| {
+        let _ = g.int_in(0, 10);
+        Err("nope".to_string())
+    });
+}
+
+#[test]
+fn shrinking_finds_small_counterexample() {
+    // property "x < 50" fails for x ≥ 50; shrinker should land near 50.
+    let result = std::panic::catch_unwind(|| {
+        prop::check("x < 50", prop::cfg_cases(200), |g| {
+            let x = g.int_in(0, 1000);
+            assert_that(x < 50, format!("x={x}"))
+        });
+    });
+    let msg = *result.unwrap_err().downcast::<String>().unwrap();
+    // minimal draws list should contain exactly the boundary value 50
+    assert!(msg.contains("minimal draws: [50]"), "shrink did not minimize: {msg}");
+}
+
+#[test]
+fn generators_respect_ranges() {
+    prop::check("ranges", prop::cfg_cases(50), |g| {
+        let i = g.int_in(-5, 5);
+        assert_that((-5..=5).contains(&i), format!("int {i}"))?;
+        let s = g.size_in(2, 4);
+        assert_that((2..=4).contains(&s), format!("size {s}"))?;
+        let f = g.f64_in(1.0, 2.0);
+        assert_that((1.0..=2.0).contains(&f), format!("f64 {f}"))?;
+        let c = *g.choose(&[7, 8, 9]);
+        assert_that([7, 8, 9].contains(&c), format!("choose {c}"))?;
+        let v = g.vec_of(s, |g| g.bool());
+        assert_that(v.len() == s, "vec len")
+    });
+}
+
+#[test]
+fn sub_rng_is_usable() {
+    prop::check("sub rng", prop::cfg_cases(10), |g| {
+        let mut r = g.rng();
+        let x = r.normal();
+        assert_that(x.is_finite(), "normal finite")
+    });
+}
+
+#[test]
+fn assert_close_tolerates_scale() {
+    assert!(assert_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+    assert!(assert_close(1.0, 1.1, 1e-6, "off").is_err());
+}

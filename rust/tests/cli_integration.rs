@@ -1,0 +1,97 @@
+//! End-to-end CLI integration: run the built `cfl` binary as a subprocess.
+
+use std::process::Command;
+
+fn cfl_bin() -> Option<std::path::PathBuf> {
+    // cargo puts integration-test binaries in target/<profile>/deps; the
+    // cli binary sits one level up.
+    let mut path = std::env::current_exe().ok()?;
+    path.pop();
+    if path.ends_with("deps") {
+        path.pop();
+    }
+    let bin = path.join("cfl");
+    bin.exists().then_some(bin)
+}
+
+macro_rules! require_bin {
+    () => {
+        match cfl_bin() {
+            Some(b) => b,
+            None => {
+                eprintln!("skipping: cfl binary not built (cargo build first)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn optimize_subcommand_prints_policy() {
+    let bin = require_bin!();
+    let out = Command::new(&bin).args(["optimize", "--seed", "5"]).output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("parity rows"), "{text}");
+    assert!(text.contains("t* ="), "{text}");
+    assert!(text.contains("P{{miss}}") || text.contains("P{miss}"), "{text}");
+}
+
+#[test]
+fn train_subcommand_reports_gain_and_writes_traces() {
+    let bin = require_bin!();
+    let out_dir = std::env::temp_dir().join("cfl_cli_train");
+    std::fs::remove_dir_all(&out_dir).ok();
+    let out = Command::new(&bin)
+        .args([
+            "train",
+            "--seed",
+            "7",
+            "--nu-comp",
+            "0.3",
+            "--nu-link",
+            "0.3",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("LS bound"), "{text}");
+    assert!(text.contains("uncoded"), "{text}");
+    let cfl_csv = std::fs::read_to_string(out_dir.join("trace_cfl.csv")).unwrap();
+    assert!(cfl_csv.starts_with("time_s,epoch,nmse"));
+    assert!(cfl_csv.lines().count() > 10);
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+#[test]
+fn bad_flag_fails_cleanly() {
+    let bin = require_bin!();
+    let out = Command::new(&bin).args(["train", "--bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bogus"), "{err}");
+}
+
+#[test]
+fn config_file_round_trip() {
+    let bin = require_bin!();
+    let dir = std::env::temp_dir().join("cfl_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("exp.ini");
+    std::fs::write(
+        &cfg_path,
+        "[experiment]\nn_devices = 6\npoints_per_device = 48\nmodel_dim = 24\nsnr_db = 10\n",
+    )
+    .unwrap();
+    let out = Command::new(&bin)
+        .args(["optimize", "--config", cfg_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("m = 288"), "config not applied: {text}");
+    std::fs::remove_dir_all(&dir).ok();
+}

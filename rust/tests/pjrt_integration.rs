@@ -1,0 +1,160 @@
+//! Integration: the PJRT artifact runtime against the native oracle, and
+//! full training through the PJRT backend.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so plain
+//! `cargo test` works on hosts without python/jax).
+
+use cfl::config::ExperimentConfig;
+use cfl::coordinator::SimCoordinator;
+use cfl::fl::{GradBackend, NativeBackend};
+use cfl::linalg::Mat;
+use cfl::rng::Rng;
+use cfl::runtime::PjrtBackend;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then(|| dir.to_str().unwrap().to_string())
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn rel_err(a: &Mat, b: &Mat) -> f64 {
+    (a.dist_sq(b) / b.norm_sq().max(1e-30)).sqrt()
+}
+
+#[test]
+fn pjrt_partial_grad_matches_native() {
+    let dir = require_artifacts!();
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut native = NativeBackend;
+    let mut rng = Rng::new(1);
+    // logical sizes below, equal to, and straddling the padded shapes
+    for &(l, d) in &[(1usize, 1usize), (60, 40), (128, 128), (300, 500), (512, 512)] {
+        let x = Mat::randn(l, d, &mut rng);
+        let beta = Mat::randn(d, 1, &mut rng);
+        let y = Mat::randn(l, 1, &mut rng);
+        let got = pjrt.partial_grad(&x, &beta, &y).unwrap();
+        let want = native.partial_grad(&x, &beta, &y).unwrap();
+        assert_eq!(got.rows(), d);
+        let err = rel_err(&got, &want);
+        assert!(err < 1e-4, "L={l} D={d}: rel err {err:.2e}");
+    }
+}
+
+#[test]
+fn pjrt_parity_grad_matches_native() {
+    let dir = require_artifacts!();
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut native = NativeBackend;
+    let mut rng = Rng::new(2);
+    for &(c_rows, d, c) in &[(64usize, 40usize, 64usize), (936, 500, 936), (2048, 512, 2000)] {
+        let xt = Mat::randn(c_rows, d, &mut rng);
+        let beta = Mat::randn(d, 1, &mut rng);
+        let yt = Mat::randn(c_rows, 1, &mut rng);
+        let got = pjrt.parity_grad(&xt, &beta, &yt, c).unwrap();
+        let want = native.parity_grad(&xt, &beta, &yt, c).unwrap();
+        let err = rel_err(&got, &want);
+        assert!(err < 1e-4, "C={c_rows} D={d}: rel err {err:.2e}");
+    }
+}
+
+#[test]
+fn pjrt_encode_matches_native() {
+    let dir = require_artifacts!();
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut native = NativeBackend;
+    let mut rng = Rng::new(3);
+    for &(c, l, d) in &[(16usize, 20usize, 8usize), (100, 128, 128), (400, 300, 500)] {
+        let g = Mat::randn(c, l, &mut rng);
+        let x = Mat::randn(l, d, &mut rng);
+        let y = Mat::randn(l, 1, &mut rng);
+        let w: Vec<f32> = (0..l).map(|i| 0.2 + 0.8 * (i as f32 / l as f32)).collect();
+        let (gx, gy) = pjrt.encode(&g, &w, &x, &y).unwrap();
+        let (nx, ny) = native.encode(&g, &w, &x, &y).unwrap();
+        assert_eq!((gx.rows(), gx.cols()), (c, d));
+        assert!(rel_err(&gx, &nx) < 1e-4, "X̃ mismatch at ({c},{l},{d})");
+        assert!(rel_err(&gy, &ny) < 1e-4, "ỹ mismatch at ({c},{l},{d})");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let dir = require_artifacts!();
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut rng = Rng::new(4);
+    let x = Mat::randn(60, 40, &mut rng);
+    let beta = Mat::randn(40, 1, &mut rng);
+    let y = Mat::randn(60, 1, &mut rng);
+    for _ in 0..5 {
+        pjrt.partial_grad(&x, &beta, &y).unwrap();
+    }
+    assert_eq!(pjrt.executions, 5);
+}
+
+#[test]
+fn full_cfl_training_through_pjrt() {
+    let dir = require_artifacts!();
+    let mut cfg = ExperimentConfig::small();
+    cfg.artifacts_dir = Some(dir);
+    cfg.max_epochs = 2_000;
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    assert_eq!(sim.backend_name(), "pjrt");
+    let run = sim.train_cfl().unwrap();
+    assert!(
+        run.converged.is_some(),
+        "PJRT-backed CFL did not converge (final NMSE {:?})",
+        run.trace.final_nmse()
+    );
+}
+
+#[test]
+fn pjrt_and_native_training_agree() {
+    // same seed ⇒ identical delay/code randomness; gradients differ only by
+    // backend numerics, so the NMSE trajectories must track closely.
+    let dir = require_artifacts!();
+    let mut cfg = ExperimentConfig::small();
+    cfg.max_epochs = 300;
+    cfg.target_nmse = 0.0;
+    let mut native_sim = SimCoordinator::new(&cfg).unwrap();
+    cfg.artifacts_dir = Some(dir);
+    let mut pjrt_sim = SimCoordinator::new(&cfg).unwrap();
+    let rn = native_sim.train_cfl().unwrap();
+    let rp = pjrt_sim.train_cfl().unwrap();
+    assert_eq!(rn.trace.points.len(), rp.trace.points.len());
+    let (a, b) = (rn.trace.final_nmse().unwrap(), rp.trace.final_nmse().unwrap());
+    assert!(
+        ((a / b).log10()).abs() < 0.05,
+        "backends diverged: native {a:.4e} vs pjrt {b:.4e}"
+    );
+}
+
+#[test]
+fn pjrt_chunked_tall_gradients_match_native() {
+    // inputs taller than every artifact must be row-chunked exactly
+    let dir = require_artifacts!();
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut native = NativeBackend;
+    let mut rng = Rng::new(5);
+    let x = Mat::randn(1300, 500, &mut rng); // > grad_dev's 512 rows
+    let beta = Mat::randn(500, 1, &mut rng);
+    let y = Mat::randn(1300, 1, &mut rng);
+    let got = pjrt.partial_grad(&x, &beta, &y).unwrap();
+    let want = native.partial_grad(&x, &beta, &y).unwrap();
+    assert!(rel_err(&got, &want) < 1e-4, "chunked grad mismatch");
+
+    let xt = Mat::randn(3000, 500, &mut rng); // > grad_srv's 2048 rows
+    let yt = Mat::randn(3000, 1, &mut rng);
+    let got = pjrt.parity_grad(&xt, &beta, &yt, 3000).unwrap();
+    let want = native.parity_grad(&xt, &beta, &yt, 3000).unwrap();
+    assert!(rel_err(&got, &want) < 1e-4, "chunked parity grad mismatch");
+}

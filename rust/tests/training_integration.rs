@@ -1,0 +1,161 @@
+//! Cross-module integration: optimizer → coding → coordinator → metrics,
+//! all on the native backend (no artifacts needed).
+
+use cfl::config::{ExperimentConfig, GeneratorKind, ShardingKind};
+use cfl::coordinator::SimCoordinator;
+use cfl::lb::LoadPolicy;
+use cfl::stats::Summary;
+
+fn base_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::small();
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn cfl_beats_uncoded_under_heterogeneity() {
+    // the paper's headline claim, at test scale: with heterogeneous compute
+    // and links, CFL reaches the target NMSE in less simulated time
+    let mut cfg = base_cfg(11);
+    cfg.nu_comp = 0.3;
+    cfg.nu_link = 0.3;
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    let coded = sim.train_cfl().unwrap();
+    let uncoded = sim.train_uncoded().unwrap();
+    let tc = coded.time_to(cfg.target_nmse).expect("coded converged");
+    let tu = uncoded.time_to(cfg.target_nmse).expect("uncoded converged");
+    assert!(
+        tc < tu,
+        "CFL ({tc:.1}s) should beat uncoded ({tu:.1}s) at ν=(0.3,0.3)"
+    );
+}
+
+#[test]
+fn coded_epochs_are_shorter_but_start_later() {
+    let mut cfg = base_cfg(12);
+    cfg.nu_comp = 0.2;
+    cfg.nu_link = 0.2;
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    let coded = sim.train_cfl().unwrap();
+    let uncoded = sim.train_uncoded().unwrap();
+    let mut cs = Summary::new();
+    cs.extend(&coded.epoch_times);
+    let mut us = Summary::new();
+    us.extend(&uncoded.epoch_times);
+    assert!(
+        cs.mean() < us.mean(),
+        "deadline epochs ({:.2}s) should be shorter than wait-for-all ({:.2}s)",
+        cs.mean(),
+        us.mean()
+    );
+    assert!(coded.setup_secs > 0.0 && uncoded.setup_secs == 0.0);
+}
+
+#[test]
+fn bernoulli_and_gaussian_codes_both_converge() {
+    for kind in [GeneratorKind::Gaussian, GeneratorKind::Bernoulli] {
+        let mut cfg = base_cfg(13);
+        cfg.generator = kind;
+        let mut sim = SimCoordinator::new(&cfg).unwrap();
+        let run = sim.train_cfl().unwrap();
+        assert!(run.converged.is_some(), "{kind:?} code failed to converge");
+    }
+}
+
+#[test]
+fn non_iid_sharding_trains() {
+    for sharding in [ShardingKind::PowerLaw(1.2), ShardingKind::Dirichlet(0.5)] {
+        let mut cfg = base_cfg(14);
+        cfg.sharding = sharding;
+        cfg.max_epochs = 6_000;
+        let mut sim = SimCoordinator::new(&cfg).unwrap();
+        let run = sim.train_cfl().unwrap();
+        assert!(
+            run.converged.is_some(),
+            "{sharding:?} failed (final {:?})",
+            run.trace.final_nmse()
+        );
+    }
+}
+
+#[test]
+fn delta_sweep_orders_setup_cost() {
+    // larger δ ⇒ more parity rows ⇒ strictly more setup bits and a later
+    // training start (Fig. 2's initial offsets / Fig. 5 bottom)
+    let mut prev_bits = 0.0;
+    for &delta in &[0.05, 0.15, 0.25] {
+        let mut cfg = base_cfg(15);
+        cfg.delta = Some(delta);
+        let mut sim = SimCoordinator::new(&cfg).unwrap();
+        let run = sim.train_cfl().unwrap();
+        assert!(run.parity_upload_bits > prev_bits, "parity bits must grow with δ");
+        prev_bits = run.parity_upload_bits;
+    }
+}
+
+#[test]
+fn policy_round_trip_through_coordinator() {
+    let cfg = base_cfg(16);
+    let sim = SimCoordinator::new(&cfg).unwrap();
+    let policy = sim.policy().unwrap();
+    assert!(policy.parity_rows > 0);
+    assert!(policy.epoch_deadline.is_finite());
+    // uncoded policy from the same fleet
+    let unc = LoadPolicy::uncoded(&sim.fleet);
+    assert_eq!(unc.device_loads.len(), cfg.n_devices);
+}
+
+#[test]
+fn trace_is_monotone_in_time() {
+    let mut sim = SimCoordinator::new(&base_cfg(17)).unwrap();
+    for run in [sim.train_cfl().unwrap(), sim.train_uncoded().unwrap()] {
+        let mut last = -1.0;
+        for p in &run.trace.points {
+            assert!(p.time_s > last, "time must strictly increase");
+            last = p.time_s;
+        }
+    }
+}
+
+#[test]
+fn homogeneous_fleet_gain_is_modest() {
+    // Fig. 4 anchor: at ν = (0,0) the coding gain should be near 1 — far
+    // smaller than the heterogeneous gain (asserted > 1 under ν=(0.3,0.3)
+    // above). Allow slack: at test scale a single seed is noisy.
+    let mut cfg = base_cfg(18);
+    cfg.nu_comp = 0.0;
+    cfg.nu_link = 0.0;
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    let coded = sim.train_cfl().unwrap();
+    let uncoded = sim.train_uncoded().unwrap();
+    if let (Some(tc), Some(tu)) = (coded.time_to(cfg.target_nmse), uncoded.time_to(cfg.target_nmse))
+    {
+        let gain = tu / tc;
+        assert!(gain < 3.0, "homogeneous gain should be modest, got {gain:.2}");
+    }
+}
+
+#[test]
+fn client_selection_extension_converges() {
+    // §V future-work: sample half the devices per epoch; the parity
+    // gradient + inverse-probability weighting keep the estimate unbiased
+    let mut cfg = base_cfg(19);
+    cfg.client_fraction = 0.5;
+    cfg.max_epochs = 8_000;
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    let run = sim.train_cfl().unwrap();
+    assert!(
+        run.converged.is_some(),
+        "client-selection run failed (final {:?})",
+        run.trace.final_nmse()
+    );
+}
+
+#[test]
+fn client_fraction_validated() {
+    let mut cfg = base_cfg(20);
+    cfg.client_fraction = 0.0;
+    assert!(SimCoordinator::new(&cfg).is_err());
+    cfg.client_fraction = 1.5;
+    assert!(SimCoordinator::new(&cfg).is_err());
+}
