@@ -2,40 +2,39 @@
 //! respond as the edge gets more unequal (a fast, small-scale cousin of
 //! the Fig. 4 bench, with policy introspection the figure doesn't show).
 //!
+//! Runs on the `cfl::sweep` engine: the compound `nu` axis sets
+//! ν_comp = ν_link per scenario and the grid executes across all cores —
+//! results are identical to a serial loop, only faster.
+//!
 //! Run: `cargo run --release --example heterogeneity_sweep`
 
 use cfl::config::ExperimentConfig;
-use cfl::coordinator::SimCoordinator;
 use cfl::metrics::Table;
+use cfl::sweep::{run_grid, ScenarioGrid, SweepOptions};
 
 fn main() -> anyhow::Result<()> {
     println!("heterogeneity sweep (small scale: 8 devices × 60 points, d = 40)\n");
+    let mut base = ExperimentConfig::small();
+    base.max_epochs = 6_000;
+    let grid = ScenarioGrid::new(&base).axis_f64("nu", &[0.0, 0.1, 0.2, 0.3, 0.4])?;
+    let outcomes = run_grid(&grid, &SweepOptions::default())?;
+
     let mut table = Table::new(&[
         "ν", "δ*", "t* (s)", "punctured devices", "t_CFL (s)", "t_unc (s)", "gain",
     ]);
-    for &nu in &[0.0, 0.1, 0.2, 0.3, 0.4] {
-        let mut cfg = ExperimentConfig::small();
-        cfg.nu_comp = nu;
-        cfg.nu_link = nu;
-        cfg.max_epochs = 6_000;
-        let mut sim = SimCoordinator::new(&cfg)?;
-        let policy = sim.policy()?;
+    for o in &outcomes {
+        let cfg = &o.scenario.cfg;
         // devices the optimizer fully punctures (all parity, no local work)
-        let idle = policy.device_loads.iter().filter(|&&l| l == 0).count();
-        let coded = sim.train_cfl()?;
-        let uncoded = sim.train_uncoded()?;
-        let (tc, tu) = (coded.time_to(cfg.target_nmse), uncoded.time_to(cfg.target_nmse));
+        let idle = o.policy.device_loads.iter().filter(|&&l| l == 0).count();
+        let fmt_t = |t: Option<f64>| t.map(|t| format!("{t:.0}")).unwrap_or_else(|| "—".into());
         table.row(&[
-            format!("{nu:.1}"),
-            format!("{:.3}", policy.delta),
-            format!("{:.2}", policy.epoch_deadline),
+            format!("{:.1}", cfg.nu_comp),
+            format!("{:.3}", o.policy.delta),
+            format!("{:.2}", o.policy.epoch_deadline),
             format!("{idle}/{}", cfg.n_devices),
-            tc.map(|t| format!("{t:.0}")).unwrap_or("—".into()),
-            tu.map(|t| format!("{t:.0}")).unwrap_or("—".into()),
-            match (tc, tu) {
-                (Some(tc), Some(tu)) => format!("{:.2}", tu / tc),
-                _ => "—".into(),
-            },
+            fmt_t(o.coded.time_to(cfg.target_nmse)),
+            fmt_t(o.uncoded.as_ref().and_then(|u| u.time_to(cfg.target_nmse))),
+            o.gain().map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into()),
         ]);
     }
     println!("{}", table.render());

@@ -5,18 +5,32 @@
 //! to "nearly 4×" at (0.2, 0.2), monotone-ish in both axes. CFL here uses
 //! the optimizer's own δ (Eqs. 14–16), as in the paper.
 //!
+//! Runs on the `cfl::sweep` engine: the 3×3 grid executes across all
+//! cores instead of one scenario at a time (scenario results are
+//! identical to a serial run by construction).
+//!
 //! Writes `results/fig4_coding_gain.csv`.
 
 mod common;
 
 use cfl::config::ExperimentConfig;
-use cfl::coordinator::SimCoordinator;
 use cfl::metrics::{CsvWriter, Table};
+use cfl::sweep::{run_grid, ScenarioGrid, SweepOptions};
 
 fn main() {
     common::banner("Fig. 4", "coding gain vs heterogeneity (target NMSE 3e-4)");
-    let grid = [0.0, 0.1, 0.2];
+    let grid_values = [0.0, 0.1, 0.2];
     let quick = common::quick_mode();
+
+    let mut cfg = ExperimentConfig::paper();
+    cfg.max_epochs = if quick { 1_200 } else { 3_000 };
+    let grid = ScenarioGrid::new(&cfg)
+        .axis_f64("nu_comp", &grid_values)
+        .expect("nu_comp axis")
+        .axis_f64("nu_link", &grid_values)
+        .expect("nu_link axis");
+    let opts = SweepOptions { progress: true, ..Default::default() };
+    let (outcomes, secs) = common::timed(|| run_grid(&grid, &opts).expect("sweep"));
 
     let dir = common::results_dir();
     let mut csv = CsvWriter::create(
@@ -27,34 +41,27 @@ fn main() {
 
     let mut table = Table::new(&["ν_comp", "ν_link", "δ*", "t_CFL (s)", "t_unc (s)", "gain"]);
     let mut gains = std::collections::BTreeMap::new();
-    let (_, secs) = common::timed(|| {
-        for &nu_comp in &grid {
-            for &nu_link in &grid {
-                let mut cfg = ExperimentConfig::paper();
-                cfg.nu_comp = nu_comp;
-                cfg.nu_link = nu_link;
-                cfg.max_epochs = if quick { 1_200 } else { 3_000 };
-                let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
-                let coded = sim.train_cfl().expect("cfl");
-                let uncoded = sim.train_uncoded().expect("uncoded");
-                let (tc, tu) = (
-                    coded.time_to(cfg.target_nmse).unwrap_or(f64::NAN),
-                    uncoded.time_to(cfg.target_nmse).unwrap_or(f64::NAN),
-                );
-                let gain = tu / tc;
-                gains.insert(((nu_comp * 10.0) as u32, (nu_link * 10.0) as u32), gain);
-                csv.write_row(&[nu_comp, nu_link, coded.delta, tc, tu, gain]).unwrap();
-                table.row(&[
-                    format!("{nu_comp:.1}"),
-                    format!("{nu_link:.1}"),
-                    format!("{:.3}", coded.delta),
-                    format!("{tc:.0}"),
-                    format!("{tu:.0}"),
-                    format!("{gain:.2}"),
-                ]);
-            }
-        }
-    });
+    for o in &outcomes {
+        let (nu_comp, nu_link) = (o.scenario.cfg.nu_comp, o.scenario.cfg.nu_link);
+        let target = o.scenario.cfg.target_nmse;
+        let tc = o.coded.time_to(target).unwrap_or(f64::NAN);
+        let tu = o
+            .uncoded
+            .as_ref()
+            .and_then(|u| u.time_to(target))
+            .unwrap_or(f64::NAN);
+        let gain = tu / tc;
+        gains.insert(((nu_comp * 10.0) as u32, (nu_link * 10.0) as u32), gain);
+        csv.write_row(&[nu_comp, nu_link, o.coded.delta, tc, tu, gain]).unwrap();
+        table.row(&[
+            format!("{nu_comp:.1}"),
+            format!("{nu_link:.1}"),
+            format!("{:.3}", o.coded.delta),
+            format!("{tc:.0}"),
+            format!("{tu:.0}"),
+            format!("{gain:.2}"),
+        ]);
+    }
     csv.flush().unwrap();
     println!("{}", table.render());
 

@@ -8,6 +8,11 @@
 //! Communication load = (parity bits + per-epoch bits × epochs-to-target)
 //! / (uncoded per-epoch bits × uncoded epochs-to-target).
 //!
+//! Runs on the `cfl::sweep` engine: the uncoded baseline is trained once
+//! (it does not depend on δ), then one CFL scenario per δ executes across
+//! all cores — matching the paper's single-baseline methodology without
+//! retraining the denominator six times.
+//!
 //! Writes `results/fig5_gain_vs_load.csv`.
 
 mod common;
@@ -15,6 +20,7 @@ mod common;
 use cfl::config::ExperimentConfig;
 use cfl::coordinator::SimCoordinator;
 use cfl::metrics::{CsvWriter, Table};
+use cfl::sweep::{run_grid, ScenarioGrid, SweepOptions};
 
 fn main() {
     common::banner("Fig. 5", "coding gain and comm load vs δ, ν=(0.4,0.4), target 1.8e-4");
@@ -25,14 +31,18 @@ fn main() {
     cfg.max_epochs = if common::quick_mode() { 1_500 } else { 4_000 };
     let deltas = [0.04, 0.08, 0.13, 0.16, 0.22, 0.28];
 
-    let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
-    let (uncoded, _) = common::timed(|| sim.train_uncoded().expect("uncoded"));
+    let mut baseline_sim = SimCoordinator::new(&cfg).expect("coordinator");
+    let (uncoded, _) = common::timed(|| baseline_sim.train_uncoded().expect("uncoded"));
     let (tu, eu) = match (uncoded.time_to(cfg.target_nmse), uncoded.converged) {
         (Some(t), Some((e, _))) => (t, e),
         _ => panic!("uncoded baseline did not reach the target NMSE"),
     };
     let uncoded_bits = uncoded.per_epoch_bits * eu as f64;
     println!("uncoded: {eu} epochs, {tu:.0}s, {:.2} Gbit total\n", uncoded_bits / 1e9);
+
+    let grid = ScenarioGrid::new(&cfg).axis_f64("delta", &deltas).expect("delta axis");
+    let opts = SweepOptions { uncoded_baseline: false, progress: true, ..Default::default() };
+    let (outcomes, secs) = common::timed(|| run_grid(&grid, &opts).expect("sweep"));
 
     let dir = common::results_dir();
     let mut csv = CsvWriter::create(
@@ -43,37 +53,36 @@ fn main() {
     let mut table = Table::new(&["δ", "gain", "comm load", "t_CFL (s)", "epochs", "setup (s)"]);
 
     let mut series = Vec::new();
-    let (_, secs) = common::timed(|| {
-        for &delta in &deltas {
-            sim.cfg.delta = Some(delta);
-            let run = sim.train_cfl().expect("cfl");
-            let (gain, load) = match (run.time_to(cfg.target_nmse), run.converged) {
-                (Some(tc), Some((ec, _))) => {
-                    let coded_bits = run.parity_upload_bits + run.per_epoch_bits * ec as f64;
-                    (tu / tc, coded_bits / uncoded_bits)
-                }
-                _ => (f64::NAN, f64::NAN),
-            };
-            csv.write_row(&[
-                delta,
-                gain,
-                load,
-                run.time_to(cfg.target_nmse).unwrap_or(f64::NAN),
-                run.epoch_times.len() as f64,
-                run.setup_secs,
-            ])
-            .unwrap();
-            table.row(&[
-                format!("{delta:.2}"),
-                format!("{gain:.2}"),
-                format!("{load:.2}"),
-                run.time_to(cfg.target_nmse).map(|t| format!("{t:.0}")).unwrap_or("—".into()),
-                format!("{}", run.epoch_times.len()),
-                format!("{:.0}", run.setup_secs),
-            ]);
-            series.push((delta, gain, load));
-        }
-    });
+    for (o, &delta) in outcomes.iter().zip(&deltas) {
+        let t_cfl = o.coded.time_to(cfg.target_nmse);
+        // gain and comm load against the shared baseline
+        let (gain, load) = match (t_cfl, o.coded.converged) {
+            (Some(tc), Some((ec, _))) => {
+                let coded_bits =
+                    o.coded.parity_upload_bits + o.coded.per_epoch_bits * ec as f64;
+                (tu / tc, coded_bits / uncoded_bits)
+            }
+            _ => (f64::NAN, f64::NAN),
+        };
+        csv.write_row(&[
+            delta,
+            gain,
+            load,
+            t_cfl.unwrap_or(f64::NAN),
+            o.coded.epoch_times.len() as f64,
+            o.coded.setup_secs,
+        ])
+        .unwrap();
+        table.row(&[
+            format!("{delta:.2}"),
+            format!("{gain:.2}"),
+            format!("{load:.2}"),
+            t_cfl.map(|t| format!("{t:.0}")).unwrap_or_else(|| "—".into()),
+            format!("{}", o.coded.epoch_times.len()),
+            format!("{:.0}", o.coded.setup_secs),
+        ]);
+        series.push((delta, gain, load));
+    }
     csv.flush().unwrap();
     println!("{}", table.render());
 

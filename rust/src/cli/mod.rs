@@ -1,8 +1,14 @@
 //! Dependency-free command-line parsing (clap is unavailable offline).
 //!
 //! Supports the subset the `cfl` binary and examples need: subcommands,
-//! `--flag`, `--key value` / `--key=value` options, typed lookups with
-//! defaults, positional arguments, and generated `--help` text.
+//! `--flag`, `--key value` / `--key=value` options (repeatable —
+//! [`Args::get`] sees the last occurrence, [`Args::get_all`] every one),
+//! typed lookups with defaults, positional arguments, and generated
+//! `--help` text.
+//!
+//! `--help`/`-h` is reported as [`Parsed::Help`] rather than printed —
+//! the parser never exits the process, so library callers and tests can
+//! drive it safely; only `main.rs` renders help and terminates.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -22,8 +28,33 @@ pub struct Args {
     program: String,
     subcommand: Option<String>,
     options: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in command-line order (repeatable
+    /// options like `--axis`; `options` keeps only the last per key).
+    multi_options: Vec<(String, String)>,
     flags: Vec<String>,
     positional: Vec<String>,
+}
+
+/// Outcome of parsing: a normal invocation, or a help request the caller
+/// is responsible for rendering (see [`Parser::help`]) and exiting on.
+#[derive(Clone, Debug)]
+pub enum Parsed {
+    /// Normal invocation.
+    Run(Args),
+    /// `--help`/`-h` was present; `program` is argv[0] for the banner.
+    Help { program: String },
+}
+
+impl Parsed {
+    /// Unwrap the [`Parsed::Run`] case; panics on a help request
+    /// (test/bench convenience — `main.rs` matches properly).
+    #[track_caller]
+    pub fn expect_run(self) -> Args {
+        match self {
+            Parsed::Run(args) => args,
+            Parsed::Help { .. } => panic!("expected a run invocation, got --help"),
+        }
+    }
 }
 
 /// Command-line parser with a declared option set.
@@ -81,8 +112,9 @@ impl Parser {
         s
     }
 
-    /// Parse an argument vector (argv[0] included).
-    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+    /// Parse an argument vector (argv[0] included). `--help`/`-h`
+    /// anywhere yields [`Parsed::Help`] instead of exiting.
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed> {
         let mut args = Args {
             program: argv.first().cloned().unwrap_or_else(|| "cfl".into()),
             ..Default::default()
@@ -90,8 +122,7 @@ impl Parser {
         let mut it = argv.iter().skip(1).peekable();
         while let Some(tok) = it.next() {
             if tok == "--help" || tok == "-h" {
-                println!("{}", self.help(&args.program));
-                std::process::exit(0);
+                return Ok(Parsed::Help { program: args.program });
             }
             if let Some(body) = tok.strip_prefix("--") {
                 let (name, inline) = match body.split_once('=') {
@@ -105,11 +136,17 @@ impl Parser {
                     let value = match inline {
                         Some(v) => v,
                         None => match it.next() {
+                            // a help token is never an option value — keep
+                            // the "--help anywhere" promise intact
+                            Some(v) if v == "--help" || v == "-h" => {
+                                return Ok(Parsed::Help { program: args.program });
+                            }
                             Some(v) => v.clone(),
                             None => bail!("option --{name} requires a value"),
                         },
                     };
-                    args.options.insert(name, value);
+                    args.options.insert(name.clone(), value.clone());
+                    args.multi_options.push((name, value));
                 } else {
                     if inline.is_some() {
                         bail!("flag --{name} takes no value");
@@ -125,11 +162,11 @@ impl Parser {
                 args.positional.push(tok.clone());
             }
         }
-        Ok(args)
+        Ok(Parsed::Run(args))
     }
 
     /// Parse `std::env::args()`.
-    pub fn parse_env(&self) -> Result<Args> {
+    pub fn parse_env(&self) -> Result<Parsed> {
         let argv: Vec<String> = std::env::args().collect();
         self.parse(&argv)
     }
@@ -146,6 +183,16 @@ impl Args {
 
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable `--name value` option, in
+    /// command-line order ([`Args::get`] sees only the last).
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.multi_options
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     /// Typed option lookup with default.

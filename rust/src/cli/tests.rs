@@ -6,6 +6,7 @@ fn parser() -> Parser {
         .subcommand("optimize", "run the load optimizer")
         .opt("seed", "u64", "root seed")
         .opt("delta", "f64", "coding redundancy")
+        .opt("axis", "key=v1,v2", "sweep axis (repeatable)")
         .flag("verbose", "chatty output")
 }
 
@@ -13,9 +14,13 @@ fn argv(s: &str) -> Vec<String> {
     std::iter::once("cfl".to_string()).chain(s.split_whitespace().map(String::from)).collect()
 }
 
+fn parse_run(s: &str) -> Args {
+    parser().parse(&argv(s)).unwrap().expect_run()
+}
+
 #[test]
 fn parses_subcommand_options_flags() {
-    let a = parser().parse(&argv("train --seed 42 --delta=0.13 --verbose extra1 extra2")).unwrap();
+    let a = parse_run("train --seed 42 --delta=0.13 --verbose extra1 extra2");
     assert_eq!(a.subcommand(), Some("train"));
     assert_eq!(a.get_or("seed", 0u64).unwrap(), 42);
     assert_eq!(a.get_or("delta", 0.0f64).unwrap(), 0.13);
@@ -25,7 +30,7 @@ fn parses_subcommand_options_flags() {
 
 #[test]
 fn defaults_apply_when_absent() {
-    let a = parser().parse(&argv("optimize")).unwrap();
+    let a = parse_run("optimize");
     assert_eq!(a.subcommand(), Some("optimize"));
     assert_eq!(a.get_or("seed", 7u64).unwrap(), 7);
     assert!(!a.has_flag("verbose"));
@@ -48,14 +53,14 @@ fn flag_with_value_rejected() {
 
 #[test]
 fn type_error_reported_with_context() {
-    let a = parser().parse(&argv("train --seed abc")).unwrap();
+    let a = parse_run("train --seed abc");
     let err = a.get_or("seed", 0u64).unwrap_err().to_string();
     assert!(err.contains("--seed"), "{err}");
 }
 
 #[test]
 fn non_subcommand_word_is_positional() {
-    let a = parser().parse(&argv("somefile.ini --seed 1")).unwrap();
+    let a = parse_run("somefile.ini --seed 1");
     assert_eq!(a.subcommand(), None);
     assert_eq!(a.positional(), &["somefile.ini".to_string()]);
 }
@@ -66,4 +71,32 @@ fn help_text_lists_everything() {
     for needle in ["train", "optimize", "--seed", "--delta", "--verbose", "--help"] {
         assert!(h.contains(needle), "help missing {needle}:\n{h}");
     }
+}
+
+#[test]
+fn help_is_a_result_variant_not_an_exit() {
+    // the whole point of Parsed::Help: library callers survive --help;
+    // the last case would otherwise swallow --help as --seed's value
+    for line in ["--help", "-h", "train --seed 1 --help", "train --seed --help"] {
+        match parser().parse(&argv(line)).unwrap() {
+            Parsed::Help { program } => assert_eq!(program, "cfl"),
+            Parsed::Run(_) => panic!("'{line}' should request help"),
+        }
+    }
+}
+
+#[test]
+fn repeated_option_keeps_every_occurrence() {
+    let a = parse_run("train --axis nu_comp=0,0.1 --axis nu_link=0,0.2 --seed 1");
+    assert_eq!(a.get_all("axis"), vec!["nu_comp=0,0.1", "nu_link=0,0.2"]);
+    // get() sees the last occurrence, get_all() preserves order
+    assert_eq!(a.get("axis"), Some("nu_link=0,0.2"));
+    assert!(a.get_all("seed") == vec!["1"]);
+    assert!(a.get_all("delta").is_empty());
+}
+
+#[test]
+#[should_panic(expected = "expected a run invocation")]
+fn expect_run_panics_on_help() {
+    let _ = parser().parse(&argv("--help")).unwrap().expect_run();
 }

@@ -63,6 +63,18 @@ impl Ini {
         }
     }
 
+    /// Comma-separated list lookup: `key = a, b, c` → `["a", "b", "c"]`.
+    /// Empty items are dropped (`a,,b` → `["a", "b"]`); `None` when the
+    /// key is absent. Used by the `[sweep]` axis syntax.
+    pub fn get_list(&self, section: &str, key: &str) -> Option<Vec<String>> {
+        self.get(section, key).map(|s| {
+            s.split(',')
+                .map(|v| v.trim().to_string())
+                .filter(|v| !v.is_empty())
+                .collect()
+        })
+    }
+
     /// Section names.
     pub fn sections(&self) -> impl Iterator<Item = &str> {
         self.sections.keys().map(|s| s.as_str())

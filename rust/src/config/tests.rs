@@ -37,6 +37,14 @@ fn ini_typed_get_or() {
 }
 
 #[test]
+fn ini_get_list_splits_and_trims() {
+    let doc = Ini::parse("[sweep]\nnu_comp = 0, 0.1 ,0.2\nempty_tail = a,,b,\n").unwrap();
+    assert_eq!(doc.get_list("sweep", "nu_comp").unwrap(), vec!["0", "0.1", "0.2"]);
+    assert_eq!(doc.get_list("sweep", "empty_tail").unwrap(), vec!["a", "b"]);
+    assert_eq!(doc.get_list("sweep", "missing"), None);
+}
+
+#[test]
 fn ini_duplicate_key_last_wins() {
     let doc = Ini::parse("[s]\nk = 1\nk = 2\n").unwrap();
     assert_eq!(doc.get("s", "k"), Some("2"));

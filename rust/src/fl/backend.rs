@@ -6,7 +6,12 @@ use anyhow::Result;
 /// The three compute graphs of the system (mirroring
 /// `python/compile/model.py` one-to-one). Implementations: the native
 /// fused kernels below (oracle / fallback) and the PJRT artifact runtime.
-pub trait GradBackend {
+///
+/// `Send` is a supertrait so coordinators owning a `Box<dyn GradBackend>`
+/// can be instantiated per worker thread — the [`crate::sweep`] engine
+/// runs one [`crate::coordinator::SimCoordinator`] per scenario on a
+/// thread pool.
+pub trait GradBackend: Send {
     /// Device partial gradient over a systematic shard:
     /// g = Xᵀ(Xβ − y) (Eq. 2 inner sum). `x` already contains only the
     /// rows being processed (masking happened upstream).

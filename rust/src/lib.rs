@@ -31,6 +31,13 @@
 //! println!("CFL reached NMSE {:.2e}", coded.trace.final_nmse().unwrap());
 //! # let _ = uncoded;
 //! ```
+//!
+//! Grid-scale evaluation goes through the [`sweep`] engine instead of
+//! hand-rolled loops: declare axes over config fields, run the cartesian
+//! product on a worker pool, and get per-scenario CSV plus coding-gain
+//! reports — parallel results are byte-identical to serial. From the
+//! CLI: `cfl sweep --config exp.ini` (a `[sweep]` section) or
+//! `cfl sweep --axis nu_comp=0,0.1,0.2 --axis nu_link=0,0.1,0.2`.
 
 pub mod cli;
 pub mod coding;
@@ -46,4 +53,5 @@ pub mod rng;
 pub mod runtime;
 pub mod simnet;
 pub mod stats;
+pub mod sweep;
 pub mod testing;

@@ -5,6 +5,9 @@
 //!   configured problem; prints the convergence summary and writes
 //!   NMSE-vs-time CSV traces.
 //! * `optimize` — solve the Eq. 13–16 load/redundancy policy and print it.
+//! * `sweep`    — expand a scenario grid (INI `[sweep]` section and/or
+//!   repeated `--axis key=v1,v2,…`) and run it on a worker pool; writes
+//!   per-scenario CSV and an aggregate coding-gain report.
 //! * `live`     — run the threaded live-cluster demo.
 //!
 //! Configuration: paper-scale defaults (`--paper`) or test-scale
@@ -12,17 +15,19 @@
 //! by individual flags.
 
 use anyhow::Result;
-use cfl::cli::Parser;
+use cfl::cli::{Parsed, Parser};
 use cfl::config::{ExperimentConfig, Ini};
 use cfl::coordinator::{LiveCoordinator, SimCoordinator};
 use cfl::metrics::Table;
+use cfl::sweep::{self, ScenarioGrid, SweepOptions};
 
 fn parser() -> Parser {
     Parser::new("cfl — Coded Federated Learning (Dhakal et al., GLOBECOM'19 Workshops)")
         .subcommand("train", "train CFL (+ uncoded baseline) and report convergence")
         .subcommand("optimize", "print the load/redundancy policy (Eqs. 13-16)")
+        .subcommand("sweep", "run a scenario grid in parallel and report coding gains")
         .subcommand("live", "threaded live-cluster demo")
-        .opt("config", "file.ini", "INI config file ([experiment] section)")
+        .opt("config", "file.ini", "INI config file ([experiment] + [sweep] sections)")
         .opt("seed", "u64", "root seed (default from config)")
         .opt("delta", "f64|auto", "coding redundancy δ = c/m (default: optimizer)")
         .opt("nu-comp", "f64", "compute heterogeneity in [0,1)")
@@ -32,16 +37,28 @@ fn parser() -> Parser {
         .opt("artifacts", "dir", "PJRT artifacts directory (default: native backend)")
         .opt("out", "dir", "output directory for CSV traces (default: results)")
         .opt("time-scale", "f64", "live mode: simulated→wall seconds factor")
+        .opt("axis", "key=v1,v2,..", "sweep: add a grid axis (repeatable)")
+        .opt("workers", "usize", "sweep: worker threads (default: all cores)")
         .flag("paper", "use the paper's §IV scale (24 devices, d=500)")
-        .flag("skip-uncoded", "train: skip the uncoded baseline")
-        .flag("quiet", "suppress the per-curve trace files")
+        .flag("skip-uncoded", "train/sweep: skip the uncoded baseline")
+        .flag("quiet", "suppress trace files / sweep progress")
+}
+
+/// Parse `--config` once; callers that need other sections (sweep) reuse
+/// the same parsed document.
+fn load_ini(args: &cfl::cli::Args) -> Result<Option<Ini>> {
+    args.get("config").map(Ini::load).transpose()
 }
 
 fn build_config(args: &cfl::cli::Args) -> Result<ExperimentConfig> {
+    build_config_with(args, load_ini(args)?.as_ref())
+}
+
+fn build_config_with(args: &cfl::cli::Args, ini: Option<&Ini>) -> Result<ExperimentConfig> {
     let mut cfg =
         if args.has_flag("paper") { ExperimentConfig::paper() } else { ExperimentConfig::small() };
-    if let Some(path) = args.get("config") {
-        cfg.apply_ini(&Ini::load(path)?)?;
+    if let Some(ini) = ini {
+        cfg.apply_ini(ini)?;
     }
     cfg.seed = args.get_or("seed", cfg.seed)?;
     if let Some(s) = args.get("delta") {
@@ -143,6 +160,69 @@ fn cmd_optimize(args: &cfl::cli::Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
+    let ini = load_ini(args)?;
+    let cfg = build_config_with(args, ini.as_ref())?;
+    let mut grid = ScenarioGrid::new(&cfg);
+    if let Some(ini) = &ini {
+        grid = grid.with_ini(ini)?;
+    }
+    for spec in args.get_all("axis") {
+        grid = grid.axis_spec(spec)?;
+    }
+    anyhow::ensure!(
+        !grid.axes().is_empty(),
+        "sweep needs at least one axis: repeat --axis key=v1,v2,... or add a [sweep] \
+         section to --config"
+    );
+
+    // precedence: --workers flag > [sweep] workers > all cores
+    let mut default_workers =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if let Some(ini) = &ini {
+        default_workers = ini.get_or("sweep", "workers", default_workers)?;
+    }
+    let workers = args.get_or("workers", default_workers)?;
+    let out_dir = args.get_or("out", "results".to_string())?;
+    // stdout stays a pure function of the grid (byte-identical for any
+    // --workers); runtime details like parallelism go to stderr
+    println!("cfl sweep: {} axes → {} scenarios", grid.axes().len(), grid.len());
+    for axis in grid.axes() {
+        println!("  axis {} = [{}]", axis.key, axis.values.join(", "));
+    }
+    eprintln!("running on {workers} worker thread(s)");
+
+    let opts = SweepOptions {
+        workers,
+        uncoded_baseline: !args.has_flag("skip-uncoded"),
+        progress: !args.has_flag("quiet"),
+    };
+    let outcomes = sweep::run_grid(&grid, &opts)?;
+
+    let csv_path = format!("{out_dir}/sweep_scenarios.csv");
+    sweep::write_scenario_csv(&csv_path, &grid, &outcomes)?;
+    let json_path = format!("{out_dir}/sweep_report.json");
+    sweep::write_json(&json_path, &grid, &outcomes)?;
+
+    println!("{}", sweep::summary_table(&outcomes).render());
+    if let Some(matrix) = sweep::gain_matrix(&grid, &outcomes) {
+        println!("coding gain matrix (t_uncoded / t_CFL at target NMSE):");
+        println!("{}", matrix.render());
+    }
+    match sweep::gain_stats(&outcomes) {
+        Some((stats, best)) => println!(
+            "gain over {} scenario(s): mean {:.2}×, min {:.2}×, max {:.2}× (best: {best})",
+            stats.count(),
+            stats.mean(),
+            stats.min(),
+            stats.max()
+        ),
+        None => println!("no scenario reached its target NMSE in both runs — no gains"),
+    }
+    println!("reports written to {csv_path} and {json_path}");
+    Ok(())
+}
+
 fn cmd_live(args: &cfl::cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     let scale = args.get_or("time-scale", 1e-3)?;
@@ -161,10 +241,19 @@ fn cmd_live(args: &cfl::cli::Args) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = parser().parse_env()?;
+    // --help is a parse outcome, not a parser-side exit (see cli docs) —
+    // rendering and terminating are this binary's decisions alone
+    let args = match parser().parse_env()? {
+        Parsed::Run(args) => args,
+        Parsed::Help { program } => {
+            println!("{}", parser().help(&program));
+            return Ok(());
+        }
+    };
     match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("optimize") => cmd_optimize(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("live") => cmd_live(&args),
         _ => {
             println!("{}", parser().help("cfl"));

@@ -16,7 +16,7 @@
 mod distributions; // impl blocks on Rng (normal, exponential, geometric, …)
 mod xoshiro;
 
-pub use xoshiro::Rng;
+pub use xoshiro::{mix_seed, Rng};
 
 #[cfg(test)]
 mod tests;

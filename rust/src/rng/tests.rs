@@ -206,3 +206,19 @@ fn fill_normal_f32_moments() {
     let (mean, var) = moments(&xs);
     assert!(mean.abs() < 0.02 && (var - 1.0).abs() < 0.05);
 }
+
+#[test]
+fn mix_seed_is_stable_and_label_sensitive() {
+    use super::mix_seed;
+    // pure function of (root, label)
+    assert_eq!(mix_seed(42, 7), mix_seed(42, 7));
+    // distinct labels and distinct roots give distinct seeds
+    let seeds: Vec<u64> = (0..64).map(|i| mix_seed(0xCF1_2019, i)).collect();
+    let mut dedup = seeds.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), seeds.len(), "derived seeds must not collide");
+    assert_ne!(mix_seed(1, 0), mix_seed(2, 0));
+    // label 0 is not the identity
+    assert_ne!(mix_seed(42, 0), 42);
+}

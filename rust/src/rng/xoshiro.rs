@@ -15,6 +15,18 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Derive a decorrelated child seed from a root seed and a stream label.
+///
+/// One splitmix64 step over `root ⊕ label·odd` — the same derivation
+/// discipline as [`Rng::split`], but seed-to-seed, so callers that need a
+/// *seed* per independent unit of work (e.g. one per sweep scenario) get
+/// streams that are reproducible from `(root, label)` alone, independent
+/// of evaluation order.
+pub fn mix_seed(root: u64, stream: u64) -> u64 {
+    let mut sm = root ^ stream.wrapping_mul(0xA076_1D64_78BD_642F);
+    splitmix64(&mut sm)
+}
+
 /// xoshiro256++ pseudo-random generator.
 #[derive(Clone, Debug)]
 pub struct Rng {

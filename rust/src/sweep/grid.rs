@@ -1,0 +1,250 @@
+//! Declarative scenario grids over [`ExperimentConfig`] fields.
+//!
+//! A grid is a base config plus ordered axes; expansion is the cartesian
+//! product in declaration order with the *last* axis fastest (row-major),
+//! so an `(A, B)` grid lays scenarios out as `A₀B₀, A₀B₁, …` — the same
+//! order a nested `for` loop would produce. Scenario IDs are stable
+//! functions of the grid alone (zero-padded index + axis assignment),
+//! never of evaluation order or worker count.
+//!
+//! Seeding: by default every scenario shares the base seed (common random
+//! numbers — paired comparisons across cells, as the paper's figures
+//! use). With [`ScenarioGrid::derive_seeds`] each scenario instead gets
+//! `rng::mix_seed(base_seed, index)`, and an explicit `seed` axis always
+//! wins over both.
+
+use crate::config::{ExperimentConfig, Ini};
+use crate::rng::mix_seed;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// Keys an axis may sweep (`nu` fans out to both ν knobs).
+pub const SWEEPABLE_KEYS: &[&str] = &[
+    "nu",
+    "nu_comp",
+    "nu_link",
+    "delta",
+    "n_devices",
+    "points_per_device",
+    "model_dim",
+    "snr_db",
+    "seed",
+    "erasure_prob",
+    "client_fraction",
+    "target_nmse",
+    "max_epochs",
+    "learning_rate",
+    "base_throughput_kbps",
+    "base_mac_rate_kmacs",
+    "master_speedup",
+    "header_overhead",
+    "mem_overhead_factor",
+    "c_up_fraction",
+    "epsilon",
+    "sharding",
+    "generator",
+    "setup_cost",
+];
+
+/// `[sweep]` keys that configure the run rather than defining an axis.
+const RESERVED_KEYS: &[&str] = &["workers", "derive_seeds"];
+
+/// One swept parameter: a config key plus its value list (kept as the
+/// raw strings so IDs, reports and re-parsing stay exact).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Axis {
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+/// One fully-resolved cell of the grid.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Row-major position in the expansion (axis 0 slowest).
+    pub index: usize,
+    /// Stable identifier: `s<index>__key=value__…`.
+    pub id: String,
+    /// `(key, value)` pairs in axis declaration order.
+    pub assignment: Vec<(String, String)>,
+    /// The base config with the assignment (and seed policy) applied.
+    pub cfg: ExperimentConfig,
+}
+
+/// A base config plus ordered sweep axes.
+#[derive(Clone, Debug)]
+pub struct ScenarioGrid {
+    base: ExperimentConfig,
+    axes: Vec<Axis>,
+    derive_seeds: bool,
+}
+
+impl ScenarioGrid {
+    /// Start a grid from a base configuration.
+    pub fn new(base: &ExperimentConfig) -> Self {
+        Self { base: base.clone(), axes: Vec::new(), derive_seeds: false }
+    }
+
+    /// Declared axes, in declaration order.
+    pub fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    /// The base configuration the axes perturb.
+    pub fn base(&self) -> &ExperimentConfig {
+        &self.base
+    }
+
+    /// Number of scenarios the grid expands to (1 for an axis-free grid).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    /// True when expansion would yield no scenarios (never, today:
+    /// empty-valued axes are rejected at declaration time).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Derive a distinct per-scenario seed (`mix_seed(base.seed, index)`)
+    /// instead of sharing the base seed across cells.
+    pub fn derive_seeds(mut self, yes: bool) -> Self {
+        self.derive_seeds = yes;
+        self
+    }
+
+    /// Declare an axis. Every value is type-checked against the key now,
+    /// so a bad grid fails before any scenario runs.
+    pub fn axis<S: AsRef<str>>(
+        mut self,
+        key: &str,
+        values: impl IntoIterator<Item = S>,
+    ) -> Result<Self> {
+        let key = key.trim();
+        let values: Vec<String> =
+            values.into_iter().map(|v| v.as_ref().trim().to_string()).collect();
+        ensure!(!values.is_empty(), "sweep axis '{key}' has no values");
+        ensure!(!self.axes.iter().any(|a| a.key == key), "duplicate sweep axis '{key}'");
+        let mut probe = self.base.clone();
+        for v in &values {
+            apply_key(&mut probe, key, v)?;
+        }
+        self.axes.push(Axis { key: key.to_string(), values });
+        Ok(self)
+    }
+
+    /// Declare an axis of numeric values (formatting via `f64`'s
+    /// round-trip `Display`, so `0.1` stays `0.1`).
+    pub fn axis_f64(self, key: &str, values: &[f64]) -> Result<Self> {
+        self.axis(key, values.iter().map(|v| v.to_string()))
+    }
+
+    /// Declare an axis from a `key=v1,v2,...` spec (the CLI `--axis` form).
+    pub fn axis_spec(self, spec: &str) -> Result<Self> {
+        let Some((key, values)) = spec.split_once('=') else {
+            bail!("axis spec '{spec}' must be key=v1,v2,...");
+        };
+        let values: Vec<&str> =
+            values.split(',').map(str::trim).filter(|v| !v.is_empty()).collect();
+        self.axis(key, values)
+    }
+
+    /// Add every axis declared in an INI `[sweep]` section
+    /// (`key = v1, v2, ...` per axis, expanded in the section's
+    /// alphabetical key order). Reserved keys: `workers` (runner
+    /// parallelism, read by the CLI) and `derive_seeds`.
+    pub fn with_ini(mut self, ini: &Ini) -> Result<Self> {
+        for key in ini.keys("sweep") {
+            if key == "derive_seeds" {
+                self.derive_seeds = ini.get_or("sweep", "derive_seeds", self.derive_seeds)?;
+            } else if RESERVED_KEYS.contains(&key) {
+                continue;
+            } else {
+                let values = ini.get_list("sweep", key).unwrap_or_default();
+                self = self.axis(key, values)?;
+            }
+        }
+        Ok(self)
+    }
+
+    /// Expand to the full scenario list (row-major, last axis fastest).
+    /// An axis-free grid yields the single base scenario.
+    pub fn expand(&self) -> Result<Vec<Scenario>> {
+        let total = self.len();
+        let width = total.to_string().len();
+        let explicit_seed_axis = self.axes.iter().any(|a| a.key == "seed");
+        let mut scenarios = Vec::with_capacity(total);
+        for index in 0..total {
+            // decode the row-major index into per-axis coordinates
+            let mut coords = vec![0usize; self.axes.len()];
+            let mut rem = index;
+            for (ai, axis) in self.axes.iter().enumerate().rev() {
+                coords[ai] = rem % axis.values.len();
+                rem /= axis.values.len();
+            }
+            let mut cfg = self.base.clone();
+            let mut assignment = Vec::with_capacity(self.axes.len());
+            let mut id = format!("s{index:0width$}");
+            for (axis, &ci) in self.axes.iter().zip(&coords) {
+                let value = &axis.values[ci];
+                apply_key(&mut cfg, &axis.key, value)?;
+                id.push_str(&format!("__{}={}", axis.key, value));
+                assignment.push((axis.key.clone(), value.clone()));
+            }
+            if self.derive_seeds && !explicit_seed_axis {
+                cfg.seed = mix_seed(self.base.seed, index as u64);
+            }
+            cfg.validate().with_context(|| format!("scenario {id}"))?;
+            scenarios.push(Scenario { index, id, assignment, cfg });
+        }
+        Ok(scenarios)
+    }
+}
+
+fn parse_value<T: std::str::FromStr>(key: &str, raw: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    raw.parse().map_err(|e| anyhow!("sweep axis {key} = '{raw}': {e}"))
+}
+
+/// Apply one swept value to a config (the single source of truth for
+/// which [`ExperimentConfig`] fields are sweepable).
+fn apply_key(cfg: &mut ExperimentConfig, key: &str, raw: &str) -> Result<()> {
+    match key {
+        "nu" => {
+            let v: f64 = parse_value(key, raw)?;
+            cfg.nu_comp = v;
+            cfg.nu_link = v;
+        }
+        "nu_comp" => cfg.nu_comp = parse_value(key, raw)?,
+        "nu_link" => cfg.nu_link = parse_value(key, raw)?,
+        "delta" => {
+            cfg.delta =
+                if raw.eq_ignore_ascii_case("auto") { None } else { Some(parse_value(key, raw)?) };
+        }
+        "n_devices" => cfg.n_devices = parse_value(key, raw)?,
+        "points_per_device" => cfg.points_per_device = parse_value(key, raw)?,
+        "model_dim" => cfg.model_dim = parse_value(key, raw)?,
+        "snr_db" => cfg.snr_db = parse_value(key, raw)?,
+        "seed" => cfg.seed = parse_value(key, raw)?,
+        "erasure_prob" => cfg.erasure_prob = parse_value(key, raw)?,
+        "client_fraction" => cfg.client_fraction = parse_value(key, raw)?,
+        "target_nmse" => cfg.target_nmse = parse_value(key, raw)?,
+        "max_epochs" => cfg.max_epochs = parse_value(key, raw)?,
+        "learning_rate" => cfg.learning_rate = parse_value(key, raw)?,
+        "base_throughput_kbps" => cfg.base_throughput_kbps = parse_value(key, raw)?,
+        "base_mac_rate_kmacs" => cfg.base_mac_rate_kmacs = parse_value(key, raw)?,
+        "master_speedup" => cfg.master_speedup = parse_value(key, raw)?,
+        "header_overhead" => cfg.header_overhead = parse_value(key, raw)?,
+        "mem_overhead_factor" => cfg.mem_overhead_factor = parse_value(key, raw)?,
+        "c_up_fraction" => cfg.c_up_fraction = parse_value(key, raw)?,
+        "epsilon" => cfg.epsilon = parse_value(key, raw)?,
+        "sharding" => cfg.sharding = parse_value(key, raw)?,
+        "generator" => cfg.generator = parse_value(key, raw)?,
+        "setup_cost" => cfg.setup_cost = parse_value(key, raw)?,
+        other => bail!(
+            "unknown sweep axis '{other}' (sweepable keys: {})",
+            SWEEPABLE_KEYS.join(", ")
+        ),
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Scenario-grid sweeps: declarative multi-axis experiments, executed in
+//! parallel, reported reproducibly.
+//!
+//! The paper's headline results are all *sweeps* — over heterogeneity ν
+//! (Fig. 4), redundancy δ and load (Fig. 5), device counts, SNR — and
+//! follow-up work (Prakash et al. 2020, Sun et al. 2022) evaluates even
+//! richer multi-axis grids. This module replaces the bespoke serial
+//! `for`-loops the benches and examples used to carry with one engine:
+//!
+//! * [`grid`] — [`ScenarioGrid`]: axes over [`ExperimentConfig`] fields
+//!   (`nu_comp`, `nu_link`, `delta`, `n_devices`, `snr_db`, `seed`, …),
+//!   cartesian expansion with stable scenario IDs, parsing from INI
+//!   `[sweep]` sections and `--axis key=v1,v2,…` CLI specs.
+//! * [`runner`] — a `std::thread` worker pool over a channel work queue.
+//!   Each worker instantiates its own coordinator (backends are `Send`),
+//!   and every scenario's result is a pure function of its config, so
+//!   parallel output is **byte-identical** to a serial run.
+//! * [`report`] — per-scenario CSV, coding-gain matrices, and a JSON
+//!   report, built on [`crate::metrics`].
+//!
+//! ```no_run
+//! use cfl::config::ExperimentConfig;
+//! use cfl::sweep::{run_grid, ScenarioGrid, SweepOptions};
+//!
+//! let grid = ScenarioGrid::new(&ExperimentConfig::small())
+//!     .axis_f64("nu_comp", &[0.0, 0.1, 0.2]).unwrap()
+//!     .axis_f64("nu_link", &[0.0, 0.1, 0.2]).unwrap();
+//! let outcomes = run_grid(&grid, &SweepOptions::default()).unwrap();
+//! for o in &outcomes {
+//!     println!("{}: gain {:?}", o.scenario.id, o.gain());
+//! }
+//! ```
+//!
+//! From the CLI: `cfl sweep --config experiment.ini` with
+//!
+//! ```ini
+//! [sweep]
+//! nu_comp = 0, 0.1, 0.2
+//! nu_link = 0, 0.1, 0.2
+//! workers = 8
+//! ```
+//!
+//! [`ExperimentConfig`]: crate::config::ExperimentConfig
+
+pub mod grid;
+pub mod report;
+pub mod runner;
+
+pub use grid::{Axis, Scenario, ScenarioGrid, SWEEPABLE_KEYS};
+pub use report::{gain_matrix, gain_stats, summary_table, write_json, write_scenario_csv};
+pub use runner::{run_grid, run_scenarios, ScenarioOutcome, SweepOptions};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,228 @@
+//! Sweep reporting: per-scenario CSV, aggregate coding-gain matrices,
+//! and a hand-rolled JSON report (no serde offline) — all built on
+//! [`crate::metrics::Table`] / [`crate::metrics::CsvWriter`] and free of
+//! wall-clock values, so report bytes are identical for any worker count.
+
+use super::grid::ScenarioGrid;
+use super::runner::ScenarioOutcome;
+use crate::metrics::{CsvWriter, Table};
+use crate::stats::Summary;
+use anyhow::{Context, Result};
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|v| v.to_string()).unwrap_or_default()
+}
+
+/// Write one CSV row per scenario: id, the axis assignment columns, and
+/// the headline metrics (times/gains at the scenario's target NMSE).
+pub fn write_scenario_csv(
+    path: &str,
+    grid: &ScenarioGrid,
+    outcomes: &[ScenarioOutcome],
+) -> Result<()> {
+    let mut header: Vec<String> = vec!["scenario".into()];
+    header.extend(grid.axes().iter().map(|a| a.key.clone()));
+    // "delta_used": the δ the run actually used (an axis may be named
+    // "delta", which gets its own assignment column)
+    for col in [
+        "delta_used", "epoch_deadline_s", "setup_s", "epochs", "final_nmse", "t_cfl_s",
+        "t_uncoded_s", "gain", "comm_load",
+    ] {
+        header.push(col.into());
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut csv = CsvWriter::create(path, &header_refs)?;
+    for o in outcomes {
+        let target = o.scenario.cfg.target_nmse;
+        let mut row: Vec<String> = vec![o.scenario.id.clone()];
+        row.extend(o.scenario.assignment.iter().map(|(_, v)| v.clone()));
+        row.push(o.coded.delta.to_string());
+        row.push(o.coded.epoch_deadline.to_string());
+        row.push(o.coded.setup_secs.to_string());
+        row.push(o.coded.epoch_times.len().to_string());
+        row.push(fmt_opt(o.coded.trace.final_nmse()));
+        row.push(fmt_opt(o.coded.time_to(target)));
+        row.push(fmt_opt(o.uncoded.as_ref().and_then(|u| u.time_to(target))));
+        row.push(fmt_opt(o.gain()));
+        row.push(fmt_opt(o.comm_load()));
+        let row_refs: Vec<&str> = row.iter().map(|s| s.as_str()).collect();
+        csv.write_row_str(&row_refs)?;
+    }
+    csv.flush()
+}
+
+/// Human summary: one row per scenario.
+pub fn summary_table(outcomes: &[ScenarioOutcome]) -> Table {
+    let mut table = Table::new(&[
+        "scenario", "δ", "t* (s)", "setup (s)", "epochs", "final NMSE", "t_CFL (s)",
+        "t_unc (s)", "gain",
+    ]);
+    for o in outcomes {
+        let target = o.scenario.cfg.target_nmse;
+        let fmt_t =
+            |t: Option<f64>| t.map(|t| format!("{t:.1}")).unwrap_or_else(|| "—".into());
+        table.row(&[
+            o.scenario.id.clone(),
+            format!("{:.3}", o.coded.delta),
+            if o.coded.epoch_deadline.is_finite() {
+                format!("{:.3}", o.coded.epoch_deadline)
+            } else {
+                "inf".into()
+            },
+            format!("{:.1}", o.coded.setup_secs),
+            format!("{}", o.coded.epoch_times.len()),
+            o.coded
+                .trace
+                .final_nmse()
+                .map(|n| format!("{n:.3e}"))
+                .unwrap_or_else(|| "—".into()),
+            fmt_t(o.coded.time_to(target)),
+            fmt_t(o.uncoded.as_ref().and_then(|u| u.time_to(target))),
+            o.gain().map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into()),
+        ]);
+    }
+    table
+}
+
+/// For exactly-2-axis grids: the coding-gain matrix with the first axis
+/// as rows and the second as columns (the Fig. 4 presentation).
+pub fn gain_matrix(grid: &ScenarioGrid, outcomes: &[ScenarioOutcome]) -> Option<Table> {
+    let axes = grid.axes();
+    if axes.len() != 2 || outcomes.len() != grid.len() {
+        return None;
+    }
+    let (row_axis, col_axis) = (&axes[0], &axes[1]);
+    let mut header = vec![format!("{} \\ {}", row_axis.key, col_axis.key)];
+    header.extend(col_axis.values.iter().cloned());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+    for (r, row_value) in row_axis.values.iter().enumerate() {
+        let mut cells = vec![row_value.clone()];
+        for c in 0..col_axis.values.len() {
+            // row-major expansion: axis 0 slowest, axis 1 fastest
+            let o = &outcomes[r * col_axis.values.len() + c];
+            cells.push(o.gain().map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into()));
+        }
+        table.row(&cells);
+    }
+    Some(table)
+}
+
+/// Aggregate gain statistics across the grid (count, mean, min, max, and
+/// the best scenario id). `None` when no scenario produced a gain.
+pub fn gain_stats(outcomes: &[ScenarioOutcome]) -> Option<(Summary, String)> {
+    let mut summary = Summary::new();
+    let mut best: Option<(f64, &str)> = None;
+    for o in outcomes {
+        if let Some(g) = o.gain() {
+            summary.push(g);
+            if best.map(|(bg, _)| g > bg).unwrap_or(true) {
+                best = Some((g, o.scenario.id.as_str()));
+            }
+        }
+    }
+    best.map(|(_, id)| (summary, id.to_string()))
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON numbers cannot be NaN/∞ — map non-finite to null.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        v.to_string()
+    } else {
+        "null".into()
+    }
+}
+
+fn json_opt(v: Option<f64>) -> String {
+    v.map(json_num).unwrap_or_else(|| "null".into())
+}
+
+/// Write the machine-readable report: axes, per-scenario metrics, and
+/// the gain aggregate.
+pub fn write_json(path: &str, grid: &ScenarioGrid, outcomes: &[ScenarioOutcome]) -> Result<()> {
+    let mut s = String::from("{\n  \"axes\": [");
+    for (i, axis) in grid.axes().iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("\n    {{\"key\": \"{}\", \"values\": [", json_escape(&axis.key)));
+        for (j, v) in axis.values.iter().enumerate() {
+            if j > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\"", json_escape(v)));
+        }
+        s.push_str("]}");
+    }
+    s.push_str("\n  ],\n  \"scenarios\": [");
+    for (i, o) in outcomes.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let target = o.scenario.cfg.target_nmse;
+        s.push_str(&format!("\n    {{\"id\": \"{}\", ", json_escape(&o.scenario.id)));
+        s.push_str("\"assignment\": {");
+        for (j, (k, v)) in o.scenario.assignment.iter().enumerate() {
+            if j > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
+        }
+        s.push_str("}, ");
+        s.push_str(&format!("\"seed\": {}, ", o.scenario.cfg.seed));
+        s.push_str(&format!("\"delta\": {}, ", json_num(o.coded.delta)));
+        s.push_str(&format!("\"epoch_deadline_s\": {}, ", json_num(o.coded.epoch_deadline)));
+        s.push_str(&format!("\"setup_s\": {}, ", json_num(o.coded.setup_secs)));
+        s.push_str(&format!("\"epochs\": {}, ", o.coded.epoch_times.len()));
+        s.push_str(&format!("\"final_nmse\": {}, ", json_opt(o.coded.trace.final_nmse())));
+        s.push_str(&format!("\"t_cfl_s\": {}, ", json_opt(o.coded.time_to(target))));
+        s.push_str(&format!(
+            "\"t_uncoded_s\": {}, ",
+            json_opt(o.uncoded.as_ref().and_then(|u| u.time_to(target)))
+        ));
+        s.push_str(&format!("\"gain\": {}, ", json_opt(o.gain())));
+        s.push_str(&format!("\"comm_load\": {}}}", json_opt(o.comm_load())));
+    }
+    s.push_str("\n  ],\n  \"aggregate\": ");
+    match gain_stats(outcomes) {
+        Some((summary, best_id)) => s.push_str(&format!(
+            "{{\"scenarios\": {}, \"gains\": {}, \"gain_mean\": {}, \"gain_min\": {}, \
+             \"gain_max\": {}, \"best_scenario\": \"{}\"}}",
+            outcomes.len(),
+            summary.count(),
+            json_num(summary.mean()),
+            json_num(summary.min()),
+            json_num(summary.max()),
+            json_escape(&best_id)
+        )),
+        None => s.push_str(&format!(
+            "{{\"scenarios\": {}, \"gains\": 0}}",
+            outcomes.len()
+        )),
+    }
+    s.push_str("\n}\n");
+
+    let path_ref = std::path::Path::new(path);
+    if let Some(dir) = path_ref.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("mkdir -p {dir:?}"))?;
+        }
+    }
+    std::fs::write(path_ref, s).with_context(|| format!("writing {path}"))
+}

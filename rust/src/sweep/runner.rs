@@ -1,0 +1,175 @@
+//! Multi-threaded scenario execution.
+//!
+//! A channel-fed worker pool (`std::thread::scope`, no external deps):
+//! scenarios queue through a shared receiver, each worker builds its own
+//! [`SimCoordinator`] — backends are `Send` by construction, see
+//! [`crate::fl::GradBackend`] — trains CFL (plus the uncoded baseline by
+//! default), and reports back over a result channel. Every scenario's
+//! outcome is a pure function of its config, and results are re-ordered
+//! by scenario index before returning, so a parallel sweep is
+//! **byte-identical** to `workers = 1` — worker count only changes
+//! wall-clock time. Progress notes go to stderr; stdout stays
+//! deterministic for report piping.
+
+use super::grid::{Scenario, ScenarioGrid};
+use crate::coordinator::{RunResult, SimCoordinator};
+use crate::lb::LoadPolicy;
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Runner knobs.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Worker threads (clamped to the scenario count; 1 = run inline).
+    pub workers: usize,
+    /// Also train the uncoded baseline per scenario (needed for the
+    /// coding-gain and comm-load report columns).
+    pub uncoded_baseline: bool,
+    /// Emit a stderr line as each scenario completes.
+    pub progress: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            uncoded_baseline: true,
+            progress: false,
+        }
+    }
+}
+
+/// Everything one scenario produced.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub scenario: Scenario,
+    /// The Eq. 13–16 policy the scenario ran under.
+    pub policy: LoadPolicy,
+    pub coded: RunResult,
+    pub uncoded: Option<RunResult>,
+}
+
+impl ScenarioOutcome {
+    /// Coding gain `t_uncoded / t_cfl` at the scenario's target NMSE
+    /// (the Fig. 4/5 metric); `None` unless both runs reached it.
+    pub fn gain(&self) -> Option<f64> {
+        let target = self.scenario.cfg.target_nmse;
+        let tc = self.coded.time_to(target)?;
+        let tu = self.uncoded.as_ref()?.time_to(target)?;
+        Some(tu / tc)
+    }
+
+    /// Communication load relative to uncoded FL (the Fig. 5 bottom
+    /// metric): (parity bits + per-epoch bits × epochs-to-target) /
+    /// (uncoded per-epoch bits × uncoded epochs-to-target).
+    pub fn comm_load(&self) -> Option<f64> {
+        let uncoded = self.uncoded.as_ref()?;
+        let (ec, _) = self.coded.converged?;
+        let (eu, _) = uncoded.converged?;
+        let coded_bits = self.coded.parity_upload_bits + self.coded.per_epoch_bits * ec as f64;
+        let uncoded_bits = uncoded.per_epoch_bits * eu as f64;
+        (uncoded_bits > 0.0).then_some(coded_bits / uncoded_bits)
+    }
+}
+
+/// Expand a grid and run every scenario (see [`run_scenarios`]).
+pub fn run_grid(grid: &ScenarioGrid, opts: &SweepOptions) -> Result<Vec<ScenarioOutcome>> {
+    run_scenarios(grid.expand()?, opts)
+}
+
+/// Run scenarios across `opts.workers` threads, returning outcomes in
+/// input order regardless of completion order (the list need not be a
+/// full `0..n`-indexed expansion — any subset works).
+pub fn run_scenarios(
+    scenarios: Vec<Scenario>,
+    opts: &SweepOptions,
+) -> Result<Vec<ScenarioOutcome>> {
+    let n = scenarios.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = opts.workers.clamp(1, n);
+
+    if workers == 1 {
+        let mut out = Vec::with_capacity(n);
+        for scenario in scenarios {
+            out.push(run_one(scenario, opts)?);
+        }
+        return Ok(out);
+    }
+
+    // work queue: a Mutex-shared receiver hands each worker the next
+    // scenario; a result channel carries the outcome back keyed by queue
+    // position (not Scenario::index — callers may pass any subset, e.g. a
+    // resumed sweep), so output order always mirrors input order
+    let (work_tx, work_rx) = mpsc::channel::<(usize, Scenario)>();
+    let work_rx = Mutex::new(work_rx);
+    let (result_tx, result_rx) = mpsc::channel::<(usize, Result<ScenarioOutcome>)>();
+    for job in scenarios.into_iter().enumerate() {
+        work_tx.send(job).expect("queue send on fresh channel");
+    }
+    drop(work_tx);
+
+    let mut slots: Vec<Option<Result<ScenarioOutcome>>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let result_tx = result_tx.clone();
+            let work_rx = &work_rx;
+            scope.spawn(move || loop {
+                // take the next scenario, releasing the lock before running
+                let job = { work_rx.lock().expect("work queue lock").recv() };
+                let Ok((position, scenario)) = job else { break };
+                let outcome = run_one(scenario, opts);
+                if result_tx.send((position, outcome)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(result_tx);
+        for (position, outcome) in result_rx.iter() {
+            slots[position] = Some(outcome);
+        }
+    });
+
+    // surface the first failure in input order (deterministic), else
+    // unwrap everything in order
+    let mut out = Vec::with_capacity(n);
+    for (position, slot) in slots.into_iter().enumerate() {
+        match slot {
+            Some(Ok(outcome)) => out.push(outcome),
+            Some(Err(e)) => return Err(e),
+            None => bail!("scenario #{position} produced no result (worker died)"),
+        }
+    }
+    Ok(out)
+}
+
+/// Run a single scenario to completion on the current thread.
+fn run_one(scenario: Scenario, opts: &SweepOptions) -> Result<ScenarioOutcome> {
+    let ctx = |what: &str| format!("scenario {}: {what}", scenario.id);
+    let mut sim = SimCoordinator::new(&scenario.cfg).with_context(|| ctx("building"))?;
+    let policy = sim.policy().with_context(|| ctx("solving the load policy"))?;
+    let coded = sim.train_cfl().with_context(|| ctx("training CFL"))?;
+    let uncoded = if opts.uncoded_baseline {
+        Some(sim.train_uncoded().with_context(|| ctx("training uncoded"))?)
+    } else {
+        None
+    };
+    let outcome = ScenarioOutcome { scenario, policy, coded, uncoded };
+    if opts.progress {
+        let target = outcome.scenario.cfg.target_nmse;
+        eprintln!(
+            "  [{}] δ={:.3} t_cfl={} gain={}",
+            outcome.scenario.id,
+            outcome.coded.delta,
+            outcome
+                .coded
+                .time_to(target)
+                .map(|t| format!("{t:.1}s"))
+                .unwrap_or_else(|| "—".into()),
+            outcome.gain().map(|g| format!("{g:.2}×")).unwrap_or_else(|| "—".into()),
+        );
+    }
+    Ok(outcome)
+}

@@ -1,0 +1,312 @@
+use super::*;
+use crate::config::{ExperimentConfig, Ini};
+use crate::coordinator::SimCoordinator;
+use crate::rng::mix_seed;
+
+/// Small enough that a full grid (CFL + uncoded per cell) runs in
+/// milliseconds; target 0 ⇒ every run goes to the epoch cap, so traces
+/// have a fixed, comparable length.
+fn tiny() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::small();
+    cfg.n_devices = 4;
+    cfg.points_per_device = 16;
+    cfg.model_dim = 8;
+    cfg.max_epochs = 40;
+    cfg.target_nmse = 0.0;
+    cfg.seed = 99;
+    cfg
+}
+
+// ---------------------------------------------------------------------
+// grid expansion
+// ---------------------------------------------------------------------
+
+#[test]
+fn expansion_is_row_major_with_stable_ids() {
+    let grid = ScenarioGrid::new(&tiny())
+        .axis("nu_comp", ["0", "0.1"])
+        .unwrap()
+        .axis("nu_link", ["0", "0.1", "0.2"])
+        .unwrap();
+    assert_eq!(grid.len(), 6);
+    let scenarios = grid.expand().unwrap();
+    assert_eq!(scenarios.len(), 6);
+    // first axis slowest, second fastest — nested-for order
+    let coords: Vec<(f64, f64)> =
+        scenarios.iter().map(|s| (s.cfg.nu_comp, s.cfg.nu_link)).collect();
+    assert_eq!(
+        coords,
+        vec![(0.0, 0.0), (0.0, 0.1), (0.0, 0.2), (0.1, 0.0), (0.1, 0.1), (0.1, 0.2)]
+    );
+    assert_eq!(scenarios[0].id, "s0__nu_comp=0__nu_link=0");
+    assert_eq!(scenarios[5].id, "s5__nu_comp=0.1__nu_link=0.2");
+    assert_eq!(scenarios[3].index, 3);
+    assert_eq!(
+        scenarios[3].assignment,
+        vec![("nu_comp".to_string(), "0.1".to_string()), ("nu_link".to_string(), "0".to_string())]
+    );
+    // expansion is a pure function of the grid
+    let again = grid.expand().unwrap();
+    for (a, b) in scenarios.iter().zip(&again) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.cfg.seed, b.cfg.seed);
+    }
+}
+
+#[test]
+fn singleton_axis_and_axis_free_grid() {
+    let grid = ScenarioGrid::new(&tiny()).axis("delta", ["0.15"]).unwrap();
+    let scenarios = grid.expand().unwrap();
+    assert_eq!(scenarios.len(), 1);
+    assert_eq!(scenarios[0].cfg.delta, Some(0.15));
+
+    // no axes at all → the single base scenario
+    let scenarios = ScenarioGrid::new(&tiny()).expand().unwrap();
+    assert_eq!(scenarios.len(), 1);
+    assert!(scenarios[0].assignment.is_empty());
+    assert_eq!(scenarios[0].cfg.seed, tiny().seed);
+}
+
+#[test]
+fn bad_axes_are_rejected_at_declaration() {
+    let empty: [&str; 0] = [];
+    assert!(ScenarioGrid::new(&tiny()).axis("nu_comp", empty).is_err());
+    assert!(ScenarioGrid::new(&tiny()).axis("not_a_knob", ["1"]).is_err());
+    assert!(ScenarioGrid::new(&tiny()).axis("nu_comp", ["zero"]).is_err());
+    assert!(ScenarioGrid::new(&tiny())
+        .axis("nu_comp", ["0.1"])
+        .unwrap()
+        .axis("nu_comp", ["0.2"])
+        .is_err());
+    // out-of-range values pass parsing but fail expansion's validate()
+    let grid = ScenarioGrid::new(&tiny()).axis("nu_comp", ["1.5"]).unwrap();
+    assert!(grid.expand().is_err());
+}
+
+#[test]
+fn axis_spec_and_ini_parsing() {
+    let grid = ScenarioGrid::new(&tiny()).axis_spec("delta=0.1, 0.2,auto").unwrap();
+    assert_eq!(grid.axes()[0].values, vec!["0.1", "0.2", "auto"]);
+    let scenarios = grid.expand().unwrap();
+    assert_eq!(scenarios[0].cfg.delta, Some(0.1));
+    assert_eq!(scenarios[2].cfg.delta, None);
+    assert!(ScenarioGrid::new(&tiny()).axis_spec("no-equals-sign").is_err());
+
+    let ini = Ini::parse(
+        "[sweep]\nnu_link = 0, 0.2\ndelta = 0.1, 0.2\nworkers = 3\nderive_seeds = true\n",
+    )
+    .unwrap();
+    let grid = ScenarioGrid::new(&tiny()).with_ini(&ini).unwrap();
+    // axes arrive in the section's alphabetical key order; reserved keys
+    // (workers, derive_seeds) never become axes
+    let keys: Vec<&str> = grid.axes().iter().map(|a| a.key.as_str()).collect();
+    assert_eq!(keys, vec!["delta", "nu_link"]);
+    assert_eq!(grid.len(), 4);
+    // derive_seeds was honored
+    let scenarios = grid.expand().unwrap();
+    assert_eq!(scenarios[1].cfg.seed, mix_seed(tiny().seed, 1));
+}
+
+#[test]
+fn compound_nu_axis_sets_both_knobs() {
+    let scenarios =
+        ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0, 0.3]).unwrap().expand().unwrap();
+    assert_eq!(scenarios[1].cfg.nu_comp, 0.3);
+    assert_eq!(scenarios[1].cfg.nu_link, 0.3);
+}
+
+#[test]
+fn seed_policy_shared_derived_and_explicit() {
+    // default: common random numbers — every cell shares the base seed
+    let shared =
+        ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0, 0.1]).unwrap().expand().unwrap();
+    assert!(shared.iter().all(|s| s.cfg.seed == tiny().seed));
+
+    // derive_seeds: per-index streams, reproducible from (base, index)
+    let derived = ScenarioGrid::new(&tiny())
+        .axis_f64("nu", &[0.0, 0.1])
+        .unwrap()
+        .derive_seeds(true)
+        .expand()
+        .unwrap();
+    assert_ne!(derived[0].cfg.seed, derived[1].cfg.seed);
+    assert_eq!(derived[1].cfg.seed, mix_seed(tiny().seed, 1));
+
+    // an explicit seed axis overrides both policies
+    let explicit = ScenarioGrid::new(&tiny())
+        .axis("seed", ["7", "8"])
+        .unwrap()
+        .derive_seeds(true)
+        .expand()
+        .unwrap();
+    assert_eq!(explicit[0].cfg.seed, 7);
+    assert_eq!(explicit[1].cfg.seed, 8);
+}
+
+// ---------------------------------------------------------------------
+// runner determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn parallel_sweep_is_byte_identical_to_serial() {
+    let grid = ScenarioGrid::new(&tiny())
+        .axis_f64("nu", &[0.0, 0.3])
+        .unwrap()
+        .axis("delta", ["0.15", "auto"])
+        .unwrap()
+        .derive_seeds(true);
+    let serial_opts = SweepOptions { workers: 1, uncoded_baseline: true, progress: false };
+    let parallel_opts = SweepOptions { workers: 2, ..serial_opts.clone() };
+    let serial = run_grid(&grid, &serial_opts).unwrap();
+    let parallel = run_grid(&grid, &parallel_opts).unwrap();
+
+    assert_eq!(serial.len(), 4);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.scenario.id, b.scenario.id);
+        assert_eq!(a.coded.trace.points, b.coded.trace.points, "{}", a.scenario.id);
+        assert_eq!(a.coded.setup_secs, b.coded.setup_secs);
+        assert_eq!(a.coded.epoch_times, b.coded.epoch_times);
+        assert_eq!(
+            a.uncoded.as_ref().unwrap().trace.points,
+            b.uncoded.as_ref().unwrap().trace.points
+        );
+    }
+
+    // and the written reports agree to the byte
+    let dir = std::env::temp_dir().join("cfl_sweep_determinism");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (p1, p2) = (dir.join("serial.csv"), dir.join("parallel.csv"));
+    write_scenario_csv(p1.to_str().unwrap(), &grid, &serial).unwrap();
+    write_scenario_csv(p2.to_str().unwrap(), &grid, &parallel).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    let (j1, j2) = (dir.join("serial.json"), dir.join("parallel.json"));
+    write_json(j1.to_str().unwrap(), &grid, &serial).unwrap();
+    write_json(j2.to_str().unwrap(), &grid, &parallel).unwrap();
+    assert_eq!(std::fs::read(&j1).unwrap(), std::fs::read(&j2).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn runner_surfaces_scenario_failures() {
+    // delta so large the optimizer cannot satisfy it → policy error,
+    // reported with the scenario id attached
+    let mut cfg = tiny();
+    cfg.delta = Some(0.9);
+    cfg.c_up_fraction = 0.9;
+    let grid = ScenarioGrid::new(&cfg).axis_f64("nu", &[0.0]).unwrap();
+    let opts = SweepOptions { workers: 1, uncoded_baseline: false, progress: false };
+    match run_grid(&grid, &opts) {
+        Err(e) => {
+            let msg = format!("{e:?}");
+            assert!(msg.contains("s0"), "error lost scenario context: {msg}");
+        }
+        Ok(outcomes) => {
+            // if the tiny fleet can actually carry δ=0.9, the run must
+            // at least have honored it
+            assert!((outcomes[0].coded.delta - 0.9).abs() < 0.05);
+        }
+    }
+}
+
+#[test]
+fn skip_uncoded_drops_baseline_and_gain() {
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.1]).unwrap();
+    let opts = SweepOptions { workers: 1, uncoded_baseline: false, progress: false };
+    let outcomes = run_grid(&grid, &opts).unwrap();
+    assert!(outcomes[0].uncoded.is_none());
+    assert!(outcomes[0].gain().is_none());
+    assert!(outcomes[0].comm_load().is_none());
+}
+
+#[test]
+fn coordinator_and_outcomes_are_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<SimCoordinator>();
+    assert_send::<ScenarioOutcome>();
+    assert_send::<Scenario>();
+}
+
+// ---------------------------------------------------------------------
+// reports
+// ---------------------------------------------------------------------
+
+#[test]
+fn gain_matrix_is_row_major_and_two_axis_only() {
+    let mut cfg = tiny();
+    cfg.max_epochs = 400;
+    cfg.target_nmse = 2e-2; // reachable → real gains in most cells
+    let grid = ScenarioGrid::new(&cfg)
+        .axis_f64("nu_comp", &[0.0, 0.2])
+        .unwrap()
+        .axis_f64("nu_link", &[0.0, 0.1, 0.2])
+        .unwrap();
+    let outcomes = run_grid(
+        &grid,
+        &SweepOptions { workers: 2, uncoded_baseline: true, progress: false },
+    )
+    .unwrap();
+    let table = gain_matrix(&grid, &outcomes).expect("2-axis grid has a matrix");
+    let rendered = table.render();
+    assert!(rendered.contains("nu_comp \\ nu_link"), "{rendered}");
+    // 2 data rows (one per nu_comp value)
+    assert_eq!(rendered.lines().count(), 2 + 2, "{rendered}");
+
+    let one_axis = ScenarioGrid::new(&cfg).axis_f64("nu_comp", &[0.0]).unwrap();
+    let one_out = run_grid(
+        &one_axis,
+        &SweepOptions { workers: 1, uncoded_baseline: false, progress: false },
+    )
+    .unwrap();
+    assert!(gain_matrix(&one_axis, &one_out).is_none());
+}
+
+#[test]
+fn scenario_csv_has_axis_columns_and_json_is_well_formed() {
+    let grid = ScenarioGrid::new(&tiny()).axis("delta", ["0.15", "auto"]).unwrap();
+    let outcomes = run_grid(
+        &grid,
+        &SweepOptions { workers: 1, uncoded_baseline: true, progress: false },
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join("cfl_sweep_report");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("scenarios.csv");
+    write_scenario_csv(csv_path.to_str().unwrap(), &grid, &outcomes).unwrap();
+    let text = std::fs::read_to_string(&csv_path).unwrap();
+    let mut lines = text.lines();
+    let header = lines.next().unwrap();
+    assert!(header.starts_with("scenario,delta,delta_used,"), "{header}");
+    assert!(header.ends_with("gain,comm_load"), "{header}");
+    assert_eq!(lines.count(), 2);
+    // target 0 is unreachable → empty gain cells, never "NaN"
+    assert!(!text.contains("NaN"), "{text}");
+
+    let json_path = dir.join("report.json");
+    write_json(json_path.to_str().unwrap(), &grid, &outcomes).unwrap();
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    for needle in ["\"axes\"", "\"scenarios\"", "\"aggregate\"", "\"s0__delta=0.15\""] {
+        assert!(json.contains(needle), "missing {needle}: {json}");
+    }
+    // balanced braces/brackets (cheap well-formedness check, no serde)
+    let balance = |open: char, close: char| {
+        json.chars().filter(|&c| c == open).count() == json.chars().filter(|&c| c == close).count()
+    };
+    assert!(balance('{', '}') && balance('[', ']'));
+    assert!(!json.contains("NaN") && !json.contains("inf"), "{json}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn summary_table_renders_one_row_per_scenario() {
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0, 0.2]).unwrap();
+    let outcomes = run_grid(
+        &grid,
+        &SweepOptions { workers: 1, uncoded_baseline: true, progress: false },
+    )
+    .unwrap();
+    let rendered = summary_table(&outcomes).render();
+    // header + separator + 2 scenarios
+    assert_eq!(rendered.lines().count(), 4, "{rendered}");
+    assert!(rendered.contains("s0__nu=0"), "{rendered}");
+}

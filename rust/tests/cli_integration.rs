@@ -76,6 +76,69 @@ fn bad_flag_fails_cleanly() {
 }
 
 #[test]
+fn sweep_subcommand_expands_grid_and_parallel_matches_serial() {
+    let bin = require_bin!();
+    let dir = std::env::temp_dir().join("cfl_cli_sweep");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("sweep.ini");
+    std::fs::write(
+        &cfg_path,
+        "[experiment]\nn_devices = 4\npoints_per_device = 16\nmodel_dim = 8\nsnr_db = 10\n\
+         max_epochs = 300\ntarget_nmse = 2e-2\n\
+         [sweep]\nnu_comp = 0, 0.2\nnu_link = 0, 0.2\n",
+    )
+    .unwrap();
+    let run = |workers: &str, out: &std::path::Path| {
+        Command::new(&bin)
+            .args([
+                "sweep",
+                "--config",
+                cfg_path.to_str().unwrap(),
+                "--workers",
+                workers,
+                "--out",
+                out.to_str().unwrap(),
+                "--quiet",
+            ])
+            .output()
+            .unwrap()
+    };
+    let (serial_dir, parallel_dir) = (dir.join("serial"), dir.join("parallel"));
+    let serial = run("1", &serial_dir);
+    assert!(serial.status.success(), "stderr: {}", String::from_utf8_lossy(&serial.stderr));
+    let text = String::from_utf8_lossy(&serial.stdout);
+    assert!(text.contains("2 axes → 4 scenarios"), "{text}");
+    assert!(text.contains("coding gain matrix"), "{text}");
+
+    let parallel = run("2", &parallel_dir);
+    assert!(parallel.status.success(), "stderr: {}", String::from_utf8_lossy(&parallel.stderr));
+    // parallel results are byte-identical to serial: stdout and reports
+    assert_eq!(serial.stdout, parallel.stdout);
+    for report in ["sweep_scenarios.csv", "sweep_report.json"] {
+        let a = std::fs::read(serial_dir.join(report)).unwrap();
+        let b = std::fs::read(parallel_dir.join(report)).unwrap();
+        assert_eq!(a, b, "{report} differs between worker counts");
+        assert!(!a.is_empty());
+    }
+    let csv = std::fs::read_to_string(serial_dir.join("sweep_scenarios.csv")).unwrap();
+    assert!(csv.starts_with("scenario,nu_comp,nu_link,"), "{csv}");
+    assert_eq!(csv.lines().count(), 1 + 4, "{csv}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn help_prints_without_failing() {
+    let bin = require_bin!();
+    let out = Command::new(&bin).args(["--help"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["sweep", "--axis", "--workers", "train", "optimize"] {
+        assert!(text.contains(needle), "help missing {needle}: {text}");
+    }
+}
+
+#[test]
 fn config_file_round_trip() {
     let bin = require_bin!();
     let dir = std::env::temp_dir().join("cfl_cli_cfg");

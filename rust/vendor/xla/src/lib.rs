@@ -1,0 +1,159 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The build sandbox has neither crates.io access nor an XLA
+//! installation, so this crate provides the *compile-time* API surface
+//! that `cfl::runtime` needs — `PjRtClient`, `PjRtLoadedExecutable`,
+//! `PjRtBuffer`, `Literal`, `HloModuleProto`, `XlaComputation` — with
+//! every runtime entry point returning an "unavailable" error. The
+//! coordinator falls back to the native backend unless an artifacts
+//! directory is configured, so nothing in the default test suite ever
+//! reaches these paths (the PJRT integration tests skip when
+//! `artifacts/manifest.txt` is absent).
+//!
+//! To enable the real PJRT runtime, replace the `xla` path dependency in
+//! the workspace `Cargo.toml` with the actual bindings; `cfl` compiles
+//! against the same names and signatures.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the bindings' error enum.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT is stubbed out in this offline build — swap the \
+         `rust/vendor/xla` path dependency for the real `xla` bindings to \
+         enable the PJRT backend (the native backend is unaffected)"
+    ))
+}
+
+/// A PJRT device handle (never instantiated by the stub).
+pub struct PjRtDevice;
+
+/// The PJRT client. `cpu()` always fails in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client — unavailable in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation — unavailable in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    /// Upload a host buffer — unavailable in the stub.
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// A parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file — unavailable in the stub.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed proto (pure bookkeeping; succeeds even in the stub).
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal operands — unavailable in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device-resident buffer operands — unavailable in the stub.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer back to the host — unavailable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice (shape is attached by
+    /// [`Literal::reshape`]; the stub holds no data).
+    pub fn vec1<T>(_data: &[T]) -> Self {
+        Literal
+    }
+
+    /// Reshape — unavailable in the stub.
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    /// Unpack a 1-tuple — unavailable in the stub.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    /// Unpack a 2-tuple — unavailable in the stub.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+
+    /// Copy out as a host vector — unavailable in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string().contains("stubbed out"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[1, 1]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Repo gate: formatting, lints, tests. Run before pushing; CI runs the
+# same script (.github/workflows/ci.yml).
+#
+# fmt/clippy are skipped with a notice when the component is not
+# installed (offline sandboxes ship a bare toolchain); when present they
+# are enforced strictly.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check"
+    cargo fmt --all -- --check
+else
+    echo "== rustfmt not installed; skipping format check"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== clippy not installed; skipping lints"
+fi
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "OK"
