@@ -5,7 +5,9 @@
 //! delays are slept out (scaled), so stragglers really do arrive after
 //! the deadline and really are dropped by the gather loop — the same
 //! Eq. 18/19 assembly as the DES coordinator, driven by actual message
-//! arrival instead of a virtual clock.
+//! arrival instead of a virtual clock. Both coordinators now build their
+//! setup phase from the same `Session`, and the live run reports the
+//! same `RunResult` the sweep engine renders (`cfl sweep --live`).
 //!
 //! Run: `cargo run --release --example live_cluster`
 
@@ -16,15 +18,17 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::small();
     cfg.nu_comp = 0.3;
     cfg.nu_link = 0.3;
+    cfg.target_nmse = 0.0; // fixed epoch budget: we want straggler stats
 
     // first run: generous grace, everything arrives; second run: larger
     // time scale + tight grace so straggler sleeps genuinely overrun the
     // wall-clock deadline and get dropped
     for &(scale, grace_ms, epochs) in &[(2e-3, 8u64, 150usize), (5e-2, 2, 120)] {
         println!("--- time scale {scale}, grace {grace_ms} ms ({epochs} epochs) ---");
-        let mut live = LiveCoordinator::new(&cfg, scale);
+        cfg.max_epochs = epochs;
+        let mut live = LiveCoordinator::new(&cfg, scale)?;
         live.grace = std::time::Duration::from_millis(grace_ms);
-        let report = live.run(epochs)?;
+        let report = live.train_cfl()?;
         let total = report.on_time_gradients + report.late_gradients;
         println!(
             "wall {:.2}s | gradients: {} on time, {} late ({:.0}% on time) | final NMSE {:.3e}\n",
@@ -32,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             report.on_time_gradients,
             report.late_gradients,
             100.0 * report.on_time_gradients as f64 / total.max(1) as f64,
-            report.final_nmse
+            report.trace.final_nmse().unwrap_or(f64::NAN)
         );
     }
     println!("note: tighter scaling (second run) stresses the deadline — more");

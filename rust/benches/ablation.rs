@@ -11,13 +11,18 @@
 //! 3. **Weighting (Eq. 17) on/off**: dropping the weight matrix biases
 //!    the combined gradient; measured as the NMSE floor it converges to.
 //!
+//! Parts 1 and 2 run as `cfl::sweep` grids (`setup_cost × delta` and
+//! `generator` axes) across all cores; part 3 needs an off-policy weight
+//! override and stays a pair of direct coordinator calls.
+//!
 //! Run: `cargo bench --bench ablation` (reduced sweep with `-- --quick`).
 
 mod common;
 
-use cfl::config::{ExperimentConfig, GeneratorKind, SetupCostKind};
+use cfl::config::{ExperimentConfig, SetupCostKind};
 use cfl::coordinator::SimCoordinator;
 use cfl::metrics::Table;
+use cfl::sweep::{run_grid, ScenarioGrid, SweepOptions};
 
 fn main() {
     common::banner("ablation", "setup-cost models, generator kinds, Eq. 17 weighting");
@@ -26,37 +31,46 @@ fn main() {
     // --- 1. setup-cost accounting ----------------------------------------
     println!("\n[1] setup-cost accounting vs coding gain (ν = (0.2, 0.2), target 3e-4)");
     let deltas: &[f64] = if quick { &[0.065, 0.28] } else { &[0.065, 0.13, 0.28] };
+    let mut cfg = ExperimentConfig::paper();
+    cfg.max_epochs = if quick { 900 } else { 2_000 };
+
+    // the uncoded baseline has no setup phase, so it is independent of
+    // both axes — train it once and share the denominator
+    let mut baseline = SimCoordinator::new(&cfg).expect("coordinator");
+    let uncoded = baseline.train_uncoded().expect("uncoded");
+    let tu = uncoded.time_to(cfg.target_nmse).expect("uncoded converged");
+
+    let grid = ScenarioGrid::new(&cfg)
+        .axis("setup_cost", ["base-rate", "adapted-rate", "per-packet"])
+        .expect("setup_cost axis")
+        .axis_f64("delta", deltas)
+        .expect("delta axis");
+    let opts = SweepOptions { uncoded_baseline: false, progress: true, ..Default::default() };
+    let outcomes = run_grid(&grid, &opts).expect("setup-cost sweep");
+
     let mut table = Table::new(&["setup model", "δ", "setup (s)", "t→target (s)", "gain"]);
     let mut base_small_delta_gain = 0.0;
     let mut perpkt_small_delta_gain = 0.0;
     let mut perpkt_large_delta_gain = f64::NAN;
-    for kind in [SetupCostKind::BaseRate, SetupCostKind::AdaptedRate, SetupCostKind::PerPacket] {
-        let mut cfg = ExperimentConfig::paper();
-        cfg.setup_cost = kind;
-        cfg.max_epochs = if quick { 900 } else { 2_000 };
-        let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
-        let uncoded = sim.train_uncoded().expect("uncoded");
-        let tu = uncoded.time_to(cfg.target_nmse).expect("uncoded converged");
-        for &delta in deltas {
-            sim.cfg.delta = Some(delta);
-            let run = sim.train_cfl().expect("cfl");
-            let (t, gain) = match run.time_to(cfg.target_nmse) {
-                Some(t) => (t, tu / t),
-                None => (f64::NAN, f64::NAN),
-            };
-            table.row(&[
-                format!("{kind:?}"),
-                format!("{delta:.3}"),
-                format!("{:.0}", run.setup_secs),
-                format!("{t:.0}"),
-                format!("{gain:.2}"),
-            ]);
-            match (kind, delta) {
-                (SetupCostKind::BaseRate, d) if d < 0.1 => base_small_delta_gain = gain,
-                (SetupCostKind::PerPacket, d) if d < 0.1 => perpkt_small_delta_gain = gain,
-                (SetupCostKind::PerPacket, d) if d > 0.2 => perpkt_large_delta_gain = gain,
-                _ => {}
-            }
+    for o in &outcomes {
+        let kind = o.scenario.cfg.setup_cost;
+        let delta = o.coded.delta;
+        let (t, gain) = match o.coded.time_to(cfg.target_nmse) {
+            Some(t) => (t, tu / t),
+            None => (f64::NAN, f64::NAN),
+        };
+        table.row(&[
+            format!("{kind:?}"),
+            format!("{delta:.3}"),
+            format!("{:.0}", o.coded.setup_secs),
+            format!("{t:.0}"),
+            format!("{gain:.2}"),
+        ]);
+        match (kind, delta) {
+            (SetupCostKind::BaseRate, d) if d < 0.1 => base_small_delta_gain = gain,
+            (SetupCostKind::PerPacket, d) if d < 0.1 => perpkt_small_delta_gain = gain,
+            (SetupCostKind::PerPacket, d) if d > 0.2 => perpkt_large_delta_gain = gain,
+            _ => {}
         }
     }
     println!("{}", table.render());
@@ -71,19 +85,26 @@ fn main() {
 
     // --- 2. generator distribution ---------------------------------------
     println!("\n[2] Gaussian vs Bernoulli(1/2) generator (δ = 0.13, small scale)");
+    let mut cfg = ExperimentConfig::small();
+    cfg.delta = Some(0.13);
+    cfg.max_epochs = 2_500;
+    cfg.target_nmse = 0.0;
+    let grid = ScenarioGrid::new(&cfg)
+        .axis("generator", ["gaussian", "bernoulli"])
+        .expect("generator axis");
+    let opts = SweepOptions { uncoded_baseline: false, progress: false, ..Default::default() };
+    let gen_outcomes = run_grid(&grid, &opts).expect("generator sweep");
+
     let mut table = Table::new(&["generator", "epochs", "final NMSE"]);
     let mut finals = Vec::new();
-    for kind in [GeneratorKind::Gaussian, GeneratorKind::Bernoulli] {
-        let mut cfg = ExperimentConfig::small();
-        cfg.generator = kind;
-        cfg.delta = Some(0.13);
-        cfg.max_epochs = 2_500;
-        cfg.target_nmse = 0.0;
-        let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
-        let run = sim.train_cfl().expect("cfl");
-        let f = run.trace.final_nmse().unwrap();
+    for o in &gen_outcomes {
+        let f = o.coded.trace.final_nmse().unwrap();
         finals.push(f);
-        table.row(&[format!("{kind:?}"), format!("{}", run.epoch_times.len()), format!("{f:.3e}")]);
+        table.row(&[
+            format!("{:?}", o.scenario.cfg.generator),
+            format!("{}", o.coded.epoch_times.len()),
+            format!("{f:.3e}"),
+        ]);
     }
     println!("{}", table.render());
     let same_decade = (finals[0].log10() - finals[1].log10()).abs() < 0.5;
@@ -92,6 +113,8 @@ fn main() {
     // --- 3. Eq. 17 weighting on/off --------------------------------------
     // "off" is emulated by δ large + weights forced to 1 via a miss-prob
     // of 0 — the parity gradient then double-counts the on-time devices.
+    // This needs an off-policy weight override, which no config axis
+    // expresses — two direct runs, not a scenario loop.
     println!("\n[3] Eq. 17 weighting (unbiasedness ablation, small scale)");
     let mut cfg = ExperimentConfig::small();
     cfg.delta = Some(0.2);

@@ -8,13 +8,19 @@
 //! We evaluate both the analytic CDF-based expectation (what the optimizer
 //! uses) and a Monte-Carlo estimate (validating the analytic path), print
 //! the three series, and write `results/fig1_expected_return.csv`.
+//!
+//! The load axis runs on the sweep engine's parallel executor
+//! (`cfl::sweep::run_tasks`): each load is one task with its own derived
+//! seed, so output is byte-identical for any worker count — no bespoke
+//! serial loop.
 
 mod common;
 
 use cfl::config::ExperimentConfig;
 use cfl::metrics::{CsvWriter, Table};
-use cfl::rng::Rng;
+use cfl::rng::{mix_seed, Rng};
 use cfl::simnet::Fleet;
+use cfl::sweep::run_tasks;
 
 fn main() {
     common::banner("Fig. 1", "expected individual return E[R(t; l)] vs load");
@@ -44,7 +50,28 @@ fn main() {
 
     let windows = [0.7, 1.1, 1.5];
     let mc_rounds = if common::quick_mode() { 500 } else { 5_000 };
-    let mut rng = Rng::new(7);
+    // scan past the ℓᵢ = 300 shard cap: Fig. 1 illustrates the shape of
+    // E[R(t; ℓ)] itself (the Eq. 14 argmax constrains to ℓ ≤ ℓᵢ separately)
+    let loads: Vec<usize> = (0..=600).step_by(10).collect();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let (rows, secs) = common::timed(|| {
+        run_tasks(loads, workers, |load| {
+            // per-load seed ⇒ the MC series is independent of worker count
+            let mut rng = Rng::new(mix_seed(7, load as u64));
+            let mut cells = Vec::with_capacity(windows.len());
+            for &t in &windows {
+                let analytic = dev.expected_return(load, t);
+                let hits = (0..mc_rounds)
+                    .filter(|_| load > 0 && dev.sample_total_delay(load, &mut rng) <= t)
+                    .count();
+                let mc = load as f64 * hits as f64 / mc_rounds as f64;
+                cells.push((analytic, mc));
+            }
+            Ok((load, cells))
+        })
+        .expect("fig1 load scan")
+    });
 
     let dir = common::results_dir();
     let mut csv = CsvWriter::create(
@@ -55,29 +82,20 @@ fn main() {
 
     let mut table = Table::new(&["load", "E[R] t=0.7s", "E[R] t=1.1s", "E[R] t=1.5s"]);
     let mut peaks = vec![(0usize, 0.0f64); windows.len()];
-    // scan past the ℓᵢ = 300 shard cap: Fig. 1 illustrates the shape of
-    // E[R(t; ℓ)] itself (the Eq. 14 argmax constrains to ℓ ≤ ℓᵢ separately)
-    let (_, secs) = common::timed(|| {
-        for load in (0..=600).step_by(10) {
-            let mut row = vec![load as f64];
-            let mut cells = vec![load as f64];
-            for (wi, &t) in windows.iter().enumerate() {
-                let analytic = dev.expected_return(load, t);
-                let hits = (0..mc_rounds)
-                    .filter(|_| load > 0 && dev.sample_total_delay(load, &mut rng) <= t)
-                    .count();
-                let mc = load as f64 * hits as f64 / mc_rounds as f64;
-                row.push(analytic);
-                row.push(mc);
-                cells.push(analytic);
-                if analytic > peaks[wi].1 {
-                    peaks[wi] = (load, analytic);
-                }
+    for (load, cells) in &rows {
+        let mut row = vec![*load as f64];
+        let mut tcells = vec![*load as f64];
+        for (wi, &(analytic, mc)) in cells.iter().enumerate() {
+            row.push(analytic);
+            row.push(mc);
+            tcells.push(analytic);
+            if analytic > peaks[wi].1 {
+                peaks[wi] = (*load, analytic);
             }
-            csv.write_row(&row).unwrap();
-            table.row_f(&cells, 1);
         }
-    });
+        csv.write_row(&row).unwrap();
+        table.row_f(&tcells, 1);
+    }
     csv.flush().unwrap();
     println!("{}", table.render());
 

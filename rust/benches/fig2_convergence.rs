@@ -6,6 +6,10 @@
 //! tail and overtake at low NMSE; at NMSE 0.1 uncoded wins, at 10⁻³ a
 //! coded curve wins.
 //!
+//! Runs on the `cfl::sweep` engine: the uncoded baseline is trained once
+//! (it does not depend on δ), then one CFL scenario per δ executes across
+//! all cores via a `delta` grid axis.
+//!
 //! Writes one CSV per curve under `results/fig2/`.
 
 mod common;
@@ -13,6 +17,7 @@ mod common;
 use cfl::config::ExperimentConfig;
 use cfl::coordinator::SimCoordinator;
 use cfl::metrics::Table;
+use cfl::sweep::{run_grid, ScenarioGrid, SweepOptions};
 
 fn main() {
     common::banner("Fig. 2", "NMSE vs training time for δ sweeps, ν=(0.2,0.2)");
@@ -23,30 +28,30 @@ fn main() {
 
     let dir = common::results_dir();
     std::fs::create_dir_all(format!("{dir}/fig2")).unwrap();
-    let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
-    let ls = sim.ls_bound().expect("ls bound");
+    let mut baseline = SimCoordinator::new(&cfg).expect("coordinator");
+    let ls = baseline.ls_bound().expect("ls bound");
 
-    let (mut runs, secs) = common::timed(|| {
-        let mut runs = Vec::new();
-        let uncoded = sim.train_uncoded().expect("uncoded run");
-        uncoded.trace.write_csv(&format!("{dir}/fig2/uncoded.csv")).unwrap();
-        runs.push(uncoded);
-        for &delta in &deltas {
-            sim.cfg.delta = Some(delta);
-            let policy = sim.policy().expect("policy");
-            let run = sim.train_cfl_with_policy(&policy).expect("cfl run");
-            run.trace.write_csv(&format!("{dir}/fig2/cfl_delta{delta}.csv")).unwrap();
-            runs.push(run);
-        }
-        runs
+    let ((uncoded, outcomes), secs) = common::timed(|| {
+        let uncoded = baseline.train_uncoded().expect("uncoded run");
+        let grid = ScenarioGrid::new(&cfg).axis_f64("delta", &deltas).expect("delta axis");
+        let opts =
+            SweepOptions { uncoded_baseline: false, progress: true, ..Default::default() };
+        let outcomes = run_grid(&grid, &opts).expect("delta sweep");
+        (uncoded, outcomes)
     });
+    uncoded.trace.write_csv(&format!("{dir}/fig2/uncoded.csv")).unwrap();
+    let mut runs = Vec::new();
+    for (o, &delta) in outcomes.iter().zip(&deltas) {
+        o.coded.trace.write_csv(&format!("{dir}/fig2/cfl_delta{delta}.csv")).unwrap();
+        runs.push(o.coded.clone());
+    }
 
     // paper-style summary: time to reach several NMSE levels per curve
     let levels = [1e-1, 1e-2, 1e-3, 3e-4];
     let mut table = Table::new(&[
         "curve", "setup (s)", "t*(s)", "t→1e-1", "t→1e-2", "t→1e-3", "t→3e-4", "final NMSE",
     ]);
-    for run in &runs {
+    for run in std::iter::once(&uncoded).chain(runs.iter()) {
         let mut cells = vec![
             run.label.clone(),
             format!("{:.0}", run.setup_secs),
@@ -75,7 +80,6 @@ fn main() {
     // the robust, checkable structure is (a) coded pays an upfront offset
     // ordered by δ, (b) the advantage of coding *grows* as the NMSE target
     // tightens (coding pays off late), (c) a coded curve wins at 1e-3.
-    let uncoded = runs.remove(0);
     let t_u_fine = uncoded.trace.time_to_nmse(1e-3);
     let fine_winner_is_coded = runs
         .iter()

@@ -6,14 +6,19 @@
 //! the last c data-points' worth of gradients come from the master's
 //! parity computation instead of the stragglers.
 //!
+//! Runs as a single-cell grid on the `cfl::sweep` engine (the axis-free
+//! grid is the base scenario; the runner trains CFL and the uncoded
+//! baseline) — the delay statistics come straight out of the unified
+//! `RunResult`.
+//!
 //! Writes `results/fig3_{uncoded,cfl}.csv`.
 
 mod common;
 
 use cfl::config::ExperimentConfig;
-use cfl::coordinator::SimCoordinator;
 use cfl::metrics::CsvWriter;
 use cfl::stats::{quantile, Histogram};
+use cfl::sweep::{run_grid, ScenarioGrid, SweepOptions};
 
 fn main() {
     common::banner("Fig. 3", "epoch gather-time histograms: uncoded (m) vs CFL (m−c)");
@@ -22,12 +27,12 @@ fn main() {
     cfg.target_nmse = 0.0; // fixed epoch count: we want delay statistics
     cfg.delta = Some(0.13);
 
-    let mut sim = SimCoordinator::new(&cfg).expect("coordinator");
-    let ((uncoded, coded), secs) = common::timed(|| {
-        let u = sim.train_uncoded().expect("uncoded");
-        let c = sim.train_cfl().expect("cfl");
-        (u, c)
-    });
+    // an axis-free grid expands to exactly the base scenario
+    let grid = ScenarioGrid::new(&cfg);
+    let opts = SweepOptions { progress: true, ..Default::default() };
+    let (outcomes, secs) = common::timed(|| run_grid(&grid, &opts).expect("fig3 scenario"));
+    let coded = &outcomes[0].coded;
+    let uncoded = outcomes[0].uncoded.as_ref().expect("uncoded baseline");
 
     let mut h_unc = Histogram::new(0.0, 160.0, 32);
     h_unc.extend(&uncoded.epoch_times);

@@ -1,0 +1,320 @@
+//! Shared coordinator core: the setup phase and result vocabulary that
+//! every training backend consumes.
+//!
+//! The paper's CFL scheme is *one* protocol — draw private codes, encode
+//! and upload parity once (§III-A), then run a deadline-gathered epoch
+//! loop with the master's redundant parity gradient standing in for
+//! stragglers (Eqs. 18–19). The repo offers two executions of that
+//! protocol ([`SimCoordinator`] on simulated time, [`LiveCoordinator`] on
+//! real threads), and everything execution-independent lives here:
+//!
+//! * [`Session`] — the frozen problem instance: config, fleet, dataset,
+//!   shards, and the root randomness stream. Both coordinators build
+//!   their setup phase from it, so parity/shard state is identical by
+//!   construction for a given seed.
+//! * [`CflSetup`] / [`DeviceSetup`] — the output of the §III-A setup
+//!   phase: the master's composite parity set, each device's frozen
+//!   systematic submatrix, and the setup-time accounting.
+//! * [`RunResult`] — the unified outcome of one training run, shared by
+//!   both backends so sweep reports render them in one CSV.
+//! * [`Coordinator`] / [`CoordinatorKind`] — the backend abstraction the
+//!   [`crate::sweep`] runner drives: `cfl sweep --live` is just the same
+//!   grid executed through [`CoordinatorKind::Live`].
+//!
+//! ```
+//! use cfl::config::ExperimentConfig;
+//! use cfl::coordinator::{Coordinator, CoordinatorKind};
+//!
+//! let mut cfg = ExperimentConfig::small();
+//! cfg.max_epochs = 5;
+//! cfg.target_nmse = 0.0; // run all 5 epochs
+//! let mut sim = CoordinatorKind::Sim.build(&cfg).unwrap();
+//! let run = sim.train_cfl().unwrap();
+//! assert_eq!(run.epoch_times.len(), 5);
+//! ```
+//!
+//! [`SimCoordinator`]: crate::coordinator::SimCoordinator
+//! [`LiveCoordinator`]: crate::coordinator::LiveCoordinator
+
+use super::{LiveCoordinator, SimCoordinator};
+use crate::coding::{CompositeParity, DeviceCode};
+use crate::config::ExperimentConfig;
+use crate::data::{shard_sizes, split, Dataset, Shard};
+use crate::fl::GradBackend;
+use crate::lb::{optimize, optimize_fixed_c, LoadPolicy};
+use crate::linalg::{solve_ls, Mat};
+use crate::metrics::ConvergenceTrace;
+use crate::rng::Rng;
+use crate::simnet::Fleet;
+use anyhow::Result;
+
+/// Outcome of one training run (one curve of Fig. 2, one cell of
+/// Fig. 4/5) — the result vocabulary shared by every backend.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub label: String,
+    /// NMSE vs simulated time (time includes `setup_secs` for CFL — the
+    /// Fig. 2 initial offsets). The live backend uses the same axis with
+    /// the same accounting — coded epochs advance by the policy deadline
+    /// t*, uncoded epochs by the slowest device's modeled delay — so both
+    /// backends plot on one chart; host overheads show up only in
+    /// `wall_secs`.
+    pub trace: ConvergenceTrace,
+    /// Per-epoch gather durations (Fig. 3 histograms), simulated seconds.
+    pub epoch_times: Vec<f64>,
+    /// One-time parity-transfer delay before epoch 0 (0 for uncoded).
+    pub setup_secs: f64,
+    /// Bits uploaded as parity during setup (0 for uncoded).
+    pub parity_upload_bits: f64,
+    /// Round-trip model/gradient bits per epoch, summed over devices.
+    pub per_epoch_bits: f64,
+    /// (epoch, simulated time) at which `target_nmse` was first reached.
+    pub converged: Option<(usize, f64)>,
+    /// δ actually used (0 for uncoded).
+    pub delta: f64,
+    /// t* actually used (∞ for uncoded).
+    pub epoch_deadline: f64,
+    /// For CFL: per-epoch times until the devices alone had returned
+    /// m − c points (Fig. 3 bottom); +∞ when an epoch never got there.
+    /// Only the DES backend computes this diagnostic (empty otherwise).
+    pub gather_mc_times: Vec<f64>,
+    /// Real seconds the run took on the host (the DES backend's virtual
+    /// clock is `trace`; this is wall time in both backends).
+    pub wall_secs: f64,
+    /// Device gradients that arrived within their epoch's deadline.
+    pub on_time_gradients: u64,
+    /// Device gradients scheduled/sent but missed by the gather.
+    pub late_gradients: u64,
+}
+
+impl RunResult {
+    /// Convergence time to a target NMSE (Figs. 4/5 metric).
+    pub fn time_to(&self, target: f64) -> Option<f64> {
+        self.trace.time_to_nmse(target)
+    }
+}
+
+/// Per-device state frozen at setup time (§III-A).
+pub struct DeviceSetup {
+    /// Systematic submatrix (the rows processed each epoch), ℓᵢ*×d —
+    /// rows in the device's private permutation order.
+    pub x_sys: Mat,
+    pub y_sys: Mat,
+    /// Assigned systematic load ℓᵢ*(t*).
+    pub load: usize,
+    /// Backend fast-path handle (PJRT: device-resident buffers) — §Perf.
+    pub handle: Option<u64>,
+}
+
+/// Everything the §III-A setup phase produces: what the master holds
+/// (composite parity), what each device holds (systematic shard), and
+/// what the one-time parity upload cost.
+pub struct CflSetup {
+    /// The master's composite parity set (Eq. 10 sum over devices).
+    pub composite: CompositeParity,
+    /// Per-device frozen systematic state, index-aligned with the fleet.
+    pub devices: Vec<DeviceSetup>,
+    /// Simulated seconds until the slowest parity upload completed
+    /// (uploads run in parallel — the Fig. 2 initial offsets).
+    pub setup_secs: f64,
+    /// Total bits uploaded as parity across all devices.
+    pub parity_upload_bits: f64,
+}
+
+/// The frozen problem instance both coordinators consume: one seed ⇒ one
+/// fleet, one dataset, one sharding, and one stream of per-run RNGs.
+///
+/// Construction performs the setup steps [`SimCoordinator`] and
+/// [`LiveCoordinator`] used to duplicate: validate the config, build the
+/// §IV heterogeneity fleet, generate the regression problem, and split it
+/// into per-device shards. [`Session::build_setup`] then runs the §III-A
+/// coding phase against any [`GradBackend`].
+///
+/// [`SimCoordinator`]: crate::coordinator::SimCoordinator
+/// [`LiveCoordinator`]: crate::coordinator::LiveCoordinator
+pub struct Session {
+    pub cfg: ExperimentConfig,
+    pub fleet: Fleet,
+    pub dataset: Dataset,
+    pub shards: Vec<Shard>,
+    root_rng: Rng,
+    run_counter: u64,
+}
+
+impl Session {
+    /// Build the problem instance from a config: fleet ladders, dataset,
+    /// shard split — all drawn from `cfg.seed` in a fixed order.
+    pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut root_rng = Rng::new(cfg.seed);
+        let mut fleet = Fleet::from_config(cfg, &mut root_rng);
+        let dataset =
+            Dataset::generate(cfg.total_points(), cfg.model_dim, cfg.snr_db, &mut root_rng);
+        let sizes = shard_sizes(cfg.sharding, cfg.total_points(), cfg.n_devices, &mut root_rng);
+        fleet.set_points(&sizes);
+        let shards = split(&dataset, &sizes);
+        Ok(Self { cfg: cfg.clone(), fleet, dataset, shards, root_rng, run_counter: 0 })
+    }
+
+    /// Fresh RNG stream per run so `train_cfl(); train_uncoded()` order
+    /// doesn't couple their noise.
+    pub fn run_rng(&mut self) -> Rng {
+        self.run_counter += 1;
+        self.root_rng.split(0x5EED_0000 + self.run_counter)
+    }
+
+    /// Solve the CFL load/redundancy policy: `cfg.delta = None` runs the
+    /// full Eq. 16 optimization; `Some(δ)` pins c = δ·m (Fig. 2/5 sweeps).
+    pub fn policy(&self) -> Result<LoadPolicy> {
+        let m = self.fleet.total_points();
+        match self.cfg.delta {
+            None => {
+                let c_up = (self.cfg.c_up_fraction * m as f64).round() as usize;
+                optimize(&self.fleet, c_up, self.cfg.epsilon)
+            }
+            Some(delta) => {
+                let c = (delta * m as f64).round() as usize;
+                anyhow::ensure!(c > 0, "delta={delta} gives zero parity rows; use train_uncoded");
+                optimize_fixed_c(&self.fleet, c, self.cfg.epsilon)
+            }
+        }
+    }
+
+    /// Closed-form least-squares NMSE — the Fig. 2 lower bound.
+    pub fn ls_bound(&self) -> Result<f64> {
+        let ls = solve_ls(&self.dataset.x, &self.dataset.y)?;
+        Ok(ls.nmse(&self.dataset.beta_star))
+    }
+
+    /// Bits of one parity row: d features + 1 label, with header overhead.
+    pub fn parity_row_bits(&self) -> f64 {
+        (self.cfg.model_dim as f64 + 1.0) * 32.0 * (1.0 + self.cfg.header_overhead)
+    }
+
+    /// Round-trip traffic per epoch: every participating device downloads
+    /// the model and uploads a gradient (2 packets).
+    pub fn round_trip_bits(&self, loads: &[usize]) -> f64 {
+        loads.iter().filter(|&&l| l > 0).count() as f64 * 2.0 * self.fleet.packet_bits
+    }
+
+    /// CFL setup phase (§III-A): draw each device's private code, encode
+    /// and accumulate parity into the master's composite set, account the
+    /// upload time, and freeze the systematic submatrices.
+    ///
+    /// Per-device RNG draw order (code, then upload sample) is fixed, so
+    /// a given `(seed, policy)` yields byte-identical setup state no
+    /// matter which coordinator consumes it.
+    pub fn build_setup(
+        &self,
+        policy: &LoadPolicy,
+        backend: &mut dyn GradBackend,
+        rng: &mut Rng,
+    ) -> Result<CflSetup> {
+        let d = self.cfg.model_dim;
+        let c = policy.parity_rows;
+        let mut composite = CompositeParity::zeros(c, d);
+        let mut devices = Vec::with_capacity(self.shards.len());
+        let mut setup_secs = 0.0f64;
+        let mut parity_bits = 0.0f64;
+        let row_bits = self.parity_row_bits();
+
+        for (i, shard) in self.shards.iter().enumerate() {
+            let load = policy.device_loads[i];
+            let code = DeviceCode::draw(
+                shard.rows(),
+                c,
+                load,
+                policy.miss_probs[i],
+                self.cfg.generator,
+                rng,
+            );
+            let (xt, yt) = backend.encode(&code.generator, &code.weights, &shard.x, &shard.y)?;
+            composite.accumulate(&xt, &yt);
+
+            // parity upload: c rows over this device's link, all devices in
+            // parallel → setup time is the slowest upload (Fig. 2 offsets)
+            let upload = self.fleet.sample_parity_upload_secs(i, c, row_bits, rng);
+            setup_secs = setup_secs.max(upload);
+            parity_bits += c as f64 * row_bits;
+
+            // freeze the systematic submatrix (private permutation order)
+            let mut x_sys = Mat::zeros(load, d);
+            let mut y_sys = Mat::zeros(load, 1);
+            for (r, &src) in code.systematic_rows().iter().enumerate() {
+                x_sys.row_mut(r).copy_from_slice(shard.x.row(src));
+                y_sys[(r, 0)] = shard.y[(src, 0)];
+            }
+            let handle = if load > 0 { backend.register_shard(&x_sys, &y_sys)? } else { None };
+            devices.push(DeviceSetup { x_sys, y_sys, load, handle });
+        }
+        Ok(CflSetup { composite, devices, setup_secs, parity_upload_bits: parity_bits })
+    }
+
+    /// Start a labelled trace at the post-setup instant with the model's
+    /// initial NMSE — epoch 0 of every backend's curve.
+    pub fn start_trace(&self, label: String, setup_secs: f64, nmse0: f64) -> ConvergenceTrace {
+        let mut trace = ConvergenceTrace::new(label);
+        trace.push(setup_secs, 0, nmse0);
+        trace
+    }
+}
+
+/// Backend-agnostic training driver: the contract the sweep runner (and
+/// any other multi-scenario caller) programs against. Implemented by
+/// [`SimCoordinator`] (DES virtual time — deterministic, the figures'
+/// path) and [`LiveCoordinator`] (threads + wall clock).
+///
+/// [`SimCoordinator`]: crate::coordinator::SimCoordinator
+/// [`LiveCoordinator`]: crate::coordinator::LiveCoordinator
+pub trait Coordinator {
+    /// Short backend tag ("sim" / "live"), rendered in sweep reports.
+    fn kind(&self) -> &'static str;
+
+    /// The Eq. 13–16 policy this coordinator's CFL runs will use.
+    fn policy(&self) -> Result<LoadPolicy>;
+
+    /// Train CFL (§III) under the session's config.
+    fn train_cfl(&mut self) -> Result<RunResult>;
+
+    /// Train the uncoded-FL baseline (wait-for-all gather, no parity).
+    fn train_uncoded(&mut self) -> Result<RunResult>;
+}
+
+/// Which [`Coordinator`] backend to instantiate per scenario — the
+/// sweep-facing factory behind `cfl sweep --live`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum CoordinatorKind {
+    /// Discrete-event-simulated time (deterministic per seed; parallel
+    /// sweeps are byte-identical to serial ones).
+    #[default]
+    Sim,
+    /// Threaded live cluster: simulated delays slept out at
+    /// `time_scale` wall-seconds per simulated second. Wall-clock
+    /// scheduling makes outcomes *not* bit-reproducible across runs.
+    Live {
+        /// Simulated-seconds → wall-seconds factor (e.g. 1e-3 runs a 5 s
+        /// simulated deadline as 5 ms of real sleep).
+        time_scale: f64,
+    },
+}
+
+impl CoordinatorKind {
+    /// The tag [`Coordinator::kind`] of the built backend will report.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            CoordinatorKind::Sim => "sim",
+            CoordinatorKind::Live { .. } => "live",
+        }
+    }
+
+    /// Build a coordinator of this kind over a fresh [`Session`] for
+    /// `cfg`.
+    pub fn build(&self, cfg: &ExperimentConfig) -> Result<Box<dyn Coordinator>> {
+        Ok(match self {
+            CoordinatorKind::Sim => Box::new(SimCoordinator::new(cfg)?),
+            CoordinatorKind::Live { time_scale } => {
+                Box::new(LiveCoordinator::new(cfg, *time_scale)?)
+            }
+        })
+    }
+}

@@ -10,32 +10,29 @@
 //! This is the deployment-shaped path: it demonstrates that the epoch
 //! logic (deadline gather + Eq. 18/19 assembly) is driven by real message
 //! arrival, not by simulator bookkeeping. The DES coordinator remains the
-//! source of the paper's figures (its virtual clock is exact).
+//! source of the paper's figures (its virtual clock is exact), but both
+//! backends now build the §III-A setup phase from the same
+//! [`Session`] and report the same [`RunResult`] vocabulary, so
+//! `cfl sweep --live` renders live grids with the sim reports unchanged.
 
-use crate::coding::{CompositeParity, DeviceCode};
+use super::core::{Coordinator, RunResult, Session};
+use crate::coding::CompositeParity;
 use crate::config::ExperimentConfig;
-use crate::data::{shard_sizes, split, Dataset};
 use crate::fl::{assemble_coded_gradient, GlobalModel, GradBackend, NativeBackend};
+use crate::lb::LoadPolicy;
 use crate::linalg::Mat;
-use crate::rng::Rng;
-use crate::simnet::Fleet;
 use anyhow::Result;
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-/// Outcome of a live run.
-#[derive(Clone, Debug)]
-pub struct LiveReport {
-    pub epochs: usize,
-    pub final_nmse: f64,
-    /// Wall-clock seconds spent in the epoch loop.
-    pub wall_secs: f64,
-    /// Gradients that arrived after their epoch's deadline (discarded).
-    pub late_gradients: u64,
-    /// Gradients gathered in time.
-    pub on_time_gradients: u64,
-}
+/// Ceiling on any single scaled sleep/deadline, keeping demos snappy even
+/// when a heavy-tailed delay draw meets a large `time_scale`.
+const MAX_SCALED_SECS: f64 = 0.25;
+
+/// Wall-clock cap on an uncoded wait-for-all gather (only reached if a
+/// device worker dies mid-run).
+const WAIT_ALL_TIMEOUT: Duration = Duration::from_secs(30);
 
 enum ToDevice {
     /// (epoch, β) — compute and reply.
@@ -45,13 +42,14 @@ enum ToDevice {
 
 struct FromDevice {
     epoch: usize,
-    device: usize,
     grad: Mat,
+    /// The §II-A delay this reply simulated (uncapped), simulated seconds.
+    delay: f64,
 }
 
-/// Threaded master/worker training loop.
+/// Threaded master/worker training loop over a shared [`Session`].
 pub struct LiveCoordinator {
-    cfg: ExperimentConfig,
+    session: Session,
     /// Simulated-seconds → wall-seconds factor (e.g. 1e-3 runs a 5 s
     /// simulated deadline as 5 ms of real sleep).
     pub time_scale: f64,
@@ -62,70 +60,104 @@ pub struct LiveCoordinator {
 }
 
 impl LiveCoordinator {
-    pub fn new(cfg: &ExperimentConfig, time_scale: f64) -> Self {
-        Self { cfg: cfg.clone(), time_scale, grace: Duration::from_millis(8) }
+    /// Build the coordinator over a fresh [`Session`] for `cfg`.
+    pub fn new(cfg: &ExperimentConfig, time_scale: f64) -> Result<Self> {
+        anyhow::ensure!(
+            time_scale.is_finite() && time_scale > 0.0,
+            "time_scale must be a positive finite factor"
+        );
+        // fail loudly rather than run a client-selection config as full
+        // participation — the §V extension is implemented by the DES
+        // backend only
+        anyhow::ensure!(
+            cfg.client_fraction >= 1.0,
+            "the live coordinator does not implement client selection \
+             (client_fraction = {}); use the sim backend",
+            cfg.client_fraction
+        );
+        Ok(Self { session: Session::new(cfg)?, time_scale, grace: Duration::from_millis(8) })
     }
 
-    /// Run `epochs` epochs of live CFL; returns the report.
-    pub fn run(&self, epochs: usize) -> Result<LiveReport> {
-        let cfg = &self.cfg;
-        let mut rng = Rng::new(cfg.seed);
-        let mut fleet = Fleet::from_config(cfg, &mut rng);
-        let dataset = Dataset::generate(cfg.total_points(), cfg.model_dim, cfg.snr_db, &mut rng);
-        let sizes = shard_sizes(cfg.sharding, cfg.total_points(), cfg.n_devices, &mut rng);
-        fleet.set_points(&sizes);
-        let shards = split(&dataset, &sizes);
+    /// The shared problem instance (config, fleet, dataset, shards).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
 
-        let policy = match cfg.delta {
-            None => crate::lb::optimize(
-                &fleet,
-                (cfg.c_up_fraction * fleet.total_points() as f64) as usize,
-                cfg.epsilon,
-            )?,
-            Some(delta) => crate::lb::optimize_fixed_c(
-                &fleet,
-                (delta * fleet.total_points() as f64).round() as usize,
-                cfg.epsilon,
-            )?,
-        };
-        let c = policy.parity_rows;
-        let d = cfg.model_dim;
+    /// Solve the CFL load/redundancy policy (see [`Session::policy`]).
+    pub fn policy(&self) -> Result<LoadPolicy> {
+        self.session.policy()
+    }
 
-        // --- setup phase: codes + composite parity (master side) ---------
+    /// Run live CFL for up to `cfg.max_epochs` epochs (early-stops at
+    /// `cfg.target_nmse`, like the DES backend).
+    pub fn train_cfl(&mut self) -> Result<RunResult> {
+        let policy = self.session.policy()?;
+        self.run_with(&policy, true)
+    }
+
+    /// Run the live uncoded baseline: full shards, no parity, the master
+    /// waits for every device's gradient each epoch.
+    pub fn train_uncoded(&mut self) -> Result<RunResult> {
+        let policy = LoadPolicy::uncoded(&self.session.fleet);
+        self.run_with(&policy, false)
+    }
+
+    /// The shared master/worker loop. `coded` selects the §III-A setup +
+    /// deadline gather; uncoded runs full shards with a wait-for-all
+    /// gather (and no setup offset).
+    fn run_with(&mut self, policy: &LoadPolicy, coded: bool) -> Result<RunResult> {
+        // wall_secs spans setup + training in both backends
+        let started = Instant::now();
+        let mut rng = self.session.run_rng();
         let mut backend = NativeBackend;
-        let mut composite = CompositeParity::zeros(c, d);
-        let mut worker_shards = Vec::new();
-        for (i, shard) in shards.iter().enumerate() {
-            let code = DeviceCode::draw(
-                shard.rows(),
-                c,
-                policy.device_loads[i],
-                policy.miss_probs[i],
-                cfg.generator,
-                &mut rng,
-            );
-            let (xt, yt) = backend.encode(&code.generator, &code.weights, &shard.x, &shard.y)?;
-            composite.accumulate(&xt, &yt);
-            let mut x_sys = Mat::zeros(code.systematic_count, d);
-            let mut y_sys = Mat::zeros(code.systematic_count, 1);
-            for (r, &src) in code.systematic_rows().iter().enumerate() {
-                x_sys.row_mut(r).copy_from_slice(shard.x.row(src));
-                y_sys[(r, 0)] = shard.y[(src, 0)];
-            }
-            worker_shards.push((x_sys, y_sys));
-        }
+
+        // --- setup phase: shared Session construction ---------------------
+        // (device index, x_sys, y_sys, load) — zero-load devices are fully
+        // punctured and get no worker, mirroring the DES backend's skip
+        type WorkerState = (usize, Mat, Mat, usize);
+        let (worker_states, composite, setup_secs, parity_bits): (
+            Vec<WorkerState>,
+            Option<CompositeParity>,
+            f64,
+            f64,
+        ) = if coded {
+            let setup = self.session.build_setup(policy, &mut backend, &mut rng)?;
+            let devices: Vec<WorkerState> = setup
+                .devices
+                .into_iter()
+                .enumerate()
+                .filter(|(_, s)| s.load > 0)
+                .map(|(i, s)| (i, s.x_sys, s.y_sys, s.load))
+                .collect();
+            (devices, Some(setup.composite), setup.setup_secs, setup.parity_upload_bits)
+        } else {
+            let devices: Vec<WorkerState> = self
+                .session
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| (i, s.x.clone(), s.y.clone(), s.rows()))
+                .collect();
+            (devices, None, 0.0, 0.0)
+        };
+
+        let cfg = &self.session.cfg;
+        let d = cfg.model_dim;
+        let m = self.session.fleet.total_points();
+        let c = policy.parity_rows;
+        let scale = self.time_scale;
 
         // --- spawn device workers ----------------------------------------
         let (to_master, from_devices) = mpsc::channel::<FromDevice>();
         let mut to_devices = Vec::new();
         let mut handles = Vec::new();
-        for (i, (x_sys, y_sys)) in worker_shards.into_iter().enumerate() {
+        for (i, x_sys, y_sys, load) in worker_states {
             let (tx, rx) = mpsc::channel::<ToDevice>();
             to_devices.push(tx);
             let master_tx = to_master.clone();
-            let profile = fleet.devices[i];
-            let load = policy.device_loads[i];
-            let scale = self.time_scale;
+            let profile = self.session.fleet.devices[i];
+            // split() keys on the device index alone, so skipping punctured
+            // devices doesn't shift anyone else's stream
             let mut dev_rng = rng.split(0xD0_0000 + i as u64);
             handles.push(thread::spawn(move || {
                 let mut be = NativeBackend;
@@ -139,10 +171,10 @@ impl LiveCoordinator {
                             // sleep out the simulated delay (compute+link)
                             let delay = profile.sample_total_delay(load, &mut dev_rng);
                             thread::sleep(Duration::from_secs_f64(
-                                (delay * scale).min(0.25), // hard cap: keep demos snappy
+                                (delay * scale).min(MAX_SCALED_SECS),
                             ));
                             // master may have dropped the channel at stop
-                            let _ = master_tx.send(FromDevice { epoch, device: i, grad });
+                            let _ = master_tx.send(FromDevice { epoch, grad, delay });
                         }
                     }
                 }
@@ -151,62 +183,143 @@ impl LiveCoordinator {
         drop(to_master);
 
         // --- epoch loop ----------------------------------------------------
-        let mut model = GlobalModel::zeros(d, cfg.learning_rate, fleet.total_points());
-        let deadline_wall = Duration::from_secs_f64((policy.epoch_deadline * self.time_scale).min(0.25))
-            + self.grace;
-        let started = Instant::now();
+        let n_workers = to_devices.len();
+        let mut model = GlobalModel::zeros(d, cfg.learning_rate, m);
+        let label = if coded {
+            format!("live cfl δ={:.3}", policy.delta)
+        } else {
+            "live uncoded".to_string()
+        };
+        let mut trace = self.session.start_trace(
+            label.clone(),
+            setup_secs,
+            model.nmse(&self.session.dataset.beta_star),
+        );
+        let deadline_wall = if coded {
+            Duration::from_secs_f64((policy.epoch_deadline * scale).min(MAX_SCALED_SECS))
+                + self.grace
+        } else {
+            WAIT_ALL_TIMEOUT
+        };
+        let mut epoch_times = Vec::new();
+        let mut converged = None;
         let mut late = 0u64;
         let mut on_time = 0u64;
+        let mut now = setup_secs;
 
-        for epoch in 0..epochs {
+        for epoch in 0..cfg.max_epochs {
+            let epoch_start = Instant::now();
             for tx in &to_devices {
                 // a worker that panicked would sever its channel; surface that
                 tx.send(ToDevice::Model(epoch, model.beta.clone()))
                     .map_err(|_| anyhow::anyhow!("device worker died"))?;
             }
             // master computes the parity gradient while devices work
-            let parity = backend.parity_grad(&composite.xt, &model.beta, &composite.yt, c)?;
+            let parity = match &composite {
+                Some(cp) => Some(backend.parity_grad(&cp.xt, &model.beta, &cp.yt, c)?),
+                None => None,
+            };
 
+            // anchor the gather window *after* the parity GEMM: the grace
+            // budget covers channel/wakeup overheads, not the master's own
+            // compute, which at paper scale can exceed the whole window
             let epoch_deadline = Instant::now() + deadline_wall;
             let mut grads: Vec<Mat> = Vec::new();
+            let mut slowest_delay = 0.0f64;
             loop {
-                let now = Instant::now();
-                if now >= epoch_deadline {
+                // uncoded: stop as soon as everyone reported (wait-for-all)
+                if !coded && grads.len() == n_workers {
                     break;
                 }
-                match from_devices.recv_timeout(epoch_deadline - now) {
+                let t = Instant::now();
+                if t >= epoch_deadline {
+                    break;
+                }
+                match from_devices.recv_timeout(epoch_deadline - t) {
                     Ok(msg) if msg.epoch == epoch => {
                         grads.push(msg.grad);
+                        slowest_delay = slowest_delay.max(msg.delay);
                         on_time += 1;
-                        let _ = msg.device;
                     }
-                    Ok(_) => late += 1, // straggler from a previous epoch
+                    // straggler from a previous epoch — already counted
+                    // late when its own epoch closed; just discard it
+                    Ok(_) => {}
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
                 }
             }
+            // same semantics as the DES backend: every broadcast gradient
+            // that missed this epoch's gather is late, whether or not its
+            // message ever surfaces
+            late += (n_workers - grads.len()) as u64;
             let refs: Vec<&Mat> = grads.iter().collect();
-            let grad = assemble_coded_gradient(d, Some(&parity), &refs);
+            let grad = assemble_coded_gradient(d, parity.as_ref(), &refs);
             model.apply_gradient(&grad);
+
+            // simulated-second axis, matching the DES backend's accounting:
+            // a coded epoch lasts exactly t* (deadline-gated), an uncoded
+            // epoch lasts as long as its slowest device's *modeled* delay —
+            // host overheads (grace, the sleep cap, thread wakeups) stay
+            // out of the trace and are visible in wall_secs instead
+            let epoch_secs = if coded {
+                policy.epoch_deadline
+            } else if slowest_delay > 0.0 {
+                slowest_delay
+            } else {
+                epoch_start.elapsed().as_secs_f64() / scale
+            };
+            now += epoch_secs;
+            epoch_times.push(epoch_secs);
+            let nmse = model.nmse(&self.session.dataset.beta_star);
+            trace.push(now, epoch + 1, nmse);
+            if converged.is_none() && nmse <= cfg.target_nmse {
+                converged = Some((epoch + 1, now));
+                break;
+            }
         }
 
         for tx in &to_devices {
             let _ = tx.send(ToDevice::Stop);
         }
-        // drain so workers blocked on send can exit, then join
-        while from_devices.try_recv().is_ok() {
-            late += 1;
-        }
+        // drain so workers blocked on send can exit, then join (these
+        // stragglers were already counted late when their epochs closed)
+        while from_devices.try_recv().is_ok() {}
         for h in handles {
             let _ = h.join();
         }
 
-        Ok(LiveReport {
-            epochs,
-            final_nmse: model.nmse(&dataset.beta_star),
+        Ok(RunResult {
+            label,
+            trace,
+            epoch_times,
+            setup_secs,
+            parity_upload_bits: parity_bits,
+            per_epoch_bits: self.session.round_trip_bits(&policy.device_loads),
+            converged,
+            delta: policy.delta,
+            epoch_deadline: policy.epoch_deadline,
+            gather_mc_times: Vec::new(),
             wall_secs: started.elapsed().as_secs_f64(),
-            late_gradients: late,
             on_time_gradients: on_time,
+            late_gradients: late,
         })
+    }
+}
+
+impl Coordinator for LiveCoordinator {
+    fn kind(&self) -> &'static str {
+        "live"
+    }
+
+    fn policy(&self) -> Result<LoadPolicy> {
+        self.session.policy()
+    }
+
+    fn train_cfl(&mut self) -> Result<RunResult> {
+        LiveCoordinator::train_cfl(self)
+    }
+
+    fn train_uncoded(&mut self) -> Result<RunResult> {
+        LiveCoordinator::train_uncoded(self)
     }
 }

@@ -1,8 +1,11 @@
 //! Training coordination: the master's event loop.
 //!
-//! Two coordinators share the same numerics ([`crate::fl`]) and policy
-//! ([`crate::lb`]):
+//! One protocol, two executions, one shared core:
 //!
+//! * [`core`] — the backend-independent layer: [`Session`] (fleet, data,
+//!   shards, and the §III-A setup phase both coordinators build from),
+//!   the unified [`RunResult`], and the [`Coordinator`] trait /
+//!   [`CoordinatorKind`] factory the [`crate::sweep`] runner drives.
 //! * [`SimCoordinator`] — discrete-event-simulated time (the paper's
 //!   evaluation methodology): per-epoch device delays are sampled from
 //!   §II-A's models and fed through the DES queue; gradients are computed
@@ -11,13 +14,18 @@
 //! * [`LiveCoordinator`] — real concurrency: one `std::thread` per device,
 //!   channels to the master, wall-clock deadlines scaled down from the
 //!   policy. Demonstrates that the coordination logic is not
-//!   simulation-bound (see `examples/live_cluster.rs`).
+//!   simulation-bound (see `examples/live_cluster.rs`), and runs scenario
+//!   grids via `cfl sweep --live`.
 
+pub mod core;
 mod live;
 mod sim;
 
-pub use live::{LiveCoordinator, LiveReport};
-pub use sim::{RunResult, SimCoordinator};
+pub use self::core::{
+    CflSetup, Coordinator, CoordinatorKind, DeviceSetup, RunResult, Session,
+};
+pub use live::LiveCoordinator;
+pub use sim::SimCoordinator;
 
 #[cfg(test)]
 mod tests;

@@ -1,71 +1,22 @@
 //! DES-driven training coordinator (the paper's evaluation harness).
 
-use crate::coding::{CompositeParity, DeviceCode};
+use super::core::{Coordinator, RunResult, Session};
 use crate::config::ExperimentConfig;
-use crate::data::{shard_sizes, split, Dataset, Shard};
 use crate::des::Simulator;
 use crate::fl::{assemble_coded_gradient, GlobalModel, GradBackend, NativeBackend};
-use crate::lb::{optimize, optimize_fixed_c, LoadPolicy};
-use crate::linalg::{solve_ls, Mat};
-use crate::metrics::ConvergenceTrace;
-use crate::rng::Rng;
+use crate::lb::LoadPolicy;
+use crate::linalg::Mat;
 use crate::simnet::Fleet;
 use anyhow::{Context, Result};
+use std::time::Instant;
 
-/// Outcome of one training run (one curve of Fig. 2, one cell of Fig. 4/5).
-#[derive(Clone, Debug)]
-pub struct RunResult {
-    pub label: String,
-    /// NMSE vs simulated time (time includes `setup_secs` for CFL — the
-    /// Fig. 2 initial offsets).
-    pub trace: ConvergenceTrace,
-    /// Per-epoch gather durations (Fig. 3 histograms).
-    pub epoch_times: Vec<f64>,
-    /// One-time parity-transfer delay before epoch 0 (0 for uncoded).
-    pub setup_secs: f64,
-    /// Bits uploaded as parity during setup (0 for uncoded).
-    pub parity_upload_bits: f64,
-    /// Round-trip model/gradient bits per epoch, summed over devices.
-    pub per_epoch_bits: f64,
-    /// (epoch, simulated time) at which `target_nmse` was first reached.
-    pub converged: Option<(usize, f64)>,
-    /// δ actually used (0 for uncoded).
-    pub delta: f64,
-    /// t* actually used (∞ for uncoded).
-    pub epoch_deadline: f64,
-    /// For CFL: per-epoch times until the devices alone had returned
-    /// m − c points (Fig. 3 bottom); +∞ when an epoch never got there.
-    pub gather_mc_times: Vec<f64>,
-}
-
-impl RunResult {
-    /// Convergence time to a target NMSE (Figs. 4/5 metric).
-    pub fn time_to(&self, target: f64) -> Option<f64> {
-        self.trace.time_to_nmse(target)
-    }
-}
-
-/// Per-device state frozen at setup time.
-struct DeviceState {
-    /// Systematic submatrix (the rows processed each epoch), ℓᵢ*×d.
-    x_sys: Mat,
-    y_sys: Mat,
-    /// Assigned systematic load ℓᵢ*(t*).
-    load: usize,
-    /// Backend fast-path handle (PJRT: device-resident buffers) — §Perf.
-    handle: Option<u64>,
-}
-
-/// DES-driven coordinator. Owns the problem instance (fleet, data,
-/// shards), the gradient backend, and the randomness streams.
+/// DES-driven coordinator. Owns the shared [`Session`] (fleet, data,
+/// shards, randomness streams) plus the gradient backend; per-epoch
+/// device delays are sampled from §II-A's models and fed through the DES
+/// queue, so every run is deterministic per seed.
 pub struct SimCoordinator {
-    pub cfg: ExperimentConfig,
-    pub fleet: Fleet,
-    pub dataset: Dataset,
-    shards: Vec<Shard>,
+    session: Session,
     backend: Box<dyn GradBackend>,
-    root_rng: Rng,
-    run_counter: u64,
 }
 
 impl SimCoordinator {
@@ -85,15 +36,22 @@ impl SimCoordinator {
 
     /// Build with an explicit backend (tests inject oracles/mocks here).
     pub fn with_backend(cfg: &ExperimentConfig, backend: Box<dyn GradBackend>) -> Result<Self> {
-        cfg.validate()?;
-        let mut root_rng = Rng::new(cfg.seed);
-        let mut fleet = Fleet::from_config(cfg, &mut root_rng);
-        let dataset =
-            Dataset::generate(cfg.total_points(), cfg.model_dim, cfg.snr_db, &mut root_rng);
-        let sizes = shard_sizes(cfg.sharding, cfg.total_points(), cfg.n_devices, &mut root_rng);
-        fleet.set_points(&sizes);
-        let shards = split(&dataset, &sizes);
-        Ok(Self { cfg: cfg.clone(), fleet, dataset, shards, backend, root_rng, run_counter: 0 })
+        Ok(Self { session: Session::new(cfg)?, backend })
+    }
+
+    /// The shared problem instance (config, fleet, dataset, shards).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// The experiment configuration the session was built from.
+    pub fn cfg(&self) -> &ExperimentConfig {
+        &self.session.cfg
+    }
+
+    /// The simulated fleet (device profiles + master).
+    pub fn fleet(&self) -> &Fleet {
+        &self.session.fleet
     }
 
     /// The backend actually in use ("native" or "pjrt").
@@ -101,86 +59,14 @@ impl SimCoordinator {
         self.backend.name()
     }
 
-    /// Fresh RNG stream per run so `train_cfl(); train_uncoded()` order
-    /// doesn't couple their noise.
-    fn run_rng(&mut self) -> Rng {
-        self.run_counter += 1;
-        self.root_rng.split(0x5EED_0000 + self.run_counter)
-    }
-
-    /// Solve the CFL load/redundancy policy: `cfg.delta = None` runs the
-    /// full Eq. 16 optimization; `Some(δ)` pins c = δ·m (Fig. 2/5 sweeps).
+    /// Solve the CFL load/redundancy policy (see [`Session::policy`]).
     pub fn policy(&self) -> Result<LoadPolicy> {
-        let m = self.fleet.total_points();
-        match self.cfg.delta {
-            None => {
-                let c_up = (self.cfg.c_up_fraction * m as f64).round() as usize;
-                optimize(&self.fleet, c_up, self.cfg.epsilon)
-            }
-            Some(delta) => {
-                let c = (delta * m as f64).round() as usize;
-                anyhow::ensure!(c > 0, "delta={delta} gives zero parity rows; use train_uncoded");
-                optimize_fixed_c(&self.fleet, c, self.cfg.epsilon)
-            }
-        }
+        self.session.policy()
     }
 
     /// Closed-form least-squares NMSE — the Fig. 2 lower bound.
     pub fn ls_bound(&self) -> Result<f64> {
-        let ls = solve_ls(&self.dataset.x, &self.dataset.y)?;
-        Ok(ls.nmse(&self.dataset.beta_star))
-    }
-
-    // ---------------------------------------------------------------------
-    // CFL setup phase (§III-A): draw codes, encode, upload, composite.
-    // ---------------------------------------------------------------------
-
-    /// Returns (composite parity, device states, setup seconds, parity bits).
-    fn setup_cfl(
-        &mut self,
-        policy: &LoadPolicy,
-        rng: &mut Rng,
-    ) -> Result<(CompositeParity, Vec<DeviceState>, f64, f64)> {
-        let d = self.cfg.model_dim;
-        let c = policy.parity_rows;
-        let mut composite = CompositeParity::zeros(c, d);
-        let mut states = Vec::with_capacity(self.shards.len());
-        let mut setup_secs = 0.0f64;
-        let mut parity_bits = 0.0f64;
-        // one parity row = d features + 1 label, with header overhead
-        let row_bits = (d as f64 + 1.0) * 32.0 * (1.0 + self.cfg.header_overhead);
-
-        for (i, shard) in self.shards.iter().enumerate() {
-            let load = policy.device_loads[i];
-            let code = DeviceCode::draw(
-                shard.rows(),
-                c,
-                load,
-                policy.miss_probs[i],
-                self.cfg.generator,
-                rng,
-            );
-            let (xt, yt) = self.backend.encode(&code.generator, &code.weights, &shard.x, &shard.y)?;
-            composite.accumulate(&xt, &yt);
-
-            // parity upload: c rows over this device's link, all devices in
-            // parallel → setup time is the slowest upload (Fig. 2 offsets)
-            let upload = self.fleet.sample_parity_upload_secs(i, c, row_bits, rng);
-            setup_secs = setup_secs.max(upload);
-            parity_bits += c as f64 * row_bits;
-
-            // freeze the systematic submatrix (private permutation order)
-            let mut x_sys = Mat::zeros(load, d);
-            let mut y_sys = Mat::zeros(load, 1);
-            for (r, &src) in code.systematic_rows().iter().enumerate() {
-                x_sys.row_mut(r).copy_from_slice(shard.x.row(src));
-                y_sys[(r, 0)] = shard.y[(src, 0)];
-            }
-            let handle =
-                if load > 0 { self.backend.register_shard(&x_sys, &y_sys)? } else { None };
-            states.push(DeviceState { x_sys, y_sys, load, handle });
-        }
-        Ok((composite, states, setup_secs, parity_bits))
+        self.session.ls_bound()
     }
 
     // ---------------------------------------------------------------------
@@ -190,26 +76,35 @@ impl SimCoordinator {
     /// Train with Coded Federated Learning (§III). Simulated time starts
     /// at the parity-upload completion and advances t* per epoch.
     pub fn train_cfl(&mut self) -> Result<RunResult> {
-        let policy = self.policy()?;
+        let policy = self.session.policy()?;
         self.train_cfl_with_policy(&policy)
     }
 
-    /// CFL with an explicit policy (benches sweep δ through here).
+    /// CFL with an explicit policy (ablations sweep weights through here).
     pub fn train_cfl_with_policy(&mut self, policy: &LoadPolicy) -> Result<RunResult> {
-        let mut rng = self.run_rng();
-        let (composite, states, setup_secs, parity_bits) = self.setup_cfl(policy, &mut rng)?;
-        let d = self.cfg.model_dim;
-        let m = self.fleet.total_points();
+        let started = Instant::now();
+        let mut rng = self.session.run_rng();
+        let setup =
+            self.session.build_setup(policy, self.backend.as_mut(), &mut rng)?;
+        let states = &setup.devices;
+        let composite = &setup.composite;
+        let d = self.session.cfg.model_dim;
+        let m = self.session.fleet.total_points();
         let c = policy.parity_rows;
         let t_star = policy.epoch_deadline;
 
-        let mut model = GlobalModel::zeros(d, self.cfg.learning_rate, m);
-        let mut trace = ConvergenceTrace::new(format!("cfl δ={:.3}", policy.delta));
+        let mut model = GlobalModel::zeros(d, self.session.cfg.learning_rate, m);
+        let mut trace = self.session.start_trace(
+            format!("cfl δ={:.3}", policy.delta),
+            setup.setup_secs,
+            model.nmse(&self.session.dataset.beta_star),
+        );
         let mut epoch_times = Vec::new();
         let mut gather_mc_times = Vec::new();
         let mut converged = None;
-        let mut now = setup_secs;
-        trace.push(now, 0, model.nmse(&self.dataset.beta_star));
+        let mut on_time = 0u64;
+        let mut late = 0u64;
+        let mut now = setup.setup_secs;
         // §Perf: keep the composite parity device-resident (PJRT fast path)
         let parity_handle = self.backend.register_parity(&composite.xt, &composite.yt, c)?;
 
@@ -221,10 +116,11 @@ impl SimCoordinator {
         }
 
         // client selection (§V extension): sample k of n devices per epoch
-        let n = self.fleet.n_devices();
-        let k = ((self.cfg.client_fraction * n as f64).round() as usize).clamp(1, n);
+        let n = self.session.fleet.n_devices();
+        let k =
+            ((self.session.cfg.client_fraction * n as f64).round() as usize).clamp(1, n);
 
-        for epoch in 0..self.cfg.max_epochs {
+        for epoch in 0..self.session.cfg.max_epochs {
             // --- timing: schedule every completion, gather until t* ------
             let selected: Option<Vec<bool>> = if k < n {
                 let mut mask = vec![false; n];
@@ -236,14 +132,16 @@ impl SimCoordinator {
                 None
             };
             let mut sim = Simulator::new();
-            for (i, (dev, st)) in self.fleet.devices.iter().zip(&states).enumerate() {
+            let mut scheduled_devices = 0u64;
+            for (i, (dev, st)) in self.session.fleet.devices.iter().zip(states).enumerate() {
                 if st.load == 0 || selected.as_ref().is_some_and(|m| !m[i]) {
                     continue;
                 }
                 let t = dev.sample_total_delay(st.load, &mut rng);
                 sim.schedule_at(t, Actor::Device(i));
+                scheduled_devices += 1;
             }
-            let t_master = self.fleet.master.sample_total_delay(c, &mut rng);
+            let t_master = self.session.fleet.master.sample_total_delay(c, &mut rng);
             sim.schedule_at(t_master, Actor::Master);
 
             // Fig. 3 bottom: when would the devices alone have covered
@@ -305,15 +203,17 @@ impl SimCoordinator {
                     }
                 }
             }
+            on_time += device_grads.len() as u64;
+            late += scheduled_devices - device_grads.len() as u64;
             let grad_refs: Vec<&Mat> = device_grads.iter().collect();
             let grad = assemble_coded_gradient(d, parity_grad.as_ref(), &grad_refs);
             model.apply_gradient(&grad);
 
             now += t_star;
             epoch_times.push(t_star);
-            let nmse = model.nmse(&self.dataset.beta_star);
+            let nmse = model.nmse(&self.session.dataset.beta_star);
             trace.push(now, epoch + 1, nmse);
-            if converged.is_none() && nmse <= self.cfg.target_nmse {
+            if converged.is_none() && nmse <= self.session.cfg.target_nmse {
                 converged = Some((epoch + 1, now));
                 break;
             }
@@ -323,29 +223,37 @@ impl SimCoordinator {
             label: trace.label.clone(),
             trace,
             epoch_times,
-            setup_secs,
-            parity_upload_bits: parity_bits,
-            per_epoch_bits: self.round_trip_bits(&policy.device_loads),
+            setup_secs: setup.setup_secs,
+            parity_upload_bits: setup.parity_upload_bits,
+            per_epoch_bits: self.session.round_trip_bits(&policy.device_loads),
             converged,
             delta: policy.delta,
             epoch_deadline: t_star,
             gather_mc_times,
+            wall_secs: started.elapsed().as_secs_f64(),
+            on_time_gradients: on_time,
+            late_gradients: late,
         })
     }
 
     /// Train uncoded FL: full loads, the master waits for all m partial
     /// gradients each epoch (Fig. 3 top's heavy-tailed gather).
     pub fn train_uncoded(&mut self) -> Result<RunResult> {
-        let mut rng = self.run_rng();
-        let d = self.cfg.model_dim;
-        let m = self.fleet.total_points();
+        let started = Instant::now();
+        let mut rng = self.session.run_rng();
+        let d = self.session.cfg.model_dim;
+        let m = self.session.fleet.total_points();
 
-        let mut model = GlobalModel::zeros(d, self.cfg.learning_rate, m);
-        let mut trace = ConvergenceTrace::new("uncoded");
+        let mut model = GlobalModel::zeros(d, self.session.cfg.learning_rate, m);
+        let mut trace = self.session.start_trace(
+            "uncoded".into(),
+            0.0,
+            model.nmse(&self.session.dataset.beta_star),
+        );
         let mut epoch_times = Vec::new();
         let mut converged = None;
+        let mut on_time = 0u64;
         let mut now = 0.0f64;
-        trace.push(now, 0, model.nmse(&self.dataset.beta_star));
 
         // §Perf: pre-register the full dataset in row chunks so the exact
         // full gradient is a handful of β-only PJRT calls per epoch
@@ -355,11 +263,11 @@ impl SimCoordinator {
         let mut all_registered = true;
         {
             let mut start = 0;
-            while start < self.dataset.rows() {
-                let end = (start + chunk).min(self.dataset.rows());
+            while start < self.session.dataset.rows() {
+                let end = (start + chunk).min(self.session.dataset.rows());
                 match self.backend.register_shard(
-                    &self.dataset.x.slice_rows(start, end),
-                    &self.dataset.y.slice_rows(start, end),
+                    &self.session.dataset.x.slice_rows(start, end),
+                    &self.session.dataset.y.slice_rows(start, end),
                 )? {
                     Some(h) => chunk_handles.push((h, start)),
                     None => {
@@ -371,10 +279,10 @@ impl SimCoordinator {
             }
         }
 
-        for epoch in 0..self.cfg.max_epochs {
+        for epoch in 0..self.session.cfg.max_epochs {
             // epoch duration = slowest device (wait-for-all)
             let mut epoch_len = 0.0f64;
-            for dev in &self.fleet.devices {
+            for dev in &self.session.fleet.devices {
                 epoch_len = epoch_len.max(dev.sample_total_delay(dev.points, &mut rng));
             }
             // exact full gradient over the global data (Σᵢ inner sums)
@@ -385,38 +293,59 @@ impl SimCoordinator {
                 }
                 acc
             } else {
-                self.backend.partial_grad(&self.dataset.x, &model.beta, &self.dataset.y)?
+                self.backend.partial_grad(
+                    &self.session.dataset.x,
+                    &model.beta,
+                    &self.session.dataset.y,
+                )?
             };
             model.apply_gradient(&grad);
+            on_time += self.session.fleet.n_devices() as u64;
 
             now += epoch_len;
             epoch_times.push(epoch_len);
-            let nmse = model.nmse(&self.dataset.beta_star);
+            let nmse = model.nmse(&self.session.dataset.beta_star);
             trace.push(now, epoch + 1, nmse);
-            if converged.is_none() && nmse <= self.cfg.target_nmse {
+            if converged.is_none() && nmse <= self.session.cfg.target_nmse {
                 converged = Some((epoch + 1, now));
                 break;
             }
         }
 
-        let full_loads: Vec<usize> = self.fleet.devices.iter().map(|p| p.points).collect();
+        let full_loads: Vec<usize> =
+            self.session.fleet.devices.iter().map(|p| p.points).collect();
         Ok(RunResult {
             label: "uncoded".into(),
             trace,
             epoch_times,
             setup_secs: 0.0,
             parity_upload_bits: 0.0,
-            per_epoch_bits: self.round_trip_bits(&full_loads),
+            per_epoch_bits: self.session.round_trip_bits(&full_loads),
             converged,
             delta: 0.0,
             epoch_deadline: f64::INFINITY,
             gather_mc_times: Vec::new(),
+            wall_secs: started.elapsed().as_secs_f64(),
+            on_time_gradients: on_time,
+            late_gradients: 0,
         })
     }
+}
 
-    /// Round-trip traffic per epoch: every participating device downloads
-    /// the model and uploads a gradient (2 packets).
-    fn round_trip_bits(&self, loads: &[usize]) -> f64 {
-        loads.iter().filter(|&&l| l > 0).count() as f64 * 2.0 * self.fleet.packet_bits
+impl Coordinator for SimCoordinator {
+    fn kind(&self) -> &'static str {
+        "sim"
+    }
+
+    fn policy(&self) -> Result<LoadPolicy> {
+        self.session.policy()
+    }
+
+    fn train_cfl(&mut self) -> Result<RunResult> {
+        SimCoordinator::train_cfl(self)
+    }
+
+    fn train_uncoded(&mut self) -> Result<RunResult> {
+        SimCoordinator::train_uncoded(self)
     }
 }

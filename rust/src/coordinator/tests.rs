@@ -112,18 +112,103 @@ fn invalid_config_rejected() {
     assert!(SimCoordinator::new(&cfg).is_err());
 }
 
-#[test]
-fn live_coordinator_runs_and_learns() {
+fn live_cfg() -> ExperimentConfig {
     let mut cfg = small_cfg();
     cfg.n_devices = 4;
     cfg.points_per_device = 40;
     cfg.model_dim = 16;
-    let live = LiveCoordinator::new(&cfg, 1e-4);
-    let report = live.run(40).unwrap();
-    assert_eq!(report.epochs, 40);
-    assert!(report.final_nmse < 0.9, "live run did not learn: {}", report.final_nmse);
+    cfg.max_epochs = 40;
+    cfg.target_nmse = 0.0; // no early stop: run every epoch
+    cfg
+}
+
+#[test]
+fn live_coordinator_runs_and_learns() {
+    let mut live = LiveCoordinator::new(&live_cfg(), 1e-4).unwrap();
+    let report = live.train_cfl().unwrap();
+    assert_eq!(report.epoch_times.len(), 40);
+    let final_nmse = report.trace.final_nmse().unwrap();
+    assert!(final_nmse < 0.9, "live run did not learn: {final_nmse}");
     assert!(report.on_time_gradients > 0, "no gradients arrived on time");
     assert!(report.wall_secs < 60.0);
+    // the unified result vocabulary carries the CFL setup accounting
+    assert!(report.setup_secs > 0.0 && report.parity_upload_bits > 0.0);
+    assert!(report.delta > 0.0 && report.epoch_deadline.is_finite());
+}
+
+#[test]
+fn live_uncoded_waits_for_every_gradient() {
+    let mut cfg = live_cfg();
+    cfg.max_epochs = 20;
+    let mut live = LiveCoordinator::new(&cfg, 1e-4).unwrap();
+    let run = live.train_uncoded().unwrap();
+    assert_eq!(run.epoch_times.len(), 20);
+    // wait-for-all: every device reports every epoch
+    assert_eq!(run.on_time_gradients, (cfg.n_devices * 20) as u64);
+    assert_eq!(run.delta, 0.0);
+    assert_eq!(run.setup_secs, 0.0);
+    assert!(run.epoch_deadline.is_infinite());
+    assert!(run.trace.final_nmse().unwrap() < 1.0);
+}
+
+#[test]
+fn session_setup_is_deterministic() {
+    // the shared setup layer: same seed + policy ⇒ byte-identical parity,
+    // shard state, and load assignment, no matter who consumes it
+    let cfg = small_cfg();
+    let build = || {
+        let mut session = Session::new(&cfg).unwrap();
+        let policy = session.policy().unwrap();
+        let mut rng = session.run_rng();
+        let setup = session.build_setup(&policy, &mut NativeBackend, &mut rng).unwrap();
+        (policy, setup)
+    };
+    let (p1, s1) = build();
+    let (p2, s2) = build();
+    assert_eq!(p1.device_loads, p2.device_loads);
+    assert_eq!(s1.composite.xt, s2.composite.xt, "composite parity X̃ must match");
+    assert_eq!(s1.composite.yt, s2.composite.yt, "composite parity ỹ must match");
+    assert_eq!(s1.setup_secs, s2.setup_secs);
+    assert_eq!(s1.parity_upload_bits, s2.parity_upload_bits);
+    assert_eq!(s1.devices.len(), s2.devices.len());
+    for (a, b) in s1.devices.iter().zip(&s2.devices) {
+        assert_eq!(a.load, b.load);
+        assert_eq!(a.x_sys, b.x_sys);
+        assert_eq!(a.y_sys, b.y_sys);
+    }
+}
+
+#[test]
+fn sim_and_live_share_the_session_state() {
+    // both coordinators build from Session::new, so fleet, dataset and
+    // sharding are identical for the same seed — the state the two setup
+    // phases used to construct independently
+    let cfg = small_cfg();
+    let sim = SimCoordinator::new(&cfg).unwrap();
+    let live = LiveCoordinator::new(&cfg, 1e-3).unwrap();
+    assert_eq!(sim.session().fleet.devices, live.session().fleet.devices);
+    assert_eq!(sim.session().dataset.x, live.session().dataset.x);
+    assert_eq!(sim.session().dataset.y, live.session().dataset.y);
+    assert_eq!(sim.session().shards.len(), live.session().shards.len());
+    for (a, b) in sim.session().shards.iter().zip(&live.session().shards) {
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.offset, b.offset);
+    }
+}
+
+#[test]
+fn coordinator_kind_builds_both_backends() {
+    let mut cfg = live_cfg();
+    cfg.max_epochs = 10;
+    for kind in [CoordinatorKind::Sim, CoordinatorKind::Live { time_scale: 1e-4 }] {
+        let mut coord = kind.build(&cfg).unwrap();
+        assert_eq!(coord.kind(), kind.tag());
+        let policy = coord.policy().unwrap();
+        assert!(policy.parity_rows > 0);
+        let run = coord.train_cfl().unwrap();
+        assert_eq!(run.epoch_times.len(), 10, "{} ran short", kind.tag());
+        assert!(run.trace.points.len() == 11);
+    }
 }
 
 /// Failure injection: a backend that errors after N calls.

@@ -9,7 +9,7 @@ use anyhow::Result;
 ///
 /// `Send` is a supertrait so coordinators owning a `Box<dyn GradBackend>`
 /// can be instantiated per worker thread — the [`crate::sweep`] engine
-/// runs one [`crate::coordinator::SimCoordinator`] per scenario on a
+/// runs one [`crate::coordinator::Coordinator`] per scenario on a
 /// thread pool.
 pub trait GradBackend: Send {
     /// Device partial gradient over a systematic shard:

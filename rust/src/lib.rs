@@ -38,6 +38,13 @@
 //! reports — parallel results are byte-identical to serial. From the
 //! CLI: `cfl sweep --config exp.ini` (a `[sweep]` section) or
 //! `cfl sweep --axis nu_comp=0,0.1,0.2 --axis nu_link=0,0.1,0.2`.
+//!
+//! Both training backends — the DES-driven [`coordinator::SimCoordinator`]
+//! and the threaded [`coordinator::LiveCoordinator`] — build their setup
+//! phase from the shared [`coordinator::Session`] and implement the
+//! [`coordinator::Coordinator`] trait, so the sweep runner drives either:
+//! `cfl sweep --live` runs the same grid on the live cluster. See
+//! `docs/ARCHITECTURE.md` for the crate map and the paper-equation index.
 
 pub mod cli;
 pub mod coding;

@@ -7,7 +7,9 @@
 //! * `optimize` — solve the Eq. 13–16 load/redundancy policy and print it.
 //! * `sweep`    — expand a scenario grid (INI `[sweep]` section and/or
 //!   repeated `--axis key=v1,v2,…`) and run it on a worker pool; writes
-//!   per-scenario CSV and an aggregate coding-gain report.
+//!   per-scenario CSV and an aggregate coding-gain report. `--live`
+//!   drives every scenario through the threaded live coordinator instead
+//!   of the DES backend.
 //! * `live`     — run the threaded live-cluster demo.
 //!
 //! Configuration: paper-scale defaults (`--paper`) or test-scale
@@ -17,7 +19,7 @@
 use anyhow::Result;
 use cfl::cli::{Parsed, Parser};
 use cfl::config::{ExperimentConfig, Ini};
-use cfl::coordinator::{LiveCoordinator, SimCoordinator};
+use cfl::coordinator::{CoordinatorKind, LiveCoordinator, SimCoordinator};
 use cfl::metrics::Table;
 use cfl::sweep::{self, ScenarioGrid, SweepOptions};
 
@@ -36,9 +38,10 @@ fn parser() -> Parser {
         .opt("target-nmse", "f64", "stopping NMSE")
         .opt("artifacts", "dir", "PJRT artifacts directory (default: native backend)")
         .opt("out", "dir", "output directory for CSV traces (default: results)")
-        .opt("time-scale", "f64", "live mode: simulated→wall seconds factor")
+        .opt("time-scale", "f64", "live/sweep --live: simulated→wall seconds factor")
         .opt("axis", "key=v1,v2,..", "sweep: add a grid axis (repeatable)")
         .opt("workers", "usize", "sweep: worker threads (default: all cores)")
+        .flag("live", "sweep: run scenarios through the threaded live coordinator")
         .flag("paper", "use the paper's §IV scale (24 devices, d=500)")
         .flag("skip-uncoded", "train/sweep: skip the uncoded baseline")
         .flag("quiet", "suppress trace files / sweep progress")
@@ -151,7 +154,7 @@ fn cmd_optimize(args: &cfl::cli::Args) -> Result<()> {
     for (i, (&load, &miss)) in policy.device_loads.iter().zip(&policy.miss_probs).enumerate() {
         table.row(&[
             format!("{i}"),
-            format!("{}", sim.fleet.devices[i].points),
+            format!("{}", sim.fleet().devices[i].points),
             format!("{load}"),
             format!("{miss:.3}"),
         ]);
@@ -176,17 +179,35 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
          section to --config"
     );
 
-    // precedence: --workers flag > [sweep] workers > all cores
-    let mut default_workers =
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    if let Some(ini) = &ini {
-        default_workers = ini.get_or("sweep", "workers", default_workers)?;
-    }
-    let workers = args.get_or("workers", default_workers)?;
+    let backend = if args.has_flag("live") {
+        CoordinatorKind::Live { time_scale: args.get_or("time-scale", 1e-3)? }
+    } else {
+        CoordinatorKind::Sim
+    };
+    // sim precedence: --workers flag > [sweep] workers > all cores. The
+    // live backend always runs one scenario at a time (enforced by the
+    // runner — concurrent live scenarios would oversubscribe the host and
+    // drop gradients as artificial stragglers).
+    let workers = match backend {
+        CoordinatorKind::Live { .. } => 1,
+        CoordinatorKind::Sim => {
+            let mut default_workers =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            if let Some(ini) = &ini {
+                default_workers = ini.get_or("sweep", "workers", default_workers)?;
+            }
+            args.get_or("workers", default_workers)?
+        }
+    };
     let out_dir = args.get_or("out", "results".to_string())?;
     // stdout stays a pure function of the grid (byte-identical for any
-    // --workers); runtime details like parallelism go to stderr
-    println!("cfl sweep: {} axes → {} scenarios", grid.axes().len(), grid.len());
+    // --workers under the sim backend); runtime details go to stderr
+    println!(
+        "cfl sweep ({}): {} axes → {} scenarios",
+        backend.tag(),
+        grid.axes().len(),
+        grid.len()
+    );
     for axis in grid.axes() {
         println!("  axis {} = [{}]", axis.key, axis.values.join(", "));
     }
@@ -196,6 +217,7 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
         workers,
         uncoded_baseline: !args.has_flag("skip-uncoded"),
         progress: !args.has_flag("quiet"),
+        backend,
     };
     let outcomes = sweep::run_grid(&grid, &opts)?;
 
@@ -224,18 +246,24 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
 }
 
 fn cmd_live(args: &cfl::cli::Args) -> Result<()> {
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
     let scale = args.get_or("time-scale", 1e-3)?;
-    let epochs = args.get_or("epochs", 100usize)?;
+    // build_config already honored --epochs and any [experiment]
+    // max_epochs. Only when the user supplied neither (pure built-in
+    // defaults) cap the demo at 100 epochs so the training-scale
+    // defaults don't run for minutes of wall sleep.
+    if args.get("epochs").is_none() && args.get("config").is_none() {
+        cfg.max_epochs = cfg.max_epochs.min(100);
+    }
     println!("live cluster: {} device threads, time scale {scale}", cfg.n_devices);
-    let report = LiveCoordinator::new(&cfg, scale).run(epochs)?;
+    let report = LiveCoordinator::new(&cfg, scale)?.train_cfl()?;
     println!(
         "epochs={} wall={:.2}s on-time={} late={} final NMSE={:.3e}",
-        report.epochs,
+        report.epoch_times.len(),
         report.wall_secs,
         report.on_time_gradients,
         report.late_gradients,
-        report.final_nmse
+        report.trace.final_nmse().unwrap_or(f64::NAN)
     );
     Ok(())
 }

@@ -12,9 +12,9 @@ pub enum ArtifactKind {
     ParityGrad,
     /// Parity encode: (G, w, X, y) → (X̃, ỹ). Dims: [C, L, D].
     Encode,
-    /// Model update: (β, g, μ/m) → β′. Dims: [D].
+    /// Model update: (β, g, μ/m) → β′. Dims: `[D]`.
     GdStep,
-    /// NMSE: (β̂, β*) → scalar. Dims: [D].
+    /// NMSE: (β̂, β*) → scalar. Dims: `[D]`.
     Nmse,
 }
 

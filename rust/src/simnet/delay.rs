@@ -28,7 +28,7 @@ impl ComputeModel {
         det + rng.exponential(gamma)
     }
 
-    /// E[T_c] = ℓ(a + 1/μ) — the compute part of Eq. (8).
+    /// `E[T_c] = ℓ(a + 1/μ)` — the compute part of Eq. (8).
     pub fn mean(&self, points: usize) -> f64 {
         points as f64 * (self.secs_per_point + 1.0 / self.mem_rate)
     }
@@ -123,7 +123,7 @@ impl DeviceProfile {
         self.link.sample_round_trip(rng) + self.compute.sample(points, rng)
     }
 
-    /// E[T] (Eq. 8).
+    /// `E[T]` (Eq. 8).
     pub fn mean_total_delay(&self, points: usize) -> f64 {
         self.compute.mean(points) + self.link.mean_round_trip()
     }

@@ -70,6 +70,22 @@ pub struct Scenario {
 }
 
 /// A base config plus ordered sweep axes.
+///
+/// ```
+/// use cfl::config::ExperimentConfig;
+/// use cfl::sweep::ScenarioGrid;
+///
+/// let grid = ScenarioGrid::new(&ExperimentConfig::small())
+///     .axis_f64("nu", &[0.0, 0.2]).unwrap()
+///     .axis("delta", ["0.1", "auto"]).unwrap();
+/// assert_eq!(grid.len(), 4);
+///
+/// let scenarios = grid.expand().unwrap();
+/// // row-major: the last axis varies fastest, IDs are stable
+/// assert_eq!(scenarios[0].id, "s0__nu=0__delta=0.1");
+/// assert_eq!(scenarios[3].cfg.nu_comp, 0.2);
+/// assert_eq!(scenarios[3].cfg.delta, None); // "auto" → optimizer's δ
+/// ```
 #[derive(Clone, Debug)]
 pub struct ScenarioGrid {
     base: ExperimentConfig,

@@ -12,11 +12,18 @@
 //!   cartesian expansion with stable scenario IDs, parsing from INI
 //!   `[sweep]` sections and `--axis key=v1,v2,…` CLI specs.
 //! * [`runner`] — a `std::thread` worker pool over a channel work queue.
-//!   Each worker instantiates its own coordinator (backends are `Send`),
-//!   and every scenario's result is a pure function of its config, so
-//!   parallel output is **byte-identical** to a serial run.
+//!   Each worker instantiates its own [`Coordinator`] — the DES backend
+//!   by default, or the threaded live cluster via
+//!   [`SweepOptions::backend`] / `cfl sweep --live`. Under the (default)
+//!   sim backend every scenario's result is a pure function of its
+//!   config, so parallel output is **byte-identical** to a serial run.
+//!   The pool itself is exposed as [`run_tasks`] for non-coordinator
+//!   workloads (the Fig. 1 bench's load scan runs through it).
 //! * [`report`] — per-scenario CSV, coding-gain matrices, and a JSON
-//!   report, built on [`crate::metrics`].
+//!   report, built on [`crate::metrics`]; a `backend` column keeps mixed
+//!   sim/live CSVs attributable.
+//!
+//! [`Coordinator`]: crate::coordinator::Coordinator
 //!
 //! ```no_run
 //! use cfl::config::ExperimentConfig;
@@ -48,7 +55,7 @@ pub mod runner;
 
 pub use grid::{Axis, Scenario, ScenarioGrid, SWEEPABLE_KEYS};
 pub use report::{gain_matrix, gain_stats, summary_table, write_json, write_scenario_csv};
-pub use runner::{run_grid, run_scenarios, ScenarioOutcome, SweepOptions};
+pub use runner::{run_grid, run_scenarios, run_tasks, ScenarioOutcome, SweepOptions};
 
 #[cfg(test)]
 mod tests;

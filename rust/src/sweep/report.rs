@@ -26,7 +26,7 @@ pub fn write_scenario_csv(
     // "delta", which gets its own assignment column)
     for col in [
         "delta_used", "epoch_deadline_s", "setup_s", "epochs", "final_nmse", "t_cfl_s",
-        "t_uncoded_s", "gain", "comm_load",
+        "t_uncoded_s", "gain", "comm_load", "backend",
     ] {
         header.push(col.into());
     }
@@ -45,6 +45,7 @@ pub fn write_scenario_csv(
         row.push(fmt_opt(o.uncoded.as_ref().and_then(|u| u.time_to(target))));
         row.push(fmt_opt(o.gain()));
         row.push(fmt_opt(o.comm_load()));
+        row.push(o.backend.to_string());
         let row_refs: Vec<&str> = row.iter().map(|s| s.as_str()).collect();
         csv.write_row_str(&row_refs)?;
     }
@@ -185,6 +186,7 @@ pub fn write_json(path: &str, grid: &ScenarioGrid, outcomes: &[ScenarioOutcome])
             s.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
         }
         s.push_str("}, ");
+        s.push_str(&format!("\"backend\": \"{}\", ", json_escape(o.backend)));
         s.push_str(&format!("\"seed\": {}, ", o.scenario.cfg.seed));
         s.push_str(&format!("\"delta\": {}, ", json_num(o.coded.delta)));
         s.push_str(&format!("\"epoch_deadline_s\": {}, ", json_num(o.coded.epoch_deadline)));

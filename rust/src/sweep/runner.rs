@@ -2,17 +2,24 @@
 //!
 //! A channel-fed worker pool (`std::thread::scope`, no external deps):
 //! scenarios queue through a shared receiver, each worker builds its own
-//! [`SimCoordinator`] — backends are `Send` by construction, see
-//! [`crate::fl::GradBackend`] — trains CFL (plus the uncoded baseline by
-//! default), and reports back over a result channel. Every scenario's
-//! outcome is a pure function of its config, and results are re-ordered
-//! by scenario index before returning, so a parallel sweep is
+//! [`Coordinator`] from [`SweepOptions::backend`] — gradient backends are
+//! `Send` by construction, see [`crate::fl::GradBackend`] — trains CFL
+//! (plus the uncoded baseline by default), and reports back over a result
+//! channel. With the default [`CoordinatorKind::Sim`] backend every
+//! scenario's outcome is a pure function of its config, and results are
+//! re-ordered by scenario index before returning, so a parallel sweep is
 //! **byte-identical** to `workers = 1` — worker count only changes
-//! wall-clock time. Progress notes go to stderr; stdout stays
+//! wall-clock time. (The live backend schedules on the wall clock, so its
+//! outcomes are inherently non-reproducible; its reports still render
+//! through the same pipeline.) Progress notes go to stderr; stdout stays
 //! deterministic for report piping.
+//!
+//! The pool itself is exposed as [`run_tasks`] — a deterministic parallel
+//! map the figure benches reuse for non-coordinator workloads (e.g. the
+//! Fig. 1 expected-return scan).
 
 use super::grid::{Scenario, ScenarioGrid};
-use crate::coordinator::{RunResult, SimCoordinator};
+use crate::coordinator::{Coordinator, CoordinatorKind, RunResult};
 use crate::lb::LoadPolicy;
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc;
@@ -22,12 +29,18 @@ use std::sync::Mutex;
 #[derive(Clone, Debug)]
 pub struct SweepOptions {
     /// Worker threads (clamped to the scenario count; 1 = run inline).
+    /// The live backend always runs scenarios serially regardless of this
+    /// setting — concurrent live scenarios would oversubscribe the host
+    /// and distort its wall-clock deadlines.
     pub workers: usize,
     /// Also train the uncoded baseline per scenario (needed for the
     /// coding-gain and comm-load report columns).
     pub uncoded_baseline: bool,
     /// Emit a stderr line as each scenario completes.
     pub progress: bool,
+    /// Which coordinator executes each scenario (`cfl sweep --live`
+    /// selects [`CoordinatorKind::Live`]).
+    pub backend: CoordinatorKind,
 }
 
 impl Default for SweepOptions {
@@ -36,6 +49,7 @@ impl Default for SweepOptions {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             uncoded_baseline: true,
             progress: false,
+            backend: CoordinatorKind::Sim,
         }
     }
 }
@@ -46,6 +60,9 @@ pub struct ScenarioOutcome {
     pub scenario: Scenario,
     /// The Eq. 13–16 policy the scenario ran under.
     pub policy: LoadPolicy,
+    /// Backend tag ("sim" / "live") — rendered in the reports so mixed
+    /// CSVs stay attributable.
+    pub backend: &'static str,
     pub coded: RunResult,
     pub uncoded: Option<RunResult>,
 }
@@ -85,50 +102,74 @@ pub fn run_scenarios(
     scenarios: Vec<Scenario>,
     opts: &SweepOptions,
 ) -> Result<Vec<ScenarioOutcome>> {
-    let n = scenarios.len();
+    // a live scenario spawns n_devices compute threads racing wall-clock
+    // deadlines; running several scenarios at once oversubscribes the host
+    // and drops gradients as artificial stragglers, so the live backend
+    // always executes one scenario at a time (see SweepOptions::workers)
+    let workers = match opts.backend {
+        CoordinatorKind::Live { .. } => 1,
+        CoordinatorKind::Sim => opts.workers,
+    };
+    run_tasks(scenarios, workers, |scenario| run_one(scenario, opts))
+}
+
+/// The sweep engine's parallel executor, generically: map `f` over
+/// `items` on a `workers`-thread pool, returning outputs in input order
+/// regardless of completion order. `workers = 1` runs inline; the first
+/// failure (in input order) is surfaced as the error. Any deterministic
+/// `f` therefore yields output byte-identical to a serial loop — the
+/// benches run their non-coordinator scans (e.g. Fig. 1's load axis)
+/// through this.
+pub fn run_tasks<I, O, F>(items: Vec<I>, workers: usize, f: F) -> Result<Vec<O>>
+where
+    I: Send,
+    O: Send,
+    F: Fn(I) -> Result<O> + Sync,
+{
+    let n = items.len();
     if n == 0 {
         return Ok(Vec::new());
     }
-    let workers = opts.workers.clamp(1, n);
+    let workers = workers.clamp(1, n);
 
     if workers == 1 {
         let mut out = Vec::with_capacity(n);
-        for scenario in scenarios {
-            out.push(run_one(scenario, opts)?);
+        for item in items {
+            out.push(f(item)?);
         }
         return Ok(out);
     }
 
     // work queue: a Mutex-shared receiver hands each worker the next
-    // scenario; a result channel carries the outcome back keyed by queue
-    // position (not Scenario::index — callers may pass any subset, e.g. a
-    // resumed sweep), so output order always mirrors input order
-    let (work_tx, work_rx) = mpsc::channel::<(usize, Scenario)>();
+    // item; a result channel carries the output back keyed by queue
+    // position, so output order always mirrors input order
+    let (work_tx, work_rx) = mpsc::channel::<(usize, I)>();
     let work_rx = Mutex::new(work_rx);
-    let (result_tx, result_rx) = mpsc::channel::<(usize, Result<ScenarioOutcome>)>();
-    for job in scenarios.into_iter().enumerate() {
+    let (result_tx, result_rx) = mpsc::channel::<(usize, Result<O>)>();
+    for job in items.into_iter().enumerate() {
         work_tx.send(job).expect("queue send on fresh channel");
     }
     drop(work_tx);
 
-    let mut slots: Vec<Option<Result<ScenarioOutcome>>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<Result<O>>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let result_tx = result_tx.clone();
             let work_rx = &work_rx;
+            let f = &f;
             scope.spawn(move || loop {
-                // take the next scenario, releasing the lock before running
+                // take the next item, releasing the lock before running
                 let job = { work_rx.lock().expect("work queue lock").recv() };
-                let Ok((position, scenario)) = job else { break };
-                let outcome = run_one(scenario, opts);
-                if result_tx.send((position, outcome)).is_err() {
+                let Ok((position, item)) = job else { break };
+                let output = f(item);
+                if result_tx.send((position, output)).is_err() {
                     break;
                 }
             });
         }
         drop(result_tx);
-        for (position, outcome) in result_rx.iter() {
-            slots[position] = Some(outcome);
+        for (position, output) in result_rx.iter() {
+            slots[position] = Some(output);
         }
     });
 
@@ -137,9 +178,9 @@ pub fn run_scenarios(
     let mut out = Vec::with_capacity(n);
     for (position, slot) in slots.into_iter().enumerate() {
         match slot {
-            Some(Ok(outcome)) => out.push(outcome),
+            Some(Ok(output)) => out.push(output),
             Some(Err(e)) => return Err(e),
-            None => bail!("scenario #{position} produced no result (worker died)"),
+            None => bail!("task #{position} produced no result (worker died)"),
         }
     }
     Ok(out)
@@ -148,20 +189,23 @@ pub fn run_scenarios(
 /// Run a single scenario to completion on the current thread.
 fn run_one(scenario: Scenario, opts: &SweepOptions) -> Result<ScenarioOutcome> {
     let ctx = |what: &str| format!("scenario {}: {what}", scenario.id);
-    let mut sim = SimCoordinator::new(&scenario.cfg).with_context(|| ctx("building"))?;
-    let policy = sim.policy().with_context(|| ctx("solving the load policy"))?;
-    let coded = sim.train_cfl().with_context(|| ctx("training CFL"))?;
+    let mut coord: Box<dyn Coordinator> =
+        opts.backend.build(&scenario.cfg).with_context(|| ctx("building"))?;
+    let policy = coord.policy().with_context(|| ctx("solving the load policy"))?;
+    let coded = coord.train_cfl().with_context(|| ctx("training CFL"))?;
     let uncoded = if opts.uncoded_baseline {
-        Some(sim.train_uncoded().with_context(|| ctx("training uncoded"))?)
+        Some(coord.train_uncoded().with_context(|| ctx("training uncoded"))?)
     } else {
         None
     };
-    let outcome = ScenarioOutcome { scenario, policy, coded, uncoded };
+    let outcome =
+        ScenarioOutcome { scenario, policy, backend: coord.kind(), coded, uncoded };
     if opts.progress {
         let target = outcome.scenario.cfg.target_nmse;
         eprintln!(
-            "  [{}] δ={:.3} t_cfl={} gain={}",
+            "  [{}] {} δ={:.3} t_cfl={} gain={}",
             outcome.scenario.id,
+            outcome.backend,
             outcome.coded.delta,
             outcome
                 .coded

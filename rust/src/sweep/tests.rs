@@ -1,6 +1,6 @@
 use super::*;
 use crate::config::{ExperimentConfig, Ini};
-use crate::coordinator::SimCoordinator;
+use crate::coordinator::{CoordinatorKind, SimCoordinator};
 use crate::rng::mix_seed;
 
 /// Small enough that a full grid (CFL + uncoded per cell) runs in
@@ -155,7 +155,7 @@ fn parallel_sweep_is_byte_identical_to_serial() {
         .axis("delta", ["0.15", "auto"])
         .unwrap()
         .derive_seeds(true);
-    let serial_opts = SweepOptions { workers: 1, uncoded_baseline: true, progress: false };
+    let serial_opts = SweepOptions { workers: 1, uncoded_baseline: true, progress: false, ..Default::default() };
     let parallel_opts = SweepOptions { workers: 2, ..serial_opts.clone() };
     let serial = run_grid(&grid, &serial_opts).unwrap();
     let parallel = run_grid(&grid, &parallel_opts).unwrap();
@@ -195,7 +195,7 @@ fn runner_surfaces_scenario_failures() {
     cfg.delta = Some(0.9);
     cfg.c_up_fraction = 0.9;
     let grid = ScenarioGrid::new(&cfg).axis_f64("nu", &[0.0]).unwrap();
-    let opts = SweepOptions { workers: 1, uncoded_baseline: false, progress: false };
+    let opts = SweepOptions { workers: 1, uncoded_baseline: false, progress: false, ..Default::default() };
     match run_grid(&grid, &opts) {
         Err(e) => {
             let msg = format!("{e:?}");
@@ -212,11 +212,63 @@ fn runner_surfaces_scenario_failures() {
 #[test]
 fn skip_uncoded_drops_baseline_and_gain() {
     let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.1]).unwrap();
-    let opts = SweepOptions { workers: 1, uncoded_baseline: false, progress: false };
+    let opts = SweepOptions { workers: 1, uncoded_baseline: false, progress: false, ..Default::default() };
     let outcomes = run_grid(&grid, &opts).unwrap();
     assert!(outcomes[0].uncoded.is_none());
     assert!(outcomes[0].gain().is_none());
     assert!(outcomes[0].comm_load().is_none());
+}
+
+#[test]
+fn live_backend_runs_the_grid() {
+    // the same grid machinery drives the threaded coordinator: every
+    // scenario still produces a full outcome (gain needs the target to be
+    // reached, which a 20-epoch live demo need not guarantee — we assert
+    // structure, not timing)
+    let mut cfg = tiny();
+    cfg.max_epochs = 20;
+    let grid = ScenarioGrid::new(&cfg).axis_f64("nu", &[0.0, 0.2]).unwrap();
+    let opts = SweepOptions {
+        workers: 1,
+        uncoded_baseline: true,
+        progress: false,
+        backend: CoordinatorKind::Live { time_scale: 1e-4 },
+    };
+    let outcomes = run_grid(&grid, &opts).unwrap();
+    assert_eq!(outcomes.len(), 2);
+    for o in &outcomes {
+        assert_eq!(o.backend, "live");
+        assert_eq!(o.coded.epoch_times.len(), 20);
+        assert!(o.coded.wall_secs > 0.0);
+        assert!(o.coded.setup_secs > 0.0, "live CFL must account parity setup");
+        let uncoded = o.uncoded.as_ref().expect("baseline requested");
+        assert_eq!(uncoded.setup_secs, 0.0);
+        assert_eq!(uncoded.on_time_gradients, (cfg.n_devices * 20) as u64);
+    }
+    // the reports render live outcomes through the same pipeline
+    let rendered = summary_table(&outcomes).render();
+    assert_eq!(rendered.lines().count(), 4, "{rendered}");
+}
+
+#[test]
+fn run_tasks_is_order_preserving_and_surfaces_errors() {
+    // the generic pool returns outputs in input order for any worker count
+    let items: Vec<usize> = (0..23).collect();
+    let serial = run_tasks(items.clone(), 1, |i| Ok(i * i)).unwrap();
+    let parallel = run_tasks(items, 4, |i| Ok(i * i)).unwrap();
+    assert_eq!(serial, parallel);
+    assert_eq!(serial[7], 49);
+
+    // first failure in input order wins, regardless of completion order
+    let err = run_tasks((0..8).collect(), 4, |i| {
+        anyhow::ensure!(i != 3, "boom at {i}");
+        Ok(i)
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("boom at 3"), "{err}");
+
+    let empty: Vec<usize> = Vec::new();
+    assert!(run_tasks(empty, 4, |i| Ok(i)).unwrap().is_empty());
 }
 
 #[test]
@@ -243,7 +295,7 @@ fn gain_matrix_is_row_major_and_two_axis_only() {
         .unwrap();
     let outcomes = run_grid(
         &grid,
-        &SweepOptions { workers: 2, uncoded_baseline: true, progress: false },
+        &SweepOptions { workers: 2, uncoded_baseline: true, progress: false, ..Default::default() },
     )
     .unwrap();
     let table = gain_matrix(&grid, &outcomes).expect("2-axis grid has a matrix");
@@ -255,7 +307,7 @@ fn gain_matrix_is_row_major_and_two_axis_only() {
     let one_axis = ScenarioGrid::new(&cfg).axis_f64("nu_comp", &[0.0]).unwrap();
     let one_out = run_grid(
         &one_axis,
-        &SweepOptions { workers: 1, uncoded_baseline: false, progress: false },
+        &SweepOptions { workers: 1, uncoded_baseline: false, progress: false, ..Default::default() },
     )
     .unwrap();
     assert!(gain_matrix(&one_axis, &one_out).is_none());
@@ -266,7 +318,7 @@ fn scenario_csv_has_axis_columns_and_json_is_well_formed() {
     let grid = ScenarioGrid::new(&tiny()).axis("delta", ["0.15", "auto"]).unwrap();
     let outcomes = run_grid(
         &grid,
-        &SweepOptions { workers: 1, uncoded_baseline: true, progress: false },
+        &SweepOptions { workers: 1, uncoded_baseline: true, progress: false, ..Default::default() },
     )
     .unwrap();
     let dir = std::env::temp_dir().join("cfl_sweep_report");
@@ -277,7 +329,7 @@ fn scenario_csv_has_axis_columns_and_json_is_well_formed() {
     let mut lines = text.lines();
     let header = lines.next().unwrap();
     assert!(header.starts_with("scenario,delta,delta_used,"), "{header}");
-    assert!(header.ends_with("gain,comm_load"), "{header}");
+    assert!(header.ends_with("gain,comm_load,backend"), "{header}");
     assert_eq!(lines.count(), 2);
     // target 0 is unreachable → empty gain cells, never "NaN"
     assert!(!text.contains("NaN"), "{text}");
@@ -302,7 +354,7 @@ fn summary_table_renders_one_row_per_scenario() {
     let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0, 0.2]).unwrap();
     let outcomes = run_grid(
         &grid,
-        &SweepOptions { workers: 1, uncoded_baseline: true, progress: false },
+        &SweepOptions { workers: 1, uncoded_baseline: true, progress: false, ..Default::default() },
     )
     .unwrap();
     let rendered = summary_table(&outcomes).render();

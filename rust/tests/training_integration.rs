@@ -101,7 +101,7 @@ fn policy_round_trip_through_coordinator() {
     assert!(policy.parity_rows > 0);
     assert!(policy.epoch_deadline.is_finite());
     // uncoded policy from the same fleet
-    let unc = LoadPolicy::uncoded(&sim.fleet);
+    let unc = LoadPolicy::uncoded(sim.fleet());
     assert_eq!(unc.device_loads.len(), cfg.n_devices);
 }
 

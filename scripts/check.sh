@@ -22,7 +22,10 @@ else
     echo "== clippy not installed; skipping lints"
 fi
 
-echo "== cargo test -q"
+echo "== cargo doc --no-deps (deny warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== cargo test -q (unit + integration + doctests)"
 cargo test -q
 
 echo "OK"
