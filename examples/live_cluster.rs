@@ -9,6 +9,10 @@
 //! setup phase from the same `Session`, and the live run reports the
 //! same `RunResult` the sweep engine renders (`cfl sweep --live`).
 //!
+//! The channel fleet here is one of two transports: the same session
+//! runs over TCP sockets with real OS processes via `cfl serve` /
+//! `cfl device` (see docs/ARCHITECTURE.md, "The transport layer").
+//!
 //! Run: `cargo run --release --example live_cluster`
 
 use cfl::config::ExperimentConfig;
@@ -20,14 +24,20 @@ fn main() -> anyhow::Result<()> {
     cfg.nu_link = 0.3;
     cfg.target_nmse = 0.0; // fixed epoch budget: we want straggler stats
 
-    // first run: generous grace, everything arrives; second run: larger
-    // time scale + tight grace so straggler sleeps genuinely overrun the
-    // wall-clock deadline and get dropped
-    for &(scale, grace_ms, epochs) in &[(2e-3, 8u64, 150usize), (5e-2, 2, 120)] {
-        println!("--- time scale {scale}, grace {grace_ms} ms ({epochs} epochs) ---");
+    // first run: auto-calibrated grace (the ping/echo handshake measures
+    // the channel-hop overhead), everything arrives; second run: larger
+    // time scale + a pinned tight grace so straggler sleeps genuinely
+    // overrun the wall-clock deadline and get dropped
+    for &(scale, grace_ms, epochs) in &[(2e-3, None::<u64>, 150usize), (5e-2, Some(2), 120)] {
+        match grace_ms {
+            None => println!("--- time scale {scale}, auto-calibrated grace ({epochs} epochs) ---"),
+            Some(g) => {
+                println!("--- time scale {scale}, grace pinned to {g} ms ({epochs} epochs) ---")
+            }
+        }
         cfg.max_epochs = epochs;
         let mut live = LiveCoordinator::new(&cfg, scale)?;
-        live.grace = std::time::Duration::from_millis(grace_ms);
+        live.grace = grace_ms.map(std::time::Duration::from_millis);
         let report = live.train_cfl()?;
         let total = report.on_time_gradients + report.late_gradients;
         println!(

@@ -46,6 +46,7 @@ use crate::linalg::{solve_ls, Mat};
 use crate::metrics::ConvergenceTrace;
 use crate::rng::Rng;
 use crate::simnet::Fleet;
+use crate::transport::{TcpTransport, TransportKind};
 use anyhow::Result;
 
 /// Outcome of one training run (one curve of Fig. 2, one cell of
@@ -288,13 +289,18 @@ pub enum CoordinatorKind {
     /// sweeps are byte-identical to serial ones).
     #[default]
     Sim,
-    /// Threaded live cluster: simulated delays slept out at
-    /// `time_scale` wall-seconds per simulated second. Wall-clock
-    /// scheduling makes outcomes *not* bit-reproducible across runs.
+    /// Live cluster: simulated delays slept out at `time_scale`
+    /// wall-seconds per simulated second, over a real device transport.
+    /// Wall-clock scheduling makes outcomes *not* bit-reproducible
+    /// across runs.
     Live {
         /// Simulated-seconds → wall-seconds factor (e.g. 1e-3 runs a 5 s
         /// simulated deadline as 5 ms of real sleep).
         time_scale: f64,
+        /// How the fleet is reached: in-process channel threads
+        /// (default), or TCP loopback subprocesses spawned per scenario
+        /// (`cfl sweep --live --transport tcp`).
+        transport: TransportKind,
     },
 }
 
@@ -312,8 +318,15 @@ impl CoordinatorKind {
     pub fn build(&self, cfg: &ExperimentConfig) -> Result<Box<dyn Coordinator>> {
         Ok(match self {
             CoordinatorKind::Sim => Box::new(SimCoordinator::new(cfg)?),
-            CoordinatorKind::Live { time_scale } => {
+            CoordinatorKind::Live { time_scale, transport: TransportKind::Channel } => {
                 Box::new(LiveCoordinator::new(cfg, *time_scale)?)
+            }
+            CoordinatorKind::Live { time_scale, transport: TransportKind::Tcp } => {
+                // one subprocess fleet per scenario: bind a loopback
+                // port, spawn `cfl device` children, accept them
+                let bin = crate::transport::local_device_bin()?;
+                let tcp = TcpTransport::spawn_local(&bin, cfg.n_devices)?;
+                Box::new(LiveCoordinator::with_transport(cfg, *time_scale, Box::new(tcp))?)
             }
         })
     }

@@ -1,19 +1,41 @@
-//! Live (threaded) coordinator: real concurrency, wall-clock deadlines.
+//! Live coordinator: real concurrency, wall-clock deadlines, pluggable
+//! transports.
 //!
-//! One `std::thread` per device; each epoch the master broadcasts the
-//! model over channels, device workers compute their partial gradient
-//! (native kernels — each worker owns its systematic shard), sleep out
-//! their *simulated* residual delay scaled by `time_scale`, and send the
-//! gradient back. The master gathers until the scaled deadline, computes
-//! the parity gradient meanwhile, and updates the model.
+//! Each epoch the master broadcasts the model to its device fleet over a
+//! [`Transport`], devices compute their partial gradient (native
+//! kernels — each endpoint owns its systematic shard), sleep out their
+//! *simulated* residual delay scaled by `time_scale`, and reply. The
+//! master gathers until the scaled deadline, computes the parity gradient
+//! meanwhile, and updates the model.
+//!
+//! Two wires implement the same protocol: [`ChannelTransport`] (one
+//! thread per device, in-process `mpsc` — the default) and
+//! [`crate::transport::TcpTransport`] (one socket per device, so the
+//! fleet can be real OS processes started with `cfl device`). The device
+//! side is the same state machine either way
+//! ([`crate::transport::run_device_loop`]).
+//!
+//! Wall-clock deadlines stay honest via a ping/echo **calibration
+//! handshake** at the start of every run: the measured worst round-trip
+//! (thread wakeup + channel hop, or socket + scheduler, depending on the
+//! transport) sets the grace budget added to every epoch deadline, so a
+//! loaded CI host widens its gather window instead of dropping every
+//! gradient as a false straggler. Set [`LiveCoordinator::grace`] to pin
+//! it manually.
+//!
+//! A device that disconnects mid-run (socket EOF, worker death) is the
+//! paper's erasure case: the master degrades it to parity-only coverage —
+//! its gradients are simply never gathered again — rather than waiting on
+//! it each epoch. The uncoded baseline's wait-for-all gather likewise
+//! shrinks to the surviving fleet instead of hanging.
 //!
 //! This is the deployment-shaped path: it demonstrates that the epoch
 //! logic (deadline gather + Eq. 18/19 assembly) is driven by real message
-//! arrival, not by simulator bookkeeping. The DES coordinator remains the
+//! arrival, not simulator bookkeeping. The DES coordinator remains the
 //! source of the paper's figures (its virtual clock is exact), but both
-//! backends now build the §III-A setup phase from the same
-//! [`Session`] and report the same [`RunResult`] vocabulary, so
-//! `cfl sweep --live` renders live grids with the sim reports unchanged.
+//! backends build the §III-A setup phase from the same [`Session`] and
+//! report the same [`RunResult`], so `cfl sweep --live` renders live
+//! grids with the sim reports unchanged.
 
 use super::core::{Coordinator, RunResult, Session};
 use crate::coding::CompositeParity;
@@ -21,9 +43,9 @@ use crate::config::ExperimentConfig;
 use crate::fl::{assemble_coded_gradient, GlobalModel, GradBackend, NativeBackend};
 use crate::lb::LoadPolicy;
 use crate::linalg::Mat;
+use crate::rng::mix_seed;
+use crate::transport::{ChannelTransport, DeviceInit, Event, FromDevice, ToDevice, Transport};
 use anyhow::Result;
-use std::sync::mpsc;
-use std::thread;
 use std::time::{Duration, Instant};
 
 /// Ceiling on any single scaled sleep/deadline, keeping demos snappy even
@@ -31,37 +53,57 @@ use std::time::{Duration, Instant};
 const MAX_SCALED_SECS: f64 = 0.25;
 
 /// Wall-clock cap on an uncoded wait-for-all gather (only reached if a
-/// device worker dies mid-run).
+/// device endpoint dies without its transport noticing).
 const WAIT_ALL_TIMEOUT: Duration = Duration::from_secs(30);
 
-enum ToDevice {
-    /// (epoch, β) — compute and reply.
-    Model(usize, Mat),
-    Stop,
-}
+/// Ping/echo round trips per device in the calibration handshake.
+const CALIBRATION_ROUNDS: usize = 3;
 
-struct FromDevice {
-    epoch: usize,
-    grad: Mat,
-    /// The §II-A delay this reply simulated (uncapped), simulated seconds.
-    delay: f64,
-}
+/// Wait cap on a single calibration pong.
+const CALIBRATION_TIMEOUT: Duration = Duration::from_millis(500);
 
-/// Threaded master/worker training loop over a shared [`Session`].
+/// Calibrated grace = worst observed RTT × this headroom factor …
+const GRACE_HEADROOM: u32 = 8;
+
+/// … clamped into this wall-clock band.
+const GRACE_FLOOR: Duration = Duration::from_millis(2);
+const GRACE_CEIL: Duration = Duration::from_millis(250);
+
+/// Master/worker training loop over a shared [`Session`] and a pluggable
+/// [`Transport`].
 pub struct LiveCoordinator {
     session: Session,
     /// Simulated-seconds → wall-seconds factor (e.g. 1e-3 runs a 5 s
     /// simulated deadline as 5 ms of real sleep).
     pub time_scale: f64,
-    /// Fixed wall-clock grace added to every epoch deadline to absorb the
-    /// *host's* overheads (thread wakeup, channel hop, the real gradient
-    /// GEMM) which exist on top of the simulated delays being slept out.
-    pub grace: Duration,
+    /// Wall-clock grace added to every epoch deadline to absorb the
+    /// *host's* overheads (thread wakeup, channel/socket hop, the real
+    /// gradient GEMM) which exist on top of the simulated delays being
+    /// slept out. `None` (the default) auto-calibrates it per run from
+    /// the ping/echo handshake; `Some` pins it.
+    pub grace: Option<Duration>,
+    transport: Box<dyn Transport>,
+    /// Run counter: tags every `Setup`/`Grad` so stragglers from a
+    /// finished run can never pollute the next one.
+    runs: u64,
 }
 
 impl LiveCoordinator {
-    /// Build the coordinator over a fresh [`Session`] for `cfg`.
+    /// Build the coordinator over a fresh [`Session`] for `cfg`, with the
+    /// default in-process [`ChannelTransport`] (one thread per device).
     pub fn new(cfg: &ExperimentConfig, time_scale: f64) -> Result<Self> {
+        let transport = Box::new(ChannelTransport::new(cfg.n_devices));
+        Self::with_transport(cfg, time_scale, transport)
+    }
+
+    /// Build the coordinator over an already-established transport (e.g.
+    /// a [`crate::transport::TcpTransport`] whose devices have connected).
+    /// The transport must expose exactly one endpoint per fleet device.
+    pub fn with_transport(
+        cfg: &ExperimentConfig,
+        time_scale: f64,
+        transport: Box<dyn Transport>,
+    ) -> Result<Self> {
         anyhow::ensure!(
             time_scale.is_finite() && time_scale > 0.0,
             "time_scale must be a positive finite factor"
@@ -75,7 +117,13 @@ impl LiveCoordinator {
              (client_fraction = {}); use the sim backend",
             cfg.client_fraction
         );
-        Ok(Self { session: Session::new(cfg)?, time_scale, grace: Duration::from_millis(8) })
+        anyhow::ensure!(
+            transport.n_endpoints() == cfg.n_devices,
+            "transport has {} endpoint(s) for a {}-device fleet",
+            transport.n_endpoints(),
+            cfg.n_devices
+        );
+        Ok(Self { session: Session::new(cfg)?, time_scale, grace: None, transport, runs: 0 })
     }
 
     /// The shared problem instance (config, fleet, dataset, shards).
@@ -96,13 +144,13 @@ impl LiveCoordinator {
     }
 
     /// Run the live uncoded baseline: full shards, no parity, the master
-    /// waits for every device's gradient each epoch.
+    /// waits for every (surviving) device's gradient each epoch.
     pub fn train_uncoded(&mut self) -> Result<RunResult> {
         let policy = LoadPolicy::uncoded(&self.session.fleet);
         self.run_with(&policy, false)
     }
 
-    /// The shared master/worker loop. `coded` selects the §III-A setup +
+    /// The shared master/fleet loop. `coded` selects the §III-A setup +
     /// deadline gather; uncoded runs full shards with a wait-for-all
     /// gather (and no setup offset).
     fn run_with(&mut self, policy: &LoadPolicy, coded: bool) -> Result<RunResult> {
@@ -110,19 +158,22 @@ impl LiveCoordinator {
         let started = Instant::now();
         let mut rng = self.session.run_rng();
         let mut backend = NativeBackend;
+        self.runs += 1;
+        let run_id = self.runs;
+        let scale = self.time_scale;
 
         // --- setup phase: shared Session construction ---------------------
-        // (device index, x_sys, y_sys, load) — zero-load devices are fully
-        // punctured and get no worker, mirroring the DES backend's skip
-        type WorkerState = (usize, Mat, Mat, usize);
-        let (worker_states, composite, setup_secs, parity_bits): (
-            Vec<WorkerState>,
+        // zero-load devices are fully punctured and sit the run out,
+        // mirroring the DES backend's skip
+        type Frozen = (usize, Mat, Mat, usize);
+        let (frozen, composite, setup_secs, parity_bits): (
+            Vec<Frozen>,
             Option<CompositeParity>,
             f64,
             f64,
         ) = if coded {
             let setup = self.session.build_setup(policy, &mut backend, &mut rng)?;
-            let devices: Vec<WorkerState> = setup
+            let devices: Vec<Frozen> = setup
                 .devices
                 .into_iter()
                 .enumerate()
@@ -131,7 +182,7 @@ impl LiveCoordinator {
                 .collect();
             (devices, Some(setup.composite), setup.setup_secs, setup.parity_upload_bits)
         } else {
-            let devices: Vec<WorkerState> = self
+            let devices: Vec<Frozen> = self
                 .session
                 .shards
                 .iter()
@@ -145,45 +196,43 @@ impl LiveCoordinator {
         let d = cfg.model_dim;
         let m = self.session.fleet.total_points();
         let c = policy.parity_rows;
-        let scale = self.time_scale;
 
-        // --- spawn device workers ----------------------------------------
-        let (to_master, from_devices) = mpsc::channel::<FromDevice>();
-        let mut to_devices = Vec::new();
-        let mut handles = Vec::new();
-        for (i, x_sys, y_sys, load) in worker_states {
-            let (tx, rx) = mpsc::channel::<ToDevice>();
-            to_devices.push(tx);
-            let master_tx = to_master.clone();
-            let profile = self.session.fleet.devices[i];
-            // split() keys on the device index alone, so skipping punctured
-            // devices doesn't shift anyone else's stream
-            let mut dev_rng = rng.split(0xD0_0000 + i as u64);
-            handles.push(thread::spawn(move || {
-                let mut be = NativeBackend;
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        ToDevice::Stop => break,
-                        ToDevice::Model(epoch, beta) => {
-                            let grad = be
-                                .partial_grad(&x_sys, &beta, &y_sys)
-                                .expect("device gradient");
-                            // sleep out the simulated delay (compute+link)
-                            let delay = profile.sample_total_delay(load, &mut dev_rng);
-                            thread::sleep(Duration::from_secs_f64(
-                                (delay * scale).min(MAX_SCALED_SECS),
-                            ));
-                            // master may have dropped the channel at stop
-                            let _ = master_tx.send(FromDevice { epoch, grad, delay });
-                        }
-                    }
-                }
-            }));
+        // --- arm the fleet ------------------------------------------------
+        // delay-stream seeds key on the device index alone (drawn after
+        // the setup phase so the §III-A rng draws stay aligned with the
+        // sim backend), so skipping punctured devices doesn't shift
+        // anyone else's stream
+        let seed_base = rng.next_u64();
+        let inits: Vec<DeviceInit> = frozen
+            .into_iter()
+            .map(|(i, x_sys, y_sys, load)| DeviceInit {
+                run: run_id,
+                device_index: i,
+                load,
+                delay_seed: mix_seed(seed_base, i as u64),
+                time_scale: scale,
+                max_scaled_secs: MAX_SCALED_SECS,
+                profile: self.session.fleet.devices[i],
+                x_sys,
+                y_sys,
+            })
+            .collect();
+        let active: Vec<usize> = inits.iter().map(|init| init.device_index).collect();
+        anyhow::ensure!(!active.is_empty(), "no device carries a positive load");
+        let n_endpoints = self.transport.n_endpoints();
+        let mut alive = vec![false; n_endpoints];
+        for &slot in &active {
+            alive[slot] = true;
         }
-        drop(to_master);
+        self.transport.begin_run(inits)?;
 
-        // --- epoch loop ----------------------------------------------------
-        let n_workers = to_devices.len();
+        // --- deadline calibration -----------------------------------------
+        let grace = match self.grace {
+            Some(g) => g,
+            None => calibrate_grace(self.transport.as_mut(), &active, &mut alive),
+        };
+
+        // --- epoch loop ---------------------------------------------------
         let mut model = GlobalModel::zeros(d, cfg.learning_rate, m);
         let label = if coded {
             format!("live cfl δ={:.3}", policy.delta)
@@ -196,8 +245,7 @@ impl LiveCoordinator {
             model.nmse(&self.session.dataset.beta_star),
         );
         let deadline_wall = if coded {
-            Duration::from_secs_f64((policy.epoch_deadline * scale).min(MAX_SCALED_SECS))
-                + self.grace
+            Duration::from_secs_f64((policy.epoch_deadline * scale).min(MAX_SCALED_SECS)) + grace
         } else {
             WAIT_ALL_TIMEOUT
         };
@@ -209,11 +257,26 @@ impl LiveCoordinator {
 
         for epoch in 0..cfg.max_epochs {
             let epoch_start = Instant::now();
-            for tx in &to_devices {
-                // a worker that panicked would sever its channel; surface that
-                tx.send(ToDevice::Model(epoch, model.beta.clone()))
-                    .map_err(|_| anyhow::anyhow!("device worker died"))?;
+            // broadcast to the surviving fleet (one message, serialized
+            // once by the transport); a failed delivery is this epoch's
+            // discovery that an endpoint died
+            let mut sent_to = vec![false; n_endpoints];
+            let mut pending = 0usize;
+            let msg = ToDevice::Model { epoch, beta: model.beta.clone() };
+            let targets: Vec<usize> = active.iter().copied().filter(|&s| alive[s]).collect();
+            let delivered = self.transport.broadcast(&targets, &msg)?;
+            for (&slot, ok) in targets.iter().zip(delivered) {
+                if ok {
+                    sent_to[slot] = true;
+                    pending += 1;
+                } else {
+                    alive[slot] = false;
+                }
             }
+            anyhow::ensure!(
+                coded || pending > 0,
+                "every device endpoint is gone; uncoded FL cannot proceed"
+            );
             // master computes the parity gradient while devices work
             let parity = match &composite {
                 Some(cp) => Some(backend.parity_grad(&cp.xt, &model.beta, &cp.yt, c)?),
@@ -221,37 +284,55 @@ impl LiveCoordinator {
             };
 
             // anchor the gather window *after* the parity GEMM: the grace
-            // budget covers channel/wakeup overheads, not the master's own
-            // compute, which at paper scale can exceed the whole window
+            // budget covers transport/wakeup overheads, not the master's
+            // own compute, which at paper scale can exceed the window
             let epoch_deadline = Instant::now() + deadline_wall;
+            let sent = pending;
+            let mut replied = vec![false; n_endpoints];
             let mut grads: Vec<Mat> = Vec::new();
             let mut slowest_delay = 0.0f64;
-            loop {
-                // uncoded: stop as soon as everyone reported (wait-for-all)
-                if !coded && grads.len() == n_workers {
-                    break;
-                }
+            while pending > 0 {
                 let t = Instant::now();
                 if t >= epoch_deadline {
                     break;
                 }
-                match from_devices.recv_timeout(epoch_deadline - t) {
-                    Ok(msg) if msg.epoch == epoch => {
-                        grads.push(msg.grad);
-                        slowest_delay = slowest_delay.max(msg.delay);
-                        on_time += 1;
+                match self.transport.recv_timeout(epoch_deadline - t) {
+                    Event::Msg(slot, FromDevice::Grad { run, epoch: e, grad, delay }) => {
+                        // stragglers from a previous epoch/run were already
+                        // counted late when their gather closed; discard
+                        if run == run_id && e == epoch && sent_to[slot] && !replied[slot] {
+                            replied[slot] = true;
+                            pending -= 1;
+                            grads.push(grad);
+                            slowest_delay = slowest_delay.max(delay);
+                            on_time += 1;
+                        }
                     }
-                    // straggler from a previous epoch — already counted
-                    // late when its own epoch closed; just discard it
-                    Ok(_) => {}
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    // stray Hello/Pong: nothing to do mid-epoch
+                    Event::Msg(_, _) => {}
+                    Event::Gone(slot) => {
+                        // mid-epoch disconnect: degrade this device to
+                        // parity-only coverage instead of waiting on it
+                        if alive[slot] {
+                            alive[slot] = false;
+                            if sent_to[slot] && !replied[slot] {
+                                pending -= 1;
+                            }
+                        }
+                    }
+                    Event::Timeout => break,
+                    Event::Closed => {
+                        for &slot in &active {
+                            alive[slot] = false;
+                        }
+                        break;
+                    }
                 }
             }
             // same semantics as the DES backend: every broadcast gradient
-            // that missed this epoch's gather is late, whether or not its
-            // message ever surfaces
-            late += (n_workers - grads.len()) as u64;
+            // that missed this epoch's gather is late, whether it was slow,
+            // lost, or its endpoint died mid-flight
+            late += (sent - grads.len()) as u64;
             let refs: Vec<&Mat> = grads.iter().collect();
             let grad = assemble_coded_gradient(d, parity.as_ref(), &refs);
             model.apply_gradient(&grad);
@@ -259,7 +340,7 @@ impl LiveCoordinator {
             // simulated-second axis, matching the DES backend's accounting:
             // a coded epoch lasts exactly t* (deadline-gated), an uncoded
             // epoch lasts as long as its slowest device's *modeled* delay —
-            // host overheads (grace, the sleep cap, thread wakeups) stay
+            // host overheads (grace, the sleep cap, transport hops) stay
             // out of the trace and are visible in wall_secs instead
             let epoch_secs = if coded {
                 policy.epoch_deadline
@@ -278,15 +359,7 @@ impl LiveCoordinator {
             }
         }
 
-        for tx in &to_devices {
-            let _ = tx.send(ToDevice::Stop);
-        }
-        // drain so workers blocked on send can exit, then join (these
-        // stragglers were already counted late when their epochs closed)
-        while from_devices.try_recv().is_ok() {}
-        for h in handles {
-            let _ = h.join();
-        }
+        self.transport.end_run();
 
         Ok(RunResult {
             label,
@@ -304,6 +377,71 @@ impl LiveCoordinator {
             late_gradients: late,
         })
     }
+}
+
+/// The calibration handshake: a few ping/echo round trips per active
+/// device; the worst observed RTT — which prices the *transport's* full
+/// hop (thread wakeup + channel, or socket + scheduler) under the host's
+/// current load — times a headroom factor becomes the grace budget,
+/// clamped to a sane band. Endpoints that die during calibration — or
+/// never answer a single ping (a silently-partitioned socket whose
+/// writes still land in the kernel buffer) — are marked dead in `alive`
+/// so the epoch loop degrades them instead of stalling on them.
+fn calibrate_grace(
+    transport: &mut dyn Transport,
+    active: &[usize],
+    alive: &mut [bool],
+) -> Duration {
+    let mut max_rtt = Duration::ZERO;
+    for (j, &slot) in active.iter().enumerate() {
+        let mut ponged = false;
+        for round in 0..CALIBRATION_ROUNDS {
+            if !alive[slot] {
+                break;
+            }
+            let nonce = (j * CALIBRATION_ROUNDS + round) as u64;
+            let sent_at = Instant::now();
+            match transport.send(slot, &ToDevice::Ping { nonce }) {
+                Ok(true) => {}
+                _ => {
+                    alive[slot] = false;
+                    break;
+                }
+            }
+            let deadline = sent_at + CALIBRATION_TIMEOUT;
+            loop {
+                let t = Instant::now();
+                if t >= deadline {
+                    break;
+                }
+                match transport.recv_timeout(deadline - t) {
+                    Event::Msg(s, FromDevice::Pong { nonce: n }) if s == slot && n == nonce => {
+                        max_rtt = max_rtt.max(sent_at.elapsed());
+                        ponged = true;
+                        break;
+                    }
+                    // stale replies from an earlier run: discard
+                    Event::Msg(_, _) => {}
+                    Event::Gone(s) => {
+                        if let Some(flag) = alive.get_mut(s) {
+                            *flag = false;
+                        }
+                        if s == slot {
+                            break;
+                        }
+                    }
+                    Event::Timeout | Event::Closed => break,
+                }
+            }
+        }
+        // a healthy endpoint answers a ping in far less than the round
+        // timeout; total silence means the link is gone even if writes
+        // still "succeed" (no FIN/RST ever arrived)
+        if !ponged {
+            alive[slot] = false;
+        }
+    }
+    (max_rtt * GRACE_HEADROOM).clamp(GRACE_FLOOR, GRACE_CEIL)
 }
 
 impl Coordinator for LiveCoordinator {

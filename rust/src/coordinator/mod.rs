@@ -11,11 +11,14 @@
 //!   §II-A's models and fed through the DES queue; gradients are computed
 //!   for real (PJRT artifacts or native). All five figures come from this
 //!   path, deterministically per seed.
-//! * [`LiveCoordinator`] — real concurrency: one `std::thread` per device,
-//!   channels to the master, wall-clock deadlines scaled down from the
-//!   policy. Demonstrates that the coordination logic is not
+//! * [`LiveCoordinator`] — real concurrency over a pluggable
+//!   [`crate::transport`]: one worker thread per device on in-process
+//!   channels by default, or one OS process per device over TCP
+//!   (`cfl serve` / `cfl device`). Wall-clock deadlines are scaled down
+//!   from the policy and auto-calibrated against the transport's real
+//!   round-trip overhead. Demonstrates that the coordination logic is not
 //!   simulation-bound (see `examples/live_cluster.rs`), and runs scenario
-//!   grids via `cfl sweep --live`.
+//!   grids via `cfl sweep --live [--transport tcp]`.
 
 pub mod core;
 mod live;

@@ -200,7 +200,11 @@ fn sim_and_live_share_the_session_state() {
 fn coordinator_kind_builds_both_backends() {
     let mut cfg = live_cfg();
     cfg.max_epochs = 10;
-    for kind in [CoordinatorKind::Sim, CoordinatorKind::Live { time_scale: 1e-4 }] {
+    let live = CoordinatorKind::Live {
+        time_scale: 1e-4,
+        transport: crate::transport::TransportKind::Channel,
+    };
+    for kind in [CoordinatorKind::Sim, live] {
         let mut coord = kind.build(&cfg).unwrap();
         assert_eq!(coord.kind(), kind.tag());
         let policy = coord.policy().unwrap();
@@ -208,6 +212,150 @@ fn coordinator_kind_builds_both_backends() {
         let run = coord.train_cfl().unwrap();
         assert_eq!(run.epoch_times.len(), 10, "{} ran short", kind.tag());
         assert!(run.trace.points.len() == 11);
+    }
+}
+
+// ---------------------------------------------------------------------
+// transport-generic behavior (TCP legs skip silently where the sandbox
+// denies loopback bind)
+
+fn loopback() -> Option<std::net::TcpListener> {
+    match std::net::TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => Some(l),
+        Err(e) => {
+            eprintln!("skipping TCP coordinator test: loopback bind denied ({e})");
+            None
+        }
+    }
+}
+
+#[test]
+fn tcp_and_channel_transports_reach_the_same_trajectory() {
+    use crate::transport::{run_device, TcpTransport};
+    use std::time::Duration;
+
+    let Some(listener) = loopback() else { return };
+    let cfg = live_cfg(); // target 0: both runs last exactly max_epochs
+    // pin a generous grace so no gradient straggles on either wire —
+    // then both transports gather the same per-epoch reply sets and the
+    // trajectories may differ only by float summation order
+    let grace = Some(Duration::from_millis(250));
+
+    let mut chan = LiveCoordinator::new(&cfg, 1e-6).unwrap();
+    chan.grace = grace;
+    let a = chan.train_cfl().unwrap();
+
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut devices = Vec::new();
+    for id in 0..cfg.n_devices {
+        let addr = addr.clone();
+        devices.push(std::thread::spawn(move || {
+            run_device(&addr, id, Duration::from_secs(5))
+        }));
+    }
+    let tcp = TcpTransport::serve(listener, cfg.n_devices, Duration::from_secs(5)).unwrap();
+    let mut live = LiveCoordinator::with_transport(&cfg, 1e-6, Box::new(tcp)).unwrap();
+    live.grace = grace;
+    let b = live.train_cfl().unwrap();
+    drop(live); // Shutdown: device processes (threads here) exit
+    for h in devices {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(a.trace.points.len(), b.trace.points.len(), "trajectory lengths diverge");
+    for (pa, pb) in a.trace.points.iter().zip(&b.trace.points) {
+        // the simulated-time axis is deadline-gated: exactly equal
+        assert_eq!(pa.time_s, pb.time_s);
+        assert_eq!(pa.epoch, pb.epoch);
+        let tol = 1e-3 * pa.nmse.abs().max(1e-12);
+        assert!(
+            (pa.nmse - pb.nmse).abs() <= tol,
+            "epoch {}: chan NMSE {:.6e} vs tcp NMSE {:.6e}",
+            pa.epoch,
+            pa.nmse,
+            pb.nmse
+        );
+    }
+    assert_eq!(a.on_time_gradients, b.on_time_gradients, "reply sets diverged");
+}
+
+#[test]
+fn mid_run_disconnect_degrades_instead_of_hanging() {
+    use crate::fl::GradBackend;
+    use crate::transport::frame::{
+        decode_to_device, encode_from_device, read_frame, write_frame, PROTOCOL_VERSION,
+    };
+    use crate::transport::{run_device, FromDevice, TcpTransport, ToDevice};
+    use std::time::{Duration, Instant};
+
+    let Some(listener) = loopback() else { return };
+    let mut cfg = live_cfg();
+    cfg.max_epochs = 8;
+    let addr = listener.local_addr().unwrap().to_string();
+
+    // three well-behaved devices …
+    let mut devices = Vec::new();
+    for id in 0..cfg.n_devices - 1 {
+        let addr = addr.clone();
+        devices.push(std::thread::spawn(move || {
+            run_device(&addr, id, Duration::from_secs(5))
+        }));
+    }
+    // … and one that answers two epochs, then drops its socket mid-run
+    let dropper_id = cfg.n_devices - 1;
+    let dropper = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        let hello =
+            FromDevice::Hello { device_id: dropper_id, protocol: PROTOCOL_VERSION };
+        write_frame(&mut s, &encode_from_device(&hello)).unwrap();
+        let mut state: Option<(crate::linalg::Mat, crate::linalg::Mat, u64)> = None;
+        let mut replies = 0u32;
+        while let Some(payload) = read_frame(&mut s).unwrap() {
+            match decode_to_device(&payload).unwrap() {
+                ToDevice::Setup(init) => state = Some((init.x_sys, init.y_sys, init.run)),
+                ToDevice::Ping { nonce } => {
+                    write_frame(&mut s, &encode_from_device(&FromDevice::Pong { nonce }))
+                        .unwrap();
+                }
+                ToDevice::Model { epoch, beta } => {
+                    if replies >= 2 {
+                        return; // disconnect: socket closes mid-gather
+                    }
+                    replies += 1;
+                    let (x, y, run) = state.as_ref().unwrap();
+                    let grad = NativeBackend.partial_grad(x, &beta, y).unwrap();
+                    let msg = FromDevice::Grad { run: *run, epoch, grad, delay: 1e-6 };
+                    write_frame(&mut s, &encode_from_device(&msg)).unwrap();
+                }
+                ToDevice::Stop => state = None,
+                ToDevice::Shutdown => return,
+            }
+        }
+    });
+
+    let tcp = TcpTransport::serve(listener, cfg.n_devices, Duration::from_secs(5)).unwrap();
+    let mut live = LiveCoordinator::with_transport(&cfg, 1e-6, Box::new(tcp)).unwrap();
+    live.grace = Some(Duration::from_millis(100));
+    let started = Instant::now();
+    // the uncoded gather is wait-for-all: without disconnect degradation
+    // it would stall WAIT_ALL_TIMEOUT (30 s) on every epoch after the drop
+    let run = live.train_uncoded().unwrap();
+    assert_eq!(run.epoch_times.len(), cfg.max_epochs);
+    assert!(
+        started.elapsed() < Duration::from_secs(20),
+        "gather hung on the disconnected device"
+    );
+    // the dead device's broadcast gradient went late exactly once; the
+    // survivors kept reporting every epoch
+    assert!(run.late_gradients >= 1, "the dropped gradient must count late");
+    assert!(
+        run.on_time_gradients >= ((cfg.n_devices - 1) * cfg.max_epochs) as u64,
+        "survivors stopped being gathered after the disconnect"
+    );
+    drop(live);
+    dropper.join().unwrap();
+    for h in devices {
+        h.join().unwrap().unwrap();
     }
 }
 

@@ -40,11 +40,15 @@
 //! `cfl sweep --axis nu_comp=0,0.1,0.2 --axis nu_link=0,0.1,0.2`.
 //!
 //! Both training backends — the DES-driven [`coordinator::SimCoordinator`]
-//! and the threaded [`coordinator::LiveCoordinator`] — build their setup
-//! phase from the shared [`coordinator::Session`] and implement the
+//! and the [`coordinator::LiveCoordinator`] — build their setup phase
+//! from the shared [`coordinator::Session`] and implement the
 //! [`coordinator::Coordinator`] trait, so the sweep runner drives either:
-//! `cfl sweep --live` runs the same grid on the live cluster. See
-//! `docs/ARCHITECTURE.md` for the crate map and the paper-equation index.
+//! `cfl sweep --live` runs the same grid on the live cluster. The live
+//! fleet itself speaks a pluggable [`transport`] — in-process channel
+//! threads by default, or TCP sockets so devices are real OS processes
+//! (`cfl serve` / `cfl device`, or `cfl sweep --live --transport tcp`).
+//! See `docs/ARCHITECTURE.md` for the crate map, the wire format, and
+//! the paper-equation index.
 
 pub mod cli;
 pub mod coding;
@@ -62,3 +66,4 @@ pub mod simnet;
 pub mod stats;
 pub mod sweep;
 pub mod testing;
+pub mod transport;

@@ -8,20 +8,29 @@
 //! * `sweep`    — expand a scenario grid (INI `[sweep]` section and/or
 //!   repeated `--axis key=v1,v2,…`) and run it on a worker pool; writes
 //!   per-scenario CSV and an aggregate coding-gain report. `--live`
-//!   drives every scenario through the threaded live coordinator instead
-//!   of the DES backend.
+//!   drives every scenario through the live coordinator instead of the
+//!   DES backend (`--transport tcp` spawns real device subprocesses per
+//!   scenario); `--bench-out` adds the compact CI bench report.
 //! * `live`     — run the threaded live-cluster demo.
+//! * `serve`    — TCP coordinator: bind, wait for `cfl device` processes
+//!   to connect, train, report.
+//! * `device`   — TCP device worker: connect to a `cfl serve` master and
+//!   compute partial gradients until the session shuts down.
+//! * `bench-check` — compare a bench/sweep JSON report against a
+//!   committed baseline and fail on coding-gain regressions (CI).
 //!
 //! Configuration: paper-scale defaults (`--paper`) or test-scale
 //! (`--small`, default), overridable by an INI file (`--config`) and then
 //! by individual flags.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 use cfl::cli::{Parsed, Parser};
 use cfl::config::{ExperimentConfig, Ini};
 use cfl::coordinator::{CoordinatorKind, LiveCoordinator, SimCoordinator};
 use cfl::metrics::Table;
 use cfl::sweep::{self, ScenarioGrid, SweepOptions};
+use cfl::transport::{run_device, TcpTransport, TransportKind};
+use std::time::Duration;
 
 fn parser() -> Parser {
     Parser::new("cfl — Coded Federated Learning (Dhakal et al., GLOBECOM'19 Workshops)")
@@ -29,22 +38,37 @@ fn parser() -> Parser {
         .subcommand("optimize", "print the load/redundancy policy (Eqs. 13-16)")
         .subcommand("sweep", "run a scenario grid in parallel and report coding gains")
         .subcommand("live", "threaded live-cluster demo")
+        .subcommand("serve", "TCP coordinator: bind, wait for devices, train")
+        .subcommand("device", "TCP device worker: join a cfl serve coordinator")
+        .subcommand("bench-check", "compare a bench report against a committed baseline")
         .opt("config", "file.ini", "INI config file ([experiment] + [sweep] sections)")
         .opt("seed", "u64", "root seed (default from config)")
         .opt("delta", "f64|auto", "coding redundancy δ = c/m (default: optimizer)")
         .opt("nu-comp", "f64", "compute heterogeneity in [0,1)")
         .opt("nu-link", "f64", "link heterogeneity in [0,1)")
+        .opt("devices", "usize", "fleet size n_devices (default from config)")
         .opt("epochs", "usize", "max training epochs")
         .opt("target-nmse", "f64", "stopping NMSE")
         .opt("artifacts", "dir", "PJRT artifacts directory (default: native backend)")
         .opt("out", "dir", "output directory for CSV traces (default: results)")
-        .opt("time-scale", "f64", "live/sweep --live: simulated→wall seconds factor")
+        .opt("time-scale", "f64", "live/serve/sweep --live: simulated→wall seconds factor")
         .opt("axis", "key=v1,v2,..", "sweep: add a grid axis (repeatable)")
         .opt("workers", "usize", "sweep: worker threads (default: all cores)")
-        .flag("live", "sweep: run scenarios through the threaded live coordinator")
+        .opt("transport", "chan|tcp", "sweep --live: device transport (default chan)")
+        .opt("bench-out", "file.json", "sweep: also write the compact CI bench report")
+        .opt("bind", "addr", "serve: listen address (default 127.0.0.1:7070; :0 = any port)")
+        .opt("port-file", "path", "serve: write the bound address to this file")
+        .opt("check-nmse", "f64", "serve: exit nonzero unless the final CFL NMSE ≤ this")
+        .opt("connect", "addr", "device: coordinator address to join")
+        .opt("id", "usize", "device: fleet slot to claim (default 0)")
+        .opt("report", "file.json", "bench-check: current report (default BENCH_ci.json)")
+        .opt("baseline", "file.json", "bench-check: baseline (default bench/baseline.json)")
+        .opt("tolerance", "f64", "bench-check: allowed fractional gain drop (default 0.2)")
+        .flag("live", "sweep: run scenarios through the live coordinator")
+        .flag("probe", "serve: just test that the address can be bound, then exit")
         .flag("paper", "use the paper's §IV scale (24 devices, d=500)")
-        .flag("skip-uncoded", "train/sweep: skip the uncoded baseline")
-        .flag("quiet", "suppress trace files / sweep progress")
+        .flag("skip-uncoded", "train/serve/sweep: skip the uncoded baseline")
+        .flag("quiet", "suppress trace files / sweep progress / device chatter")
 }
 
 /// Parse `--config` once; callers that need other sections (sweep) reuse
@@ -69,6 +93,7 @@ fn build_config_with(args: &cfl::cli::Args, ini: Option<&Ini>) -> Result<Experim
     }
     cfg.nu_comp = args.get_or("nu-comp", cfg.nu_comp)?;
     cfg.nu_link = args.get_or("nu-link", cfg.nu_link)?;
+    cfg.n_devices = args.get_or("devices", cfg.n_devices)?;
     cfg.max_epochs = args.get_or("epochs", cfg.max_epochs)?;
     cfg.target_nmse = args.get_or("target-nmse", cfg.target_nmse)?;
     if let Some(dir) = args.get("artifacts") {
@@ -179,8 +204,18 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
          section to --config"
     );
 
+    let transport = match args.get("transport") {
+        Some(spec) => {
+            anyhow::ensure!(
+                args.has_flag("live"),
+                "--transport only applies to --live sweeps (the sim backend has no wire)"
+            );
+            TransportKind::parse(spec)?
+        }
+        None => TransportKind::Channel,
+    };
     let backend = if args.has_flag("live") {
-        CoordinatorKind::Live { time_scale: args.get_or("time-scale", 1e-3)? }
+        CoordinatorKind::Live { time_scale: args.get_or("time-scale", 1e-3)?, transport }
     } else {
         CoordinatorKind::Sim
     };
@@ -225,6 +260,10 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     sweep::write_scenario_csv(&csv_path, &grid, &outcomes)?;
     let json_path = format!("{out_dir}/sweep_report.json");
     sweep::write_json(&json_path, &grid, &outcomes)?;
+    if let Some(bench_path) = args.get("bench-out") {
+        sweep::write_bench_json(bench_path, &outcomes)?;
+        eprintln!("bench report written to {bench_path}");
+    }
 
     println!("{}", sweep::summary_table(&outcomes).render());
     if let Some(matrix) = sweep::gain_matrix(&grid, &outcomes) {
@@ -268,6 +307,89 @@ fn cmd_live(args: &cfl::cli::Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &cfl::cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let bind = args.get("bind").unwrap_or("127.0.0.1:7070");
+    let listener =
+        std::net::TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+    let addr = listener.local_addr().context("reading the bound address")?;
+    if args.has_flag("probe") {
+        // smoke scripts use this to detect sandboxes that deny bind
+        println!("probe ok: {addr}");
+        return Ok(());
+    }
+    if let Some(path) = args.get("port-file") {
+        std::fs::write(path, format!("{addr}\n")).with_context(|| format!("writing {path}"))?;
+    }
+    let scale = args.get_or("time-scale", 1e-3)?;
+    println!(
+        "cfl serve: listening on {addr}, waiting for {} device(s) (cfl device --connect {addr} \
+         --id K)",
+        cfg.n_devices
+    );
+    let transport = TcpTransport::serve(listener, cfg.n_devices, Duration::from_secs(60))?;
+    let mut live = LiveCoordinator::with_transport(&cfg, scale, Box::new(transport))?;
+
+    let coded = live.train_cfl()?;
+    let report = |run: &cfl::coordinator::RunResult| {
+        println!(
+            "{}: epochs={} wall={:.2}s on-time={} late={} final NMSE={:.3e}",
+            run.label,
+            run.epoch_times.len(),
+            run.wall_secs,
+            run.on_time_gradients,
+            run.late_gradients,
+            run.trace.final_nmse().unwrap_or(f64::NAN)
+        );
+    };
+    report(&coded);
+    if !args.has_flag("skip-uncoded") {
+        let uncoded = live.train_uncoded()?;
+        report(&uncoded);
+        if let (Some(tc), Some(tu)) =
+            (coded.time_to(cfg.target_nmse), uncoded.time_to(cfg.target_nmse))
+        {
+            println!("coding gain at NMSE ≤ {:.1e}: {:.2}×", cfg.target_nmse, tu / tc);
+        }
+    }
+    if let Some(spec) = args.get("check-nmse") {
+        let cap: f64 = spec.parse().with_context(|| format!("--check-nmse '{spec}'"))?;
+        let got = coded.trace.final_nmse().unwrap_or(f64::NAN);
+        anyhow::ensure!(got <= cap, "final NMSE {got:.3e} above the required {cap:.3e}");
+        println!("check-nmse ok: {got:.3e} ≤ {cap:.3e}");
+    }
+    Ok(())
+}
+
+fn cmd_device(args: &cfl::cli::Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("cfl device needs --connect HOST:PORT"))?;
+    let id = args.get_or("id", 0usize)?;
+    let quiet = args.has_flag("quiet");
+    if !quiet {
+        eprintln!("cfl device {id}: connecting to {addr}");
+    }
+    run_device(addr, id, Duration::from_secs(10))?;
+    if !quiet {
+        eprintln!("cfl device {id}: session over; exiting");
+    }
+    Ok(())
+}
+
+fn cmd_bench_check(args: &cfl::cli::Args) -> Result<()> {
+    let report = args.get("report").unwrap_or("BENCH_ci.json");
+    let baseline = args.get("baseline").unwrap_or("bench/baseline.json");
+    let tolerance = args.get_or("tolerance", 0.2)?;
+    let current = std::fs::read_to_string(report).with_context(|| format!("reading {report}"))?;
+    let base =
+        std::fs::read_to_string(baseline).with_context(|| format!("reading {baseline}"))?;
+    let table = sweep::check_gain_regression(&base, &current, tolerance)?;
+    println!("bench-check ok ({report} vs {baseline}, tolerance {tolerance}):");
+    println!("{table}");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     // --help is a parse outcome, not a parser-side exit (see cli docs) —
     // rendering and terminating are this binary's decisions alone
@@ -283,6 +405,9 @@ fn main() -> Result<()> {
         Some("optimize") => cmd_optimize(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("live") => cmd_live(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("device") => cmd_device(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         _ => {
             println!("{}", parser().help("cfl"));
             Ok(())

@@ -1,0 +1,130 @@
+//! Bench-smoke baselines: a tiny gain report and its regression check.
+//!
+//! CI's `bench-smoke` job runs a small fixed sweep, writes the compact
+//! per-scenario report below (`BENCH_ci.json` — coding gain + wall time),
+//! and compares its gains against the committed `bench/baseline.json`
+//! with `cfl bench-check`, failing the build when a scenario's gain drops
+//! more than the tolerance (default 20%).
+//!
+//! There is deliberately no JSON parser dependency (the build is
+//! offline): [`parse_gains`] is a scanner for the two reports *this repo
+//! writes* — it keys on the `"id"`/`"gain"` fields that both the bench
+//! report and [`super::report::write_json`]'s scenario records emit, so a
+//! full sweep report works as a baseline too. It is not a general JSON
+//! reader and does not try to be.
+//!
+//! Wall times are recorded for eyeballing host drift but never gated on:
+//! CI runners are too noisy for a hard wall-clock threshold, while the
+//! coding gain is a simulated-time ratio — stable per seed.
+
+use super::runner::ScenarioOutcome;
+use anyhow::{bail, ensure, Context, Result};
+
+/// Write the compact bench report: one record per scenario with the
+/// coding gain (`null` when a run missed its target) and the host wall
+/// time the scenario took (coded + uncoded runs).
+pub fn write_bench_json(path: &str, outcomes: &[ScenarioOutcome]) -> Result<()> {
+    let mut s = String::from("{\n  \"scenarios\": [");
+    for (i, o) in outcomes.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let gain = o
+            .gain()
+            .filter(|g| g.is_finite())
+            .map(|g| g.to_string())
+            .unwrap_or_else(|| "null".into());
+        let mut wall = o.coded.wall_secs;
+        if let Some(u) = &o.uncoded {
+            wall += u.wall_secs;
+        }
+        s.push_str(&format!(
+            "\n    {{\"id\": \"{}\", \"backend\": \"{}\", \"gain\": {gain}, \
+             \"wall_s\": {:.3}}}",
+            o.scenario.id, o.backend, wall
+        ));
+    }
+    s.push_str("\n  ]\n}\n");
+    let path_ref = std::path::Path::new(path);
+    if let Some(dir) = path_ref.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("mkdir -p {dir:?}"))?;
+        }
+    }
+    std::fs::write(path_ref, s).with_context(|| format!("writing {path}"))
+}
+
+/// Scan a bench (or full sweep) report for `(scenario id, gain)` pairs.
+/// `gain: null` (target never reached) is preserved as `None`.
+pub fn parse_gains(json: &str) -> Result<Vec<(String, Option<f64>)>> {
+    let mut out = Vec::new();
+    let mut rest = json;
+    while let Some(at) = rest.find("\"id\": \"") {
+        let after = &rest[at + 7..];
+        let id_end = after.find('"').context("unterminated scenario id")?;
+        let id = &after[..id_end];
+        let tail = &after[id_end..];
+        let g = tail
+            .find("\"gain\": ")
+            .with_context(|| format!("scenario {id}: no gain field"))?;
+        let gtail = &tail[g + 8..];
+        let g_end = gtail.find(&[',', '}', '\n'][..]).unwrap_or(gtail.len());
+        let raw = gtail[..g_end].trim();
+        let gain = if raw == "null" {
+            None
+        } else {
+            Some(
+                raw.parse::<f64>()
+                    .map_err(|e| anyhow::anyhow!("scenario {id}: bad gain '{raw}': {e}"))?,
+            )
+        };
+        out.push((id.to_string(), gain));
+        rest = &gtail[g_end..];
+    }
+    Ok(out)
+}
+
+/// Compare a current report against a baseline: every baseline scenario
+/// with a recorded gain must appear in the current report with a gain of
+/// at least `baseline × (1 − tolerance)`. Returns the per-scenario
+/// comparison table on success; fails listing every regression.
+pub fn check_gain_regression(baseline: &str, current: &str, tolerance: f64) -> Result<String> {
+    ensure!(
+        (0.0..1.0).contains(&tolerance),
+        "tolerance must be a fraction in [0, 1), got {tolerance}"
+    );
+    let base = parse_gains(baseline)?;
+    ensure!(!base.is_empty(), "the baseline report contains no scenarios");
+    let current: std::collections::BTreeMap<String, Option<f64>> =
+        parse_gains(current)?.into_iter().collect();
+
+    let mut ok_lines = Vec::new();
+    let mut regressions = Vec::new();
+    for (id, bg) in &base {
+        let Some(bg) = bg else {
+            ok_lines.push(format!("{id}: no baseline gain recorded — skipped"));
+            continue;
+        };
+        let floor = bg * (1.0 - tolerance);
+        match current.get(id) {
+            None => regressions.push(format!("{id}: missing from the current report")),
+            Some(None) => regressions.push(format!(
+                "{id}: target never reached (baseline gain {bg:.2}×)"
+            )),
+            Some(Some(g)) if *g < floor => regressions.push(format!(
+                "{id}: gain {g:.2}× below the {floor:.2}× floor (baseline {bg:.2}×)"
+            )),
+            Some(Some(g)) => ok_lines
+                .push(format!("{id}: gain {g:.2}× (baseline {bg:.2}×, floor {floor:.2}×)")),
+        }
+    }
+    if regressions.is_empty() {
+        Ok(ok_lines.join("\n"))
+    } else {
+        bail!(
+            "coding-gain regression (tolerance {:.0}%):\n{}",
+            tolerance * 100.0,
+            regressions.join("\n")
+        );
+    }
+}

@@ -22,6 +22,9 @@
 //! * [`report`] — per-scenario CSV, coding-gain matrices, and a JSON
 //!   report, built on [`crate::metrics`]; a `backend` column keeps mixed
 //!   sim/live CSVs attributable.
+//! * [`baseline`] — the CI bench-smoke pipeline: a compact per-scenario
+//!   gain/wall-time report (`cfl sweep --bench-out`) and the regression
+//!   check against a committed baseline (`cfl bench-check`).
 //!
 //! [`Coordinator`]: crate::coordinator::Coordinator
 //!
@@ -49,10 +52,12 @@
 //!
 //! [`ExperimentConfig`]: crate::config::ExperimentConfig
 
+pub mod baseline;
 pub mod grid;
 pub mod report;
 pub mod runner;
 
+pub use baseline::{check_gain_regression, parse_gains, write_bench_json};
 pub use grid::{Axis, Scenario, ScenarioGrid, SWEEPABLE_KEYS};
 pub use report::{gain_matrix, gain_stats, summary_table, write_json, write_scenario_csv};
 pub use runner::{run_grid, run_scenarios, run_tasks, ScenarioOutcome, SweepOptions};

@@ -232,7 +232,10 @@ fn live_backend_runs_the_grid() {
         workers: 1,
         uncoded_baseline: true,
         progress: false,
-        backend: CoordinatorKind::Live { time_scale: 1e-4 },
+        backend: CoordinatorKind::Live {
+            time_scale: 1e-4,
+            transport: crate::transport::TransportKind::Channel,
+        },
     };
     let outcomes = run_grid(&grid, &opts).unwrap();
     assert_eq!(outcomes.len(), 2);
@@ -361,4 +364,79 @@ fn summary_table_renders_one_row_per_scenario() {
     // header + separator + 2 scenarios
     assert_eq!(rendered.lines().count(), 4, "{rendered}");
     assert!(rendered.contains("s0__nu=0"), "{rendered}");
+}
+
+// ---------------------------------------------------------------------
+// bench baseline pipeline
+
+#[test]
+fn bench_report_writes_and_parses_gains() {
+    // a grid tiny() can't converge on (target 0) still writes a report —
+    // with null gains — and the parser round-trips it
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0, 0.2]).unwrap();
+    let opts =
+        SweepOptions { workers: 1, uncoded_baseline: true, progress: false, ..Default::default() };
+    let outcomes = run_grid(&grid, &opts).unwrap();
+    let dir = std::env::temp_dir().join("cfl_bench_report");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_ci.json");
+    write_bench_json(path.to_str().unwrap(), &outcomes).unwrap();
+    let json = std::fs::read_to_string(&path).unwrap();
+    let gains = parse_gains(&json).unwrap();
+    assert_eq!(gains.len(), 2);
+    assert_eq!(gains[0].0, "s0__nu=0");
+    assert!(json.contains("\"wall_s\": "), "{json}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn parse_gains_reads_the_full_sweep_report_format_too() {
+    let json = r#"{
+  "axes": [
+    {"key": "nu", "values": ["0", "0.2"]}
+  ],
+  "scenarios": [
+    {"id": "s0__nu=0", "assignment": {"nu": "0"}, "backend": "sim", "seed": 99, "gain": 2.5, "comm_load": 1.1},
+    {"id": "s1__nu=0.2", "assignment": {"nu": "0.2"}, "backend": "sim", "seed": 99, "gain": null, "comm_load": null}
+  ],
+  "aggregate": {"scenarios": 2, "gains": 1, "best_scenario": "s0__nu=0"}
+}"#;
+    let gains = parse_gains(json).unwrap();
+    assert_eq!(gains.len(), 2);
+    assert_eq!(gains[0], ("s0__nu=0".to_string(), Some(2.5)));
+    assert_eq!(gains[1], ("s1__nu=0.2".to_string(), None));
+}
+
+#[test]
+fn gain_regression_check_passes_and_fails_correctly() {
+    let baseline = r#"{"scenarios": [
+    {"id": "a", "gain": 2.0, "wall_s": 1.0},
+    {"id": "b", "gain": 1.5, "wall_s": 1.0},
+    {"id": "c", "gain": null, "wall_s": 1.0}
+  ]}"#;
+    // within tolerance: a dipped 10% (< 20%), b improved, c has no baseline
+    let ok = r#"{"scenarios": [
+    {"id": "a", "gain": 1.8, "wall_s": 9.0},
+    {"id": "b", "gain": 1.9, "wall_s": 9.0},
+    {"id": "c", "gain": null, "wall_s": 9.0}
+  ]}"#;
+    let table = check_gain_regression(baseline, ok, 0.2).unwrap();
+    assert!(table.contains("a: gain 1.80"), "{table}");
+
+    // a regressed 40%: fails and names the scenario
+    let bad = r#"{"scenarios": [
+    {"id": "a", "gain": 1.2, "wall_s": 9.0},
+    {"id": "b", "gain": 1.9, "wall_s": 9.0}
+  ]}"#;
+    let err = check_gain_regression(baseline, bad, 0.2).unwrap_err().to_string();
+    assert!(err.contains("a: gain 1.20"), "{err}");
+    assert!(!err.contains("b: gain"), "b did not regress: {err}");
+
+    // a scenario vanishing from the report is a regression too
+    let missing = r#"{"scenarios": [{"id": "a", "gain": 2.0, "wall_s": 9.0}]}"#;
+    let err = check_gain_regression(baseline, missing, 0.2).unwrap_err().to_string();
+    assert!(err.contains("b: missing"), "{err}");
+
+    // garbage tolerance is rejected
+    assert!(check_gain_regression(baseline, ok, 1.5).is_err());
 }

@@ -1,0 +1,151 @@
+//! In-process transport: one worker thread per device, `mpsc` channels.
+//!
+//! This is the transport the live coordinator always used, factored out
+//! behind [`Transport`]. Workers are spawned once at construction and
+//! persist across runs (mirroring a TCP fleet's long-lived connections):
+//! each runs [`run_device_loop`] over a channel-backed [`DeviceLink`],
+//! so the device-side behavior is byte-for-byte the one a `cfl device`
+//! process exhibits — only the wire differs.
+
+use super::{
+    recv_event, run_device_loop, DeviceInit, DeviceLink, Event, FromDevice, ToDevice, Transport, Up,
+};
+use anyhow::Result;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+/// A device worker's end of the channel pair.
+struct ChannelLink {
+    slot: usize,
+    rx: mpsc::Receiver<ToDevice>,
+    up: mpsc::Sender<(usize, Up)>,
+}
+
+impl DeviceLink for ChannelLink {
+    fn recv(&mut self) -> Result<Option<ToDevice>> {
+        Ok(self.rx.recv().ok()) // a closed channel is a clean hang-up
+    }
+
+    fn send(&mut self, msg: FromDevice) -> Result<()> {
+        // the coordinator dropping its receiver mid-reply is a hang-up,
+        // not a device fault — swallow it and let the next recv() end us
+        let _ = self.up.send((self.slot, Up::Msg(msg)));
+        Ok(())
+    }
+}
+
+/// Threaded in-process fleet: `n` persistent device workers.
+pub struct ChannelTransport {
+    to_devices: Vec<Option<mpsc::Sender<ToDevice>>>,
+    up_rx: mpsc::Receiver<(usize, Up)>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ChannelTransport {
+    /// Spawn `n` device workers, all idle until their first `Setup`.
+    pub fn new(n: usize) -> Self {
+        let (up_tx, up_rx) = mpsc::channel::<(usize, Up)>();
+        let mut to_devices = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for slot in 0..n {
+            let (tx, rx) = mpsc::channel::<ToDevice>();
+            to_devices.push(Some(tx));
+            let up = up_tx.clone();
+            handles.push(thread::spawn(move || {
+                let mut link = ChannelLink { slot, rx, up };
+                if run_device_loop(&mut link).is_err() {
+                    // compute failure / protocol violation: report the
+                    // endpoint as gone so the gather degrades instead of
+                    // waiting out its deadline every epoch
+                    let _ = link.up.send((slot, Up::Gone));
+                }
+            }));
+        }
+        Self { to_devices, up_rx, handles }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn name(&self) -> &'static str {
+        "chan"
+    }
+
+    fn n_endpoints(&self) -> usize {
+        self.to_devices.len()
+    }
+
+    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<()> {
+        for init in inits {
+            let slot = init.device_index;
+            anyhow::ensure!(
+                slot < self.to_devices.len(),
+                "device index {slot} outside the {}-endpoint fleet",
+                self.to_devices.len()
+            );
+            // move the init into the worker's channel instead of going
+            // through send()'s msg.clone() — Setup carries the device's
+            // whole systematic shard, which must not be deep-copied per
+            // run. A dead worker is skipped, not fatal: the coordinator
+            // observes it via Gone/failed sends and degrades.
+            let Some(tx) = self.to_devices[slot].as_ref() else { continue };
+            if tx.send(ToDevice::Setup(Box::new(init))).is_err() {
+                self.to_devices[slot] = None;
+            }
+        }
+        Ok(())
+    }
+
+    fn send(&mut self, slot: usize, msg: &ToDevice) -> Result<bool> {
+        let Some(tx) = self.to_devices.get(slot).and_then(|t| t.as_ref()) else {
+            return Ok(false);
+        };
+        if tx.send(msg.clone()).is_err() {
+            self.to_devices[slot] = None;
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Event {
+        let event = recv_event(&self.up_rx, timeout);
+        // a death notice is one-shot: record it at the transport level
+        // too, so the endpoint stays dead across runs
+        if let Event::Gone(slot) = event {
+            if let Some(tx) = self.to_devices.get_mut(slot) {
+                *tx = None;
+            }
+        }
+        event
+    }
+
+    fn end_run(&mut self) {
+        for slot in 0..self.to_devices.len() {
+            let _ = self.send(slot, &ToDevice::Stop);
+        }
+        // drop stale in-flight replies (a worker still sleeping out a
+        // delay may reply after Stop; run tagging makes these inert, but
+        // there is no reason to queue them into the next run) — except
+        // death notices, which must outlive the drain or a dead worker
+        // would be re-entered into the next run's fleet
+        while let Ok((slot, up)) = self.up_rx.try_recv() {
+            if let Up::Gone = up {
+                if let Some(tx) = self.to_devices.get_mut(slot) {
+                    *tx = None;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ChannelTransport {
+    fn drop(&mut self) {
+        for slot in 0..self.to_devices.len() {
+            let _ = self.send(slot, &ToDevice::Shutdown);
+        }
+        self.to_devices.clear(); // close the channels: belt and braces
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Length-prefixed binary framing for [`ToDevice`] / [`FromDevice`].
+//!
+//! The build is offline (no serde), so the wire format is hand-rolled and
+//! deliberately dull: every frame is
+//!
+//! ```text
+//! frame   := len:u32le payload            (len = payload bytes, ≤ 64 MiB)
+//! payload := tag:u8 body
+//! ```
+//!
+//! with all integers little-endian, floats as IEEE-754 LE bit patterns,
+//! and matrices as `rows:u32 cols:u32 data:f32le×(rows·cols)`. Message
+//! bodies (see the tag constants for the full table):
+//!
+//! | tag | message  | body |
+//! |-----|----------|------|
+//! | 1   | Setup    | run:u64 device:u32 load:u32 seed:u64 time_scale:f64 max_scaled:f64 profile(5 fields) x_sys:mat y_sys:mat |
+//! | 2   | Model    | epoch:u64 beta:mat |
+//! | 3   | Ping     | nonce:u64 |
+//! | 4   | Stop     | — |
+//! | 5   | Shutdown | — |
+//! | 64  | Hello    | device:u32 protocol:u32 |
+//! | 65  | Pong     | nonce:u64 |
+//! | 66  | Grad     | run:u64 epoch:u64 delay:f64 grad:mat |
+//!
+//! (a device profile is `secs_per_point:f64 mem_rate:f64
+//! secs_per_packet:f64 erasure_prob:f64 points:u32`.)
+//!
+//! Decoding is defensive: an oversized length prefix, a truncated frame,
+//! an unknown tag, or matrix dimensions that don't fit the payload are
+//! all hard errors — the reader treats them as the peer dying, never as
+//! something to resynchronize past.
+
+use super::{DeviceInit, FromDevice, ToDevice};
+use crate::linalg::Mat;
+use crate::simnet::{ComputeModel, DeviceProfile, LinkModel};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// Bump on any wire-format change; exchanged in `Hello`.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Ceiling on one frame's payload (a paper-scale β is ~2 KB; 64 MiB is
+/// orders of magnitude of headroom while still rejecting garbage length
+/// prefixes before they turn into huge allocations).
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+const TAG_SETUP: u8 = 1;
+const TAG_MODEL: u8 = 2;
+const TAG_PING: u8 = 3;
+const TAG_STOP: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+const TAG_HELLO: u8 = 64;
+const TAG_PONG: u8 = 65;
+const TAG_GRAD: u8 = 66;
+
+// --- frame I/O -------------------------------------------------------
+
+/// Write one frame (length prefix + payload).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME_BYTES,
+        "refusing to send an oversized frame ({} bytes > {MAX_FRAME_BYTES})",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes()).context("writing frame length")?;
+    w.write_all(payload).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame's payload. `Ok(None)` is a clean end-of-stream (EOF
+/// exactly at a frame boundary); EOF anywhere else is an error, as are
+/// oversized length prefixes.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("truncated frame: stream ended inside the length prefix"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(anyhow::anyhow!("reading frame length: {e}")),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    ensure!(len <= MAX_FRAME_BYTES, "oversized frame: length prefix {len} > {MAX_FRAME_BYTES}");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("truncated frame: stream ended inside the payload: {e}"))?;
+    Ok(Some(payload))
+}
+
+// --- encoding --------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Self {
+        Self { buf: vec![tag] }
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn mat(&mut self, m: &Mat) {
+        self.u32(m.rows() as u32);
+        self.u32(m.cols() as u32);
+        for &v in m.as_slice() {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn profile(&mut self, p: &DeviceProfile) {
+        self.f64(p.compute.secs_per_point);
+        self.f64(p.compute.mem_rate);
+        self.f64(p.link.secs_per_packet);
+        self.f64(p.link.erasure_prob);
+        self.u32(p.points as u32);
+    }
+}
+
+/// Encode a coordinator → device message as one frame payload.
+pub fn encode_to_device(msg: &ToDevice) -> Vec<u8> {
+    match msg {
+        ToDevice::Setup(init) => {
+            let mut e = Enc::new(TAG_SETUP);
+            e.u64(init.run);
+            e.u32(init.device_index as u32);
+            e.u32(init.load as u32);
+            e.u64(init.delay_seed);
+            e.f64(init.time_scale);
+            e.f64(init.max_scaled_secs);
+            e.profile(&init.profile);
+            e.mat(&init.x_sys);
+            e.mat(&init.y_sys);
+            e.buf
+        }
+        ToDevice::Model { epoch, beta } => {
+            let mut e = Enc::new(TAG_MODEL);
+            e.u64(*epoch as u64);
+            e.mat(beta);
+            e.buf
+        }
+        ToDevice::Ping { nonce } => {
+            let mut e = Enc::new(TAG_PING);
+            e.u64(*nonce);
+            e.buf
+        }
+        ToDevice::Stop => Enc::new(TAG_STOP).buf,
+        ToDevice::Shutdown => Enc::new(TAG_SHUTDOWN).buf,
+    }
+}
+
+/// Encode a device → coordinator message as one frame payload.
+pub fn encode_from_device(msg: &FromDevice) -> Vec<u8> {
+    match msg {
+        FromDevice::Hello { device_id, protocol } => {
+            let mut e = Enc::new(TAG_HELLO);
+            e.u32(*device_id as u32);
+            e.u32(*protocol);
+            e.buf
+        }
+        FromDevice::Pong { nonce } => {
+            let mut e = Enc::new(TAG_PONG);
+            e.u64(*nonce);
+            e.buf
+        }
+        FromDevice::Grad { run, epoch, grad, delay } => {
+            let mut e = Enc::new(TAG_GRAD);
+            e.u64(*run);
+            e.u64(*epoch as u64);
+            e.f64(*delay);
+            e.mat(grad);
+            e.buf
+        }
+    }
+}
+
+// --- decoding --------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.buf.len() >= n, "truncated message body: wanted {n} more bytes");
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn mat(&mut self) -> Result<Mat> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let bytes_needed = rows
+            .checked_mul(cols)
+            .and_then(|n| n.checked_mul(4))
+            .filter(|&b| b <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "corrupt matrix header: {rows}×{cols} does not fit the remaining \
+                     {} payload bytes",
+                    self.buf.len()
+                )
+            })?;
+        let bytes = self.take(bytes_needed)?;
+        let data = bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap()));
+        Ok(Mat::from_vec(rows, cols, data.collect()))
+    }
+    fn profile(&mut self) -> Result<DeviceProfile> {
+        Ok(DeviceProfile {
+            compute: ComputeModel { secs_per_point: self.f64()?, mem_rate: self.f64()? },
+            link: LinkModel { secs_per_packet: self.f64()?, erasure_prob: self.f64()? },
+            points: self.u32()? as usize,
+        })
+    }
+    fn done(&self) -> Result<()> {
+        ensure!(self.buf.is_empty(), "{} trailing bytes after the message body", self.buf.len());
+        Ok(())
+    }
+}
+
+/// Decode a coordinator → device frame payload.
+pub fn decode_to_device(payload: &[u8]) -> Result<ToDevice> {
+    let (&tag, body) = payload.split_first().context("empty frame payload")?;
+    let mut d = Dec { buf: body };
+    let msg = match tag {
+        TAG_SETUP => ToDevice::Setup(Box::new(DeviceInit {
+            run: d.u64()?,
+            device_index: d.u32()? as usize,
+            load: d.u32()? as usize,
+            delay_seed: d.u64()?,
+            time_scale: d.f64()?,
+            max_scaled_secs: d.f64()?,
+            profile: d.profile()?,
+            x_sys: d.mat()?,
+            y_sys: d.mat()?,
+        })),
+        TAG_MODEL => ToDevice::Model { epoch: d.u64()? as usize, beta: d.mat()? },
+        TAG_PING => ToDevice::Ping { nonce: d.u64()? },
+        TAG_STOP => ToDevice::Stop,
+        TAG_SHUTDOWN => ToDevice::Shutdown,
+        t => bail!("unknown coordinator message tag {t}"),
+    };
+    d.done()?;
+    Ok(msg)
+}
+
+/// Decode a device → coordinator frame payload.
+pub fn decode_from_device(payload: &[u8]) -> Result<FromDevice> {
+    let (&tag, body) = payload.split_first().context("empty frame payload")?;
+    let mut d = Dec { buf: body };
+    let msg = match tag {
+        TAG_HELLO => FromDevice::Hello { device_id: d.u32()? as usize, protocol: d.u32()? },
+        TAG_PONG => FromDevice::Pong { nonce: d.u64()? },
+        TAG_GRAD => FromDevice::Grad {
+            run: d.u64()?,
+            epoch: d.u64()? as usize,
+            delay: d.f64()?,
+            grad: d.mat()?,
+        },
+        t => bail!("unknown device message tag {t}"),
+    };
+    d.done()?;
+    Ok(msg)
+}

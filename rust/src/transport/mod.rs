@@ -1,0 +1,285 @@
+//! Device transports: how the live coordinator reaches its fleet.
+//!
+//! The paper's protocol is a *client/server* one — Prakash et al. (2020)
+//! describe the same CFL scheme explicitly as devices talking to an MEC
+//! server over a wireless link — and this module makes the live
+//! coordinator's wire pluggable so the fleet can be threads **or** real
+//! OS processes:
+//!
+//! * [`ToDevice`] / [`FromDevice`] — the message vocabulary of one
+//!   training session: per-run `Setup`, per-epoch `Model` broadcast and
+//!   `Grad` reply, `Ping`/`Pong` deadline calibration, `Stop` (end of a
+//!   run) and `Shutdown` (end of the session).
+//! * [`frame`] — a hand-rolled length-prefixed binary encoding of those
+//!   messages (no external serde; the build is offline).
+//! * [`Transport`] — the coordinator-side abstraction: hand every device
+//!   its frozen §III-A state ([`DeviceInit`]), broadcast models, gather
+//!   replies with a timeout, and observe endpoint death as [`Event::Gone`]
+//!   so a disconnected device degrades to the paper's erasure case
+//!   (parity stands in) instead of stalling the gather.
+//! * [`ChannelTransport`] — in-process `mpsc` channel pairs, one worker
+//!   thread per device (the transport the live coordinator always had,
+//!   factored out).
+//! * [`TcpTransport`] — TCP with the [`frame`] wire format: `cfl serve`
+//!   accepts one socket per device, `cfl device` joins from another
+//!   process (or another machine on a trusted network).
+//!
+//! Both transports drive the *same* device-side state machine,
+//! [`run_device_loop`]: a device is Setup-configured, computes a partial
+//! gradient per `Model`, sleeps out its simulated §II-A delay scaled by
+//! `time_scale`, and replies. The coordinator never knows which transport
+//! it is talking through.
+
+use crate::fl::{GradBackend, NativeBackend};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::simnet::DeviceProfile;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+pub mod frame;
+
+mod channel;
+mod tcp;
+
+pub use channel::ChannelTransport;
+pub use tcp::{run_device, TcpTransport};
+
+/// Which wire a live fleet speaks — the `--transport` CLI knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channel pairs, one worker thread per device.
+    #[default]
+    Channel,
+    /// TCP loopback, one `cfl device` subprocess per device.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse the CLI spelling (`chan` / `tcp`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "chan" | "channel" | "thread" => Ok(TransportKind::Channel),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => anyhow::bail!("unknown transport '{other}' (expected chan or tcp)"),
+        }
+    }
+
+    /// The CLI tag (`chan` / `tcp`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            TransportKind::Channel => "chan",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Everything a device endpoint needs to run one training run: its frozen
+/// §III-A systematic shard, the §II-A delay model it must emulate, and the
+/// run bookkeeping that keeps replies attributable across runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceInit {
+    /// Coordinator-side run counter, echoed in every [`FromDevice::Grad`]
+    /// so a straggler from a finished run can never pollute the next one.
+    pub run: u64,
+    /// Fleet index of this device (also its transport slot).
+    pub device_index: usize,
+    /// Assigned systematic load ℓᵢ* (rows of `x_sys`).
+    pub load: usize,
+    /// Seed of this device's private delay stream for the run.
+    pub delay_seed: u64,
+    /// Simulated-seconds → wall-seconds factor for the slept-out delays.
+    pub time_scale: f64,
+    /// Ceiling on any single scaled sleep, wall seconds.
+    pub max_scaled_secs: f64,
+    /// The §II-A compute + link model this device emulates.
+    pub profile: DeviceProfile,
+    /// Systematic submatrix (rows processed each epoch), ℓᵢ*×d.
+    pub x_sys: Mat,
+    /// Matching labels, ℓᵢ*×1.
+    pub y_sys: Mat,
+}
+
+/// Coordinator → device messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToDevice {
+    /// Begin a run with this frozen state (boxed: the shard payload dwarfs
+    /// every other variant).
+    Setup(Box<DeviceInit>),
+    /// (epoch, β) — compute a partial gradient and reply with `Grad`.
+    Model { epoch: usize, beta: Mat },
+    /// Deadline-calibration echo request; answer `Pong` immediately.
+    Ping { nonce: u64 },
+    /// End of the current run; await the next `Setup`.
+    Stop,
+    /// End of the session; the endpoint exits.
+    Shutdown,
+}
+
+/// Device → coordinator messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FromDevice {
+    /// First message on a fresh TCP connection: claim a fleet slot.
+    Hello { device_id: usize, protocol: u32 },
+    /// Echo reply to `Ping`.
+    Pong { nonce: u64 },
+    /// A partial gradient, tagged with the run/epoch it belongs to and
+    /// the §II-A delay (uncapped, simulated seconds) it emulated.
+    Grad { run: u64, epoch: usize, grad: Mat, delay: f64 },
+}
+
+/// What the coordinator's gather loop observes on one receive call.
+#[derive(Debug)]
+pub enum Event {
+    /// A message from the device in `slot`.
+    Msg(usize, FromDevice),
+    /// The endpoint in `slot` is gone (thread death, socket EOF, framing
+    /// error). The coordinator degrades that device to parity-only.
+    Gone(usize),
+    /// Nothing arrived within the timeout.
+    Timeout,
+    /// Every endpoint is gone and no more events can arrive.
+    Closed,
+}
+
+/// Coordinator-side handle on a device fleet. One instance spans a whole
+/// session (several runs — e.g. `train_cfl` then `train_uncoded` reuse
+/// the same endpoints); [`Transport::begin_run`] re-arms the endpoints
+/// named by its [`DeviceInit`] batch, and slots not named simply sit out
+/// that run (zero-load devices under a coded policy).
+pub trait Transport: Send {
+    /// Transport tag for logs ("chan" / "tcp").
+    fn name(&self) -> &'static str;
+
+    /// Total endpoint slots (== the fleet size).
+    fn n_endpoints(&self) -> usize;
+
+    /// Start a run: deliver each [`DeviceInit`] to its endpoint.
+    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<()>;
+
+    /// Send to the endpoint in `slot`. `Ok(false)` means the endpoint is
+    /// gone (the message was dropped); `Err` is a transport-fatal fault.
+    fn send(&mut self, slot: usize, msg: &ToDevice) -> Result<bool>;
+
+    /// Send one message to many endpoints, returning per-slot delivery
+    /// flags aligned with `slots` (the epoch broadcast hot path).
+    /// Implementations may serialize the message once for the whole
+    /// fleet; the default just loops over [`Transport::send`].
+    fn broadcast(&mut self, slots: &[usize], msg: &ToDevice) -> Result<Vec<bool>> {
+        slots.iter().map(|&slot| self.send(slot, msg)).collect()
+    }
+
+    /// Wait up to `timeout` for the next event from any endpoint.
+    fn recv_timeout(&mut self, timeout: Duration) -> Event;
+
+    /// End the current run: `Stop` every live endpoint and discard any
+    /// stale in-flight replies. Best-effort by design.
+    fn end_run(&mut self);
+}
+
+/// Internal per-endpoint upstream event (shared by both transports).
+pub(crate) enum Up {
+    Msg(FromDevice),
+    Gone,
+}
+
+/// Map a shared upstream receiver onto the public [`Event`] vocabulary.
+pub(crate) fn recv_event(rx: &mpsc::Receiver<(usize, Up)>, timeout: Duration) -> Event {
+    match rx.recv_timeout(timeout) {
+        Ok((slot, Up::Msg(msg))) => Event::Msg(slot, msg),
+        Ok((slot, Up::Gone)) => Event::Gone(slot),
+        Err(mpsc::RecvTimeoutError::Timeout) => Event::Timeout,
+        Err(mpsc::RecvTimeoutError::Disconnected) => Event::Closed,
+    }
+}
+
+/// One side of a device's conversation with its coordinator — the only
+/// surface [`run_device_loop`] needs, so channel workers and TCP device
+/// processes share one state machine.
+pub trait DeviceLink {
+    /// Next coordinator message; `Ok(None)` means the coordinator hung up
+    /// (a clean end of session).
+    fn recv(&mut self) -> Result<Option<ToDevice>>;
+
+    /// Send a reply upstream.
+    fn send(&mut self, msg: FromDevice) -> Result<()>;
+}
+
+/// Per-run device state established by [`ToDevice::Setup`].
+struct RunState {
+    run: u64,
+    load: usize,
+    time_scale: f64,
+    max_scaled_secs: f64,
+    profile: DeviceProfile,
+    x_sys: Mat,
+    y_sys: Mat,
+    rng: Rng,
+}
+
+/// The device-side state machine, identical for every transport:
+///
+/// * `Setup` freezes the run state (shard, delay model, RNG stream);
+/// * `Ping` is answered immediately (no simulated delay — the RTT *is*
+///   the host overhead being calibrated);
+/// * `Model` computes the partial gradient, sleeps out the sampled §II-A
+///   delay scaled by `time_scale`, and replies with `Grad`;
+/// * `Stop` clears the run state; `Shutdown` (or a hang-up) returns.
+///
+/// Returns `Err` only on a protocol violation or compute failure — the
+/// caller should treat that as this endpoint dying.
+pub fn run_device_loop(link: &mut dyn DeviceLink) -> Result<()> {
+    let mut backend = NativeBackend;
+    let mut state: Option<RunState> = None;
+    loop {
+        let Some(msg) = link.recv()? else {
+            return Ok(()); // coordinator hung up
+        };
+        match msg {
+            ToDevice::Setup(init) => {
+                state = Some(RunState {
+                    run: init.run,
+                    load: init.load,
+                    time_scale: init.time_scale,
+                    max_scaled_secs: init.max_scaled_secs,
+                    profile: init.profile,
+                    x_sys: init.x_sys,
+                    y_sys: init.y_sys,
+                    rng: Rng::new(init.delay_seed),
+                });
+            }
+            ToDevice::Ping { nonce } => link.send(FromDevice::Pong { nonce })?,
+            ToDevice::Model { epoch, beta } => {
+                let st = state
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("protocol violation: Model before Setup"))?;
+                let grad = backend.partial_grad(&st.x_sys, &beta, &st.y_sys)?;
+                // sleep out the simulated delay (compute + link)
+                let delay = st.profile.sample_total_delay(st.load, &mut st.rng);
+                thread::sleep(Duration::from_secs_f64(
+                    (delay * st.time_scale).min(st.max_scaled_secs),
+                ));
+                link.send(FromDevice::Grad { run: st.run, epoch, grad, delay })?;
+            }
+            ToDevice::Stop => state = None,
+            ToDevice::Shutdown => return Ok(()),
+        }
+    }
+}
+
+/// The binary that hosts `cfl device` subprocesses for locally-spawned
+/// TCP fleets (`cfl sweep --live --transport tcp`): the `CFL_BIN`
+/// environment override if set, else the current executable — correct
+/// whenever the spawner *is* the `cfl` binary; test harnesses set
+/// `CFL_BIN` explicitly.
+pub fn local_device_bin() -> Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("CFL_BIN") {
+        return Ok(p.into());
+    }
+    std::env::current_exe().map_err(|e| anyhow::anyhow!("resolving the cfl binary: {e}"))
+}
+
+#[cfg(test)]
+mod tests;

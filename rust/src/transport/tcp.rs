@@ -1,0 +1,367 @@
+//! TCP loopback/network transport: real processes on real sockets.
+//!
+//! Coordinator side ([`TcpTransport`]): accept one connection per fleet
+//! slot (each opened by a `cfl device` process announcing itself with
+//! `Hello`), then speak the [`frame`] wire format — a reader thread per
+//! socket feeds replies into one queue, and socket EOF/corruption is
+//! surfaced as [`Event::Gone`] so the epoch loop degrades that device to
+//! parity-only instead of stalling.
+//!
+//! Device side ([`run_device`]): connect (with retry while the
+//! coordinator is still starting), `Hello`, then hand the socket to the
+//! shared [`run_device_loop`] state machine.
+//!
+//! [`TcpTransport::spawn_local`] packages the loopback case the sweep
+//! engine uses (`cfl sweep --live --transport tcp`): bind an ephemeral
+//! port, spawn `cfl device` subprocesses, accept them, and reap the
+//! children when the transport drops.
+
+use super::{
+    frame, recv_event, run_device_loop, DeviceInit, DeviceLink, Event, FromDevice, ToDevice,
+    Transport, Up,
+};
+use anyhow::{ensure, Context, Result};
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// How long a freshly-accepted connection gets to present its `Hello`.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How long [`TcpTransport::spawn_local`] waits for its own subprocesses
+/// to connect back.
+const SPAWN_ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Coordinator-side TCP fleet: one framed socket per device slot.
+pub struct TcpTransport {
+    /// Write halves, slot-indexed; `None` = endpoint gone.
+    links: Vec<Option<TcpStream>>,
+    up_rx: mpsc::Receiver<(usize, Up)>,
+    /// Locally-spawned `cfl device` subprocesses (empty under `serve`).
+    children: Vec<Child>,
+}
+
+impl TcpTransport {
+    /// Accept `n` device connections on an already-bound listener (the
+    /// `cfl serve` path — devices are started by someone else).
+    pub fn serve(listener: TcpListener, n: usize, accept_timeout: Duration) -> Result<Self> {
+        let (links, up_rx) = accept_fleet(&listener, n, accept_timeout)?;
+        Ok(Self { links, up_rx, children: Vec::new() })
+    }
+
+    /// Write one already-encoded frame to a slot; `false` marks the
+    /// endpoint dead (shared by [`Transport::send`] and the
+    /// encode-once [`Transport::broadcast`]).
+    fn write_payload(&mut self, slot: usize, payload: &[u8]) -> bool {
+        let Some(stream) = self.links.get_mut(slot).and_then(|l| l.as_mut()) else {
+            return false;
+        };
+        if frame::write_frame(stream, payload).is_err() {
+            self.links[slot] = None;
+            return false;
+        }
+        true
+    }
+
+    /// Bind an ephemeral loopback port, spawn `n` `cfl device`
+    /// subprocesses of `bin` pointed at it, and accept them — the
+    /// self-contained fleet behind `cfl sweep --live --transport tcp`.
+    pub fn spawn_local(bin: &std::path::Path, n: usize) -> Result<Self> {
+        ensure!(n > 0, "a TCP fleet needs at least one device");
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding a loopback listener")?;
+        let addr = listener.local_addr().context("reading the bound address")?.to_string();
+        let mut children: Vec<Child> = Vec::with_capacity(n);
+        let spawn = |k: usize| -> Result<Child> {
+            Command::new(bin)
+                .args(["device", "--connect", &addr, "--id", &k.to_string(), "--quiet"])
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .spawn()
+                .with_context(|| format!("spawning {} device {k}", bin.display()))
+        };
+        for k in 0..n {
+            match spawn(k) {
+                Ok(child) => children.push(child),
+                Err(e) => {
+                    reap(&mut children, Duration::ZERO);
+                    return Err(e);
+                }
+            }
+        }
+        match accept_fleet(&listener, n, SPAWN_ACCEPT_TIMEOUT) {
+            Ok((links, up_rx)) => Ok(Self { links, up_rx, children }),
+            Err(e) => {
+                reap(&mut children, Duration::ZERO);
+                Err(e)
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn n_endpoints(&self) -> usize {
+        self.links.len()
+    }
+
+    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<()> {
+        for init in inits {
+            let slot = init.device_index;
+            ensure!(
+                slot < self.links.len(),
+                "device index {slot} outside the {}-endpoint fleet",
+                self.links.len()
+            );
+            // a dead endpoint is skipped, not fatal: the coordinator
+            // observes it via Gone/failed sends and degrades
+            let _ = self.send(slot, &ToDevice::Setup(Box::new(init)))?;
+        }
+        Ok(())
+    }
+
+    fn send(&mut self, slot: usize, msg: &ToDevice) -> Result<bool> {
+        Ok(self.write_payload(slot, &frame::encode_to_device(msg)))
+    }
+
+    fn broadcast(&mut self, slots: &[usize], msg: &ToDevice) -> Result<Vec<bool>> {
+        // serialize once for the whole fleet — the epoch hot path sends
+        // the same β to every device
+        let payload = frame::encode_to_device(msg);
+        Ok(slots.iter().map(|&slot| self.write_payload(slot, &payload)).collect())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Event {
+        let event = recv_event(&self.up_rx, timeout);
+        // a death notice is one-shot (the reader thread is gone): record
+        // it at the transport level too, so the endpoint stays dead
+        // across runs instead of being re-entered into the next fleet
+        if let Event::Gone(slot) = event {
+            if let Some(link) = self.links.get_mut(slot) {
+                *link = None;
+            }
+        }
+        event
+    }
+
+    fn end_run(&mut self) {
+        for slot in 0..self.links.len() {
+            let _ = self.send(slot, &ToDevice::Stop);
+        }
+        // discard stale replies, but keep death notices: a Gone drained
+        // here must still kill the link, or the dead device would be
+        // re-entered into the next run's fleet (its reader thread is
+        // gone, so the notice would never repeat)
+        while let Ok((slot, up)) = self.up_rx.try_recv() {
+            if let Up::Gone = up {
+                if let Some(link) = self.links.get_mut(slot) {
+                    *link = None;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        for slot in 0..self.links.len() {
+            let _ = self.send(slot, &ToDevice::Shutdown);
+        }
+        for link in self.links.iter_mut() {
+            if let Some(s) = link.take() {
+                let _ = s.shutdown(std::net::Shutdown::Write);
+            }
+        }
+        reap(&mut self.children, Duration::from_secs(10));
+    }
+}
+
+/// Wait for spawned device subprocesses to exit (they do so on
+/// `Shutdown`/EOF), killing any that outlive the deadline.
+fn reap(children: &mut Vec<Child>, patience: Duration) {
+    let deadline = Instant::now() + patience;
+    for child in children.iter_mut() {
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => thread::sleep(Duration::from_millis(20)),
+                _ => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+            }
+        }
+    }
+    children.clear();
+}
+
+/// Accept `n` devices: each must `Hello` with a distinct in-range id and
+/// a matching protocol version; each then gets a reader thread feeding
+/// the shared event queue.
+#[allow(clippy::type_complexity)]
+fn accept_fleet(
+    listener: &TcpListener,
+    n: usize,
+    accept_timeout: Duration,
+) -> Result<(Vec<Option<TcpStream>>, mpsc::Receiver<(usize, Up)>)> {
+    listener.set_nonblocking(true).context("making the listener pollable")?;
+    let deadline = Instant::now() + accept_timeout;
+    let (up_tx, up_rx) = mpsc::channel::<(usize, Up)>();
+    let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < n {
+        match listener.accept() {
+            Ok((stream, peer)) => match admit(stream, &links, &up_tx)? {
+                Admitted::Device(slot, writer) => {
+                    links[slot] = Some(writer);
+                    connected += 1;
+                }
+                // a stray connection (port scanner, health probe, a
+                // device started twice) must not strand the fleet —
+                // drop it and keep accepting until the deadline
+                Admitted::Rejected(reason) => {
+                    eprintln!("cfl: ignoring a connection from {peer}: {reason}");
+                }
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                ensure!(
+                    Instant::now() < deadline,
+                    "timed out waiting for devices: {connected}/{n} connected"
+                );
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(anyhow::anyhow!("accepting a device connection: {e}")),
+        }
+    }
+    Ok((links, up_rx))
+}
+
+/// Outcome of one connection handshake: an admitted device, or a
+/// connection to drop while the accept loop keeps going.
+enum Admitted {
+    Device(usize, TcpStream),
+    Rejected(String),
+}
+
+/// Handshake one fresh connection: read `Hello`, validate, start its
+/// reader thread. Garbage, timeouts, duplicate or out-of-range ids are
+/// [`Admitted::Rejected`] (non-fatal — keep accepting); a *protocol*
+/// mismatch is a hard `Err`, since it means a real device of the wrong
+/// version and the session should fail fast and loudly.
+fn admit(
+    mut stream: TcpStream,
+    links: &[Option<TcpStream>],
+    up_tx: &mpsc::Sender<(usize, Up)>,
+) -> Result<Admitted> {
+    let reject = |reason: String| Ok(Admitted::Rejected(reason));
+    let configured = stream.set_nonblocking(false).is_ok()
+        && stream.set_read_timeout(Some(HELLO_TIMEOUT)).is_ok();
+    if !configured {
+        return reject("could not configure the socket".into());
+    }
+    stream.set_nodelay(true).ok();
+    let payload = match frame::read_frame(&mut stream) {
+        Ok(Some(p)) => p,
+        Ok(None) => return reject("peer closed before sending Hello".into()),
+        Err(e) => return reject(format!("unreadable Hello frame: {e}")),
+    };
+    let hello = match frame::decode_from_device(&payload) {
+        Ok(h) => h,
+        Err(e) => return reject(format!("corrupt Hello frame: {e}")),
+    };
+    let FromDevice::Hello { device_id, protocol } = hello else {
+        return reject(format!("expected Hello as the first message, got {hello:?}"));
+    };
+    ensure!(
+        protocol == frame::PROTOCOL_VERSION,
+        "protocol mismatch: device speaks v{protocol}, coordinator v{}",
+        frame::PROTOCOL_VERSION
+    );
+    if device_id >= links.len() {
+        return reject(format!(
+            "device id {device_id} outside the {}-device fleet",
+            links.len()
+        ));
+    }
+    if links[device_id].is_some() {
+        return reject(format!("device id {device_id} claimed twice"));
+    }
+    stream.set_read_timeout(None).context("disarming the Hello timeout")?;
+    let writer = stream.try_clone().context("splitting the device socket")?;
+    let tx = up_tx.clone();
+    thread::spawn(move || reader_loop(device_id, stream, tx));
+    Ok(Admitted::Device(device_id, writer))
+}
+
+/// Per-socket reader: frames in, events out; any EOF or framing fault
+/// ends the endpoint with a `Gone`.
+fn reader_loop(slot: usize, stream: TcpStream, tx: mpsc::Sender<(usize, Up)>) {
+    let mut reader = BufReader::new(stream);
+    loop {
+        match frame::read_frame(&mut reader) {
+            Ok(Some(payload)) => match frame::decode_from_device(&payload) {
+                Ok(msg) => {
+                    if tx.send((slot, Up::Msg(msg))).is_err() {
+                        return; // transport dropped; nobody is listening
+                    }
+                }
+                Err(_) => break, // corrupt frame: treat the peer as dead
+            },
+            Ok(None) | Err(_) => break,
+        }
+    }
+    let _ = tx.send((slot, Up::Gone));
+}
+
+/// A device process's end of the socket.
+struct TcpLink {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpLink {
+    fn new(stream: TcpStream) -> Result<Self> {
+        let writer = stream.try_clone().context("splitting the coordinator socket")?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+}
+
+impl DeviceLink for TcpLink {
+    fn recv(&mut self) -> Result<Option<ToDevice>> {
+        match frame::read_frame(&mut self.reader)? {
+            Some(payload) => Ok(Some(frame::decode_to_device(&payload)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn send(&mut self, msg: FromDevice) -> Result<()> {
+        frame::write_frame(&mut self.writer, &frame::encode_from_device(&msg))
+    }
+}
+
+/// The `cfl device` entry point: connect to a coordinator (retrying while
+/// it finishes starting up), claim fleet slot `device_id`, and serve
+/// [`run_device_loop`] until the coordinator shuts the session down.
+pub fn run_device(addr: &str, device_id: usize, connect_timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + connect_timeout;
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                ensure!(Instant::now() < deadline, "connecting to {addr}: {e}");
+                thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    let mut link = TcpLink::new(stream)?;
+    link.send(FromDevice::Hello { device_id, protocol: frame::PROTOCOL_VERSION })?;
+    run_device_loop(&mut link)
+}

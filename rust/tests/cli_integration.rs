@@ -158,3 +158,163 @@ fn config_file_round_trip() {
     assert!(text.contains("m = 288"), "config not applied: {text}");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// Sandboxes that deny loopback bind skip the socket tests silently.
+fn loopback_ok() -> bool {
+    match std::net::TcpListener::bind("127.0.0.1:0") {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping: loopback bind denied ({e})");
+            false
+        }
+    }
+}
+
+#[test]
+fn serve_and_devices_train_over_tcp_loopback() {
+    let bin = require_bin!();
+    if !loopback_ok() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("cfl_cli_serve");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let port_file = dir.join("addr");
+
+    let mut serve = Command::new(&bin)
+        .args([
+            "serve",
+            "--bind",
+            "127.0.0.1:0",
+            "--port-file",
+            port_file.to_str().unwrap(),
+            "--devices",
+            "2",
+            "--epochs",
+            "400",
+            "--seed",
+            "7",
+            "--time-scale",
+            "1e-4",
+            "--skip-uncoded",
+            "--check-nmse",
+            "0.8",
+            "--quiet",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // wait for the coordinator to publish its ephemeral address
+    let mut addr = String::new();
+    for _ in 0..100 {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            if s.trim().parse::<std::net::SocketAddr>().is_ok() {
+                addr = s.trim().to_string();
+                break;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    assert!(!addr.is_empty(), "serve never published its address");
+
+    let device = |id: &str| {
+        Command::new(&bin)
+            .args(["device", "--connect", &addr, "--id", id, "--quiet"])
+            .spawn()
+            .unwrap()
+    };
+    let mut d0 = device("0");
+    let mut d1 = device("1");
+
+    let serve_out = serve.wait_with_output().unwrap();
+    let text = String::from_utf8_lossy(&serve_out.stdout);
+    assert!(serve_out.status.success(), "serve failed: {text}");
+    assert!(text.contains("check-nmse ok"), "{text}");
+    // devices exit cleanly once the coordinator sends Shutdown
+    assert!(d0.wait().unwrap().success());
+    assert!(d1.wait().unwrap().success());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_live_tcp_spawns_real_device_processes() {
+    let bin = require_bin!();
+    if !loopback_ok() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("cfl_cli_sweep_tcp");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = Command::new(&bin)
+        .args([
+            "sweep",
+            "--live",
+            "--transport",
+            "tcp",
+            "--axis",
+            "nu=0,0.2",
+            "--devices",
+            "3",
+            "--epochs",
+            "20",
+            "--target-nmse",
+            "0",
+            "--time-scale",
+            "1e-4",
+            "--skip-uncoded",
+            "--out",
+            dir.to_str().unwrap(),
+            "--quiet",
+        ])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("cfl sweep (live)"), "{text}");
+    let json = std::fs::read_to_string(dir.join("sweep_report.json")).unwrap();
+    assert!(json.contains("\"backend\": \"live\""), "{json}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_check_gates_on_the_baseline() {
+    let bin = require_bin!();
+    let dir = std::env::temp_dir().join("cfl_cli_bench_check");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let baseline = dir.join("baseline.json");
+    let report = dir.join("BENCH_ci.json");
+    std::fs::write(&baseline, r#"{"scenarios": [{"id": "s0", "gain": 2.0, "wall_s": 1}]}"#)
+        .unwrap();
+
+    std::fs::write(&report, r#"{"scenarios": [{"id": "s0", "gain": 1.9, "wall_s": 2}]}"#).unwrap();
+    let ok = Command::new(&bin)
+        .args([
+            "bench-check",
+            "--report",
+            report.to_str().unwrap(),
+            "--baseline",
+            baseline.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(ok.status.success(), "stderr: {}", String::from_utf8_lossy(&ok.stderr));
+    assert!(String::from_utf8_lossy(&ok.stdout).contains("bench-check ok"));
+
+    std::fs::write(&report, r#"{"scenarios": [{"id": "s0", "gain": 1.0, "wall_s": 2}]}"#).unwrap();
+    let bad = Command::new(&bin)
+        .args([
+            "bench-check",
+            "--report",
+            report.to_str().unwrap(),
+            "--baseline",
+            baseline.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success(), "a 50% gain drop must fail the check");
+    let err = String::from_utf8_lossy(&bad.stderr);
+    assert!(err.contains("regression"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

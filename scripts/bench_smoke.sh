@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# CI bench smoke: run a tiny fixed sweep (3 heterogeneity scenarios on
+# the deterministic sim backend), write the compact BENCH_ci.json report
+# (coding gain + wall time per scenario), and gate it against the
+# committed bench/baseline.json — a >20% coding-gain drop fails.
+#
+# Usage:
+#   scripts/bench_smoke.sh                    # run + check (the CI path)
+#   scripts/bench_smoke.sh --update-baseline  # run + refresh the baseline
+#
+# Env: CFL_BIN overrides the binary (default: target/{release,debug}/cfl),
+#      BENCH_OUT overrides the sweep report directory (default: bench_out).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${CFL_BIN:-}
+if [[ -z "$BIN" ]]; then
+    for candidate in target/release/cfl target/debug/cfl; do
+        if [[ -x "$candidate" ]]; then
+            BIN=$candidate
+            break
+        fi
+    done
+fi
+if [[ -z "${BIN:-}" || ! -x "$BIN" ]]; then
+    echo "bench_smoke: cfl binary not built (run cargo build --release first)" >&2
+    exit 1
+fi
+
+OUT=${BENCH_OUT:-bench_out}
+# fixed seed + fixed grid: the gains are a deterministic function of this
+# command line (modulo libm differences across platforms, which the 20%
+# tolerance absorbs comfortably)
+"$BIN" sweep --seed 2020 --axis nu=0,0.2,0.4 --workers 2 \
+    --out "$OUT" --bench-out BENCH_ci.json --quiet
+
+if [[ "${1:-}" == "--update-baseline" ]]; then
+    mkdir -p bench
+    cp BENCH_ci.json bench/baseline.json
+    echo "bench_smoke: bench/baseline.json refreshed from this run"
+    exit 0
+fi
+
+"$BIN" bench-check --report BENCH_ci.json --baseline bench/baseline.json --tolerance 0.2

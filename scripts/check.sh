@@ -28,4 +28,14 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "== cargo test -q (unit + integration + doctests)"
 cargo test -q
 
+# sockets permitting (the script probes bind and skips with a notice in
+# sandboxes that deny it), exercise the real-process TCP path too.
+# CFL_SKIP_SMOKE=1 skips it here (CI runs it as its own workflow step).
+if [[ "${CFL_SKIP_SMOKE:-0}" = "1" ]]; then
+    echo "== loopback socket smoke skipped (CFL_SKIP_SMOKE=1)"
+else
+    echo "== loopback socket smoke (cfl serve + cfl device)"
+    ./scripts/smoke_loopback.sh
+fi
+
 echo "OK"

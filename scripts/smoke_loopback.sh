@@ -1,0 +1,74 @@
+#!/usr/bin/env bash
+# TCP loopback smoke test: 1 `cfl serve` coordinator + 2 `cfl device`
+# worker processes on 127.0.0.1, asserting the run converges
+# (--check-nmse makes serve exit nonzero otherwise).
+#
+# Sandboxes that deny socket bind are detected with `cfl serve --probe`
+# and skipped with a notice — the test needs real sockets or nothing.
+#
+# Env: CFL_BIN overrides the binary (default: target/{release,debug}/cfl).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${CFL_BIN:-}
+if [[ -z "$BIN" ]]; then
+    for candidate in target/release/cfl target/debug/cfl; do
+        if [[ -x "$candidate" ]]; then
+            BIN=$candidate
+            break
+        fi
+    done
+fi
+if [[ -z "${BIN:-}" || ! -x "$BIN" ]]; then
+    echo "smoke_loopback: cfl binary not built (run cargo build first)" >&2
+    exit 1
+fi
+
+if ! "$BIN" serve --probe --bind 127.0.0.1:0 >/dev/null 2>&1; then
+    echo "smoke_loopback: sandbox denies loopback bind; skipping the socket smoke test"
+    exit 0
+fi
+
+tmp=$(mktemp -d)
+device_pids=()
+cleanup() {
+    for pid in "${device_pids[@]:-}"; do
+        kill "$pid" 2>/dev/null || true
+    done
+    rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+port_file="$tmp/addr"
+"$BIN" serve --bind 127.0.0.1:0 --port-file "$port_file" --devices 2 \
+    --epochs 400 --seed 7 --time-scale 1e-4 --skip-uncoded \
+    --check-nmse 0.8 --quiet >"$tmp/serve.log" 2>&1 &
+serve_pid=$!
+
+for _ in $(seq 100); do
+    [[ -s "$port_file" ]] && break
+    sleep 0.1
+done
+if [[ ! -s "$port_file" ]]; then
+    echo "smoke_loopback: serve never published its address" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+addr=$(tr -d '[:space:]' <"$port_file")
+
+"$BIN" device --connect "$addr" --id 0 --quiet &
+device_pids+=($!)
+"$BIN" device --connect "$addr" --id 1 --quiet &
+device_pids+=($!)
+
+if ! wait "$serve_pid"; then
+    echo "smoke_loopback: serve failed" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+# devices exit on the coordinator's Shutdown
+for pid in "${device_pids[@]}"; do
+    wait "$pid"
+done
+device_pids=()
+echo "smoke_loopback: 1 serve + 2 device processes converged over TCP loopback"
