@@ -39,10 +39,10 @@ fn main() {
         let outcomes = run_grid(&grid, &opts).expect("delta sweep");
         (uncoded, outcomes)
     });
-    uncoded.trace.write_csv(&format!("{dir}/fig2/uncoded.csv")).unwrap();
+    uncoded.write_trace_csv(&format!("{dir}/fig2/uncoded.csv")).unwrap();
     let mut runs = Vec::new();
     for (o, &delta) in outcomes.iter().zip(&deltas) {
-        o.coded.trace.write_csv(&format!("{dir}/fig2/cfl_delta{delta}.csv")).unwrap();
+        o.coded.write_trace_csv(&format!("{dir}/fig2/cfl_delta{delta}.csv")).unwrap();
         runs.push(o.coded.clone());
     }
 

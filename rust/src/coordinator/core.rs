@@ -93,6 +93,19 @@ impl RunResult {
     pub fn time_to(&self, target: f64) -> Option<f64> {
         self.trace.time_to_nmse(target)
     }
+
+    /// The per-epoch convergence trace (same simulated-seconds axis for
+    /// both backends — the live/sim trace-export parity contract).
+    pub fn trace(&self) -> &ConvergenceTrace {
+        &self.trace
+    }
+
+    /// Write the per-epoch `time_s,epoch,nmse` trace as CSV — the
+    /// per-scenario export behind `cfl sweep --traces-dir` and the
+    /// `cfl train` trace files, identical for sim and live runs.
+    pub fn write_trace_csv(&self, path: &str) -> Result<()> {
+        self.trace.write_csv(path)
+    }
 }
 
 /// Per-device state frozen at setup time (§III-A).

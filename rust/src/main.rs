@@ -6,10 +6,13 @@
 //!   NMSE-vs-time CSV traces.
 //! * `optimize` — solve the Eq. 13–16 load/redundancy policy and print it.
 //! * `sweep`    — expand a scenario grid (INI `[sweep]` section and/or
-//!   repeated `--axis key=v1,v2,…`) and run it on a worker pool; writes
-//!   per-scenario CSV and an aggregate coding-gain report. `--live`
-//!   drives every scenario through the live coordinator instead of the
-//!   DES backend (`--transport tcp` spawns real device subprocesses per
+//!   repeated `--axis key=v1,v2,…`; `--zip a+b` pairs correlated axes)
+//!   and run it on a worker pool; writes per-scenario CSV (streamed in
+//!   grid order, so `--resume <csv>` restarts a killed grid where it
+//!   left off) and an aggregate coding-gain report. `--traces-dir`
+//!   exports each scenario's per-epoch NMSE trace. `--live` drives
+//!   every scenario through the live coordinator instead of the DES
+//!   backend (`--transport tcp` spawns real device subprocesses per
 //!   scenario); `--bench-out` adds the compact CI bench report.
 //! * `live`     — run the threaded live-cluster demo.
 //! * `serve`    — TCP coordinator: bind, wait for `cfl device` processes
@@ -53,6 +56,9 @@ fn parser() -> Parser {
         .opt("out", "dir", "output directory for CSV traces (default: results)")
         .opt("time-scale", "f64", "live/serve/sweep --live: simulated→wall seconds factor")
         .opt("axis", "key=v1,v2,..", "sweep: add a grid axis (repeatable)")
+        .opt("zip", "key1+key2", "sweep: pair declared axes so they sweep together (repeatable)")
+        .opt("resume", "file.csv", "sweep: skip scenarios already in this CSV, run the rest")
+        .opt("traces-dir", "dir", "sweep: write one per-epoch NMSE trace CSV per scenario")
         .opt("workers", "usize", "sweep: worker threads (default: all cores)")
         .opt("transport", "chan|tcp", "sweep --live: device transport (default chan)")
         .opt("bench-out", "file.json", "sweep: also write the compact CI bench report")
@@ -140,14 +146,14 @@ fn cmd_train(args: &cfl::cli::Args) -> Result<()> {
     };
     table.row(&fmt_run(&coded));
     if !args.has_flag("quiet") {
-        coded.trace.write_csv(&format!("{out_dir}/trace_cfl.csv"))?;
+        coded.write_trace_csv(&format!("{out_dir}/trace_cfl.csv"))?;
     }
 
     if !args.has_flag("skip-uncoded") {
         let uncoded = sim.train_uncoded()?;
         table.row(&fmt_run(&uncoded));
         if !args.has_flag("quiet") {
-            uncoded.trace.write_csv(&format!("{out_dir}/trace_uncoded.csv"))?;
+            uncoded.write_trace_csv(&format!("{out_dir}/trace_uncoded.csv"))?;
         }
         if let (Some(tc), Some(tu)) =
             (coded.time_to(cfg.target_nmse), uncoded.time_to(cfg.target_nmse))
@@ -198,6 +204,9 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     for spec in args.get_all("axis") {
         grid = grid.axis_spec(spec)?;
     }
+    for spec in args.get_all("zip") {
+        grid = grid.zip_spec(spec)?;
+    }
     anyhow::ensure!(
         !grid.axes().is_empty(),
         "sweep needs at least one axis: repeat --axis key=v1,v2,... or add a [sweep] \
@@ -246,6 +255,9 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     for axis in grid.axes() {
         println!("  axis {} = [{}]", axis.key, axis.values.join(", "));
     }
+    for group in grid.zip_keys() {
+        println!("  zip {}", group.join("+"));
+    }
     eprintln!("running on {workers} worker thread(s)");
 
     let opts = SweepOptions {
@@ -254,15 +266,69 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
         progress: !args.has_flag("quiet"),
         backend,
     };
-    let outcomes = sweep::run_grid(&grid, &opts)?;
 
+    // --resume: recover completed rows from the prior run's CSV and run
+    // only the remainder; a missing file just means nothing completed
+    let header = sweep::scenario_csv_header(&grid);
+    let scenarios = grid.expand()?;
+    let resume = match args.get("resume") {
+        Some(path) if std::path::Path::new(path).exists() => {
+            let state = sweep::ResumeState::load(path, &header)?;
+            // same columns is necessary but not sufficient: each row's
+            // config fingerprint must match this grid's scenario too
+            state.check_compat(&scenarios)?;
+            let recovered = scenarios.iter().filter(|s| state.contains(&s.id)).count();
+            eprintln!("resume: {recovered} completed scenario(s) recovered from {path}");
+            if state.len() > recovered {
+                eprintln!(
+                    "resume: {} row(s) in {path} do not belong to this grid — ignored",
+                    state.len() - recovered
+                );
+            }
+            state
+        }
+        Some(path) => {
+            eprintln!("resume: {path} not found — running the full grid");
+            sweep::ResumeState::empty()
+        }
+        None => sweep::ResumeState::empty(),
+    };
+    let ids: Vec<String> = scenarios.iter().map(|s| s.id.clone()).collect();
+    let todo: Vec<_> = scenarios.into_iter().filter(|s| !resume.contains(&s.id)).collect();
+
+    // the CSV streams to disk in grid order as scenarios complete, so a
+    // killed sweep keeps every finished row for the next --resume
     let csv_path = format!("{out_dir}/sweep_scenarios.csv");
-    sweep::write_scenario_csv(&csv_path, &grid, &outcomes)?;
+    let traces_dir = args.get("traces-dir");
+    if let Some(dir) = traces_dir {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir -p {dir}"))?;
+    }
+    let mut merged = sweep::MergedScenarioCsv::create(&csv_path, &header, &ids, &resume)?;
+    let outcomes = sweep::run_scenarios_streaming(todo, &opts, |o| {
+        merged.push(o)?;
+        if let Some(dir) = traces_dir {
+            sweep::write_outcome_traces(dir, o)?;
+        }
+        Ok(())
+    })?;
+    merged.finish()?;
+
     let json_path = format!("{out_dir}/sweep_report.json");
     sweep::write_json(&json_path, &grid, &outcomes)?;
     if let Some(bench_path) = args.get("bench-out") {
         sweep::write_bench_json(bench_path, &outcomes)?;
         eprintln!("bench report written to {bench_path}");
+    }
+    if !resume.is_empty() {
+        eprintln!(
+            "resume: summary/JSON below cover the {} freshly-run scenario(s); \
+             {csv_path} merges all {}",
+            outcomes.len(),
+            ids.len()
+        );
+    }
+    if let Some(dir) = traces_dir {
+        eprintln!("per-scenario traces written to {dir}/ ({} scenario(s))", outcomes.len());
     }
 
     println!("{}", sweep::summary_table(&outcomes).render());

@@ -43,7 +43,9 @@ impl CsvWriter {
         (w, buf)
     }
 
-    fn escape(field: &str) -> String {
+    /// CSV field escaping (crate-visible so the sweep resume code can
+    /// render an expected header line for comparison without a writer).
+    pub(crate) fn escape(field: &str) -> String {
         if field.contains(',') || field.contains('"') || field.contains('\n') {
             format!("\"{}\"", field.replace('"', "\"\""))
         } else {
@@ -56,6 +58,15 @@ impl CsvWriter {
         anyhow::ensure!(fields.len() == self.cols, "row has {} fields, header {}", fields.len(), self.cols);
         let line =
             fields.iter().map(|f| Self::escape(f)).collect::<Vec<_>>().join(",");
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    /// Append an already-rendered CSV line verbatim (no re-escaping).
+    /// Crate-internal: only the sweep resume merge, which replays rows
+    /// recovered from a prior partial CSV byte-for-byte, may bypass the
+    /// field-count/escaping guarantees of the public writers.
+    pub(crate) fn write_raw_line(&mut self, line: &str) -> Result<()> {
         writeln!(self.out, "{line}")?;
         Ok(())
     }

@@ -17,6 +17,7 @@
 //! CI runners are too noisy for a hard wall-clock threshold, while the
 //! coding gain is a simulated-time ratio — stable per seed.
 
+use super::json::escape as json_escape;
 use super::runner::ScenarioOutcome;
 use anyhow::{bail, ensure, Context, Result};
 
@@ -41,7 +42,9 @@ pub fn write_bench_json(path: &str, outcomes: &[ScenarioOutcome]) -> Result<()> 
         s.push_str(&format!(
             "\n    {{\"id\": \"{}\", \"backend\": \"{}\", \"gain\": {gain}, \
              \"wall_s\": {:.3}}}",
-            o.scenario.id, o.backend, wall
+            json_escape(&o.scenario.id),
+            json_escape(o.backend),
+            wall
         ));
     }
     s.push_str("\n  ]\n}\n");
@@ -54,21 +57,78 @@ pub fn write_bench_json(path: &str, outcomes: &[ScenarioOutcome]) -> Result<()> 
     std::fs::write(path_ref, s).with_context(|| format!("writing {path}"))
 }
 
+/// Index of the first unescaped `"` in `s` (the end of a JSON string
+/// whose opening quote has already been consumed).
+fn str_end(s: &str) -> Option<usize> {
+    let mut escaped = false;
+    for (i, b) in s.bytes().enumerate() {
+        if escaped {
+            escaped = false;
+        } else if b == b'\\' {
+            escaped = true;
+        } else if b == b'"' {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Length of the record whose interior `tail` starts in (depth 1, i.e.
+/// just inside the record's `{`): bytes up to — excluding — the record's
+/// own closing `}`. String-aware, so braces inside escaped ids or axis
+/// values don't fool the scan; nested objects (the sweep report's
+/// `"assignment": {…}`) are skipped whole.
+fn record_end(tail: &str) -> usize {
+    let mut depth = 1usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, b) in tail.bytes().enumerate() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'"' {
+                in_str = false;
+            }
+        } else {
+            match b {
+                b'"' => in_str = true,
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    tail.len()
+}
+
 /// Scan a bench (or full sweep) report for `(scenario id, gain)` pairs.
-/// `gain: null` (target never reached) is preserved as `None`.
+/// `gain: null` (target never reached) is preserved as `None`; ids are
+/// returned in their JSON-escaped form (all this repo's reports pass
+/// through [`write_bench_json`]'s escaper, so baseline and current
+/// reports compare consistently). The gain lookup is bounded to each
+/// record — a record with no gain field is an error, never a silent
+/// borrow of the *next* record's gain.
 pub fn parse_gains(json: &str) -> Result<Vec<(String, Option<f64>)>> {
     let mut out = Vec::new();
     let mut rest = json;
     while let Some(at) = rest.find("\"id\": \"") {
         let after = &rest[at + 7..];
-        let id_end = after.find('"').context("unterminated scenario id")?;
+        let id_end = str_end(after).context("unterminated scenario id")?;
         let id = &after[..id_end];
-        let tail = &after[id_end..];
-        let g = tail
+        let tail = &after[id_end + 1..];
+        let record = &tail[..record_end(tail)];
+        let g = record
             .find("\"gain\": ")
-            .with_context(|| format!("scenario {id}: no gain field"))?;
-        let gtail = &tail[g + 8..];
-        let g_end = gtail.find(&[',', '}', '\n'][..]).unwrap_or(gtail.len());
+            .with_context(|| format!("scenario {id}: record has no gain field"))?;
+        let gtail = &record[g + 8..];
+        let g_end = gtail.find(&[',', '\n'][..]).unwrap_or(gtail.len());
         let raw = gtail[..g_end].trim();
         let gain = if raw == "null" {
             None
@@ -79,7 +139,7 @@ pub fn parse_gains(json: &str) -> Result<Vec<(String, Option<f64>)>> {
             )
         };
         out.push((id.to_string(), gain));
-        rest = &gtail[g_end..];
+        rest = &tail[record.len()..];
     }
     Ok(out)
 }

@@ -7,6 +7,16 @@
 //! functions of the grid alone (zero-padded index + axis assignment),
 //! never of evaluation order or worker count.
 //!
+//! **Zipped axes** ([`ScenarioGrid::zip_axes`]) pair correlated
+//! parameters — e.g. `n_devices` with `delta`, or a ladder of per-device
+//! MEC profiles — so they advance together instead of exploding the
+//! cartesian product. A zip group contributes a single expansion
+//! *dimension* ([`Dim`]) whose length is the axes' shared value count;
+//! unzipped axes each form their own dimension. IDs keep the exact
+//! `s<index>__key=value__…` shape (one `key=value` segment per axis, in
+//! declaration order), so reports and resume files are agnostic to
+//! whether a grid zips.
+//!
 //! Seeding: by default every scenario shares the base seed (common random
 //! numbers — paired comparisons across cells, as the paper's figures
 //! use). With [`ScenarioGrid::derive_seeds`] each scenario instead gets
@@ -46,7 +56,7 @@ pub const SWEEPABLE_KEYS: &[&str] = &[
 ];
 
 /// `[sweep]` keys that configure the run rather than defining an axis.
-const RESERVED_KEYS: &[&str] = &["workers", "derive_seeds"];
+const RESERVED_KEYS: &[&str] = &["workers", "derive_seeds", "zip"];
 
 /// One swept parameter: a config key plus its value list (kept as the
 /// raw strings so IDs, reports and re-parsing stay exact).
@@ -67,6 +77,17 @@ pub struct Scenario {
     pub assignment: Vec<(String, String)>,
     /// The base config with the assignment (and seed policy) applied.
     pub cfg: ExperimentConfig,
+}
+
+/// One expansion dimension: a single axis, or a zipped group of axes
+/// advancing together. Reports use dims (not raw axes) to lay out
+/// matrices, so a zipped 2-dim grid still renders as rows × columns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Dim {
+    /// Indices into [`ScenarioGrid::axes`], ascending declaration order.
+    pub axes: Vec<usize>,
+    /// The dimension's length (the axes' shared value count).
+    pub len: usize,
 }
 
 /// A base config plus ordered sweep axes.
@@ -91,12 +112,14 @@ pub struct ScenarioGrid {
     base: ExperimentConfig,
     axes: Vec<Axis>,
     derive_seeds: bool,
+    /// Groups of axis indices that sweep together (see [`Self::zip_axes`]).
+    zips: Vec<Vec<usize>>,
 }
 
 impl ScenarioGrid {
     /// Start a grid from a base configuration.
     pub fn new(base: &ExperimentConfig) -> Self {
-        Self { base: base.clone(), axes: Vec::new(), derive_seeds: false }
+        Self { base: base.clone(), axes: Vec::new(), derive_seeds: false, zips: Vec::new() }
     }
 
     /// Declared axes, in declaration order.
@@ -109,9 +132,11 @@ impl ScenarioGrid {
         &self.base
     }
 
-    /// Number of scenarios the grid expands to (1 for an axis-free grid).
+    /// Number of scenarios the grid expands to (1 for an axis-free grid):
+    /// the product of the dimension lengths, where a zipped group counts
+    /// once rather than per axis.
     pub fn len(&self) -> usize {
-        self.axes.iter().map(|a| a.values.len()).product()
+        self.dims().iter().map(|d| d.len).product()
     }
 
     /// True when expansion would yield no scenarios (never, today:
@@ -163,14 +188,178 @@ impl ScenarioGrid {
         self.axis(key, values)
     }
 
+    /// Pair already-declared axes so they sweep *together*: the group
+    /// contributes one expansion dimension (value `j` of every member is
+    /// applied at coordinate `j`) instead of a cartesian factor per axis.
+    /// The axes must exist, have equal value counts, and belong to at
+    /// most one group. IDs and report columns are unaffected — every
+    /// axis still gets its own `key=value` segment and CSV column.
+    ///
+    /// ```
+    /// use cfl::config::ExperimentConfig;
+    /// use cfl::sweep::ScenarioGrid;
+    ///
+    /// let grid = ScenarioGrid::new(&ExperimentConfig::small())
+    ///     .axis("n_devices", ["4", "8"]).unwrap()
+    ///     .axis("delta", ["0.1", "0.2"]).unwrap()
+    ///     .axis_f64("nu", &[0.0, 0.3]).unwrap()
+    ///     .zip_axes(["n_devices", "delta"]).unwrap();
+    /// // (n_devices, delta) paired × nu — not 2×2×2
+    /// assert_eq!(grid.len(), 4);
+    /// let s = grid.expand().unwrap();
+    /// assert_eq!(s[0].id, "s0__n_devices=4__delta=0.1__nu=0");
+    /// assert_eq!(s[2].cfg.n_devices, 8);
+    /// assert_eq!(s[2].cfg.delta, Some(0.2));
+    /// ```
+    pub fn zip_axes<S: AsRef<str>>(
+        mut self,
+        keys: impl IntoIterator<Item = S>,
+    ) -> Result<Self> {
+        let keys: Vec<String> =
+            keys.into_iter().map(|k| k.as_ref().trim().to_string()).collect();
+        ensure!(keys.len() >= 2, "a zip group needs at least two axes, got {keys:?}");
+        let mut group = Vec::with_capacity(keys.len());
+        for key in &keys {
+            let Some(ai) = self.axes.iter().position(|a| &a.key == key) else {
+                bail!("zip references undeclared axis '{key}' (declare it with axis()/--axis first)");
+            };
+            ensure!(!group.contains(&ai), "axis '{key}' listed twice in one zip group");
+            ensure!(
+                !self.zips.iter().any(|g| g.contains(&ai)),
+                "axis '{key}' is already in a zip group"
+            );
+            group.push(ai);
+        }
+        let first = &self.axes[group[0]];
+        for &ai in &group[1..] {
+            let axis = &self.axes[ai];
+            ensure!(
+                axis.values.len() == first.values.len(),
+                "zipped axes must have equal value counts: '{}' has {}, '{}' has {}",
+                first.key,
+                first.values.len(),
+                axis.key,
+                axis.values.len()
+            );
+        }
+        // the group's dimension sits at its first-declared axis' position
+        group.sort_unstable();
+        self.zips.push(group);
+        Ok(self)
+    }
+
+    /// Pair axes from a `key1+key2[+…]` spec (the CLI `--zip` form;
+    /// commas work as separators too, for INI `zip =` entries).
+    pub fn zip_spec(self, spec: &str) -> Result<Self> {
+        let keys: Vec<&str> = spec
+            .split(&['+', ','][..])
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        self.zip_axes(keys)
+    }
+
+    /// Declared zip groups as axis-key lists (declaration order).
+    pub fn zip_keys(&self) -> Vec<Vec<&str>> {
+        self.zips
+            .iter()
+            .map(|g| g.iter().map(|&ai| self.axes[ai].key.as_str()).collect())
+            .collect()
+    }
+
+    /// The expansion dimensions, in order (first dimension slowest). A
+    /// zip group appears once, at its first-declared axis' position.
+    pub fn dims(&self) -> Vec<Dim> {
+        let mut dims = Vec::new();
+        let mut grouped = vec![false; self.axes.len()];
+        for ai in 0..self.axes.len() {
+            if grouped[ai] {
+                continue;
+            }
+            let group: Vec<usize> = self
+                .zips
+                .iter()
+                .find(|g| g.contains(&ai))
+                .cloned()
+                .unwrap_or_else(|| vec![ai]);
+            for &i in &group {
+                grouped[i] = true;
+            }
+            let len = self.axes[group[0]].values.len();
+            dims.push(Dim { axes: group, len });
+        }
+        dims
+    }
+
+    /// A dimension's header label: its axis keys joined with `+`.
+    pub fn dim_key(&self, dim: &Dim) -> String {
+        dim.axes.iter().map(|&ai| self.axes[ai].key.as_str()).collect::<Vec<_>>().join("+")
+    }
+
+    /// A dimension's per-coordinate labels: the member axes' values at
+    /// each coordinate, joined with `+`.
+    pub fn dim_labels(&self, dim: &Dim) -> Vec<String> {
+        (0..dim.len)
+            .map(|j| {
+                dim.axes
+                    .iter()
+                    .map(|&ai| self.axes[ai].values[j].as_str())
+                    .collect::<Vec<_>>()
+                    .join("+")
+            })
+            .collect()
+    }
+
+    /// Per-axis value index for one scenario position (row-major over
+    /// `dims`, last dimension fastest).
+    fn axis_coords(&self, dims: &[Dim], index: usize) -> Vec<usize> {
+        let mut dim_coord = vec![0usize; dims.len()];
+        let mut rem = index;
+        for (di, dim) in dims.iter().enumerate().rev() {
+            dim_coord[di] = rem % dim.len;
+            rem /= dim.len;
+        }
+        let mut coords = vec![0usize; self.axes.len()];
+        for (dim, &c) in dims.iter().zip(&dim_coord) {
+            for &ai in &dim.axes {
+                coords[ai] = c;
+            }
+        }
+        coords
+    }
+
+    /// Every scenario id the grid expands to, in expansion order —
+    /// cheaper than [`Self::expand`] (no configs are built), infallible,
+    /// and the anchor the resume/report code keys on.
+    pub fn ids(&self) -> Vec<String> {
+        let dims = self.dims();
+        let total = self.len();
+        let width = total.to_string().len();
+        (0..total)
+            .map(|index| {
+                let coords = self.axis_coords(&dims, index);
+                let mut id = format!("s{index:0width$}");
+                for (axis, &ci) in self.axes.iter().zip(&coords) {
+                    id.push_str(&format!("__{}={}", axis.key, axis.values[ci]));
+                }
+                id
+            })
+            .collect()
+    }
+
     /// Add every axis declared in an INI `[sweep]` section
     /// (`key = v1, v2, ...` per axis, expanded in the section's
     /// alphabetical key order). Reserved keys: `workers` (runner
-    /// parallelism, read by the CLI) and `derive_seeds`.
+    /// parallelism, read by the CLI), `derive_seeds`, and `zip`
+    /// (`zip = key1+key2, key3+key4` pairs section axes; applied after
+    /// all axes are declared).
     pub fn with_ini(mut self, ini: &Ini) -> Result<Self> {
+        let mut zip_specs = Vec::new();
         for key in ini.keys("sweep") {
             if key == "derive_seeds" {
                 self.derive_seeds = ini.get_or("sweep", "derive_seeds", self.derive_seeds)?;
+            } else if key == "zip" {
+                zip_specs = ini.get_list("sweep", "zip").unwrap_or_default();
             } else if RESERVED_KEYS.contains(&key) {
                 continue;
             } else {
@@ -178,31 +367,27 @@ impl ScenarioGrid {
                 self = self.axis(key, values)?;
             }
         }
+        for spec in zip_specs {
+            self = self.zip_spec(&spec)?;
+        }
         Ok(self)
     }
 
-    /// Expand to the full scenario list (row-major, last axis fastest).
-    /// An axis-free grid yields the single base scenario.
+    /// Expand to the full scenario list (row-major over the dimensions,
+    /// last dimension fastest). An axis-free grid yields the single base
+    /// scenario.
     pub fn expand(&self) -> Result<Vec<Scenario>> {
-        let total = self.len();
-        let width = total.to_string().len();
+        let dims = self.dims();
+        let ids = self.ids();
         let explicit_seed_axis = self.axes.iter().any(|a| a.key == "seed");
-        let mut scenarios = Vec::with_capacity(total);
-        for index in 0..total {
-            // decode the row-major index into per-axis coordinates
-            let mut coords = vec![0usize; self.axes.len()];
-            let mut rem = index;
-            for (ai, axis) in self.axes.iter().enumerate().rev() {
-                coords[ai] = rem % axis.values.len();
-                rem /= axis.values.len();
-            }
+        let mut scenarios = Vec::with_capacity(ids.len());
+        for (index, id) in ids.into_iter().enumerate() {
+            let coords = self.axis_coords(&dims, index);
             let mut cfg = self.base.clone();
             let mut assignment = Vec::with_capacity(self.axes.len());
-            let mut id = format!("s{index:0width$}");
             for (axis, &ci) in self.axes.iter().zip(&coords) {
                 let value = &axis.values[ci];
                 apply_key(&mut cfg, &axis.key, value)?;
-                id.push_str(&format!("__{}={}", axis.key, value));
                 assignment.push((axis.key.clone(), value.clone()));
             }
             if self.derive_seeds && !explicit_seed_axis {
@@ -213,6 +398,21 @@ impl ScenarioGrid {
         }
         Ok(scenarios)
     }
+}
+
+/// Short fingerprint (FNV-1a 64 over the `Debug` rendering) of a
+/// scenario's fully-resolved config. Written as the per-scenario CSV's
+/// `config` column so `--resume` can refuse a CSV produced under a
+/// different seed/epochs/fleet/… — drift the axis columns alone cannot
+/// reveal. A pure function of the config, so resumed reports stay
+/// byte-identical.
+pub fn config_fingerprint(cfg: &ExperimentConfig) -> String {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in format!("{cfg:?}").bytes() {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100_0000_01b3);
+    }
+    format!("{hash:016x}")
 }
 
 fn parse_value<T: std::str::FromStr>(key: &str, raw: &str) -> Result<T>

@@ -1,0 +1,59 @@
+//! Minimal JSON string/number formatting shared by the report writers
+//! (`report::write_json`, `baseline::write_bench_json`) — no serde
+//! offline, so escaping lives in exactly one place. Scenario ids and
+//! axis values are interpolated into JSON verbatim otherwise, and a
+//! quote or backslash in either (reachable via zipped-axis values) must
+//! not produce an invalid document.
+
+/// Escape a string for embedding between JSON double quotes.
+pub(crate) fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON numbers cannot be NaN/∞ — map non-finite to null.
+pub(crate) fn num(v: f64) -> String {
+    if v.is_finite() {
+        v.to_string()
+    } else {
+        "null".into()
+    }
+}
+
+/// `Some(v)` → number (or null when non-finite), `None` → null.
+pub(crate) fn opt(v: Option<f64>) -> String {
+    v.map(num).unwrap_or_else(|| "null".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_quotes_backslashes_and_controls() {
+        assert_eq!(escape(r#"s0__note="q"\"#), r#"s0__note=\"q\"\\"#);
+        assert_eq!(escape("a\nb\tc"), "a\\nb\\tc");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    fn numbers_map_nonfinite_to_null() {
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+        assert_eq!(opt(None), "null");
+        assert_eq!(opt(Some(2.0)), "2");
+    }
+}

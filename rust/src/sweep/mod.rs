@@ -9,19 +9,32 @@
 //!
 //! * [`grid`] — [`ScenarioGrid`]: axes over [`ExperimentConfig`] fields
 //!   (`nu_comp`, `nu_link`, `delta`, `n_devices`, `snr_db`, `seed`, …),
-//!   cartesian expansion with stable scenario IDs, parsing from INI
-//!   `[sweep]` sections and `--axis key=v1,v2,…` CLI specs.
+//!   cartesian expansion with stable scenario IDs, **zipped axis
+//!   groups** ([`ScenarioGrid::zip_axes`] / `--zip a+b`) that sweep
+//!   correlated parameters together instead of multiplying them, and
+//!   parsing from INI `[sweep]` sections and `--axis key=v1,v2,…` CLI
+//!   specs.
 //! * [`runner`] — a `std::thread` worker pool over a channel work queue.
 //!   Each worker instantiates its own [`Coordinator`] — the DES backend
 //!   by default, or the threaded live cluster via
 //!   [`SweepOptions::backend`] / `cfl sweep --live`. Under the (default)
 //!   sim backend every scenario's result is a pure function of its
 //!   config, so parallel output is **byte-identical** to a serial run.
-//!   The pool itself is exposed as [`run_tasks`] for non-coordinator
-//!   workloads (the Fig. 1 bench's load scan runs through it).
-//! * [`report`] — per-scenario CSV, coding-gain matrices, and a JSON
+//!   [`run_scenarios_streaming`] additionally delivers outcomes to a
+//!   sink in grid order as the completed prefix grows, which is what
+//!   lets reports hit disk incrementally. The pool itself is exposed as
+//!   [`run_tasks`] / [`run_tasks_streaming`] for non-coordinator
+//!   workloads (the Fig. 1 bench's load scan runs through it); a
+//!   panicking task surfaces as an orderly `Err`, not a pool teardown.
+//! * [`report`] — per-scenario CSV, coding-gain matrices (id-keyed, so
+//!   subset/resumed sweeps still render), per-scenario NMSE trace export
+//!   (`--traces-dir`, identical for sim and live runs), and a JSON
 //!   report, built on [`crate::metrics`]; a `backend` column keeps mixed
 //!   sim/live CSVs attributable.
+//! * [`resume`] — `cfl sweep --resume <csv>`: recover completed rows
+//!   from a partial per-scenario CSV, re-run only the remainder, and
+//!   merge to a CSV byte-identical (sim backend) to an uninterrupted
+//!   run.
 //! * [`baseline`] — the CI bench-smoke pipeline: a compact per-scenario
 //!   gain/wall-time report (`cfl sweep --bench-out`) and the regression
 //!   check against a committed baseline (`cfl bench-check`).
@@ -54,13 +67,22 @@
 
 pub mod baseline;
 pub mod grid;
+mod json;
 pub mod report;
+pub mod resume;
 pub mod runner;
 
 pub use baseline::{check_gain_regression, parse_gains, write_bench_json};
-pub use grid::{Axis, Scenario, ScenarioGrid, SWEEPABLE_KEYS};
-pub use report::{gain_matrix, gain_stats, summary_table, write_json, write_scenario_csv};
-pub use runner::{run_grid, run_scenarios, run_tasks, ScenarioOutcome, SweepOptions};
+pub use grid::{config_fingerprint, Axis, Dim, Scenario, ScenarioGrid, SWEEPABLE_KEYS};
+pub use report::{
+    gain_matrix, gain_stats, scenario_csv_header, scenario_csv_row, summary_table,
+    trace_file_stem, write_json, write_outcome_traces, write_scenario_csv,
+};
+pub use resume::{MergedScenarioCsv, ResumeState};
+pub use runner::{
+    run_grid, run_scenarios, run_scenarios_streaming, run_tasks, run_tasks_streaming,
+    ScenarioOutcome, SweepOptions,
+};
 
 #[cfg(test)]
 mod tests;

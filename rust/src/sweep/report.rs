@@ -1,9 +1,11 @@
 //! Sweep reporting: per-scenario CSV, aggregate coding-gain matrices,
-//! and a hand-rolled JSON report (no serde offline) — all built on
-//! [`crate::metrics::Table`] / [`crate::metrics::CsvWriter`] and free of
-//! wall-clock values, so report bytes are identical for any worker count.
+//! per-scenario trace export, and a hand-rolled JSON report (no serde
+//! offline) — all built on [`crate::metrics::Table`] /
+//! [`crate::metrics::CsvWriter`] and free of wall-clock values, so
+//! report bytes are identical for any worker count.
 
-use super::grid::ScenarioGrid;
+use super::grid::{config_fingerprint, ScenarioGrid};
+use super::json::{escape as json_escape, num as json_num, opt as json_opt};
 use super::runner::ScenarioOutcome;
 use crate::metrics::{CsvWriter, Table};
 use crate::stats::Summary;
@@ -13,6 +15,42 @@ fn fmt_opt(v: Option<f64>) -> String {
     v.map(|v| v.to_string()).unwrap_or_default()
 }
 
+/// Per-scenario CSV header: `scenario`, one column per axis (zipped or
+/// not), then the headline metric columns.
+pub fn scenario_csv_header(grid: &ScenarioGrid) -> Vec<String> {
+    let mut header: Vec<String> = vec!["scenario".into()];
+    header.extend(grid.axes().iter().map(|a| a.key.clone()));
+    // "delta_used": the δ the run actually used (an axis may be named
+    // "delta", which gets its own assignment column). "config" is the
+    // resolved-config fingerprint --resume validates against.
+    for col in [
+        "delta_used", "epoch_deadline_s", "setup_s", "epochs", "final_nmse", "t_cfl_s",
+        "t_uncoded_s", "gain", "comm_load", "backend", "config",
+    ] {
+        header.push(col.into());
+    }
+    header
+}
+
+/// One scenario's CSV row, field-aligned with [`scenario_csv_header`].
+pub fn scenario_csv_row(o: &ScenarioOutcome) -> Vec<String> {
+    let target = o.scenario.cfg.target_nmse;
+    let mut row: Vec<String> = vec![o.scenario.id.clone()];
+    row.extend(o.scenario.assignment.iter().map(|(_, v)| v.clone()));
+    row.push(o.coded.delta.to_string());
+    row.push(o.coded.epoch_deadline.to_string());
+    row.push(o.coded.setup_secs.to_string());
+    row.push(o.coded.epoch_times.len().to_string());
+    row.push(fmt_opt(o.coded.trace.final_nmse()));
+    row.push(fmt_opt(o.coded.time_to(target)));
+    row.push(fmt_opt(o.uncoded.as_ref().and_then(|u| u.time_to(target))));
+    row.push(fmt_opt(o.gain()));
+    row.push(fmt_opt(o.comm_load()));
+    row.push(o.backend.to_string());
+    row.push(config_fingerprint(&o.scenario.cfg));
+    row
+}
+
 /// Write one CSV row per scenario: id, the axis assignment columns, and
 /// the headline metrics (times/gains at the scenario's target NMSE).
 pub fn write_scenario_csv(
@@ -20,36 +58,42 @@ pub fn write_scenario_csv(
     grid: &ScenarioGrid,
     outcomes: &[ScenarioOutcome],
 ) -> Result<()> {
-    let mut header: Vec<String> = vec!["scenario".into()];
-    header.extend(grid.axes().iter().map(|a| a.key.clone()));
-    // "delta_used": the δ the run actually used (an axis may be named
-    // "delta", which gets its own assignment column)
-    for col in [
-        "delta_used", "epoch_deadline_s", "setup_s", "epochs", "final_nmse", "t_cfl_s",
-        "t_uncoded_s", "gain", "comm_load", "backend",
-    ] {
-        header.push(col.into());
-    }
+    let header = scenario_csv_header(grid);
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut csv = CsvWriter::create(path, &header_refs)?;
     for o in outcomes {
-        let target = o.scenario.cfg.target_nmse;
-        let mut row: Vec<String> = vec![o.scenario.id.clone()];
-        row.extend(o.scenario.assignment.iter().map(|(_, v)| v.clone()));
-        row.push(o.coded.delta.to_string());
-        row.push(o.coded.epoch_deadline.to_string());
-        row.push(o.coded.setup_secs.to_string());
-        row.push(o.coded.epoch_times.len().to_string());
-        row.push(fmt_opt(o.coded.trace.final_nmse()));
-        row.push(fmt_opt(o.coded.time_to(target)));
-        row.push(fmt_opt(o.uncoded.as_ref().and_then(|u| u.time_to(target))));
-        row.push(fmt_opt(o.gain()));
-        row.push(fmt_opt(o.comm_load()));
-        row.push(o.backend.to_string());
+        let row = scenario_csv_row(o);
         let row_refs: Vec<&str> = row.iter().map(|s| s.as_str()).collect();
         csv.write_row_str(&row_refs)?;
     }
     csv.flush()
+}
+
+/// Sanitize a scenario id into a trace-file stem: the characters ids are
+/// built from pass through, anything filesystem-hostile becomes `_`.
+pub fn trace_file_stem(id: &str) -> String {
+    id.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || "._=+-".contains(c) { c } else { '_' })
+        .collect()
+}
+
+/// Write one per-epoch NMSE/time trace CSV per run under `dir`:
+/// `<id>__cfl.csv` and (when the baseline ran) `<id>__uncoded.csv` —
+/// identical format for the sim and live backends, since both report
+/// through [`RunResult`]'s simulated-seconds trace.
+///
+/// [`RunResult`]: crate::coordinator::RunResult
+pub fn write_outcome_traces(dir: &str, o: &ScenarioOutcome) -> Result<()> {
+    let stem = trace_file_stem(&o.scenario.id);
+    let ctx = |what: &str| format!("scenario {}: writing {what} trace", o.scenario.id);
+    o.coded
+        .write_trace_csv(&format!("{dir}/{stem}__cfl.csv"))
+        .with_context(|| ctx("CFL"))?;
+    if let Some(u) = &o.uncoded {
+        u.write_trace_csv(&format!("{dir}/{stem}__uncoded.csv"))
+            .with_context(|| ctx("uncoded"))?;
+    }
+    Ok(())
 }
 
 /// Human summary: one row per scenario.
@@ -85,24 +129,32 @@ pub fn summary_table(outcomes: &[ScenarioOutcome]) -> Table {
     table
 }
 
-/// For exactly-2-axis grids: the coding-gain matrix with the first axis
-/// as rows and the second as columns (the Fig. 4 presentation).
+/// For exactly-2-dimension grids (two axes, or two zip groups, or one of
+/// each): the coding-gain matrix with the first dimension as rows and
+/// the second as columns (the Fig. 4 presentation). Cells are looked up
+/// by scenario id, so a subset of outcomes — a resumed sweep's freshly
+/// run remainder, say — renders with `—` in the missing cells instead of
+/// refusing to render at all.
 pub fn gain_matrix(grid: &ScenarioGrid, outcomes: &[ScenarioOutcome]) -> Option<Table> {
-    let axes = grid.axes();
-    if axes.len() != 2 || outcomes.len() != grid.len() {
+    let dims = grid.dims();
+    if dims.len() != 2 || outcomes.is_empty() {
         return None;
     }
-    let (row_axis, col_axis) = (&axes[0], &axes[1]);
-    let mut header = vec![format!("{} \\ {}", row_axis.key, col_axis.key)];
-    header.extend(col_axis.values.iter().cloned());
+    let by_id: std::collections::HashMap<&str, &ScenarioOutcome> =
+        outcomes.iter().map(|o| (o.scenario.id.as_str(), o)).collect();
+    let ids = grid.ids();
+    let (row_dim, col_dim) = (&dims[0], &dims[1]);
+    let mut header = vec![format!("{} \\ {}", grid.dim_key(row_dim), grid.dim_key(col_dim))];
+    header.extend(grid.dim_labels(col_dim));
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&header_refs);
-    for (r, row_value) in row_axis.values.iter().enumerate() {
-        let mut cells = vec![row_value.clone()];
-        for c in 0..col_axis.values.len() {
-            // row-major expansion: axis 0 slowest, axis 1 fastest
-            let o = &outcomes[r * col_axis.values.len() + c];
-            cells.push(o.gain().map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into()));
+    for (r, row_label) in grid.dim_labels(row_dim).into_iter().enumerate() {
+        let mut cells = vec![row_label];
+        for c in 0..col_dim.len {
+            // row-major expansion: dimension 0 slowest, dimension 1 fastest
+            let id = ids[r * col_dim.len + c].as_str();
+            let gain = by_id.get(id).and_then(|o| o.gain());
+            cells.push(gain.map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into()));
         }
         table.row(&cells);
     }
@@ -125,37 +177,8 @@ pub fn gain_stats(outcomes: &[ScenarioOutcome]) -> Option<(Summary, String)> {
     best.map(|(_, id)| (summary, id.to_string()))
 }
 
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    for ch in s.chars() {
-        match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-/// JSON numbers cannot be NaN/∞ — map non-finite to null.
-fn json_num(v: f64) -> String {
-    if v.is_finite() {
-        v.to_string()
-    } else {
-        "null".into()
-    }
-}
-
-fn json_opt(v: Option<f64>) -> String {
-    v.map(json_num).unwrap_or_else(|| "null".into())
-}
-
-/// Write the machine-readable report: axes, per-scenario metrics, and
-/// the gain aggregate.
+/// Write the machine-readable report: axes, zip groups, per-scenario
+/// metrics, and the gain aggregate.
 pub fn write_json(path: &str, grid: &ScenarioGrid, outcomes: &[ScenarioOutcome]) -> Result<()> {
     let mut s = String::from("{\n  \"axes\": [");
     for (i, axis) in grid.axes().iter().enumerate() {
@@ -171,7 +194,21 @@ pub fn write_json(path: &str, grid: &ScenarioGrid, outcomes: &[ScenarioOutcome])
         }
         s.push_str("]}");
     }
-    s.push_str("\n  ],\n  \"scenarios\": [");
+    s.push_str("\n  ],\n  \"zips\": [");
+    for (i, group) in grid.zip_keys().iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push('[');
+        for (j, key) in group.iter().enumerate() {
+            if j > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\"", json_escape(key)));
+        }
+        s.push(']');
+    }
+    s.push_str("],\n  \"scenarios\": [");
     for (i, o) in outcomes.iter().enumerate() {
         if i > 0 {
             s.push(',');

@@ -1,0 +1,213 @@
+//! Resumable sweeps: recover completed rows from a partial per-scenario
+//! CSV and merge them with freshly-run outcomes.
+//!
+//! A killed multi-hour grid (or one flaky live/TCP scenario) should not
+//! cost the scenarios that already finished. The contract:
+//!
+//! 1. The runner streams rows in scenario order and each row is flushed
+//!    as it lands, so a killed sweep's CSV holds every scenario that
+//!    completed before the kill (plus, at worst, one torn final line —
+//!    dropped on load when the file does not end in a newline).
+//! 2. [`ResumeState::load`] reads that CSV back keyed by scenario id;
+//!    the sweep re-runs only the ids that are missing. Two guards
+//!    refuse incompatible resumes: the header must match the current
+//!    grid's columns, and each recovered row's `config` fingerprint
+//!    ([`ResumeState::check_compat`]) must match the current scenario's
+//!    resolved config — so a changed seed or epoch budget cannot
+//!    silently merge with stale rows.
+//! 3. [`MergedScenarioCsv`] rewrites the CSV in grid order, interleaving
+//!    recovered lines *verbatim* with freshly-rendered rows — on the
+//!    deterministic sim backend the result is byte-identical to an
+//!    uninterrupted run.
+
+use super::grid::{config_fingerprint, Scenario};
+use super::report::scenario_csv_row;
+use super::runner::ScenarioOutcome;
+use crate::metrics::CsvWriter;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// Render a header/row line exactly as [`CsvWriter`] would.
+fn csv_line(fields: &[String]) -> String {
+    fields.iter().map(|f| CsvWriter::escape(f)).collect::<Vec<_>>().join(",")
+}
+
+/// The leading (scenario-id) field of a CSV line, unquoting if needed.
+fn first_field(line: &str) -> String {
+    let Some(rest) = line.strip_prefix('"') else {
+        return line.split(',').next().unwrap_or("").to_string();
+    };
+    // quoted id: scan to the closing quote, folding "" back to "
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        if c != '"' {
+            out.push(c);
+        } else if chars.next() == Some('"') {
+            out.push('"');
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Completed scenario rows recovered from a prior (partial) sweep CSV,
+/// keyed by scenario id. Lines are kept verbatim so the merged output
+/// stays byte-identical.
+#[derive(Clone, Debug, Default)]
+pub struct ResumeState {
+    rows: BTreeMap<String, String>,
+}
+
+impl ResumeState {
+    /// No recovered rows — the fresh-run case.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Parse a prior per-scenario CSV. `expected_header` (from
+    /// [`super::report::scenario_csv_header`] for the *current* grid)
+    /// guards against resuming onto a different grid — a changed axis
+    /// set changes the columns, and silently mixing them would corrupt
+    /// the report. A final line not terminated by `\n` (the kill landed
+    /// mid-write) is dropped.
+    pub fn load(path: &str, expected_header: &[String]) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading --resume CSV {path}"))?;
+        let mut lines: Vec<&str> = text.lines().collect();
+        if !text.ends_with('\n') {
+            lines.pop(); // torn final line from the kill
+        }
+        ensure!(!lines.is_empty(), "--resume CSV {path} has no header line");
+        let header = lines.remove(0);
+        let expected = csv_line(expected_header);
+        ensure!(
+            header == expected,
+            "--resume CSV {path} header does not match this grid\n  found:    {header}\n  \
+             expected: {expected}\n(a resumed sweep must use the same axes/config as the \
+             original run)"
+        );
+        let mut rows = BTreeMap::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            rows.insert(first_field(line), line.to_string());
+        }
+        Ok(Self { rows })
+    }
+
+    /// Was this scenario already completed by the prior run?
+    pub fn contains(&self, id: &str) -> bool {
+        self.rows.contains_key(id)
+    }
+
+    /// Refuse to resume when a recovered row was produced under a
+    /// different resolved config than the current grid's scenario of
+    /// the same id. Axis keys/values are already pinned by the header
+    /// and the id itself; this catches what they cannot — a changed
+    /// seed, epoch budget, fleet, target, … — via the `config`
+    /// fingerprint column every row carries.
+    pub fn check_compat(&self, scenarios: &[Scenario]) -> Result<()> {
+        for s in scenarios {
+            let Some(line) = self.rows.get(&s.id) else { continue };
+            // the fingerprint is the final column and never quoted
+            let found = line.rsplit(',').next().unwrap_or("");
+            let expected = config_fingerprint(&s.cfg);
+            ensure!(
+                found == expected,
+                "--resume CSV row for {} was produced under a different config \
+                 (fingerprint {found} != {expected}); resume with the exact \
+                 seed/config/flags of the original run",
+                s.id
+            );
+        }
+        Ok(())
+    }
+
+    /// Number of recovered rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when nothing was recovered.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+/// Writes the per-scenario CSV in grid order, interleaving rows
+/// recovered by [`ResumeState`] with freshly-run outcomes as they
+/// stream in (via [`super::run_scenarios_streaming`]'s ordered sink).
+/// Every pushed row is flushed immediately, so a kill mid-sweep keeps
+/// all completed rows on disk for the *next* resume.
+pub struct MergedScenarioCsv {
+    csv: CsvWriter,
+    /// Per grid index: the scenario id, plus its recovered line when the
+    /// prior run already completed it.
+    plan: Vec<(String, Option<String>)>,
+    cursor: usize,
+}
+
+impl MergedScenarioCsv {
+    /// Create the output CSV (header included) for a grid whose
+    /// expansion ids are `ids`, immediately writing any recovered rows
+    /// that precede the first scenario left to run.
+    pub fn create(
+        path: &str,
+        header: &[String],
+        ids: &[String],
+        resume: &ResumeState,
+    ) -> Result<Self> {
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let csv = CsvWriter::create(path, &header_refs)?;
+        let plan = ids
+            .iter()
+            .map(|id| (id.clone(), resume.rows.get(id).cloned()))
+            .collect();
+        let mut merged = Self { csv, plan, cursor: 0 };
+        merged.flush_recovered()?;
+        Ok(merged)
+    }
+
+    fn flush_recovered(&mut self) -> Result<()> {
+        while let Some((_, Some(line))) = self.plan.get(self.cursor) {
+            self.csv.write_raw_line(line)?;
+            self.cursor += 1;
+        }
+        self.csv.flush()
+    }
+
+    /// Append one freshly-run outcome's row. Outcomes must arrive in
+    /// grid order over the *remaining* (non-recovered) scenarios — which
+    /// is exactly the order the streaming runner delivers.
+    pub fn push(&mut self, o: &ScenarioOutcome) -> Result<()> {
+        ensure!(
+            self.cursor < self.plan.len() && self.plan[self.cursor].0 == o.scenario.id,
+            "scenario {} arrived out of grid order (expected {})",
+            o.scenario.id,
+            self.plan
+                .get(self.cursor)
+                .map(|(id, _)| id.as_str())
+                .unwrap_or("no further scenarios")
+        );
+        let row = scenario_csv_row(o);
+        let row_refs: Vec<&str> = row.iter().map(|s| s.as_str()).collect();
+        self.csv.write_row_str(&row_refs)?;
+        self.cursor += 1;
+        self.flush_recovered()
+    }
+
+    /// Finish the merge: every grid scenario must have been written
+    /// (recovered or fresh).
+    pub fn finish(mut self) -> Result<()> {
+        ensure!(
+            self.cursor == self.plan.len(),
+            "sweep ended with {} of {} scenario rows written",
+            self.cursor,
+            self.plan.len()
+        );
+        self.csv.flush()
+    }
+}

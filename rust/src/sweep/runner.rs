@@ -97,10 +97,25 @@ pub fn run_grid(grid: &ScenarioGrid, opts: &SweepOptions) -> Result<Vec<Scenario
 
 /// Run scenarios across `opts.workers` threads, returning outcomes in
 /// input order regardless of completion order (the list need not be a
-/// full `0..n`-indexed expansion — any subset works).
+/// full `0..n`-indexed expansion — any subset works, which is how
+/// `--resume` runs the remainder of a grid).
 pub fn run_scenarios(
     scenarios: Vec<Scenario>,
     opts: &SweepOptions,
+) -> Result<Vec<ScenarioOutcome>> {
+    run_scenarios_streaming(scenarios, opts, |_| Ok(()))
+}
+
+/// [`run_scenarios`] with an ordered sink: `sink` is invoked once per
+/// outcome *in scenario input order* as the completed prefix grows, so a
+/// caller can append CSV rows / trace files incrementally and a killed
+/// sweep keeps everything that had streamed out — the substrate of
+/// `cfl sweep --resume` and `--traces-dir`. A sink error aborts the
+/// sweep after the in-flight scenarios finish.
+pub fn run_scenarios_streaming(
+    scenarios: Vec<Scenario>,
+    opts: &SweepOptions,
+    mut sink: impl FnMut(&ScenarioOutcome) -> Result<()>,
 ) -> Result<Vec<ScenarioOutcome>> {
     // a live scenario spawns n_devices compute threads racing wall-clock
     // deadlines; running several scenarios at once oversubscribes the host
@@ -110,21 +125,52 @@ pub fn run_scenarios(
         CoordinatorKind::Live { .. } => 1,
         CoordinatorKind::Sim => opts.workers,
     };
-    run_tasks(scenarios, workers, |scenario| run_one(scenario, opts))
+    run_tasks_streaming(scenarios, workers, |scenario| run_one(scenario, opts), |_, o| sink(o))
 }
 
 /// The sweep engine's parallel executor, generically: map `f` over
 /// `items` on a `workers`-thread pool, returning outputs in input order
 /// regardless of completion order. `workers = 1` runs inline; the first
-/// failure (in input order) is surfaced as the error. Any deterministic
-/// `f` therefore yields output byte-identical to a serial loop — the
-/// benches run their non-coordinator scans (e.g. Fig. 1's load axis)
-/// through this.
+/// failure (in input order) is surfaced as the error, and a panicking
+/// task is caught and surfaced the same way rather than tearing down the
+/// pool. Any deterministic `f` therefore yields output byte-identical to
+/// a serial loop — the benches run their non-coordinator scans (e.g.
+/// Fig. 1's load axis) through this.
 pub fn run_tasks<I, O, F>(items: Vec<I>, workers: usize, f: F) -> Result<Vec<O>>
 where
     I: Send,
     O: Send,
     F: Fn(I) -> Result<O> + Sync,
+{
+    run_tasks_streaming(items, workers, f, |_, _| Ok(()))
+}
+
+/// Render a caught panic payload for the task-failure error message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+/// [`run_tasks`] with an ordered sink: `sink(position, &output)` runs on
+/// the caller's thread once per item, in input order, as soon as every
+/// earlier item has completed (streaming prefix delivery). Errors — from
+/// a task, a caught task panic, or the sink itself — abort the run: the
+/// queue is drained so idle workers exit, in-flight tasks finish, and
+/// the first failure in input order is returned.
+pub fn run_tasks_streaming<I, O, F, S>(
+    items: Vec<I>,
+    workers: usize,
+    f: F,
+    mut sink: S,
+) -> Result<Vec<O>>
+where
+    I: Send,
+    O: Send,
+    F: Fn(I) -> Result<O> + Sync,
+    S: FnMut(usize, &O) -> Result<()>,
 {
     let n = items.len();
     if n == 0 {
@@ -132,10 +178,22 @@ where
     }
     let workers = workers.clamp(1, n);
 
+    // a panic in `f` is converted into an ordinary task error so one bad
+    // scenario surfaces as an orderly Err instead of unwinding through
+    // the pool (where it would abort the whole process on scope join)
+    let run = |item: I| -> Result<O> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item))) {
+            Ok(result) => result,
+            Err(payload) => bail!("task panicked: {}", panic_message(payload.as_ref())),
+        }
+    };
+
     if workers == 1 {
         let mut out = Vec::with_capacity(n);
-        for item in items {
-            out.push(f(item)?);
+        for (position, item) in items.into_iter().enumerate() {
+            let output = run(item)?;
+            sink(position, &output)?;
+            out.push(output);
         }
         return Ok(out);
     }
@@ -151,30 +209,68 @@ where
     }
     drop(work_tx);
 
+    // a poisoned work-queue lock means some worker died mid-pop; the
+    // queue state itself is still sound (Receiver::recv is atomic), so
+    // every lock treats poison as "keep going" and the missing result
+    // surfaces as an orderly task error below
+    let pop = |q: &Mutex<mpsc::Receiver<(usize, I)>>| {
+        q.lock().unwrap_or_else(|poisoned| poisoned.into_inner()).recv()
+    };
+
     let mut slots: Vec<Option<Result<O>>> = (0..n).map(|_| None).collect();
+    let mut first_err: Option<anyhow::Error> = None;
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let result_tx = result_tx.clone();
             let work_rx = &work_rx;
-            let f = &f;
+            let run = &run;
             scope.spawn(move || loop {
                 // take the next item, releasing the lock before running
-                let job = { work_rx.lock().expect("work queue lock").recv() };
-                let Ok((position, item)) = job else { break };
-                let output = f(item);
+                let Ok((position, item)) = pop(work_rx) else { break };
+                let output = run(item);
                 if result_tx.send((position, output)).is_err() {
                     break;
                 }
             });
         }
         drop(result_tx);
-        for (position, output) in result_rx.iter() {
+        let mut next = 0usize;
+        'collect: for (position, output) in result_rx.iter() {
             slots[position] = Some(output);
+            // deliver the completed prefix in input order; stop at the
+            // first failure — which, because we walk positions in order,
+            // is the first failure in input order
+            while next < n {
+                match &slots[next] {
+                    None => break,
+                    Some(Ok(_)) => {
+                        let Some(Ok(output)) = &slots[next] else { unreachable!() };
+                        if let Err(e) = sink(next, output) {
+                            first_err = Some(e);
+                            break 'collect;
+                        }
+                        next += 1;
+                    }
+                    Some(Err(_)) => {
+                        let Some(Err(e)) = slots[next].take() else { unreachable!() };
+                        first_err = Some(e);
+                        break 'collect;
+                    }
+                }
+            }
+        }
+        if first_err.is_some() {
+            // orderly shutdown: drain the queue so workers stop after
+            // their in-flight item instead of running the whole backlog
+            let q = work_rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            while q.try_recv().is_ok() {}
         }
     });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
 
-    // surface the first failure in input order (deterministic), else
-    // unwrap everything in order
+    // no error surfaced in order: every slot must hold an Ok
     let mut out = Vec::with_capacity(n);
     for (position, slot) in slots.into_iter().enumerate() {
         match slot {

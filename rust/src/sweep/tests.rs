@@ -108,6 +108,93 @@ fn axis_spec_and_ini_parsing() {
 }
 
 #[test]
+fn zip_axes_pair_correlated_parameters() {
+    let grid = ScenarioGrid::new(&tiny())
+        .axis("n_devices", ["4", "6"])
+        .unwrap()
+        .axis_f64("nu", &[0.0, 0.1])
+        .unwrap()
+        .axis("points_per_device", ["16", "12"])
+        .unwrap()
+        .zip_axes(["n_devices", "points_per_device"])
+        .unwrap();
+    // the zipped pair contributes one dimension: 2 × 2, not 2 × 2 × 2
+    assert_eq!(grid.len(), 4);
+    let dims = grid.dims();
+    assert_eq!(dims.len(), 2);
+    assert_eq!(grid.dim_key(&dims[0]), "n_devices+points_per_device");
+    assert_eq!(grid.dim_labels(&dims[0]), vec!["4+16", "6+12"]);
+    assert_eq!(grid.dim_key(&dims[1]), "nu");
+
+    let scenarios = grid.expand().unwrap();
+    // ids keep one key=value segment per axis, in declaration order
+    assert_eq!(scenarios[0].id, "s0__n_devices=4__nu=0__points_per_device=16");
+    assert_eq!(scenarios[3].id, "s3__n_devices=6__nu=0.1__points_per_device=12");
+    // zipped members advance together, never crossed
+    for s in &scenarios {
+        match s.cfg.n_devices {
+            4 => assert_eq!(s.cfg.points_per_device, 16, "{}", s.id),
+            6 => assert_eq!(s.cfg.points_per_device, 12, "{}", s.id),
+            other => panic!("unexpected n_devices {other}"),
+        }
+    }
+    // ids() agrees with expand()
+    let ids = grid.ids();
+    for (s, id) in scenarios.iter().zip(&ids) {
+        assert_eq!(&s.id, id);
+    }
+}
+
+#[test]
+fn zip_axes_validation_rejects_bad_groups() {
+    let two = || {
+        ScenarioGrid::new(&tiny())
+            .axis_f64("nu", &[0.0, 0.1])
+            .unwrap()
+            .axis("delta", ["0.1", "0.2"])
+            .unwrap()
+    };
+    assert!(two().zip_axes(["nu", "not_declared"]).is_err());
+    assert!(two().zip_axes(["nu"]).is_err(), "a group of one is meaningless");
+    assert!(two().zip_axes(["nu", "nu"]).is_err(), "same axis twice");
+    assert!(two()
+        .zip_axes(["nu", "delta"])
+        .unwrap()
+        .zip_axes(["delta", "nu"])
+        .is_err(), "an axis joins at most one group");
+    // unequal value counts cannot pair
+    let uneven = ScenarioGrid::new(&tiny())
+        .axis_f64("nu", &[0.0, 0.1, 0.2])
+        .unwrap()
+        .axis("delta", ["0.1", "0.2"])
+        .unwrap();
+    let err = uneven.zip_axes(["nu", "delta"]).unwrap_err().to_string();
+    assert!(err.contains("equal value counts"), "{err}");
+}
+
+#[test]
+fn zip_from_ini_and_cli_spec() {
+    let ini = Ini::parse(
+        "[sweep]\nn_devices = 4, 6\npoints_per_device = 16, 12\nnu_link = 0, 0.2\n\
+         zip = n_devices+points_per_device\n",
+    )
+    .unwrap();
+    let grid = ScenarioGrid::new(&tiny()).with_ini(&ini).unwrap();
+    assert_eq!(grid.len(), 4, "zip folds the pair into one dimension");
+    assert_eq!(grid.zip_keys(), vec![vec!["n_devices", "points_per_device"]]);
+
+    // the CLI spec form accepts + separators
+    let grid = ScenarioGrid::new(&tiny())
+        .axis("n_devices", ["4", "6"])
+        .unwrap()
+        .axis("points_per_device", ["16", "12"])
+        .unwrap()
+        .zip_spec("n_devices+points_per_device")
+        .unwrap();
+    assert_eq!(grid.len(), 2);
+}
+
+#[test]
 fn compound_nu_axis_sets_both_knobs() {
     let scenarios =
         ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0, 0.3]).unwrap().expand().unwrap();
@@ -251,6 +338,21 @@ fn live_backend_runs_the_grid() {
     // the reports render live outcomes through the same pipeline
     let rendered = summary_table(&outcomes).render();
     assert_eq!(rendered.lines().count(), 4, "{rendered}");
+
+    // trace-export parity: live runs export per-scenario traces in the
+    // exact format the sim backend writes
+    let dir = std::env::temp_dir().join("cfl_sweep_live_traces");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    for o in &outcomes {
+        write_outcome_traces(dir.to_str().unwrap(), o).unwrap();
+    }
+    let trace =
+        std::fs::read_to_string(dir.join("s0__nu=0__cfl.csv")).expect("live CFL trace");
+    assert!(trace.starts_with("time_s,epoch,nmse"), "{trace}");
+    assert!(trace.lines().count() > 20, "live trace missing epochs: {trace}");
+    assert!(dir.join("s0__nu=0__uncoded.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -272,6 +374,49 @@ fn run_tasks_is_order_preserving_and_surfaces_errors() {
 
     let empty: Vec<usize> = Vec::new();
     assert!(run_tasks(empty, 4, |i| Ok(i)).unwrap().is_empty());
+}
+
+#[test]
+fn run_tasks_streaming_delivers_the_prefix_in_order() {
+    let items: Vec<usize> = (0..17).collect();
+    let mut order = Vec::new();
+    let out = run_tasks_streaming(items, 4, |i| Ok(i * 2), |pos, v: &usize| {
+        order.push((pos, *v));
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(out, (0..17).map(|i| i * 2).collect::<Vec<_>>());
+    // the sink saw every output, in input order, regardless of workers
+    assert_eq!(order, (0..17).map(|i| (i, i * 2)).collect::<Vec<_>>());
+
+    // a sink error aborts the run
+    let err = run_tasks_streaming((0..8).collect(), 4, |i: usize| Ok(i), |pos, _: &usize| {
+        anyhow::ensure!(pos != 2, "sink refused #{pos}");
+        Ok(())
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("sink refused #2"), "{err}");
+}
+
+#[test]
+fn run_tasks_catches_panicking_tasks_as_errors() {
+    // a panic in one task must surface as an orderly Err (first failure
+    // in input order), not poison the pool or abort the process
+    let err = run_tasks((0..8).collect::<Vec<usize>>(), 4, |i| {
+        if i == 3 {
+            panic!("kaboom at {i}");
+        }
+        Ok(i)
+    })
+    .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("task panicked"), "{msg}");
+    assert!(msg.contains("kaboom at 3"), "{msg}");
+
+    // serial path too
+    let err = run_tasks(vec![0usize], 1, |_| -> anyhow::Result<usize> { panic!("solo") })
+        .unwrap_err();
+    assert!(err.to_string().contains("solo"), "{err}");
 }
 
 #[test]
@@ -332,7 +477,7 @@ fn scenario_csv_has_axis_columns_and_json_is_well_formed() {
     let mut lines = text.lines();
     let header = lines.next().unwrap();
     assert!(header.starts_with("scenario,delta,delta_used,"), "{header}");
-    assert!(header.ends_with("gain,comm_load,backend"), "{header}");
+    assert!(header.ends_with("gain,comm_load,backend,config"), "{header}");
     assert_eq!(lines.count(), 2);
     // target 0 is unreachable → empty gain cells, never "NaN"
     assert!(!text.contains("NaN"), "{text}");
@@ -350,6 +495,179 @@ fn scenario_csv_has_axis_columns_and_json_is_well_formed() {
     assert!(balance('{', '}') && balance('[', ']'));
     assert!(!json.contains("NaN") && !json.contains("inf"), "{json}");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn gain_matrix_renders_resumed_subsets_by_id() {
+    let mut cfg = tiny();
+    cfg.max_epochs = 400;
+    cfg.target_nmse = 2e-2;
+    let grid = ScenarioGrid::new(&cfg)
+        .axis_f64("nu_comp", &[0.0, 0.2])
+        .unwrap()
+        .axis_f64("nu_link", &[0.0, 0.1])
+        .unwrap();
+    let mut outcomes = run_grid(
+        &grid,
+        &SweepOptions { workers: 2, uncoded_baseline: true, progress: false, ..Default::default() },
+    )
+    .unwrap();
+    // drop a cell, as a resumed sweep's freshly-run remainder would
+    outcomes.remove(1);
+    let table = gain_matrix(&grid, &outcomes).expect("subsets still render");
+    let rendered = table.render();
+    assert_eq!(rendered.lines().count(), 2 + 2, "{rendered}");
+    // the missing (0.0, 0.1) cell renders as a hole, not a crash
+    assert!(rendered.contains('—'), "{rendered}");
+}
+
+#[test]
+fn gain_matrix_uses_zip_groups_as_dimensions() {
+    let grid = ScenarioGrid::new(&tiny())
+        .axis("n_devices", ["4", "6"])
+        .unwrap()
+        .axis_f64("nu", &[0.0, 0.1])
+        .unwrap()
+        .axis("points_per_device", ["16", "12"])
+        .unwrap()
+        .zip_axes(["n_devices", "points_per_device"])
+        .unwrap();
+    let outcomes = run_grid(
+        &grid,
+        &SweepOptions { workers: 2, uncoded_baseline: false, progress: false, ..Default::default() },
+    )
+    .unwrap();
+    // 3 axes but 2 dimensions → the matrix renders, zipped labels joined
+    let rendered = gain_matrix(&grid, &outcomes).expect("2-dim grid").render();
+    assert!(rendered.contains("n_devices+points_per_device \\ nu"), "{rendered}");
+    assert!(rendered.contains("6+12"), "{rendered}");
+}
+
+#[test]
+fn resume_merges_to_a_byte_identical_csv() {
+    let grid = ScenarioGrid::new(&tiny())
+        .axis_f64("nu", &[0.0, 0.2])
+        .unwrap()
+        .axis("delta", ["0.15", "auto"])
+        .unwrap();
+    let opts =
+        SweepOptions { workers: 2, uncoded_baseline: true, progress: false, ..Default::default() };
+    let header = scenario_csv_header(&grid);
+    let ids = grid.ids();
+    let dir = std::env::temp_dir().join("cfl_sweep_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // uninterrupted run, streamed through the merge writer
+    let full_path = dir.join("full.csv");
+    let mut merged = MergedScenarioCsv::create(
+        full_path.to_str().unwrap(),
+        &header,
+        &ids,
+        &ResumeState::empty(),
+    )
+    .unwrap();
+    run_scenarios_streaming(grid.expand().unwrap(), &opts, |o| merged.push(o)).unwrap();
+    merged.finish().unwrap();
+    let full = std::fs::read_to_string(&full_path).unwrap();
+    assert_eq!(full.lines().count(), 1 + 4);
+
+    // simulate a mid-run kill: header + the first 2 rows survive
+    let partial_path = dir.join("partial.csv");
+    let kept: Vec<&str> = full.lines().take(3).collect();
+    std::fs::write(&partial_path, format!("{}\n", kept.join("\n"))).unwrap();
+
+    let resume = ResumeState::load(partial_path.to_str().unwrap(), &header).unwrap();
+    assert_eq!(resume.len(), 2);
+    let todo: Vec<Scenario> = grid
+        .expand()
+        .unwrap()
+        .into_iter()
+        .filter(|s| !resume.contains(&s.id))
+        .collect();
+    assert_eq!(todo.len(), 2, "only the unfinished remainder re-runs");
+
+    let resumed_path = dir.join("resumed.csv");
+    let mut merged = MergedScenarioCsv::create(
+        resumed_path.to_str().unwrap(),
+        &header,
+        &ids,
+        &resume,
+    )
+    .unwrap();
+    run_scenarios_streaming(todo, &opts, |o| merged.push(o)).unwrap();
+    merged.finish().unwrap();
+    assert_eq!(
+        std::fs::read(&full_path).unwrap(),
+        std::fs::read(&resumed_path).unwrap(),
+        "resumed CSV must be byte-identical to the uninterrupted run"
+    );
+
+    // a torn final line (kill landed mid-write) is dropped on load
+    let torn_path = dir.join("torn.csv");
+    std::fs::write(&torn_path, format!("{}\ns9__nu=torn", kept.join("\n"))).unwrap();
+    let torn = ResumeState::load(torn_path.to_str().unwrap(), &header).unwrap();
+    assert_eq!(torn.len(), 2, "the 2 full rows survive, the torn line is dropped");
+    assert!(!torn.contains("s9__nu=torn"));
+
+    // resuming onto a different grid (different columns) is refused
+    let other = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0]).unwrap();
+    let err = ResumeState::load(partial_path.to_str().unwrap(), &scenario_csv_header(&other))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("header does not match"), "{err}");
+
+    // same columns but a different base config (e.g. another seed) is
+    // refused by the per-row config fingerprint
+    let mut reseeded = tiny();
+    reseeded.seed = 1234;
+    let drifted = ScenarioGrid::new(&reseeded)
+        .axis_f64("nu", &[0.0, 0.2])
+        .unwrap()
+        .axis("delta", ["0.15", "auto"])
+        .unwrap();
+    let err = resume.check_compat(&drifted.expand().unwrap()).unwrap_err().to_string();
+    assert!(err.contains("different config"), "{err}");
+    // while the original grid passes
+    resume.check_compat(&grid.expand().unwrap()).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_fingerprint_tracks_the_resolved_config() {
+    let a = tiny();
+    let mut b = tiny();
+    assert_eq!(config_fingerprint(&a), config_fingerprint(&b), "pure function");
+    b.seed = 1234;
+    assert_ne!(config_fingerprint(&a), config_fingerprint(&b), "seed must show");
+    let mut c = tiny();
+    c.max_epochs += 1;
+    assert_ne!(config_fingerprint(&a), config_fingerprint(&c), "epochs must show");
+}
+
+#[test]
+fn traces_dir_exports_one_file_per_run() {
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0, 0.2]).unwrap();
+    let opts =
+        SweepOptions { workers: 1, uncoded_baseline: true, progress: false, ..Default::default() };
+    let outcomes = run_grid(&grid, &opts).unwrap();
+    let dir = std::env::temp_dir().join("cfl_sweep_traces");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    for o in &outcomes {
+        write_outcome_traces(dir.to_str().unwrap(), o).unwrap();
+    }
+    for stem in ["s0__nu=0", "s1__nu=0.2"] {
+        let cfl = std::fs::read_to_string(dir.join(format!("{stem}__cfl.csv"))).unwrap();
+        assert!(cfl.starts_with("time_s,epoch,nmse"), "{cfl}");
+        assert!(cfl.lines().count() > 40, "trace missing epochs: {cfl}");
+        let unc = std::fs::read_to_string(dir.join(format!("{stem}__uncoded.csv"))).unwrap();
+        assert!(unc.starts_with("time_s,epoch,nmse"), "{unc}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // ids sanitize to safe file stems
+    assert_eq!(trace_file_stem("s0__nu=0.1"), "s0__nu=0.1");
+    assert_eq!(trace_file_stem("s0__a/b\\c\"d"), "s0__a_b_c_d");
 }
 
 #[test]
@@ -387,6 +705,48 @@ fn bench_report_writes_and_parses_gains() {
     assert_eq!(gains[0].0, "s0__nu=0");
     assert!(json.contains("\"wall_s\": "), "{json}");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_json_escapes_exotic_scenario_ids() {
+    // quote/backslash-bearing ids (reachable via zipped-axis values) must
+    // round-trip through both report writers as valid JSON
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0]).unwrap();
+    let opts =
+        SweepOptions { workers: 1, uncoded_baseline: false, progress: false, ..Default::default() };
+    let mut outcomes = run_grid(&grid, &opts).unwrap();
+    outcomes[0].scenario.id = "s0__note=\"q\"\\p".to_string();
+
+    let dir = std::env::temp_dir().join("cfl_bench_escape");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bench_path = dir.join("bench.json");
+    write_bench_json(bench_path.to_str().unwrap(), &outcomes).unwrap();
+    let json = std::fs::read_to_string(&bench_path).unwrap();
+    assert!(json.contains(r#""id": "s0__note=\"q\"\\p""#), "{json}");
+    let gains = parse_gains(&json).unwrap();
+    assert_eq!(gains.len(), 1, "escaped id must not derail the scanner: {json}");
+    assert_eq!(gains[0].0, r#"s0__note=\"q\"\\p"#);
+
+    // the full sweep report takes the same escaping path
+    let report_path = dir.join("report.json");
+    write_json(report_path.to_str().unwrap(), &grid, &outcomes).unwrap();
+    let full = std::fs::read_to_string(&report_path).unwrap();
+    assert!(full.contains(r#""id": "s0__note=\"q\"\\p""#), "{full}");
+    assert_eq!(parse_gains(&full).unwrap().len(), 1, "{full}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn parse_gains_errors_on_a_record_missing_its_gain() {
+    // the first record has no gain: the scan must error rather than
+    // silently borrow the *next* record's gain (mis-attributed gate)
+    let json = r#"{"scenarios": [
+    {"id": "a", "wall_s": 1.0},
+    {"id": "b", "gain": 1.5, "wall_s": 1.0}
+  ]}"#;
+    let err = parse_gains(json).unwrap_err().to_string();
+    assert!(err.contains("scenario a"), "{err}");
+    assert!(err.contains("no gain"), "{err}");
 }
 
 #[test]

@@ -128,6 +128,76 @@ fn sweep_subcommand_expands_grid_and_parallel_matches_serial() {
 }
 
 #[test]
+fn sweep_resume_zip_and_traces_roundtrip() {
+    let bin = require_bin!();
+    let dir = std::env::temp_dir().join("cfl_cli_sweep_resume");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |out: &std::path::Path, extra: &[&str]| {
+        let mut args = vec![
+            "sweep",
+            "--seed",
+            "9",
+            "--devices",
+            "4",
+            "--epochs",
+            "60",
+            "--target-nmse",
+            "0",
+            "--axis",
+            "nu=0,0.2",
+            "--axis",
+            "delta=0.1,0.15",
+            "--zip",
+            "nu+delta",
+            "--workers",
+            "2",
+            "--quiet",
+            "--out",
+        ];
+        let out_str = out.to_str().unwrap();
+        args.push(out_str);
+        args.extend_from_slice(extra);
+        Command::new(&bin).args(&args).output().unwrap()
+    };
+
+    // uninterrupted run, with per-scenario trace export
+    let full_dir = dir.join("full");
+    let traces_dir = dir.join("traces");
+    let full = run(&full_dir, &["--traces-dir", traces_dir.to_str().unwrap()]);
+    assert!(full.status.success(), "stderr: {}", String::from_utf8_lossy(&full.stderr));
+    let text = String::from_utf8_lossy(&full.stdout);
+    // zipped: 2 axes but only 2 scenarios, and the zip is announced
+    assert!(text.contains("2 axes → 2 scenarios"), "{text}");
+    assert!(text.contains("zip nu+delta"), "{text}");
+    let full_csv = std::fs::read_to_string(full_dir.join("sweep_scenarios.csv")).unwrap();
+    assert_eq!(full_csv.lines().count(), 1 + 2, "{full_csv}");
+    // one cfl + one uncoded trace per scenario
+    let mut traces: Vec<String> = std::fs::read_dir(&traces_dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    traces.sort();
+    assert_eq!(traces.len(), 4, "{traces:?}");
+    assert!(traces[0].ends_with("__cfl.csv"), "{traces:?}");
+
+    // simulate a mid-run kill: keep the header + the first scenario row,
+    // then resume — the merged CSV must match the uninterrupted run
+    let resumed_dir = dir.join("resumed");
+    std::fs::create_dir_all(&resumed_dir).unwrap();
+    let kept: Vec<&str> = full_csv.lines().take(2).collect();
+    let resumed_csv_path = resumed_dir.join("sweep_scenarios.csv");
+    std::fs::write(&resumed_csv_path, format!("{}\n", kept.join("\n"))).unwrap();
+    let resumed = run(&resumed_dir, &["--resume", resumed_csv_path.to_str().unwrap()]);
+    assert!(resumed.status.success(), "stderr: {}", String::from_utf8_lossy(&resumed.stderr));
+    let err = String::from_utf8_lossy(&resumed.stderr);
+    assert!(err.contains("resume: 1 completed scenario(s) recovered"), "{err}");
+    let resumed_csv = std::fs::read_to_string(&resumed_csv_path).unwrap();
+    assert_eq!(full_csv, resumed_csv, "resumed CSV must be byte-identical");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn help_prints_without_failing() {
     let bin = require_bin!();
     let out = Command::new(&bin).args(["--help"]).output().unwrap();
