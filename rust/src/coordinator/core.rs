@@ -86,6 +86,16 @@ pub struct RunResult {
     pub on_time_gradients: u64,
     /// Device gradients scheduled/sent but missed by the gather.
     pub late_gradients: u64,
+    /// Per-epoch gather-set size, aligned with `trace.points` (entry 0 is
+    /// the fleet participating at setup; entry k > 0 is how many devices
+    /// epoch k's broadcast actually reached). Under churn this dips when
+    /// a device disconnects and recovers when it rejoins — the membership
+    /// column of the exported trace.
+    pub epoch_members: Vec<usize>,
+    /// Mid-session device disconnects observed (live backend; 0 for sim).
+    pub disconnects: u64,
+    /// Devices re-admitted after a disconnect (live backend; 0 for sim).
+    pub rejoins: u64,
 }
 
 impl RunResult {
@@ -100,11 +110,26 @@ impl RunResult {
         &self.trace
     }
 
-    /// Write the per-epoch `time_s,epoch,nmse` trace as CSV — the
+    /// Write the per-epoch `time_s,epoch,nmse,members` trace as CSV — the
     /// per-scenario export behind `cfl sweep --traces-dir` and the
-    /// `cfl train` trace files, identical for sim and live runs.
+    /// `cfl train` trace files, identical for sim and live runs. The
+    /// `members` column is the epoch's gather-set size, so churn (a
+    /// device dropping to parity-only coverage, then rejoining) is
+    /// visible directly in the trace.
     pub fn write_trace_csv(&self, path: &str) -> Result<()> {
-        self.trace.write_csv(path)
+        if self.epoch_members.len() == self.trace.points.len() {
+            let mut w = crate::metrics::CsvWriter::create(
+                path,
+                &["time_s", "epoch", "nmse", "members"],
+            )?;
+            for (p, &m) in self.trace.points.iter().zip(&self.epoch_members) {
+                w.write_row(&[p.time_s, p.epoch as f64, p.nmse, m as f64])?;
+            }
+            w.flush()
+        } else {
+            // membership unknown (hand-built results): classic 3 columns
+            self.trace.write_csv(path)
+        }
     }
 }
 

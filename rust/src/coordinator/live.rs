@@ -25,9 +25,21 @@
 //!
 //! A device that disconnects mid-run (socket EOF, worker death) is the
 //! paper's erasure case: the master degrades it to parity-only coverage —
-//! its gradients are simply never gathered again — rather than waiting on
-//! it each epoch. The uncoded baseline's wait-for-all gather likewise
+//! its gradients are simply never gathered — rather than waiting on it
+//! each epoch. The uncoded baseline's wait-for-all gather likewise
 //! shrinks to the surviving fleet instead of hanging.
+//!
+//! Crucially, that demotion is **not permanent**: when the transport
+//! re-admits a fresh incarnation of the device ([`Event::Rejoined`] — a
+//! restarted `cfl device --retry` process, a respawned channel worker),
+//! the master re-sends `Setup` with the device's frozen shard at the
+//! next epoch boundary and restores it to the coded gather set (or the
+//! uncoded wait-for-all set), shrinking the parity's effective coverage
+//! back to the true stragglers. Without this, every long-running fleet
+//! would decay toward the centralized parity-only regime the paper's
+//! *federated* operating point is defined against. Per-epoch membership
+//! is recorded in [`RunResult::epoch_members`], so exported traces show
+//! the churn.
 //!
 //! This is the deployment-shaped path: it demonstrates that the epoch
 //! logic (deadline gather + Eq. 18/19 assembly) is driven by real message
@@ -79,8 +91,10 @@ pub struct LiveCoordinator {
     /// Wall-clock grace added to every epoch deadline to absorb the
     /// *host's* overheads (thread wakeup, channel/socket hop, the real
     /// gradient GEMM) which exist on top of the simulated delays being
-    /// slept out. `None` (the default) auto-calibrates it per run from
-    /// the ping/echo handshake; `Some` pins it.
+    /// slept out. `None` (the default) uses the per-run ping/echo
+    /// handshake's measurement; `Some` pins the budget (the handshake
+    /// still runs — it doubles as the liveness probe that excludes
+    /// silently-dead endpoints from the run).
     pub grace: Option<Duration>,
     transport: Box<dyn Transport>,
     /// Run counter: tags every `Setup`/`Grad` so stragglers from a
@@ -220,17 +234,42 @@ impl LiveCoordinator {
         let active: Vec<usize> = inits.iter().map(|init| init.device_index).collect();
         anyhow::ensure!(!active.is_empty(), "no device carries a positive load");
         let n_endpoints = self.transport.n_endpoints();
-        let mut alive = vec![false; n_endpoints];
-        for &slot in &active {
-            alive[slot] = true;
+        // keep each participating device's frozen state around so a
+        // rejoined incarnation can be re-armed mid-run (Setup is re-sent
+        // at the next epoch boundary). This is a deliberate one-per-run
+        // deep copy of the shard state — at paper scale ~one dataset's
+        // worth of f32s held for the run's duration; the §III-A setup is
+        // rng-coupled, so rebuilding it lazily on rejoin would mean
+        // replaying the whole coding phase instead. Revisit (Arc'd
+        // matrices) if fleet memory ever becomes the constraint.
+        let mut rejoin_inits: Vec<Option<DeviceInit>> = vec![None; n_endpoints];
+        for init in &inits {
+            rejoin_inits[init.device_index] = Some(init.clone());
         }
-        self.transport.begin_run(inits)?;
+        // slots whose fresh incarnation was admitted but not yet re-armed
+        let mut needs_setup = vec![false; n_endpoints];
+        let mut disconnects = 0u64;
+        let mut rejoins = 0u64;
+        // an endpoint is alive only if this run's Setup actually reached
+        // it — a slot dead at begin_run starts the run awaiting rejoin
+        // (its fresh incarnation, admitted later, must not be broadcast
+        // to before its Setup lands)
+        let delivered = self.transport.begin_run(inits)?;
+        let mut alive = vec![false; n_endpoints];
+        for (&slot, ok) in active.iter().zip(delivered) {
+            alive[slot] = ok;
+        }
 
         // --- deadline calibration -----------------------------------------
-        let grace = match self.grace {
-            Some(g) => g,
-            None => calibrate_grace(self.transport.as_mut(), &active, &mut alive),
-        };
+        let measured = calibrate_grace(
+            self.transport.as_mut(),
+            &active,
+            &mut alive,
+            &mut needs_setup,
+            &mut disconnects,
+            &mut rejoins,
+        );
+        let grace = self.grace.unwrap_or(measured);
 
         // --- epoch loop ---------------------------------------------------
         let mut model = GlobalModel::zeros(d, cfg.learning_rate, m);
@@ -250,6 +289,7 @@ impl LiveCoordinator {
             WAIT_ALL_TIMEOUT
         };
         let mut epoch_times = Vec::new();
+        let mut epoch_members = vec![active.len()];
         let mut converged = None;
         let mut late = 0u64;
         let mut on_time = 0u64;
@@ -257,6 +297,54 @@ impl LiveCoordinator {
 
         for epoch in 0..cfg.max_epochs {
             let epoch_start = Instant::now();
+            // epoch boundary: drain queued lifecycle events without
+            // blocking. This is what keeps an all-dead fleet revivable —
+            // the gather loop below only runs while replies are pending,
+            // so with zero live devices a queued rejoin would otherwise
+            // starve forever and the run would decay parity-only to its
+            // end. Stray replies here are stragglers of a closed gather
+            // (already counted late) or stale pongs: dropped.
+            loop {
+                match self.transport.recv_timeout(Duration::ZERO) {
+                    Event::Gone(slot) => {
+                        if alive[slot] {
+                            alive[slot] = false;
+                            disconnects += 1;
+                        }
+                        needs_setup[slot] = false;
+                    }
+                    Event::Rejoined(slot) => {
+                        if alive[slot] {
+                            // suppressed death notice: see the gather arm
+                            alive[slot] = false;
+                            disconnects += 1;
+                        }
+                        if !needs_setup[slot] {
+                            needs_setup[slot] = true;
+                            rejoins += 1;
+                        }
+                    }
+                    Event::Msg(_, _) => {}
+                    Event::Timeout | Event::Closed => break,
+                }
+            }
+            // … then re-arm any freshly rejoined incarnation — it holds
+            // no run state, so it gets the frozen Setup (same run tag,
+            // same shard, same delay stream) before this epoch's Model,
+            // restoring it to the gather set
+            for slot in 0..n_endpoints {
+                if !needs_setup[slot] {
+                    continue;
+                }
+                needs_setup[slot] = false;
+                let Some(init) = rejoin_inits[slot].as_ref() else {
+                    continue; // a zero-load / non-participating slot
+                };
+                let re = ToDevice::Setup(Box::new(init.clone()));
+                if self.transport.send(slot, &re)? {
+                    alive[slot] = true;
+                }
+            }
             // broadcast to the surviving fleet (one message, serialized
             // once by the transport); a failed delivery is this epoch's
             // discovery that an endpoint died
@@ -270,7 +358,10 @@ impl LiveCoordinator {
                     sent_to[slot] = true;
                     pending += 1;
                 } else {
+                    // a failed delivery is an observed death too (the
+                    // Gone that follows, if any, is guarded by `alive`)
                     alive[slot] = false;
+                    disconnects += 1;
                 }
             }
             anyhow::ensure!(
@@ -313,11 +404,37 @@ impl LiveCoordinator {
                     Event::Gone(slot) => {
                         // mid-epoch disconnect: degrade this device to
                         // parity-only coverage instead of waiting on it
+                        // (until a fresh incarnation rejoins)
                         if alive[slot] {
                             alive[slot] = false;
+                            disconnects += 1;
                             if sent_to[slot] && !replied[slot] {
                                 pending -= 1;
                             }
+                        }
+                        needs_setup[slot] = false; // died again pre-Setup
+                    }
+                    Event::Rejoined(slot) => {
+                        // a rejoin for a slot still thought alive means
+                        // the old incarnation's death notice was
+                        // suppressed by the generation filter (kill and
+                        // rejoin back-to-back): account the implicit
+                        // disconnect first, or the gather would wait out
+                        // the deadline for a reply that can never come —
+                        // and the blank replacement would be broadcast to
+                        // before its Setup, dying of a protocol violation
+                        if alive[slot] {
+                            alive[slot] = false;
+                            disconnects += 1;
+                            if sent_to[slot] && !replied[slot] {
+                                pending -= 1;
+                            }
+                        }
+                        // re-arm the fresh incarnation at the next epoch
+                        // boundary (it missed this epoch's broadcast)
+                        if !needs_setup[slot] {
+                            needs_setup[slot] = true;
+                            rejoins += 1;
                         }
                     }
                     Event::Timeout => break,
@@ -333,6 +450,7 @@ impl LiveCoordinator {
             // that missed this epoch's gather is late, whether it was slow,
             // lost, or its endpoint died mid-flight
             late += (sent - grads.len()) as u64;
+            epoch_members.push(sent);
             let refs: Vec<&Mat> = grads.iter().collect();
             let grad = assemble_coded_gradient(d, parity.as_ref(), &refs);
             model.apply_gradient(&grad);
@@ -375,6 +493,9 @@ impl LiveCoordinator {
             wall_secs: started.elapsed().as_secs_f64(),
             on_time_gradients: on_time,
             late_gradients: late,
+            epoch_members,
+            disconnects,
+            rejoins,
         })
     }
 }
@@ -383,19 +504,43 @@ impl LiveCoordinator {
 /// device; the worst observed RTT — which prices the *transport's* full
 /// hop (thread wakeup + channel, or socket + scheduler) under the host's
 /// current load — times a headroom factor becomes the grace budget,
-/// clamped to a sane band. Endpoints that die during calibration — or
-/// never answer a single ping (a silently-partitioned socket whose
-/// writes still land in the kernel buffer) — are marked dead in `alive`
-/// so the epoch loop degrades them instead of stalling on them.
+/// clamped to a sane band.
+///
+/// The handshake doubles as the run's liveness probe, and a dying device
+/// must cost the run at most one wait cap: an endpoint that dies
+/// mid-ping (a `Gone` arrives, or its send fails) is excluded
+/// immediately, and one that never answers a single ping (a
+/// silently-partitioned socket whose writes still land in the kernel
+/// buffer) is abandoned after its *first* silent round instead of being
+/// pinged again — `CALIBRATION_ROUNDS` × the cap was a real stall on
+/// every run with one quiet corpse in the fleet. Either way the endpoint
+/// is marked dead in `alive` so the epoch loop degrades it rather than
+/// stalling on it. Lifecycle events that land mid-handshake are honored:
+/// a `Gone` for any slot kills it, a `Rejoined` marks the slot for
+/// re-arming at the first epoch boundary (rejoined incarnations are not
+/// pinged — the surviving fleet's worst RTT already prices the host).
 fn calibrate_grace(
     transport: &mut dyn Transport,
     active: &[usize],
     alive: &mut [bool],
+    needs_setup: &mut [bool],
+    disconnects: &mut u64,
+    rejoins: &mut u64,
 ) -> Duration {
     let mut max_rtt = Duration::ZERO;
+    let mut mark_gone = |s: usize, alive: &mut [bool], needs_setup: &mut [bool]| {
+        if let Some(flag) = alive.get_mut(s) {
+            if *flag {
+                *flag = false;
+                *disconnects += 1;
+            }
+        }
+        if let Some(flag) = needs_setup.get_mut(s) {
+            *flag = false;
+        }
+    };
     for (j, &slot) in active.iter().enumerate() {
-        let mut ponged = false;
-        for round in 0..CALIBRATION_ROUNDS {
+        'rounds: for round in 0..CALIBRATION_ROUNDS {
             if !alive[slot] {
                 break;
             }
@@ -404,11 +549,12 @@ fn calibrate_grace(
             match transport.send(slot, &ToDevice::Ping { nonce }) {
                 Ok(true) => {}
                 _ => {
-                    alive[slot] = false;
+                    mark_gone(slot, alive, needs_setup);
                     break;
                 }
             }
             let deadline = sent_at + CALIBRATION_TIMEOUT;
+            let mut ponged = false;
             loop {
                 let t = Instant::now();
                 if t >= deadline {
@@ -423,22 +569,46 @@ fn calibrate_grace(
                     // stale replies from an earlier run: discard
                     Event::Msg(_, _) => {}
                     Event::Gone(s) => {
-                        if let Some(flag) = alive.get_mut(s) {
-                            *flag = false;
+                        mark_gone(s, alive, needs_setup);
+                        if s == slot {
+                            break 'rounds;
+                        }
+                    }
+                    Event::Rejoined(s) => {
+                        // a suppressed death notice (kill + rejoin
+                        // back-to-back) surfaces as a rejoin for a slot
+                        // still thought alive: account the implicit
+                        // disconnect, then mark the fresh incarnation
+                        // for re-arming at the first epoch boundary
+                        mark_gone(s, alive, needs_setup);
+                        if let Some(flag) = needs_setup.get_mut(s) {
+                            *flag = true;
+                            *rejoins += 1;
                         }
                         if s == slot {
-                            break;
+                            // the incarnation this ping went to is gone
+                            // and can never pong — end this slot's rounds
+                            // now, or the no-pong path below would sever
+                            // the freshly admitted replacement and cancel
+                            // its re-arm
+                            break 'rounds;
                         }
                     }
                     Event::Timeout | Event::Closed => break,
                 }
             }
-        }
-        // a healthy endpoint answers a ping in far less than the round
-        // timeout; total silence means the link is gone even if writes
-        // still "succeed" (no FIN/RST ever arrived)
-        if !ponged {
-            alive[slot] = false;
+            if !ponged {
+                // a healthy endpoint answers a ping in far less than the
+                // round timeout; total silence means the link is gone
+                // even if writes still "succeed" (no FIN/RST arrived) —
+                // stop pinging it so it charges the run exactly one cap,
+                // and sever the half-open link so a restarted device can
+                // re-claim the slot instead of being refused as a
+                // duplicate of the corpse
+                mark_gone(slot, alive, needs_setup);
+                transport.disconnect(slot);
+                break;
+            }
         }
     }
     (max_rtt * GRACE_HEADROOM).clamp(GRACE_FLOOR, GRACE_CEIL)

@@ -101,6 +101,10 @@ impl SimCoordinator {
         );
         let mut epoch_times = Vec::new();
         let mut gather_mc_times = Vec::new();
+        // membership trace: the sim fleet never churns, but client
+        // selection (§V) varies the per-epoch gather set — record it so
+        // sim and live traces carry the same members column
+        let mut epoch_members = vec![states.iter().filter(|s| s.load > 0).count()];
         let mut converged = None;
         let mut on_time = 0u64;
         let mut late = 0u64;
@@ -147,9 +151,7 @@ impl SimCoordinator {
             // Fig. 3 bottom: when would the devices alone have covered
             // m − c points? (diagnostic; computed from the same samples)
             {
-                let mut returned = 0usize;
-                let mut t_mc = f64::INFINITY;
-                let mut pending: Vec<(f64, usize)> = sim
+                let pending: Vec<(f64, usize)> = sim
                     .snapshot()
                     .into_iter()
                     .filter_map(|(t, a)| match a {
@@ -157,15 +159,7 @@ impl SimCoordinator {
                         Actor::Master => None,
                     })
                     .collect();
-                pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                for (t, pts) in pending {
-                    returned += pts;
-                    if returned >= m.saturating_sub(c) {
-                        t_mc = t;
-                        break;
-                    }
-                }
-                gather_mc_times.push(t_mc);
+                gather_mc_times.push(time_to_cover(pending, m.saturating_sub(c)));
             }
 
             let arrived = sim.run_until(t_star);
@@ -205,6 +199,7 @@ impl SimCoordinator {
             }
             on_time += device_grads.len() as u64;
             late += scheduled_devices - device_grads.len() as u64;
+            epoch_members.push(scheduled_devices as usize);
             let grad_refs: Vec<&Mat> = device_grads.iter().collect();
             let grad = assemble_coded_gradient(d, parity_grad.as_ref(), &grad_refs);
             model.apply_gradient(&grad);
@@ -233,6 +228,9 @@ impl SimCoordinator {
             wall_secs: started.elapsed().as_secs_f64(),
             on_time_gradients: on_time,
             late_gradients: late,
+            epoch_members,
+            disconnects: 0,
+            rejoins: 0,
         })
     }
 
@@ -314,6 +312,7 @@ impl SimCoordinator {
 
         let full_loads: Vec<usize> =
             self.session.fleet.devices.iter().map(|p| p.points).collect();
+        let epoch_members = vec![self.session.fleet.n_devices(); epoch_times.len() + 1];
         Ok(RunResult {
             label: "uncoded".into(),
             trace,
@@ -328,8 +327,30 @@ impl SimCoordinator {
             wall_secs: started.elapsed().as_secs_f64(),
             on_time_gradients: on_time,
             late_gradients: 0,
+            epoch_members,
+            disconnects: 0,
+            rejoins: 0,
         })
     }
+}
+
+/// Fig. 3 bottom diagnostic: earliest completion time at which the
+/// pending `(finish_time, points)` contributions alone cover `need`
+/// points (+∞ when they never do).
+///
+/// Sorting uses [`f64::total_cmp`]: a NaN finish time (a degenerate
+/// delay-model draw) sorts to the end as "slowest" instead of making the
+/// comparator panic mid-run.
+pub(crate) fn time_to_cover(mut pending: Vec<(f64, usize)>, need: usize) -> f64 {
+    pending.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut returned = 0usize;
+    for (t, pts) in pending {
+        returned += pts;
+        if returned >= need {
+            return t;
+        }
+    }
+    f64::INFINITY
 }
 
 impl Coordinator for SimCoordinator {

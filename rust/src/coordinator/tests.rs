@@ -359,6 +359,289 @@ fn mid_run_disconnect_degrades_instead_of_hanging() {
     }
 }
 
+// ---------------------------------------------------------------------
+// reconnect & rejoin: a disconnected device must be restorable to the
+// coded gather set, not demoted to parity-only forever
+
+#[test]
+fn channel_kill_and_rejoin_restores_the_coded_gather_set() {
+    use crate::transport::ChannelTransport;
+    use std::time::Duration;
+
+    let mut cfg = live_cfg();
+    cfg.max_epochs = 200;
+    // homogeneous fleet: every device is guaranteed a positive coded
+    // load, so the killed slot is certainly in the gather set
+    cfg.nu_comp = 0.0;
+    cfg.nu_link = 0.0;
+    let chan = ChannelTransport::new(cfg.n_devices);
+    let ctl = chan.controller();
+    // time scale 0.2 paces every epoch with real milliseconds of slept
+    // delay (the slowest link's round trip alone is ≥ 1 ms), so the
+    // wall-clock churn below reliably lands mid-run
+    let mut live = LiveCoordinator::with_transport(&cfg, 0.2, Box::new(chan)).unwrap();
+    live.grace = Some(Duration::from_millis(250));
+
+    // churn from another thread while the coordinator trains: kill a
+    // device early in the run, restart it shortly after
+    let churn = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(60));
+        ctl.kill(2);
+        std::thread::sleep(Duration::from_millis(100));
+        ctl.respawn(2);
+    });
+    let run = live.train_cfl().unwrap();
+    churn.join().unwrap();
+
+    assert!(run.disconnects >= 1, "the kill was never observed");
+    assert!(run.rejoins >= 1, "the respawn was never admitted");
+    assert_eq!(
+        *run.epoch_members.last().unwrap(),
+        cfg.n_devices,
+        "the rejoined device never returned to the coded gather set"
+    );
+    assert!(
+        run.epoch_members.iter().any(|&m| m < cfg.n_devices),
+        "churn never dipped the gather set — the kill landed too late"
+    );
+    assert_eq!(run.epoch_members.len(), run.trace.points.len());
+    assert!(run.trace.final_nmse().unwrap() < 0.9, "run did not learn through churn");
+}
+
+#[test]
+fn tcp_kill_and_rejoin_matches_channel_recovery() {
+    use crate::fl::GradBackend;
+    use crate::transport::frame::{
+        decode_to_device, encode_from_device, read_frame, write_frame, PROTOCOL_VERSION,
+    };
+    use crate::transport::{run_device_retry, ChannelTransport, FromDevice, TcpTransport, ToDevice};
+    use std::time::Duration;
+
+    let Some(listener) = loopback() else { return };
+    let mut cfg = live_cfg();
+    cfg.max_epochs = 160;
+    // homogeneous fleet: the mortal device is guaranteed a positive
+    // coded load on both legs
+    cfg.nu_comp = 0.0;
+    cfg.nu_link = 0.0;
+    let grace = Some(Duration::from_millis(250));
+    // time scale 0.2: epochs are paced by real slept delay (≥ ~1 ms
+    // each), so wall-clock churn lands mid-run on both legs
+    let time_scale = 0.2;
+
+    // --- channel leg: scripted churn via the controller ----------------
+    let chan = ChannelTransport::new(cfg.n_devices);
+    let ctl = chan.controller();
+    let mut live = LiveCoordinator::with_transport(&cfg, time_scale, Box::new(chan)).unwrap();
+    live.grace = grace;
+    let churn = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(50));
+        ctl.kill(cfg.n_devices - 1);
+        std::thread::sleep(Duration::from_millis(100));
+        ctl.respawn(cfg.n_devices - 1);
+    });
+    let chan_run = live.train_cfl().unwrap();
+    churn.join().unwrap();
+    drop(live);
+
+    // --- tcp leg: a mortal device that dies after 2 gradients, then a
+    // fresh incarnation rejoining with the retry loop ------------------
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut devices = Vec::new();
+    for id in 0..cfg.n_devices - 1 {
+        let addr = addr.clone();
+        devices.push(std::thread::spawn(move || {
+            crate::transport::run_device(&addr, id, Duration::from_secs(5))
+        }));
+    }
+    let mortal_id = cfg.n_devices - 1;
+    let mortal_addr = addr.clone();
+    let mortal = std::thread::spawn(move || {
+        // incarnation 1: hand-rolled device that answers pings and the
+        // first two models, then drops its socket mid-run
+        {
+            let mut s = std::net::TcpStream::connect(&mortal_addr).unwrap();
+            let hello =
+                FromDevice::Hello { device_id: mortal_id, protocol: PROTOCOL_VERSION };
+            write_frame(&mut s, &encode_from_device(&hello)).unwrap();
+            let mut state: Option<(crate::linalg::Mat, crate::linalg::Mat, u64)> = None;
+            let mut replies = 0u32;
+            'session: while let Some(payload) = read_frame(&mut s).unwrap() {
+                match decode_to_device(&payload).unwrap() {
+                    ToDevice::Setup(init) => {
+                        state = Some((init.x_sys, init.y_sys, init.run));
+                    }
+                    ToDevice::Ping { nonce } => {
+                        write_frame(&mut s, &encode_from_device(&FromDevice::Pong { nonce }))
+                            .unwrap();
+                    }
+                    ToDevice::Model { epoch, beta } => {
+                        if replies >= 2 {
+                            break 'session; // die mid-run
+                        }
+                        replies += 1;
+                        let (x, y, run) = state.as_ref().unwrap();
+                        let grad = NativeBackend.partial_grad(x, &beta, y).unwrap();
+                        let msg = FromDevice::Grad { run: *run, epoch, grad, delay: 1e-6 };
+                        write_frame(&mut s, &encode_from_device(&msg)).unwrap();
+                    }
+                    ToDevice::Stop => state = None,
+                    ToDevice::Shutdown => return,
+                }
+            }
+        }
+        // incarnation 2: the real retry loop re-claims the slot and
+        // serves until the coordinator shuts the session down
+        run_device_retry(&mortal_addr, mortal_id, Duration::from_secs(10), true).unwrap();
+    });
+
+    let tcp = TcpTransport::serve(listener, cfg.n_devices, Duration::from_secs(5)).unwrap();
+    let mut live = LiveCoordinator::with_transport(&cfg, time_scale, Box::new(tcp)).unwrap();
+    live.grace = grace;
+    let tcp_run = live.train_cfl().unwrap();
+    drop(live); // Shutdown: devices exit
+    mortal.join().unwrap();
+    for h in devices {
+        h.join().unwrap().unwrap();
+    }
+
+    // both transports recover the same way: the dead device is observed,
+    // re-admitted, and finishes the run inside the coded gather set
+    for (tag, run) in [("chan", &chan_run), ("tcp", &tcp_run)] {
+        assert!(run.disconnects >= 1, "{tag}: the death was never observed");
+        assert!(run.rejoins >= 1, "{tag}: the rejoin was never admitted");
+        assert_eq!(
+            *run.epoch_members.last().unwrap(),
+            cfg.n_devices,
+            "{tag}: full coded coverage was not restored"
+        );
+    }
+    // and the NMSE trajectories land on the same GD fixed point: same
+    // epoch count (target 0 disables early stop) and final NMSE within a
+    // decade — churn shifts individual epochs, not the destination
+    assert_eq!(chan_run.trace.points.len(), tcp_run.trace.points.len());
+    let (a, b) =
+        (chan_run.trace.final_nmse().unwrap(), tcp_run.trace.final_nmse().unwrap());
+    assert!(
+        (a.log10() - b.log10()).abs() < 1.5,
+        "transports diverged after rejoin: chan {a:.3e} vs tcp {b:.3e}"
+    );
+}
+
+#[test]
+fn rejoin_after_run_boundary_restores_full_participation() {
+    use crate::transport::ChannelTransport;
+    use std::time::Duration;
+
+    let mut cfg = live_cfg();
+    cfg.max_epochs = 6;
+    let chan = ChannelTransport::new(cfg.n_devices);
+    let ctl = chan.controller();
+    let mut live = LiveCoordinator::with_transport(&cfg, 1e-6, Box::new(chan)).unwrap();
+    live.grace = Some(Duration::from_millis(250));
+
+    // the kill lands during run 1's calibration: the device sits run 1
+    // out entirely (uncoded runs on both sides — every device carries a
+    // full shard, so participation counts are exact)
+    ctl.kill(1);
+    let run1 = live.train_uncoded().unwrap();
+    assert!(run1.disconnects >= 1);
+    assert_eq!(*run1.epoch_members.last().unwrap(), cfg.n_devices - 1);
+
+    // restart it between runs: the queued rejoin is admitted during run
+    // 2's calibration and the device is re-armed at the first epoch
+    // boundary — run 2 trains with the full fleet from epoch 0
+    ctl.respawn(1);
+    let run2 = live.train_uncoded().unwrap();
+    assert_eq!(run2.rejoins, 1, "the boundary rejoin was not admitted");
+    assert_eq!(
+        run2.on_time_gradients,
+        (cfg.n_devices * cfg.max_epochs) as u64,
+        "the rejoined device missed epochs of run 2"
+    );
+    assert_eq!(*run2.epoch_members.last().unwrap(), cfg.n_devices);
+}
+
+#[test]
+fn silent_calibration_corpse_costs_one_cap_and_is_excluded() {
+    use crate::transport::frame::{
+        encode_from_device, read_frame, write_frame, PROTOCOL_VERSION,
+    };
+    use crate::transport::{run_device, FromDevice, TcpTransport};
+    use std::time::{Duration, Instant};
+
+    let Some(listener) = loopback() else { return };
+    let mut cfg = live_cfg();
+    cfg.max_epochs = 5;
+    // homogeneous fleet: the mute device is guaranteed a coded load, so
+    // calibration certainly probes it
+    cfg.nu_comp = 0.0;
+    cfg.nu_link = 0.0;
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let mut devices = Vec::new();
+    for id in 0..cfg.n_devices - 1 {
+        let addr = addr.clone();
+        devices.push(std::thread::spawn(move || {
+            run_device(&addr, id, Duration::from_secs(5))
+        }));
+    }
+    // one device joins, then goes mute: it reads everything and answers
+    // nothing — the socket stays open, so no Gone ever arrives and only
+    // calibration silence can unmask it
+    let mute_id = cfg.n_devices - 1;
+    let mute_addr = addr.clone();
+    let mute = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(&mute_addr).unwrap();
+        let hello = FromDevice::Hello { device_id: mute_id, protocol: PROTOCOL_VERSION };
+        write_frame(&mut s, &encode_from_device(&hello)).unwrap();
+        while let Ok(Some(_)) = read_frame(&mut s) {}
+    });
+
+    let tcp = TcpTransport::serve(listener, cfg.n_devices, Duration::from_secs(5)).unwrap();
+    let mut live = LiveCoordinator::with_transport(&cfg, 1e-6, Box::new(tcp)).unwrap();
+    // grace deliberately NOT pinned: the handshake is the liveness probe
+    let started = Instant::now();
+    let run = live.train_cfl().unwrap();
+    let elapsed = started.elapsed();
+
+    // pre-fix, the mute endpoint was pinged CALIBRATION_ROUNDS times and
+    // charged 3 × 500 ms of dead waiting; now it is abandoned after one
+    // silent round
+    assert!(
+        elapsed < Duration::from_millis(1300),
+        "mute endpoint charged more than one calibration cap: {elapsed:?}"
+    );
+    assert_eq!(run.disconnects, 1, "calibration silence must count as a disconnect");
+    assert_eq!(
+        *run.epoch_members.last().unwrap(),
+        cfg.n_devices - 1,
+        "the mute endpoint must be excluded from the gather set"
+    );
+    assert_eq!(run.late_gradients, 0, "a never-broadcast device cannot go late");
+    assert!(run.on_time_gradients >= ((cfg.n_devices - 1) * cfg.max_epochs) as u64);
+
+    drop(live); // Shutdown closes the mute socket: the thread unblocks
+    mute.join().unwrap();
+    for h in devices {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn time_to_cover_is_nan_safe() {
+    // a NaN finish time (degenerate delay draw) must sort, not panic —
+    // and must never be mistaken for an early completion
+    let t = super::sim::time_to_cover(
+        vec![(f64::NAN, 10), (2.0, 10), (1.0, 10)],
+        20,
+    );
+    assert_eq!(t, 2.0, "NaN must sort last, not first");
+    let t = super::sim::time_to_cover(vec![(f64::NAN, 30)], 20);
+    assert!(t.is_nan(), "an all-NaN cover keeps the NaN visible");
+    assert_eq!(super::sim::time_to_cover(vec![(1.0, 5)], 20), f64::INFINITY);
+}
+
 /// Failure injection: a backend that errors after N calls.
 struct FailingBackend {
     inner: NativeBackend,

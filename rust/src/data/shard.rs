@@ -64,8 +64,11 @@ fn apportion(weights: &[f64], m: usize, n: usize) -> Vec<usize> {
         assigned += base;
         fracs.push((exact - base as f64, i));
     }
-    // distribute the remainder to the largest fractional parts
-    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    // distribute the remainder to the largest fractional parts —
+    // total_cmp keeps degenerate NaN weights (a pathological α) from
+    // panicking the comparator: NaN fractions take a deterministic
+    // position and the apportionment still sums to m
+    fracs.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
     for k in 0..(spare - assigned) {
         sizes[fracs[k % n].1] += 1;
     }

@@ -64,6 +64,20 @@ fn equal_sharding_requires_divisibility() {
 }
 
 #[test]
+fn degenerate_nan_weights_still_apportion() {
+    // a pathological α gives every device a NaN weight; the
+    // largest-remainder sort used to panic in partial_cmp — it must now
+    // produce a full, deterministic apportionment instead
+    let mut rng = Rng::new(9);
+    let sizes = shard_sizes(ShardingKind::PowerLaw(f64::NAN), 100, 8, &mut rng);
+    assert_eq!(sizes.len(), 8);
+    assert_eq!(sizes.iter().sum::<usize>(), 100, "NaN weights must still cover m");
+    assert!(sizes.iter().all(|&s| s >= 1));
+    let again = shard_sizes(ShardingKind::PowerLaw(f64::NAN), 100, 8, &mut Rng::new(9));
+    assert_eq!(sizes, again, "NaN apportionment must stay deterministic");
+}
+
+#[test]
 fn power_law_sharding_sums_and_skews() {
     let mut rng = Rng::new(6);
     let sizes = shard_sizes(ShardingKind::PowerLaw(1.2), 7200, 24, &mut rng);

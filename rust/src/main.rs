@@ -32,7 +32,7 @@ use cfl::config::{ExperimentConfig, Ini};
 use cfl::coordinator::{CoordinatorKind, LiveCoordinator, SimCoordinator};
 use cfl::metrics::Table;
 use cfl::sweep::{self, ScenarioGrid, SweepOptions};
-use cfl::transport::{run_device, TcpTransport, TransportKind};
+use cfl::transport::{run_device, run_device_retry, TcpTransport, TransportKind};
 use std::time::Duration;
 
 fn parser() -> Parser {
@@ -70,6 +70,7 @@ fn parser() -> Parser {
         .opt("report", "file.json", "bench-check: current report (default BENCH_ci.json)")
         .opt("baseline", "file.json", "bench-check: baseline (default bench/baseline.json)")
         .opt("tolerance", "f64", "bench-check: allowed fractional gain drop (default 0.2)")
+        .flag("retry", "device: reconnect with backoff after a lost link (rejoin the fleet)")
         .flag("live", "sweep: run scenarios through the live coordinator")
         .flag("probe", "serve: just test that the address can be bound, then exit")
         .flag("paper", "use the paper's §IV scale (24 devices, d=500)")
@@ -385,7 +386,13 @@ fn cmd_serve(args: &cfl::cli::Args) -> Result<()> {
         return Ok(());
     }
     if let Some(path) = args.get("port-file") {
-        std::fs::write(path, format!("{addr}\n")).with_context(|| format!("writing {path}"))?;
+        // publish atomically (write a sibling temp file, then rename):
+        // a device polling the path must see either nothing or the full
+        // address — never a torn/empty file between create and write
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, format!("{addr}\n")).with_context(|| format!("writing {tmp}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing {tmp} as {path}"))?;
     }
     let scale = args.get_or("time-scale", 1e-3)?;
     println!(
@@ -397,14 +404,20 @@ fn cmd_serve(args: &cfl::cli::Args) -> Result<()> {
     let mut live = LiveCoordinator::with_transport(&cfg, scale, Box::new(transport))?;
 
     let coded = live.train_cfl()?;
-    let report = |run: &cfl::coordinator::RunResult| {
+    let n_devices = cfg.n_devices;
+    let report = move |run: &cfl::coordinator::RunResult| {
         println!(
-            "{}: epochs={} wall={:.2}s on-time={} late={} final NMSE={:.3e}",
+            "{}: epochs={} wall={:.2}s on-time={} late={} disconnects={} rejoins={} \
+             members={}/{} final NMSE={:.3e}",
             run.label,
             run.epoch_times.len(),
             run.wall_secs,
             run.on_time_gradients,
             run.late_gradients,
+            run.disconnects,
+            run.rejoins,
+            run.epoch_members.last().copied().unwrap_or(0),
+            n_devices,
             run.trace.final_nmse().unwrap_or(f64::NAN)
         );
     };
@@ -436,7 +449,13 @@ fn cmd_device(args: &cfl::cli::Args) -> Result<()> {
     if !quiet {
         eprintln!("cfl device {id}: connecting to {addr}");
     }
-    run_device(addr, id, Duration::from_secs(10))?;
+    if args.has_flag("retry") {
+        // survive a lost link: reconnect with backoff and re-claim the
+        // slot until the coordinator sends an explicit Shutdown
+        run_device_retry(addr, id, Duration::from_secs(10), quiet)?;
+    } else {
+        run_device(addr, id, Duration::from_secs(10))?;
+    }
     if !quiet {
         eprintln!("cfl device {id}: session over; exiting");
     }

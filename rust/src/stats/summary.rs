@@ -62,12 +62,14 @@ impl Summary {
 }
 
 /// Empirical quantile (linear interpolation between order statistics).
-/// `q` in [0, 1]. Sorts a copy — fine for reporting paths.
+/// `q` in [0, 1]. Sorts a copy — fine for reporting paths. NaN inputs
+/// (e.g. a diagnostic stream containing 0/0) are totally ordered to the
+/// extremes by [`f64::total_cmp`] instead of panicking the comparator.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "quantile of empty slice");
     assert!((0.0..=1.0).contains(&q));
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;

@@ -53,6 +53,17 @@ fn quantile_empty_panics() {
 }
 
 #[test]
+fn quantile_is_nan_safe() {
+    // a NaN sample (a diagnostic stream carrying 0/0) used to panic the
+    // partial_cmp comparator; total_cmp orders it past +inf instead, so
+    // the finite quantiles stay meaningful
+    let xs = [3.0, f64::NAN, 1.0, 2.0];
+    assert_eq!(quantile(&xs, 0.0), 1.0);
+    assert!((quantile(&xs, 1.0 / 3.0) - 2.0).abs() < 1e-12);
+    assert!(quantile(&xs, 1.0).is_nan(), "the NaN stays visible at the top");
+}
+
+#[test]
 fn mean_ci95_shrinks_with_n() {
     let a: Vec<f64> = (0..100).map(|i| (i % 7) as f64).collect();
     let b: Vec<f64> = (0..10000).map(|i| (i % 7) as f64).collect();

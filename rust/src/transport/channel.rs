@@ -6,20 +6,38 @@
 //! each runs [`run_device_loop`] over a channel-backed [`DeviceLink`],
 //! so the device-side behavior is byte-for-byte the one a `cfl device`
 //! process exhibits — only the wire differs.
+//!
+//! The endpoint lifecycle mirrors TCP's too: a worker that dies surfaces
+//! as [`Event::Gone`], and a *respawned* worker ([`ChannelCtl::respawn`])
+//! surfaces as [`Event::Rejoined`] — the in-process analogue of a killed
+//! `cfl device --retry` process reconnecting. Every incarnation of a
+//! slot carries a generation tag; events queued by a previous
+//! incarnation (a late reply, a stale death notice) are discarded when a
+//! newer incarnation holds the slot, exactly like the TCP transport.
 
-use super::{
-    recv_event, run_device_loop, DeviceInit, DeviceLink, Event, FromDevice, ToDevice, Transport, Up,
-};
+use super::{run_device_loop, DeviceInit, DeviceLink, Event, FromDevice, ToDevice, Transport};
 use anyhow::Result;
 use std::sync::mpsc;
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Everything that can land on the transport's single event queue: a
+/// worker upstream message (tagged with the incarnation that sent it) or
+/// a fault-injection command from a [`ChannelCtl`]. One queue keeps the
+/// ordering between a death notice and the respawn that follows it.
+enum ChanEvent {
+    Msg(usize, u64, FromDevice),
+    Gone(usize, u64),
+    Kill(usize),
+    Respawn(usize),
+}
 
 /// A device worker's end of the channel pair.
 struct ChannelLink {
     slot: usize,
+    gen: u64,
     rx: mpsc::Receiver<ToDevice>,
-    up: mpsc::Sender<(usize, Up)>,
+    up: mpsc::Sender<ChanEvent>,
 }
 
 impl DeviceLink for ChannelLink {
@@ -30,39 +48,126 @@ impl DeviceLink for ChannelLink {
     fn send(&mut self, msg: FromDevice) -> Result<()> {
         // the coordinator dropping its receiver mid-reply is a hang-up,
         // not a device fault — swallow it and let the next recv() end us
-        let _ = self.up.send((self.slot, Up::Msg(msg)));
+        let _ = self.up.send(ChanEvent::Msg(self.slot, self.gen, msg));
         Ok(())
+    }
+}
+
+/// Fault-injection handle onto a [`ChannelTransport`]: kill a worker
+/// (the in-process stand-in for SIGKILLing a `cfl device` process) and
+/// respawn a fresh incarnation into a dead slot (the stand-in for
+/// restarting it with `--retry`). Clonable and `Send`, so tests drive
+/// churn from another thread while the coordinator trains.
+#[derive(Clone)]
+pub struct ChannelCtl {
+    tx: mpsc::Sender<ChanEvent>,
+}
+
+impl ChannelCtl {
+    /// Kill the worker in `slot`: its command channel closes, the worker
+    /// exits, and the coordinator observes [`Event::Gone`].
+    pub fn kill(&self, slot: usize) {
+        let _ = self.tx.send(ChanEvent::Kill(slot));
+    }
+
+    /// Respawn a fresh worker into a dead `slot`; the coordinator
+    /// observes [`Event::Rejoined`] and must re-send `Setup`. A respawn
+    /// of a still-live slot is ignored.
+    pub fn respawn(&self, slot: usize) {
+        let _ = self.tx.send(ChanEvent::Respawn(slot));
     }
 }
 
 /// Threaded in-process fleet: `n` persistent device workers.
 pub struct ChannelTransport {
     to_devices: Vec<Option<mpsc::Sender<ToDevice>>>,
-    up_rx: mpsc::Receiver<(usize, Up)>,
+    /// Current incarnation per slot; bumped on respawn so stale events
+    /// from an earlier incarnation can be recognized and dropped.
+    gens: Vec<u64>,
+    up_rx: mpsc::Receiver<ChanEvent>,
+    up_tx: mpsc::Sender<ChanEvent>,
     handles: Vec<thread::JoinHandle<()>>,
+}
+
+/// Spawn one worker incarnation; returns the coordinator-side sender.
+fn spawn_worker(
+    slot: usize,
+    gen: u64,
+    up_tx: &mpsc::Sender<ChanEvent>,
+    handles: &mut Vec<thread::JoinHandle<()>>,
+) -> mpsc::Sender<ToDevice> {
+    let (tx, rx) = mpsc::channel::<ToDevice>();
+    let up = up_tx.clone();
+    handles.push(thread::spawn(move || {
+        let mut link = ChannelLink { slot, gen, rx, up };
+        // any exit — compute failure, protocol violation, or a closed
+        // command channel (kill/Drop) — reports the incarnation as gone
+        // so the gather degrades instead of waiting out its deadline.
+        // After Shutdown/Drop nobody reads the queue, so the notice is
+        // inert there; after a kill it is the death the coordinator must
+        // observe.
+        let _ = run_device_loop(&mut link);
+        let _ = link.up.send(ChanEvent::Gone(slot, gen));
+    }));
+    tx
 }
 
 impl ChannelTransport {
     /// Spawn `n` device workers, all idle until their first `Setup`.
     pub fn new(n: usize) -> Self {
-        let (up_tx, up_rx) = mpsc::channel::<(usize, Up)>();
+        let (up_tx, up_rx) = mpsc::channel::<ChanEvent>();
         let mut to_devices = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for slot in 0..n {
-            let (tx, rx) = mpsc::channel::<ToDevice>();
+            let tx = spawn_worker(slot, 0, &up_tx, &mut handles);
             to_devices.push(Some(tx));
-            let up = up_tx.clone();
-            handles.push(thread::spawn(move || {
-                let mut link = ChannelLink { slot, rx, up };
-                if run_device_loop(&mut link).is_err() {
-                    // compute failure / protocol violation: report the
-                    // endpoint as gone so the gather degrades instead of
-                    // waiting out its deadline every epoch
-                    let _ = link.up.send((slot, Up::Gone));
-                }
-            }));
         }
-        Self { to_devices, up_rx, handles }
+        Self { to_devices, gens: vec![0; n], up_rx, up_tx, handles }
+    }
+
+    /// A fault-injection handle (see [`ChannelCtl`]).
+    pub fn controller(&self) -> ChannelCtl {
+        ChannelCtl { tx: self.up_tx.clone() }
+    }
+
+    /// Process one queued control/upstream event. Returns the public
+    /// event to surface, or `None` when the event was internal (a kill
+    /// command, a stale-incarnation notice to discard).
+    fn process(&mut self, ev: ChanEvent) -> Option<Event> {
+        match ev {
+            ChanEvent::Msg(slot, gen, msg) => {
+                // a reply from a dead incarnation must not be attributed
+                // to its replacement
+                (gen == self.gens[slot]).then_some(Event::Msg(slot, msg))
+            }
+            ChanEvent::Gone(slot, gen) => {
+                if gen != self.gens[slot] {
+                    return None; // stale death notice: the slot respawned
+                }
+                // a death notice is one-shot: record it at the transport
+                // level too, so the endpoint stays dead across runs until
+                // a respawn re-claims the slot
+                self.to_devices[slot] = None;
+                Some(Event::Gone(slot))
+            }
+            ChanEvent::Kill(slot) => {
+                // close the command channel; the worker exits and its own
+                // Gone notice is the observable death
+                if let Some(tx) = self.to_devices.get_mut(slot) {
+                    *tx = None;
+                }
+                None
+            }
+            ChanEvent::Respawn(slot) => {
+                if slot >= self.to_devices.len() || self.to_devices[slot].is_some() {
+                    return None; // out of range, or the slot is still live
+                }
+                self.gens[slot] += 1;
+                let tx = spawn_worker(slot, self.gens[slot], &self.up_tx, &mut self.handles);
+                self.to_devices[slot] = Some(tx);
+                Some(Event::Rejoined(slot))
+            }
+        }
     }
 }
 
@@ -75,7 +180,8 @@ impl Transport for ChannelTransport {
         self.to_devices.len()
     }
 
-    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<()> {
+    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<Vec<bool>> {
+        let mut delivered = Vec::with_capacity(inits.len());
         for init in inits {
             let slot = init.device_index;
             anyhow::ensure!(
@@ -87,13 +193,19 @@ impl Transport for ChannelTransport {
             // through send()'s msg.clone() — Setup carries the device's
             // whole systematic shard, which must not be deep-copied per
             // run. A dead worker is skipped, not fatal: the coordinator
-            // observes it via Gone/failed sends and degrades.
-            let Some(tx) = self.to_devices[slot].as_ref() else { continue };
+            // sees `false` here and treats the slot as awaiting rejoin.
+            let Some(tx) = self.to_devices[slot].as_ref() else {
+                delivered.push(false);
+                continue;
+            };
             if tx.send(ToDevice::Setup(Box::new(init))).is_err() {
                 self.to_devices[slot] = None;
+                delivered.push(false);
+            } else {
+                delivered.push(true);
             }
         }
-        Ok(())
+        Ok(delivered)
     }
 
     fn send(&mut self, slot: usize, msg: &ToDevice) -> Result<bool> {
@@ -107,16 +219,37 @@ impl Transport for ChannelTransport {
         Ok(true)
     }
 
+    fn disconnect(&mut self, slot: usize) {
+        // close the command channel: the worker exits and its death
+        // notice (current generation) is deduplicated by the caller's
+        // own bookkeeping — or discarded outright if a respawn bumps the
+        // generation first
+        if let Some(tx) = self.to_devices.get_mut(slot) {
+            *tx = None;
+        }
+    }
+
+    // NB: this deadline-drain loop is intentionally mirrored in
+    // tcp.rs::recv_timeout — a generic helper would need a split-borrow
+    // closure over half the struct; keep the two in sync instead.
     fn recv_timeout(&mut self, timeout: Duration) -> Event {
-        let event = recv_event(&self.up_rx, timeout);
-        // a death notice is one-shot: record it at the transport level
-        // too, so the endpoint stays dead across runs
-        if let Event::Gone(slot) = event {
-            if let Some(tx) = self.to_devices.get_mut(slot) {
-                *tx = None;
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            let wait = deadline.saturating_duration_since(now);
+            match self.up_rx.recv_timeout(wait) {
+                Ok(ev) => {
+                    if let Some(public) = self.process(ev) {
+                        return public;
+                    }
+                    // internal event consumed: keep draining within the
+                    // caller's original deadline (a zero remaining wait
+                    // still picks up already-queued events)
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => return Event::Timeout,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Event::Closed,
             }
         }
-        event
     }
 
     fn end_run(&mut self) {
@@ -125,15 +258,13 @@ impl Transport for ChannelTransport {
         }
         // drop stale in-flight replies (a worker still sleeping out a
         // delay may reply after Stop; run tagging makes these inert, but
-        // there is no reason to queue them into the next run) — except
-        // death notices, which must outlive the drain or a dead worker
-        // would be re-entered into the next run's fleet
-        while let Ok((slot, up)) = self.up_rx.try_recv() {
-            if let Up::Gone = up {
-                if let Some(tx) = self.to_devices.get_mut(slot) {
-                    *tx = None;
-                }
-            }
+        // there is no reason to queue them into the next run) — while
+        // still honoring lifecycle events: a death notice must outlive
+        // the drain or a dead worker would be re-entered into the next
+        // run's fleet, and a respawn admitted here is simply live for the
+        // next run (its Setup arrives with the next begin_run).
+        while let Ok(ev) = self.up_rx.try_recv() {
+            let _ = self.process(ev);
         }
     }
 }

@@ -37,7 +37,11 @@ use crate::simnet::{ComputeModel, DeviceProfile, LinkModel};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
-/// Bump on any wire-format change; exchanged in `Hello`.
+/// Bump on any wire-format change; exchanged in `Hello` — both at
+/// initial fleet formation and on every *rejoin* (a restarted
+/// `cfl device --retry` re-claims its slot with the same `Hello`
+/// handshake; there is no separate reconnect message, so version
+/// checking covers both paths for free).
 pub const PROTOCOL_VERSION: u32 = 1;
 
 /// Ceiling on one frame's payload (a paper-scale β is ~2 KB; 64 MiB is

@@ -14,15 +14,20 @@
 //!   messages (no external serde; the build is offline).
 //! * [`Transport`] — the coordinator-side abstraction: hand every device
 //!   its frozen §III-A state ([`DeviceInit`]), broadcast models, gather
-//!   replies with a timeout, and observe endpoint death as [`Event::Gone`]
-//!   so a disconnected device degrades to the paper's erasure case
-//!   (parity stands in) instead of stalling the gather.
+//!   replies with a timeout, and observe the endpoint lifecycle —
+//!   death as [`Event::Gone`] (a disconnected device degrades to the
+//!   paper's erasure case: parity stands in instead of stalling the
+//!   gather) and re-admission as [`Event::Rejoined`] (a restarted device
+//!   claims its old slot back and returns to the coded gather set).
 //! * [`ChannelTransport`] — in-process `mpsc` channel pairs, one worker
 //!   thread per device (the transport the live coordinator always had,
-//!   factored out).
+//!   factored out). [`ChannelCtl`] injects kill/respawn, mirroring a
+//!   real process dying and reconnecting.
 //! * [`TcpTransport`] — TCP with the [`frame`] wire format: `cfl serve`
 //!   accepts one socket per device, `cfl device` joins from another
-//!   process (or another machine on a trusted network).
+//!   process (or another machine on a trusted network). The listener
+//!   keeps accepting after fleet formation, so `cfl device --retry`
+//!   ([`run_device_retry`]) survives being killed mid-run.
 //!
 //! Both transports drive the *same* device-side state machine,
 //! [`run_device_loop`]: a device is Setup-configured, computes a partial
@@ -35,7 +40,6 @@ use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::simnet::DeviceProfile;
 use anyhow::Result;
-use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
 
@@ -44,8 +48,8 @@ pub mod frame;
 mod channel;
 mod tcp;
 
-pub use channel::ChannelTransport;
-pub use tcp::{run_device, TcpTransport};
+pub use channel::{ChannelCtl, ChannelTransport};
+pub use tcp::{run_device, run_device_retry, TcpTransport};
 
 /// Which wire a live fleet speaks — the `--transport` CLI knob.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -136,11 +140,22 @@ pub enum Event {
     /// A message from the device in `slot`.
     Msg(usize, FromDevice),
     /// The endpoint in `slot` is gone (thread death, socket EOF, framing
-    /// error). The coordinator degrades that device to parity-only.
+    /// error). The coordinator degrades that device to parity-only until
+    /// the endpoint rejoins.
     Gone(usize),
+    /// A fresh endpoint re-claimed the previously dead `slot` (a
+    /// restarted `cfl device --retry` process, a respawned channel
+    /// worker). The new incarnation holds no run state: the coordinator
+    /// must re-send `Setup` before the next `Model` reaches it.
+    Rejoined(usize),
     /// Nothing arrived within the timeout.
     Timeout,
-    /// Every endpoint is gone and no more events can arrive.
+    /// Every endpoint is gone and no more events can ever arrive. With a
+    /// re-admission-capable transport (both built-ins, since a rejoin
+    /// may always arrive later) this never fires — a dead fleet surfaces
+    /// as individual [`Event::Gone`]s followed by [`Event::Timeout`]s —
+    /// but callers should keep handling it: a transport without
+    /// re-admission uses it to let the gather bail immediately.
     Closed,
 }
 
@@ -149,6 +164,21 @@ pub enum Event {
 /// the same endpoints); [`Transport::begin_run`] re-arms the endpoints
 /// named by its [`DeviceInit`] batch, and slots not named simply sit out
 /// that run (zero-load devices under a coded policy).
+///
+/// **Endpoint lifecycle.** A slot is *live* until the transport observes
+/// its death (socket EOF, worker exit, failed write), which surfaces
+/// once as [`Event::Gone`]. Death is not terminal: a transport that
+/// supports re-admission (both built-ins do) may later surface
+/// [`Event::Rejoined`] for the same slot when a fresh incarnation claims
+/// it — the TCP listener keeps accepting after fleet formation and
+/// re-admits a `Hello{id}` for its slot (severing a lingering half-open
+/// link whose death notice never landed); the channel transport
+/// respawns a worker on [`ChannelCtl::respawn`]. A rejoined incarnation
+/// starts blank: it must receive a new `Setup` before any `Model`, and
+/// events queued by the *previous* incarnation (its death notice, any
+/// in-flight replies) are discarded at the transport level via
+/// per-incarnation generation tags, so a stale `Gone` can never kill the
+/// replacement and a stale reply can never be attributed to it.
 pub trait Transport: Send {
     /// Transport tag for logs ("chan" / "tcp").
     fn name(&self) -> &'static str;
@@ -156,8 +186,12 @@ pub trait Transport: Send {
     /// Total endpoint slots (== the fleet size).
     fn n_endpoints(&self) -> usize;
 
-    /// Start a run: deliver each [`DeviceInit`] to its endpoint.
-    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<()>;
+    /// Start a run: deliver each [`DeviceInit`] to its endpoint. Returns
+    /// per-init delivery flags aligned with the batch — `false` marks an
+    /// endpoint that is currently dead (its `Setup` was not delivered;
+    /// the coordinator treats the slot as awaiting a rejoin). `Err` is a
+    /// transport-fatal fault.
+    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<Vec<bool>>;
 
     /// Send to the endpoint in `slot`. `Ok(false)` means the endpoint is
     /// gone (the message was dropped); `Err` is a transport-fatal fault.
@@ -174,25 +208,31 @@ pub trait Transport: Send {
     /// Wait up to `timeout` for the next event from any endpoint.
     fn recv_timeout(&mut self, timeout: Duration) -> Event;
 
+    /// Forcibly sever the endpoint in `slot`. The coordinator calls this
+    /// for an endpoint it has declared dead without a transport-level
+    /// death (a silently-partitioned socket that answers no pings but
+    /// whose writes still land in the kernel buffer): the half-open link
+    /// would otherwise linger and block a restarted device from
+    /// rejoining its slot. After this call the slot is immediately
+    /// re-admittable; any later death notice from the old incarnation is
+    /// deduplicated as usual.
+    fn disconnect(&mut self, slot: usize);
+
     /// End the current run: `Stop` every live endpoint and discard any
     /// stale in-flight replies. Best-effort by design.
     fn end_run(&mut self);
 }
 
-/// Internal per-endpoint upstream event (shared by both transports).
-pub(crate) enum Up {
-    Msg(FromDevice),
-    Gone,
-}
-
-/// Map a shared upstream receiver onto the public [`Event`] vocabulary.
-pub(crate) fn recv_event(rx: &mpsc::Receiver<(usize, Up)>, timeout: Duration) -> Event {
-    match rx.recv_timeout(timeout) {
-        Ok((slot, Up::Msg(msg))) => Event::Msg(slot, msg),
-        Ok((slot, Up::Gone)) => Event::Gone(slot),
-        Err(mpsc::RecvTimeoutError::Timeout) => Event::Timeout,
-        Err(mpsc::RecvTimeoutError::Disconnected) => Event::Closed,
-    }
+/// How one device session ended, from the device's point of view — the
+/// signal [`run_device_retry`] uses to decide between exiting and
+/// reconnecting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionEnd {
+    /// The coordinator sent an explicit `Shutdown`: the session is over.
+    Shutdown,
+    /// The link closed without a `Shutdown` (coordinator hang-up, or this
+    /// connection was never admitted). A retrying device reconnects.
+    HangUp,
 }
 
 /// One side of a device's conversation with its coordinator — the only
@@ -228,14 +268,16 @@ struct RunState {
 ///   delay scaled by `time_scale`, and replies with `Grad`;
 /// * `Stop` clears the run state; `Shutdown` (or a hang-up) returns.
 ///
-/// Returns `Err` only on a protocol violation or compute failure — the
+/// Returns which way the session ended ([`SessionEnd::Shutdown`] vs a
+/// bare [`SessionEnd::HangUp`] — retry loops reconnect only on the
+/// latter); `Err` only on a protocol violation or compute failure — the
 /// caller should treat that as this endpoint dying.
-pub fn run_device_loop(link: &mut dyn DeviceLink) -> Result<()> {
+pub fn run_device_loop(link: &mut dyn DeviceLink) -> Result<SessionEnd> {
     let mut backend = NativeBackend;
     let mut state: Option<RunState> = None;
     loop {
         let Some(msg) = link.recv()? else {
-            return Ok(()); // coordinator hung up
+            return Ok(SessionEnd::HangUp); // coordinator hung up
         };
         match msg {
             ToDevice::Setup(init) => {
@@ -264,7 +306,7 @@ pub fn run_device_loop(link: &mut dyn DeviceLink) -> Result<()> {
                 link.send(FromDevice::Grad { run: st.run, epoch, grad, delay })?;
             }
             ToDevice::Stop => state = None,
-            ToDevice::Shutdown => return Ok(()),
+            ToDevice::Shutdown => return Ok(SessionEnd::Shutdown),
         }
     }
 }

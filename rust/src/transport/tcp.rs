@@ -7,9 +7,28 @@
 //! surfaced as [`Event::Gone`] so the epoch loop degrades that device to
 //! parity-only instead of stalling.
 //!
+//! Death is not a one-way door: after fleet formation the listener stays
+//! open on a background acceptor thread, and a fresh connection whose
+//! `Hello{id}` names a currently-dead slot is **re-admitted** — new
+//! reader thread, new writer half, and an [`Event::Rejoined`] so the
+//! coordinator re-arms the device with `Setup`. Every incarnation of a
+//! slot carries a generation tag; events from a previous incarnation (a
+//! straggling reply, a late death notice from a silently-partitioned
+//! socket) are discarded at the transport level, so they can neither be
+//! attributed to nor kill the replacement. A valid `Hello` for a slot
+//! whose old link is still open takes the slot over (*newest wins*): a
+//! half-open socket whose death notice never landed — a silent network
+//! partition — must not block the genuine device from reconnecting, so
+//! the corpse is severed and the newcomer admitted. (During initial
+//! fleet formation a duplicate claim is still dropped.)
+//!
 //! Device side ([`run_device`]): connect (with retry while the
 //! coordinator is still starting), `Hello`, then hand the socket to the
-//! shared [`run_device_loop`] state machine.
+//! shared [`run_device_loop`] state machine. [`run_device_retry`]
+//! (`cfl device --retry`) wraps that in a reconnect/backoff loop: a
+//! session that ends in anything but an explicit `Shutdown` — the socket
+//! broke, the process was restarted after a crash, the coordinator
+//! dropped an unadmitted duplicate — dials again and re-claims its slot.
 //!
 //! [`TcpTransport::spawn_local`] packages the loopback case the sweep
 //! engine uses (`cfl sweep --live --transport tcp`): bind an ephemeral
@@ -17,14 +36,15 @@
 //! children when the transport drops.
 
 use super::{
-    frame, recv_event, run_device_loop, DeviceInit, DeviceLink, Event, FromDevice, ToDevice,
-    Transport, Up,
+    frame, run_device_loop, DeviceInit, DeviceLink, Event, FromDevice, SessionEnd, ToDevice,
+    Transport,
 };
 use anyhow::{ensure, Context, Result};
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -35,21 +55,61 @@ const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
 /// to connect back.
 const SPAWN_ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Accept-poll interval of the post-formation acceptor thread.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Everything the coordinator-side event queue carries: reader upstream
+/// traffic tagged `(slot, generation)`, plus rejoin candidates from the
+/// acceptor thread. One queue keeps a reader's EOF notice ordered before
+/// the reconnection that follows it.
+enum TcpUp {
+    Msg(FromDevice),
+    Gone,
+    /// A fresh connection presented a valid `Hello` for this slot; the
+    /// stream is shipped to the transport, which admits it only if the
+    /// slot is currently dead.
+    Rejoin(TcpStream),
+}
+
 /// Coordinator-side TCP fleet: one framed socket per device slot.
 pub struct TcpTransport {
     /// Write halves, slot-indexed; `None` = endpoint gone.
     links: Vec<Option<TcpStream>>,
-    up_rx: mpsc::Receiver<(usize, Up)>,
+    /// Current incarnation per slot; bumped on rejoin so stale events
+    /// from an earlier incarnation can be recognized and dropped.
+    gens: Vec<u64>,
+    up_rx: mpsc::Receiver<(usize, u64, TcpUp)>,
+    up_tx: mpsc::Sender<(usize, u64, TcpUp)>,
+    /// Post-formation acceptor thread (owns the listener) + its stop flag.
+    acceptor: Option<thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
     /// Locally-spawned `cfl device` subprocesses (empty under `serve`).
     children: Vec<Child>,
 }
 
 impl TcpTransport {
     /// Accept `n` device connections on an already-bound listener (the
-    /// `cfl serve` path — devices are started by someone else).
+    /// `cfl serve` path — devices are started by someone else), then
+    /// keep the listener accepting in the background so restarted
+    /// devices can rejoin.
     pub fn serve(listener: TcpListener, n: usize, accept_timeout: Duration) -> Result<Self> {
-        let (links, up_rx) = accept_fleet(&listener, n, accept_timeout)?;
-        Ok(Self { links, up_rx, children: Vec::new() })
+        let (up_tx, up_rx) = mpsc::channel::<(usize, u64, TcpUp)>();
+        let (links, gens) = accept_fleet(&listener, n, accept_timeout, &up_tx)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let acceptor = {
+            let tx = up_tx.clone();
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || acceptor_loop(listener, n, stop, tx))
+        };
+        Ok(Self {
+            links,
+            gens,
+            up_rx,
+            up_tx,
+            acceptor: Some(acceptor),
+            stop,
+            children: Vec::new(),
+        })
     }
 
     /// Write one already-encoded frame to a slot; `false` marks the
@@ -92,11 +152,55 @@ impl TcpTransport {
                 }
             }
         }
-        match accept_fleet(&listener, n, SPAWN_ACCEPT_TIMEOUT) {
-            Ok((links, up_rx)) => Ok(Self { links, up_rx, children }),
+        match Self::serve(listener, n, SPAWN_ACCEPT_TIMEOUT) {
+            Ok(mut t) => {
+                t.children = children;
+                Ok(t)
+            }
             Err(e) => {
                 reap(&mut children, Duration::ZERO);
                 Err(e)
+            }
+        }
+    }
+
+    /// Process one queued event. Returns the public event to surface, or
+    /// `None` when the event was internal (stale-incarnation traffic to
+    /// discard, a rejoin candidate for a still-live slot).
+    fn process(&mut self, slot: usize, gen: u64, up: TcpUp) -> Option<Event> {
+        match up {
+            // a reply from a dead incarnation must not be attributed to
+            // its replacement
+            TcpUp::Msg(msg) => (gen == self.gens[slot]).then_some(Event::Msg(slot, msg)),
+            TcpUp::Gone => {
+                if gen != self.gens[slot] {
+                    return None; // stale death notice: the slot rejoined
+                }
+                // a death notice is one-shot (the reader thread is gone):
+                // record it at the transport level too, so the endpoint
+                // stays dead across runs until a rejoin re-claims it
+                self.links[slot] = None;
+                Some(Event::Gone(slot))
+            }
+            TcpUp::Rejoin(stream) => {
+                // newest wins: if the slot's old link is still open, it
+                // is a half-open socket whose death notice never landed
+                // (silent partition, kernel buffers swallowing writes) —
+                // on a trusted network a valid Hello for the slot is
+                // overwhelmingly the genuine device reconnecting, so
+                // sever the corpse and admit the newcomer. The old
+                // incarnation's eventual death notice is filtered by the
+                // generation bump below.
+                if let Some(old) = self.links.get_mut(slot).and_then(|l| l.take()) {
+                    let _ = old.shutdown(std::net::Shutdown::Both);
+                }
+                let Ok(writer) = stream.try_clone() else { return None };
+                self.gens[slot] += 1;
+                let gen = self.gens[slot];
+                let tx = self.up_tx.clone();
+                thread::spawn(move || reader_loop(slot, gen, stream, tx));
+                self.links[slot] = Some(writer);
+                Some(Event::Rejoined(slot))
             }
         }
     }
@@ -111,7 +215,8 @@ impl Transport for TcpTransport {
         self.links.len()
     }
 
-    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<()> {
+    fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<Vec<bool>> {
+        let mut delivered = Vec::with_capacity(inits.len());
         for init in inits {
             let slot = init.device_index;
             ensure!(
@@ -120,10 +225,10 @@ impl Transport for TcpTransport {
                 self.links.len()
             );
             // a dead endpoint is skipped, not fatal: the coordinator
-            // observes it via Gone/failed sends and degrades
-            let _ = self.send(slot, &ToDevice::Setup(Box::new(init)))?;
+            // sees `false` here and treats the slot as awaiting rejoin
+            delivered.push(self.send(slot, &ToDevice::Setup(Box::new(init)))?);
         }
-        Ok(())
+        Ok(delivered)
     }
 
     fn send(&mut self, slot: usize, msg: &ToDevice) -> Result<bool> {
@@ -137,39 +242,56 @@ impl Transport for TcpTransport {
         Ok(slots.iter().map(|&slot| self.write_payload(slot, &payload)).collect())
     }
 
+    fn disconnect(&mut self, slot: usize) {
+        // drop the write half and shut the socket both ways: the reader
+        // thread unblocks into its death notice (same generation, so it
+        // is deduplicated or — after a rejoin — discarded), and the slot
+        // becomes immediately re-admittable
+        if let Some(s) = self.links.get_mut(slot).and_then(|l| l.take()) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    // NB: this deadline-drain loop is intentionally mirrored in
+    // channel.rs::recv_timeout — a generic helper would need a
+    // split-borrow closure over half the struct; keep the two in sync.
     fn recv_timeout(&mut self, timeout: Duration) -> Event {
-        let event = recv_event(&self.up_rx, timeout);
-        // a death notice is one-shot (the reader thread is gone): record
-        // it at the transport level too, so the endpoint stays dead
-        // across runs instead of being re-entered into the next fleet
-        if let Event::Gone(slot) = event {
-            if let Some(link) = self.links.get_mut(slot) {
-                *link = None;
+        let deadline = Instant::now() + timeout;
+        loop {
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match self.up_rx.recv_timeout(wait) {
+                Ok((slot, gen, up)) => {
+                    if let Some(public) = self.process(slot, gen, up) {
+                        return public;
+                    }
+                    // internal event consumed: keep draining within the
+                    // caller's original deadline (a zero remaining wait
+                    // still picks up already-queued events)
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => return Event::Timeout,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Event::Closed,
             }
         }
-        event
     }
 
     fn end_run(&mut self) {
         for slot in 0..self.links.len() {
             let _ = self.send(slot, &ToDevice::Stop);
         }
-        // discard stale replies, but keep death notices: a Gone drained
-        // here must still kill the link, or the dead device would be
-        // re-entered into the next run's fleet (its reader thread is
-        // gone, so the notice would never repeat)
-        while let Ok((slot, up)) = self.up_rx.try_recv() {
-            if let Up::Gone = up {
-                if let Some(link) = self.links.get_mut(slot) {
-                    *link = None;
-                }
-            }
+        // discard stale replies, but keep lifecycle events: a Gone
+        // drained here must still kill the link (its reader thread is
+        // gone, so the notice would never repeat), and a rejoin admitted
+        // here is simply live for the next run (its Setup arrives with
+        // the next begin_run).
+        while let Ok((slot, gen, up)) = self.up_rx.try_recv() {
+            let _ = self.process(slot, gen, up);
         }
     }
 }
 
 impl Drop for TcpTransport {
     fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
         for slot in 0..self.links.len() {
             let _ = self.send(slot, &ToDevice::Shutdown);
         }
@@ -177,6 +299,9 @@ impl Drop for TcpTransport {
             if let Some(s) = link.take() {
                 let _ = s.shutdown(std::net::Shutdown::Write);
             }
+        }
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
         }
         reap(&mut self.children, Duration::from_secs(10));
     }
@@ -204,29 +329,55 @@ fn reap(children: &mut Vec<Child>, patience: Duration) {
 
 /// Accept `n` devices: each must `Hello` with a distinct in-range id and
 /// a matching protocol version; each then gets a reader thread feeding
-/// the shared event queue.
+/// the shared event queue. A re-claim of an already-filled slot follows
+/// the same *newest wins* rule as post-formation rejoins — a device that
+/// crashed right after its Hello and reconnected must not be stranded by
+/// its own corpse (formation never reads the event queue, so the old
+/// incarnation's death notice cannot land here); the per-slot generation
+/// counter keeps the corpse's queued events attributable, and is
+/// returned so the transport continues the numbering.
 #[allow(clippy::type_complexity)]
 fn accept_fleet(
     listener: &TcpListener,
     n: usize,
     accept_timeout: Duration,
-) -> Result<(Vec<Option<TcpStream>>, mpsc::Receiver<(usize, Up)>)> {
+    up_tx: &mpsc::Sender<(usize, u64, TcpUp)>,
+) -> Result<(Vec<Option<TcpStream>>, Vec<u64>)> {
     listener.set_nonblocking(true).context("making the listener pollable")?;
     let deadline = Instant::now() + accept_timeout;
-    let (up_tx, up_rx) = mpsc::channel::<(usize, Up)>();
     let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    let mut gens: Vec<u64> = vec![0; n];
     let mut connected = 0usize;
     while connected < n {
         match listener.accept() {
-            Ok((stream, peer)) => match admit(stream, &links, &up_tx)? {
-                Admitted::Device(slot, writer) => {
+            Ok((stream, peer)) => match handshake(stream, n) {
+                Handshake::Candidate(slot, stream) => {
+                    if let Some(old) = links[slot].take() {
+                        eprintln!(
+                            "cfl: slot {slot} re-claimed by {peer} during formation; \
+                             dropping the previous connection"
+                        );
+                        let _ = old.shutdown(std::net::Shutdown::Both);
+                        gens[slot] += 1;
+                    } else {
+                        connected += 1;
+                    }
+                    let writer = stream.try_clone().context("splitting the device socket")?;
+                    let tx = up_tx.clone();
+                    let gen = gens[slot];
+                    thread::spawn(move || reader_loop(slot, gen, stream, tx));
                     links[slot] = Some(writer);
-                    connected += 1;
                 }
+                // during formation a protocol mismatch means a real device
+                // of the wrong version: fail fast and loudly
+                Handshake::VersionMismatch(v) => anyhow::bail!(
+                    "protocol mismatch: device speaks v{v}, coordinator v{}",
+                    frame::PROTOCOL_VERSION
+                ),
                 // a stray connection (port scanner, health probe, a
                 // device started twice) must not strand the fleet —
                 // drop it and keep accepting until the deadline
-                Admitted::Rejected(reason) => {
+                Handshake::Rejected(reason) => {
                     eprintln!("cfl: ignoring a connection from {peer}: {reason}");
                 }
             },
@@ -240,27 +391,61 @@ fn accept_fleet(
             Err(e) => return Err(anyhow::anyhow!("accepting a device connection: {e}")),
         }
     }
-    Ok((links, up_rx))
+    Ok((links, gens))
 }
 
-/// Outcome of one connection handshake: an admitted device, or a
-/// connection to drop while the accept loop keeps going.
-enum Admitted {
-    Device(usize, TcpStream),
+/// The post-formation accept loop: validate each newcomer's `Hello` and
+/// ship it to the transport as a rejoin candidate. Admission (is the
+/// slot actually dead?) happens on the transport's own thread, which
+/// owns the link table — the acceptor never races it. Version mismatches
+/// can't fail the session here; they are logged and dropped.
+fn acceptor_loop(
+    listener: TcpListener,
+    n: usize,
+    stop: Arc<AtomicBool>,
+    tx: mpsc::Sender<(usize, u64, TcpUp)>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => match handshake(stream, n) {
+                Handshake::Candidate(slot, stream) => {
+                    // generation is assigned at admission; 0 here is inert
+                    if tx.send((slot, 0, TcpUp::Rejoin(stream))).is_err() {
+                        return; // transport dropped; nobody is listening
+                    }
+                }
+                Handshake::VersionMismatch(v) => {
+                    eprintln!(
+                        "cfl: rejecting a rejoin from {peer}: device speaks v{v}, coordinator v{}",
+                        frame::PROTOCOL_VERSION
+                    );
+                }
+                Handshake::Rejected(reason) => {
+                    eprintln!("cfl: ignoring a connection from {peer}: {reason}");
+                }
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
+            Err(_) => thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Outcome of one connection handshake.
+enum Handshake {
+    /// A valid in-range `Hello`: the slot it claims and the configured
+    /// stream (read timeout disarmed, nodelay set).
+    Candidate(usize, TcpStream),
+    /// The peer speaks a different wire version.
+    VersionMismatch(u32),
+    /// Garbage, timeout, or an out-of-range id — drop the connection.
     Rejected(String),
 }
 
-/// Handshake one fresh connection: read `Hello`, validate, start its
-/// reader thread. Garbage, timeouts, duplicate or out-of-range ids are
-/// [`Admitted::Rejected`] (non-fatal — keep accepting); a *protocol*
-/// mismatch is a hard `Err`, since it means a real device of the wrong
-/// version and the session should fail fast and loudly.
-fn admit(
-    mut stream: TcpStream,
-    links: &[Option<TcpStream>],
-    up_tx: &mpsc::Sender<(usize, Up)>,
-) -> Result<Admitted> {
-    let reject = |reason: String| Ok(Admitted::Rejected(reason));
+/// Handshake one fresh connection: read `Hello` within [`HELLO_TIMEOUT`]
+/// and validate it. Shared by initial fleet formation and the
+/// post-formation acceptor (which differ only in how they react).
+fn handshake(mut stream: TcpStream, n: usize) -> Handshake {
+    let reject = Handshake::Rejected;
     let configured = stream.set_nonblocking(false).is_ok()
         && stream.set_read_timeout(Some(HELLO_TIMEOUT)).is_ok();
     if !configured {
@@ -279,36 +464,27 @@ fn admit(
     let FromDevice::Hello { device_id, protocol } = hello else {
         return reject(format!("expected Hello as the first message, got {hello:?}"));
     };
-    ensure!(
-        protocol == frame::PROTOCOL_VERSION,
-        "protocol mismatch: device speaks v{protocol}, coordinator v{}",
-        frame::PROTOCOL_VERSION
-    );
-    if device_id >= links.len() {
-        return reject(format!(
-            "device id {device_id} outside the {}-device fleet",
-            links.len()
-        ));
+    if protocol != frame::PROTOCOL_VERSION {
+        return Handshake::VersionMismatch(protocol);
     }
-    if links[device_id].is_some() {
-        return reject(format!("device id {device_id} claimed twice"));
+    if device_id >= n {
+        return reject(format!("device id {device_id} outside the {n}-device fleet"));
     }
-    stream.set_read_timeout(None).context("disarming the Hello timeout")?;
-    let writer = stream.try_clone().context("splitting the device socket")?;
-    let tx = up_tx.clone();
-    thread::spawn(move || reader_loop(device_id, stream, tx));
-    Ok(Admitted::Device(device_id, writer))
+    if stream.set_read_timeout(None).is_err() {
+        return reject("disarming the Hello timeout".into());
+    }
+    Handshake::Candidate(device_id, stream)
 }
 
 /// Per-socket reader: frames in, events out; any EOF or framing fault
-/// ends the endpoint with a `Gone`.
-fn reader_loop(slot: usize, stream: TcpStream, tx: mpsc::Sender<(usize, Up)>) {
+/// ends the endpoint with a `Gone` carrying this incarnation's tag.
+fn reader_loop(slot: usize, gen: u64, stream: TcpStream, tx: mpsc::Sender<(usize, u64, TcpUp)>) {
     let mut reader = BufReader::new(stream);
     loop {
         match frame::read_frame(&mut reader) {
             Ok(Some(payload)) => match frame::decode_from_device(&payload) {
                 Ok(msg) => {
-                    if tx.send((slot, Up::Msg(msg))).is_err() {
+                    if tx.send((slot, gen, TcpUp::Msg(msg))).is_err() {
                         return; // transport dropped; nobody is listening
                     }
                 }
@@ -317,26 +493,35 @@ fn reader_loop(slot: usize, stream: TcpStream, tx: mpsc::Sender<(usize, Up)>) {
             Ok(None) | Err(_) => break,
         }
     }
-    let _ = tx.send((slot, Up::Gone));
+    let _ = tx.send((slot, gen, TcpUp::Gone));
 }
 
 /// A device process's end of the socket.
 struct TcpLink {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Whether the coordinator ever spoke to us on this connection — the
+    /// admission signal [`run_device_retry`] uses to tell a live session
+    /// that later broke (retry) from a connection dropped unseen (an
+    /// unadmitted duplicate, a rejected version: strike and eventually
+    /// give up).
+    got_any: bool,
 }
 
 impl TcpLink {
     fn new(stream: TcpStream) -> Result<Self> {
         let writer = stream.try_clone().context("splitting the coordinator socket")?;
-        Ok(Self { reader: BufReader::new(stream), writer })
+        Ok(Self { reader: BufReader::new(stream), writer, got_any: false })
     }
 }
 
 impl DeviceLink for TcpLink {
     fn recv(&mut self) -> Result<Option<ToDevice>> {
         match frame::read_frame(&mut self.reader)? {
-            Some(payload) => Ok(Some(frame::decode_to_device(&payload)?)),
+            Some(payload) => {
+                self.got_any = true;
+                Ok(Some(frame::decode_to_device(&payload)?))
+            }
             None => Ok(None),
         }
     }
@@ -346,22 +531,104 @@ impl DeviceLink for TcpLink {
     }
 }
 
-/// The `cfl device` entry point: connect to a coordinator (retrying while
-/// it finishes starting up), claim fleet slot `device_id`, and serve
-/// [`run_device_loop`] until the coordinator shuts the session down.
-pub fn run_device(addr: &str, device_id: usize, connect_timeout: Duration) -> Result<()> {
+/// Dial the coordinator, retrying while it finishes starting up (or, on
+/// a rejoin, while the old incarnation's death notice propagates).
+fn connect_stream(addr: &str, connect_timeout: Duration) -> Result<TcpStream> {
     let deadline = Instant::now() + connect_timeout;
-    let stream = loop {
+    loop {
         match TcpStream::connect(addr) {
-            Ok(s) => break s,
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
             Err(e) => {
                 ensure!(Instant::now() < deadline, "connecting to {addr}: {e}");
                 thread::sleep(Duration::from_millis(50));
             }
         }
+    }
+}
+
+/// One device session over one connection: `Hello`, then the shared
+/// state machine until the link ends. The boolean reports whether the
+/// coordinator ever spoke to us (i.e. this connection was admitted).
+fn device_session(stream: TcpStream, device_id: usize) -> (Result<SessionEnd>, bool) {
+    let mut link = match TcpLink::new(stream) {
+        Ok(l) => l,
+        Err(e) => return (Err(e), false),
     };
-    stream.set_nodelay(true).ok();
-    let mut link = TcpLink::new(stream)?;
-    link.send(FromDevice::Hello { device_id, protocol: frame::PROTOCOL_VERSION })?;
-    run_device_loop(&mut link)
+    let hello = FromDevice::Hello { device_id, protocol: frame::PROTOCOL_VERSION };
+    if let Err(e) = link.send(hello) {
+        return (Err(e), false);
+    }
+    let end = run_device_loop(&mut link);
+    (end, link.got_any)
+}
+
+/// The `cfl device` entry point: connect to a coordinator (retrying while
+/// it finishes starting up), claim fleet slot `device_id`, and serve
+/// [`run_device_loop`] until the session ends one way or the other.
+pub fn run_device(addr: &str, device_id: usize, connect_timeout: Duration) -> Result<()> {
+    let stream = connect_stream(addr, connect_timeout)?;
+    device_session(stream, device_id).0.map(|_| ())
+}
+
+/// Consecutive never-admitted connections after which a retrying device
+/// gives up: a coordinator that drops us without ever speaking is
+/// rejecting deterministically (wrong `--id`, a protocol-version
+/// mismatch, a slot that is genuinely claimed by someone else), and
+/// redialing it forever would just fill both logs.
+const MAX_SILENT_REJECTIONS: u32 = 5;
+
+/// The `cfl device --retry` entry point: like [`run_device`], but a
+/// session that ends in anything other than an explicit `Shutdown` — the
+/// socket broke mid-run, the coordinator dropped this connection as a
+/// duplicate while the old incarnation's death was still propagating —
+/// reconnects with exponential backoff and re-claims the slot. Exits
+/// `Ok` on `Shutdown`; errors when the coordinator stays unreachable for
+/// a whole `connect_timeout` window, or after
+/// [`MAX_SILENT_REJECTIONS`] consecutive connections the coordinator
+/// dropped without ever speaking to us (a deterministic rejection, not a
+/// transient rejoin race).
+pub fn run_device_retry(
+    addr: &str,
+    device_id: usize,
+    connect_timeout: Duration,
+    quiet: bool,
+) -> Result<()> {
+    let mut backoff = Duration::from_millis(50);
+    let mut silent_rejections = 0u32;
+    loop {
+        let stream = connect_stream(addr, connect_timeout)?;
+        let (end, admitted) = device_session(stream, device_id);
+        if admitted {
+            // a real session happened: this is churn, not rejection —
+            // start the next episode from a fresh, fast backoff
+            silent_rejections = 0;
+            backoff = Duration::from_millis(50);
+        } else {
+            silent_rejections += 1;
+            ensure!(
+                silent_rejections < MAX_SILENT_REJECTIONS,
+                "coordinator at {addr} dropped {silent_rejections} consecutive connections \
+                 for device {device_id} without speaking (wrong --id, protocol mismatch, \
+                 or the slot is claimed); giving up"
+            );
+        }
+        match end {
+            Ok(SessionEnd::Shutdown) => return Ok(()),
+            Ok(SessionEnd::HangUp) => {
+                if !quiet {
+                    eprintln!("cfl device {device_id}: link closed without Shutdown; rejoining");
+                }
+            }
+            Err(e) => {
+                if !quiet {
+                    eprintln!("cfl device {device_id}: session error ({e}); rejoining");
+                }
+            }
+        }
+        thread::sleep(backoff);
+        backoff = (backoff * 2).min(Duration::from_secs(1));
+    }
 }

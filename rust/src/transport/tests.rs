@@ -194,6 +194,78 @@ fn channel_protocol_violation_surfaces_as_gone() {
     assert!(!t.send(0, &ToDevice::Ping { nonce: 0 }).unwrap());
 }
 
+#[test]
+fn channel_kill_and_respawn_rejoins_the_slot() {
+    let mut t = ChannelTransport::new(2);
+    let ctl = t.controller();
+    t.begin_run(vec![init(0), init(1)]).unwrap();
+
+    // kill: the worker's command channel closes, the worker exits, and
+    // its own death notice is the observable event
+    ctl.kill(1);
+    match t.recv_timeout(Duration::from_secs(5)) {
+        Event::Gone(1) => {}
+        other => panic!("expected Gone(1), got {other:?}"),
+    }
+    assert!(!t.send(1, &ToDevice::Ping { nonce: 0 }).unwrap());
+    // a dead slot is skipped by begin_run and reported as undelivered
+    assert_eq!(t.begin_run(vec![init(1)]).unwrap(), vec![false]);
+
+    // respawn: a fresh incarnation claims the dead slot
+    ctl.respawn(1);
+    match t.recv_timeout(Duration::from_secs(5)) {
+        Event::Rejoined(1) => {}
+        other => panic!("expected Rejoined(1), got {other:?}"),
+    }
+    // the fresh incarnation is blank: re-Setup, then it computes again
+    assert!(t.send(1, &ToDevice::Setup(Box::new(init(1)))).unwrap());
+    let FromDevice::Grad { run, epoch, .. } = one_cycle(&mut t, 1, 9) else { unreachable!() };
+    assert_eq!((run, epoch), (7, 9));
+
+    // respawning a live slot is a no-op (no spurious Rejoined)
+    ctl.respawn(1);
+    match t.recv_timeout(Duration::from_millis(200)) {
+        Event::Timeout => {}
+        other => panic!("respawn of a live slot surfaced {other:?}"),
+    }
+}
+
+#[test]
+fn stale_replies_from_a_previous_incarnation_are_discarded() {
+    let mut t = ChannelTransport::new(1);
+    let ctl = t.controller();
+    // arm the worker with a real sleep (any delay draw hits the scaled
+    // cap), so its reply lands well after the kill below
+    let mut slow = init(0);
+    slow.time_scale = 1e9;
+    slow.max_scaled_secs = 0.3;
+    t.begin_run(vec![slow]).unwrap();
+    let beta = Mat::from_vec(2, 1, vec![0.1, 0.2]);
+    assert!(t.send(0, &ToDevice::Model { epoch: 0, beta }).unwrap());
+
+    // while incarnation 0 sleeps out its delay, kill the slot and admit
+    // a fresh incarnation
+    ctl.kill(0);
+    ctl.respawn(0);
+    match t.recv_timeout(Duration::from_secs(5)) {
+        Event::Rejoined(0) => {}
+        other => panic!("expected Rejoined(0), got {other:?}"),
+    }
+
+    // incarnation 0 now wakes, replies, and dies — all of it tagged with
+    // the stale generation: neither its gradient (which would be
+    // attributed to the new incarnation) nor its death notice (which
+    // would kill the new incarnation) may surface
+    match t.recv_timeout(Duration::from_millis(700)) {
+        Event::Timeout => {}
+        other => panic!("stale-incarnation event surfaced: {other:?}"),
+    }
+    // and the respawned endpoint is fully functional
+    assert!(t.send(0, &ToDevice::Setup(Box::new(init(0)))).unwrap());
+    let FromDevice::Grad { run, epoch, .. } = one_cycle(&mut t, 0, 1) else { unreachable!() };
+    assert_eq!((run, epoch), (7, 1));
+}
+
 // ---------------------------------------------------------------------
 // tcp transport (skipped silently where the sandbox denies loopback bind)
 
@@ -272,6 +344,41 @@ fn tcp_disconnect_surfaces_as_gone() {
         std::thread::sleep(Duration::from_millis(10));
     }
     assert!(dead, "writes to a disconnected endpoint never failed");
+}
+
+#[test]
+fn tcp_dead_slot_is_readmitted_on_reconnect() {
+    let Some(listener) = loopback() else { return };
+    let addr = listener.local_addr().unwrap().to_string();
+    // incarnation A: Hello, then drop the socket (a device that dies
+    // right after joining)
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let hello =
+            encode_from_device(&FromDevice::Hello { device_id: 0, protocol: PROTOCOL_VERSION });
+        write_frame(&mut s, &hello).unwrap();
+    }
+    let mut t = TcpTransport::serve(listener, 1, Duration::from_secs(5)).unwrap();
+    match t.recv_timeout(Duration::from_secs(5)) {
+        Event::Gone(0) => {}
+        other => panic!("expected Gone(0), got {other:?}"),
+    }
+
+    // incarnation B: a real device loop dials the same coordinator and
+    // re-claims the dead slot through the post-formation acceptor
+    let addr2 = addr.clone();
+    let dev = std::thread::spawn(move || run_device(&addr2, 0, Duration::from_secs(5)));
+    match t.recv_timeout(Duration::from_secs(5)) {
+        Event::Rejoined(0) => {}
+        other => panic!("expected Rejoined(0), got {other:?}"),
+    }
+    // the rejoined incarnation is blank: Setup, then it serves epochs
+    assert_eq!(t.begin_run(vec![init(0)]).unwrap(), vec![true]);
+    let FromDevice::Grad { run, epoch, .. } = one_cycle(&mut t, 0, 2) else { unreachable!() };
+    assert_eq!((run, epoch), (7, 2));
+
+    drop(t); // Shutdown: the rejoined device exits cleanly
+    dev.join().unwrap().unwrap();
 }
 
 #[test]

@@ -1,0 +1,131 @@
+#!/usr/bin/env bash
+# Rejoin smoke test: a TCP device SIGKILLed mid-run and restarted with
+# `--retry` must rejoin the fleet, receive the current model, and finish
+# the run inside the coded gather set (not demoted to parity-only).
+#
+# Flow: 1 `cfl serve` coordinator + 3 `cfl device` workers on loopback;
+# one worker is SIGKILLed once training is underway, then restarted with
+# the same --id and --retry. The serve report must show the disconnect,
+# the rejoin, full final membership, and a converged model
+# (--check-nmse makes serve exit nonzero otherwise).
+#
+# Sandboxes that deny socket bind are detected with `cfl serve --probe`
+# and skipped with a notice — the test needs real sockets or nothing.
+#
+# Env: CFL_BIN overrides the binary (default: target/{release,debug}/cfl).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${CFL_BIN:-}
+if [[ -z "$BIN" ]]; then
+    for candidate in target/release/cfl target/debug/cfl; do
+        if [[ -x "$candidate" ]]; then
+            BIN=$candidate
+            break
+        fi
+    done
+fi
+if [[ -z "${BIN:-}" || ! -x "$BIN" ]]; then
+    echo "rejoin_smoke: cfl binary not built (run cargo build first)" >&2
+    exit 1
+fi
+
+if ! "$BIN" serve --probe --bind 127.0.0.1:0 >/dev/null 2>&1; then
+    echo "rejoin_smoke: sandbox denies loopback bind; skipping the rejoin smoke test"
+    exit 0
+fi
+
+tmp=$(mktemp -d)
+device_pids=()
+cleanup() {
+    for pid in "${device_pids[@]:-}"; do
+        kill "$pid" 2>/dev/null || true
+    done
+    rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+# target-nmse 0 disables early stop so the run reliably spans the kill +
+# restart below; time-scale 0.2 paces every epoch with milliseconds of
+# real slept delay (the slowest modeled link alone is ≥ ~2 ms), so the
+# run lasts several seconds and "mid-run" is wall-clock reachable.
+# --check-nmse still gates the final model: a fleet that lost a shard
+# for good would converge visibly worse.
+port_file="$tmp/addr"
+"$BIN" serve --bind 127.0.0.1:0 --port-file "$port_file" --devices 3 \
+    --epochs 2000 --seed 11 --time-scale 0.2 --target-nmse 0 \
+    --skip-uncoded --check-nmse 0.05 --quiet >"$tmp/serve.log" 2>&1 &
+serve_pid=$!
+
+for _ in $(seq 100); do
+    [[ -s "$port_file" ]] && break
+    sleep 0.1
+done
+if [[ ! -s "$port_file" ]]; then
+    echo "rejoin_smoke: serve never published its address" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+addr=$(tr -d '[:space:]' <"$port_file")
+
+"$BIN" device --connect "$addr" --id 0 --retry --quiet &
+device_pids+=($!)
+"$BIN" device --connect "$addr" --id 1 --retry --quiet &
+device_pids+=($!)
+"$BIN" device --connect "$addr" --id 2 --retry --quiet &
+victim_pid=$!
+device_pids+=($victim_pid)
+
+# let training get underway, then SIGKILL one device mid-run
+sleep 2
+if ! kill -0 "$serve_pid" 2>/dev/null; then
+    echo "rejoin_smoke: serve exited before the kill — run too short for the smoke" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+kill -9 "$victim_pid"
+echo "rejoin_smoke: SIGKILLed device 2 (pid $victim_pid) mid-run"
+sleep 0.5
+
+# restart it with the same slot id: --retry re-claims the slot and the
+# coordinator restores it to the coded gather set
+"$BIN" device --connect "$addr" --id 2 --retry --quiet &
+device_pids+=($!)
+echo "rejoin_smoke: restarted device 2 with --retry"
+
+if ! wait "$serve_pid"; then
+    echo "rejoin_smoke: serve failed (final NMSE gate or transport fault)" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+
+report=$(grep "live cfl" "$tmp/serve.log" || true)
+if [[ -z "$report" ]]; then
+    echo "rejoin_smoke: no coded run report in the serve log" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+echo "rejoin_smoke: $report"
+
+# the report must show the churn and the recovery: at least one
+# disconnect, at least one rejoin, and a final gather set of 3/3 —
+# i.e. the restarted device ended the run coded, not parity-only
+if ! grep -Eq "disconnects=[1-9]" <<<"$report"; then
+    echo "rejoin_smoke: the SIGKILL was never observed as a disconnect" >&2
+    exit 1
+fi
+if ! grep -Eq "rejoins=[1-9]" <<<"$report"; then
+    echo "rejoin_smoke: the restarted device never rejoined" >&2
+    exit 1
+fi
+if ! grep -q "members=3/3" <<<"$report"; then
+    echo "rejoin_smoke: full coded coverage was not restored" >&2
+    exit 1
+fi
+
+# surviving devices exit on the coordinator's Shutdown
+for pid in "${device_pids[@]}"; do
+    wait "$pid" 2>/dev/null || true
+done
+device_pids=()
+echo "rejoin_smoke ok: device 2 was killed, rejoined, and finished inside the coded gather set"
