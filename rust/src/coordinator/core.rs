@@ -96,6 +96,12 @@ pub struct RunResult {
     pub disconnects: u64,
     /// Devices re-admitted after a disconnect (live backend; 0 for sim).
     pub rejoins: u64,
+    /// Per-phase host wall-clock digests (count/total/p50/p95 for parity
+    /// encode, local gradient, gather, aggregation, calibration) — the
+    /// profile behind the bench JSON's `phases` object and the
+    /// `cfl bench-check` wall-clock gate. Empty only for hand-built
+    /// results.
+    pub phases: Vec<crate::obs::PhaseSummary>,
 }
 
 impl RunResult {
@@ -117,18 +123,39 @@ impl RunResult {
     /// device dropping to parity-only coverage, then rejoining) is
     /// visible directly in the trace.
     pub fn write_trace_csv(&self, path: &str) -> Result<()> {
-        if self.epoch_members.len() == self.trace.points.len() {
+        self.write_trace_csv_decimated(path, 1)
+    }
+
+    /// [`RunResult::write_trace_csv`] keeping only every `every`-th row
+    /// plus the final one (row 0 always survives, so the first and last
+    /// points of the curve are always present; `every == 1` keeps all).
+    /// This is `cfl sweep --trace-decimate N`: million-scenario grids
+    /// keep their convergence *shape* on disk without drowning in rows.
+    pub fn write_trace_csv_decimated(&self, path: &str, every: usize) -> Result<()> {
+        anyhow::ensure!(every >= 1, "trace decimation stride must be ≥ 1, got {every}");
+        let n = self.trace.points.len();
+        let keep = |i: usize| i % every == 0 || i + 1 == n;
+        if self.epoch_members.len() == n {
             let mut w = crate::metrics::CsvWriter::create(
                 path,
                 &["time_s", "epoch", "nmse", "members"],
             )?;
-            for (p, &m) in self.trace.points.iter().zip(&self.epoch_members) {
-                w.write_row(&[p.time_s, p.epoch as f64, p.nmse, m as f64])?;
+            for (i, (p, &m)) in self.trace.points.iter().zip(&self.epoch_members).enumerate() {
+                if keep(i) {
+                    w.write_row(&[p.time_s, p.epoch as f64, p.nmse, m as f64])?;
+                }
             }
             w.flush()
         } else {
             // membership unknown (hand-built results): classic 3 columns
-            self.trace.write_csv(path)
+            let mut w =
+                crate::metrics::CsvWriter::create(path, &["time_s", "epoch", "nmse"])?;
+            for (i, p) in self.trace.points.iter().enumerate() {
+                if keep(i) {
+                    w.write_row(&[p.time_s, p.epoch as f64, p.nmse])?;
+                }
+            }
+            w.flush()
         }
     }
 }

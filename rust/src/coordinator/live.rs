@@ -55,6 +55,7 @@ use crate::config::ExperimentConfig;
 use crate::fl::{assemble_coded_gradient, GlobalModel, GradBackend, NativeBackend};
 use crate::lb::LoadPolicy;
 use crate::linalg::Mat;
+use crate::obs::{Phase, PhaseBook};
 use crate::rng::mix_seed;
 use crate::transport::{ChannelTransport, DeviceInit, Event, FromDevice, ToDevice, Transport};
 use anyhow::Result;
@@ -170,6 +171,7 @@ impl LiveCoordinator {
     fn run_with(&mut self, policy: &LoadPolicy, coded: bool) -> Result<RunResult> {
         // wall_secs spans setup + training in both backends
         let started = Instant::now();
+        let mut phases = PhaseBook::with_capacity(self.session.cfg.max_epochs);
         let mut rng = self.session.run_rng();
         let mut backend = NativeBackend;
         self.runs += 1;
@@ -186,7 +188,9 @@ impl LiveCoordinator {
             f64,
             f64,
         ) = if coded {
+            let t_setup = Instant::now();
             let setup = self.session.build_setup(policy, &mut backend, &mut rng)?;
+            phases.record(Phase::ParityEncode, t_setup.elapsed().as_secs_f64());
             let devices: Vec<Frozen> = setup
                 .devices
                 .into_iter()
@@ -261,6 +265,7 @@ impl LiveCoordinator {
         }
 
         // --- deadline calibration -----------------------------------------
+        let t_calibrate = Instant::now();
         let measured = calibrate_grace(
             self.transport.as_mut(),
             &active,
@@ -269,7 +274,15 @@ impl LiveCoordinator {
             &mut disconnects,
             &mut rejoins,
         );
+        phases.record(Phase::Calibrate, t_calibrate.elapsed().as_secs_f64());
         let grace = self.grace.unwrap_or(measured);
+        crate::obs_event!(
+            Debug,
+            "calibrated",
+            rtt_grace_ms = measured.as_secs_f64() * 1e3,
+            grace_ms = grace.as_secs_f64() * 1e3,
+            live_endpoints = alive.iter().filter(|a| **a).count(),
+        );
 
         // --- epoch loop ---------------------------------------------------
         let mut model = GlobalModel::zeros(d, cfg.learning_rate, m);
@@ -296,6 +309,7 @@ impl LiveCoordinator {
         let mut now = setup_secs;
 
         for epoch in 0..cfg.max_epochs {
+            let mut ep_span = crate::obs_span!(Debug, "epoch");
             let epoch_start = Instant::now();
             // epoch boundary: drain queued lifecycle events without
             // blocking. This is what keeps an all-dead fleet revivable —
@@ -369,10 +383,13 @@ impl LiveCoordinator {
                 "every device endpoint is gone; uncoded FL cannot proceed"
             );
             // master computes the parity gradient while devices work
+            let t_parity = Instant::now();
             let parity = match &composite {
                 Some(cp) => Some(backend.parity_grad(&cp.xt, &model.beta, &cp.yt, c)?),
                 None => None,
             };
+            let t_gather_start = Instant::now();
+            phases.record(Phase::LocalGrad, t_gather_start.duration_since(t_parity).as_secs_f64());
 
             // anchor the gather window *after* the parity GEMM: the grace
             // budget covers transport/wakeup overheads, not the master's
@@ -446,6 +463,8 @@ impl LiveCoordinator {
                     }
                 }
             }
+            let t_aggregate = Instant::now();
+            phases.record(Phase::Gather, t_aggregate.duration_since(t_gather_start).as_secs_f64());
             // same semantics as the DES backend: every broadcast gradient
             // that missed this epoch's gather is late, whether it was slow,
             // lost, or its endpoint died mid-flight
@@ -471,6 +490,21 @@ impl LiveCoordinator {
             epoch_times.push(epoch_secs);
             let nmse = model.nmse(&self.session.dataset.beta_star);
             trace.push(now, epoch + 1, nmse);
+            phases.record(Phase::Aggregate, t_aggregate.elapsed().as_secs_f64());
+            if ep_span.active() {
+                ep_span.field("epoch", epoch + 1);
+                ep_span.field("nmse", nmse);
+                ep_span.field("members", sent);
+                ep_span.field("gathered", grads.len());
+                ep_span.field(
+                    "local_grad_ms",
+                    t_gather_start.duration_since(t_parity).as_secs_f64() * 1e3,
+                );
+                ep_span.field(
+                    "gather_ms",
+                    t_aggregate.duration_since(t_gather_start).as_secs_f64() * 1e3,
+                );
+            }
             if converged.is_none() && nmse <= cfg.target_nmse {
                 converged = Some((epoch + 1, now));
                 break;
@@ -478,6 +512,15 @@ impl LiveCoordinator {
         }
 
         self.transport.end_run();
+        crate::obs_event!(
+            Debug,
+            "run_done",
+            label = label.as_str(),
+            epochs = epoch_times.len(),
+            wall_s = started.elapsed().as_secs_f64(),
+            disconnects = disconnects,
+            rejoins = rejoins,
+        );
 
         Ok(RunResult {
             label,
@@ -496,6 +539,7 @@ impl LiveCoordinator {
             epoch_members,
             disconnects,
             rejoins,
+            phases: phases.summaries(),
         })
     }
 }

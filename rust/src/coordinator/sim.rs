@@ -6,6 +6,7 @@ use crate::des::Simulator;
 use crate::fl::{assemble_coded_gradient, GlobalModel, GradBackend, NativeBackend};
 use crate::lb::LoadPolicy;
 use crate::linalg::Mat;
+use crate::obs::{Phase, PhaseBook};
 use crate::simnet::Fleet;
 use anyhow::{Context, Result};
 use std::time::Instant;
@@ -83,9 +84,11 @@ impl SimCoordinator {
     /// CFL with an explicit policy (ablations sweep weights through here).
     pub fn train_cfl_with_policy(&mut self, policy: &LoadPolicy) -> Result<RunResult> {
         let started = Instant::now();
+        let mut phases = PhaseBook::with_capacity(self.session.cfg.max_epochs);
         let mut rng = self.session.run_rng();
         let setup =
             self.session.build_setup(policy, self.backend.as_mut(), &mut rng)?;
+        phases.record(Phase::ParityEncode, started.elapsed().as_secs_f64());
         let states = &setup.devices;
         let composite = &setup.composite;
         let d = self.session.cfg.model_dim;
@@ -125,6 +128,8 @@ impl SimCoordinator {
             ((self.session.cfg.client_fraction * n as f64).round() as usize).clamp(1, n);
 
         for epoch in 0..self.session.cfg.max_epochs {
+            let mut ep_span = crate::obs_span!(Debug, "epoch");
+            let t_epoch = Instant::now();
             // --- timing: schedule every completion, gather until t* ------
             let selected: Option<Vec<bool>> = if k < n {
                 let mut mask = vec![false; n];
@@ -163,6 +168,7 @@ impl SimCoordinator {
             }
 
             let arrived = sim.run_until(t_star);
+            let t_gather = Instant::now();
 
             // --- numerics: Eq. 18 + 19 -----------------------------------
             let mut parity_grad: Option<Mat> = None;
@@ -197,6 +203,7 @@ impl SimCoordinator {
                     }
                 }
             }
+            let t_grad = Instant::now();
             on_time += device_grads.len() as u64;
             late += scheduled_devices - device_grads.len() as u64;
             epoch_members.push(scheduled_devices as usize);
@@ -208,12 +215,35 @@ impl SimCoordinator {
             epoch_times.push(t_star);
             let nmse = model.nmse(&self.session.dataset.beta_star);
             trace.push(now, epoch + 1, nmse);
+
+            let gather_s = t_gather.duration_since(t_epoch).as_secs_f64();
+            let grad_s = t_grad.duration_since(t_gather).as_secs_f64();
+            let agg_s = t_grad.elapsed().as_secs_f64();
+            phases.record(Phase::Gather, gather_s);
+            phases.record(Phase::LocalGrad, grad_s);
+            phases.record(Phase::Aggregate, agg_s);
+            if ep_span.active() {
+                ep_span.field("epoch", epoch + 1);
+                ep_span.field("nmse", nmse);
+                ep_span.field("members", scheduled_devices);
+                ep_span.field("gather_ms", gather_s * 1e3);
+                ep_span.field("local_grad_ms", grad_s * 1e3);
+                ep_span.field("aggregate_ms", agg_s * 1e3);
+            }
+
             if converged.is_none() && nmse <= self.session.cfg.target_nmse {
                 converged = Some((epoch + 1, now));
                 break;
             }
         }
 
+        crate::obs_event!(
+            Debug,
+            "run_done",
+            label = trace.label.as_str(),
+            epochs = epoch_times.len(),
+            wall_s = started.elapsed().as_secs_f64(),
+        );
         Ok(RunResult {
             label: trace.label.clone(),
             trace,
@@ -231,6 +261,7 @@ impl SimCoordinator {
             epoch_members,
             disconnects: 0,
             rejoins: 0,
+            phases: phases.summaries(),
         })
     }
 
@@ -238,6 +269,7 @@ impl SimCoordinator {
     /// gradients each epoch (Fig. 3 top's heavy-tailed gather).
     pub fn train_uncoded(&mut self) -> Result<RunResult> {
         let started = Instant::now();
+        let mut phases = PhaseBook::with_capacity(self.session.cfg.max_epochs);
         let mut rng = self.session.run_rng();
         let d = self.session.cfg.model_dim;
         let m = self.session.fleet.total_points();
@@ -278,11 +310,14 @@ impl SimCoordinator {
         }
 
         for epoch in 0..self.session.cfg.max_epochs {
+            let mut ep_span = crate::obs_span!(Debug, "epoch");
+            let t_epoch = Instant::now();
             // epoch duration = slowest device (wait-for-all)
             let mut epoch_len = 0.0f64;
             for dev in &self.session.fleet.devices {
                 epoch_len = epoch_len.max(dev.sample_total_delay(dev.points, &mut rng));
             }
+            let t_gather = Instant::now();
             // exact full gradient over the global data (Σᵢ inner sums)
             let grad = if all_registered {
                 let mut acc = Mat::zeros(d, 1);
@@ -297,6 +332,7 @@ impl SimCoordinator {
                     &self.session.dataset.y,
                 )?
             };
+            let t_grad = Instant::now();
             model.apply_gradient(&grad);
             on_time += self.session.fleet.n_devices() as u64;
 
@@ -304,6 +340,20 @@ impl SimCoordinator {
             epoch_times.push(epoch_len);
             let nmse = model.nmse(&self.session.dataset.beta_star);
             trace.push(now, epoch + 1, nmse);
+
+            let gather_s = t_gather.duration_since(t_epoch).as_secs_f64();
+            let grad_s = t_grad.duration_since(t_gather).as_secs_f64();
+            let agg_s = t_grad.elapsed().as_secs_f64();
+            phases.record(Phase::Gather, gather_s);
+            phases.record(Phase::LocalGrad, grad_s);
+            phases.record(Phase::Aggregate, agg_s);
+            if ep_span.active() {
+                ep_span.field("epoch", epoch + 1);
+                ep_span.field("nmse", nmse);
+                ep_span.field("local_grad_ms", grad_s * 1e3);
+                ep_span.field("aggregate_ms", agg_s * 1e3);
+            }
+
             if converged.is_none() && nmse <= self.session.cfg.target_nmse {
                 converged = Some((epoch + 1, now));
                 break;
@@ -313,6 +363,13 @@ impl SimCoordinator {
         let full_loads: Vec<usize> =
             self.session.fleet.devices.iter().map(|p| p.points).collect();
         let epoch_members = vec![self.session.fleet.n_devices(); epoch_times.len() + 1];
+        crate::obs_event!(
+            Debug,
+            "run_done",
+            label = trace.label.as_str(),
+            epochs = epoch_times.len(),
+            wall_s = started.elapsed().as_secs_f64(),
+        );
         Ok(RunResult {
             label: "uncoded".into(),
             trace,
@@ -330,6 +387,7 @@ impl SimCoordinator {
             epoch_members,
             disconnects: 0,
             rejoins: 0,
+            phases: phases.summaries(),
         })
     }
 }

@@ -43,6 +43,25 @@ fn uncoded_converges_and_has_no_setup() {
 }
 
 #[test]
+fn run_results_carry_phase_summaries() {
+    let mut sim = SimCoordinator::new(&small_cfg()).unwrap();
+    let coded = sim.train_cfl().unwrap();
+    let names: Vec<&str> = coded.phases.iter().map(|p| p.phase).collect();
+    for phase in ["parity_encode", "local_grad", "gather", "aggregate"] {
+        assert!(names.contains(&phase), "missing {phase} in {names:?}");
+    }
+    let grad = coded.phases.iter().find(|p| p.phase == "local_grad").unwrap();
+    assert_eq!(grad.count, coded.epoch_times.len() as u64, "one sample per epoch");
+    assert!(grad.p95_s >= grad.p50_s, "quantiles out of order: {grad:?}");
+    assert!(grad.total_s >= grad.p95_s, "total below p95: {grad:?}");
+
+    let uncoded = sim.train_uncoded().unwrap();
+    let names: Vec<&str> = uncoded.phases.iter().map(|p| p.phase).collect();
+    assert!(!names.contains(&"parity_encode"), "uncoded has no parity step: {names:?}");
+    assert!(names.contains(&"local_grad"), "{names:?}");
+}
+
+#[test]
 fn runs_are_seed_reproducible() {
     let mut a = SimCoordinator::new(&small_cfg()).unwrap();
     let mut b = SimCoordinator::new(&small_cfg()).unwrap();

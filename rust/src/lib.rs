@@ -60,6 +60,7 @@ pub mod fl;
 pub mod lb;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod simnet;

@@ -9,16 +9,41 @@
 //! Pallas kernel performs in VMEM.
 
 use super::Mat;
+use crate::obs::Counter;
+use std::sync::OnceLock;
 
 /// Cache block edge for the k (reduction) dimension.
 const BK: usize = 64;
 /// Cache block edge for the j (output-column) dimension.
 const BJ: usize = 256;
 
+/// `(calls, fmas)` counters for the dense GEMMs, resolved once — the
+/// per-call cost is two relaxed atomic adds, vanishing against the
+/// O(m·k·n) flops they account for.
+fn gemm_counters() -> &'static (Counter, Counter) {
+    static C: OnceLock<(Counter, Counter)> = OnceLock::new();
+    C.get_or_init(|| {
+        let reg = crate::obs::registry();
+        (reg.counter("linalg.gemm.calls"), reg.counter("linalg.gemm.fmas"))
+    })
+}
+
+/// `(calls, fmas)` counters for the fused partial-gradient kernel.
+fn partial_grad_counters() -> &'static (Counter, Counter) {
+    static C: OnceLock<(Counter, Counter)> = OnceLock::new();
+    C.get_or_init(|| {
+        let reg = crate::obs::registry();
+        (reg.counter("linalg.partial_grad.calls"), reg.counter("linalg.partial_grad.fmas"))
+    })
+}
+
 /// C = A·B (blocked, row-major).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.rows(), "matmul inner dims: {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let ctr = gemm_counters();
+    ctr.0.incr();
+    ctr.1.add((m * k * n) as u64);
     let mut c = Mat::zeros(m, n);
     for k0 in (0..k).step_by(BK) {
         let k1 = (k0 + BK).min(k);
@@ -48,6 +73,9 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b row dims");
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let ctr = gemm_counters();
+    ctr.0.incr();
+    ctr.1.add((k * m * n) as u64);
     let mut c = Mat::zeros(m, n);
     for r in 0..k {
         let arow = a.row(r);
@@ -77,6 +105,9 @@ pub fn partial_grad(x: &Mat, beta: &Mat, y: &Mat) -> Mat {
     assert_eq!(x.cols(), beta.rows(), "X/β dims");
     assert_eq!(x.rows(), y.rows(), "X/y dims");
     let d = x.cols();
+    let ctr = partial_grad_counters();
+    ctr.0.incr();
+    ctr.1.add((2 * x.rows() * d) as u64);
     let mut g = Mat::zeros(d, 1);
     let bcol = beta.as_slice();
     let gcol = g.as_mut_slice();

@@ -70,6 +70,18 @@ fn parser() -> Parser {
         .opt("report", "file.json", "bench-check: current report (default BENCH_ci.json)")
         .opt("baseline", "file.json", "bench-check: baseline (default bench/baseline.json)")
         .opt("tolerance", "f64", "bench-check: allowed fractional gain drop (default 0.2)")
+        .opt(
+            "wall-tolerance",
+            "f64|off",
+            "bench-check: allowed fractional epochs/s drop (default 0.5; off = gain-only)",
+        )
+        .opt("log-level", "error|warn|info|debug|trace", "stderr log level (default info; CFL_LOG env var works too)")
+        .opt(
+            "events-out",
+            "path",
+            "write structured JSONL events (sweep: a directory, one file per scenario; otherwise one file)",
+        )
+        .opt("trace-decimate", "N", "sweep --traces-dir: keep every Nth trace row (first and last always kept)")
         .flag("retry", "device: reconnect with backoff after a lost link (rejoin the fleet)")
         .flag("live", "sweep: run scenarios through the live coordinator")
         .flag("probe", "serve: just test that the address can be bound, then exit")
@@ -82,6 +94,43 @@ fn parser() -> Parser {
 /// the same parsed document.
 fn load_ini(args: &cfl::cli::Args) -> Result<Option<Ini>> {
     args.get("config").map(Ini::load).transpose()
+}
+
+/// Install the observability sinks before the subcommand runs.
+///
+/// Stderr renders events at `--log-level` (falling back to the `CFL_LOG`
+/// env var, then to info — warn under `--quiet`). `--events-out` adds a
+/// JSONL sink that always captures at least debug (the exported trace is
+/// the point of asking for it): a directory with one file per scenario
+/// for `sweep`, a single file for every other subcommand.
+fn init_obs(args: &cfl::cli::Args) -> Result<()> {
+    use cfl::obs::{self, Level, Sink};
+    use std::sync::Arc;
+    let explicit = match args.get("log-level") {
+        Some(s) => Some(Level::parse(s)?),
+        None => match std::env::var("CFL_LOG") {
+            Ok(s) => Some(Level::parse(&s).context("CFL_LOG")?),
+            Err(_) => None,
+        },
+    };
+    let stderr_level = explicit
+        .unwrap_or(if args.has_flag("quiet") { Level::Warn } else { Level::Info });
+    let stderr_sink: Arc<dyn Sink> = Arc::new(obs::StderrSink);
+    let mut sinks: Vec<(Arc<dyn Sink>, Level)> = vec![(stderr_sink, stderr_level)];
+    if let Some(path) = args.get("events-out") {
+        let file_level = match explicit {
+            Some(l) if (l as u8) > (Level::Debug as u8) => l,
+            _ => Level::Debug,
+        };
+        let sink: Arc<dyn Sink> = if args.subcommand() == Some("sweep") {
+            Arc::new(obs::JsonlDirSink::create(path)?)
+        } else {
+            Arc::new(obs::JsonlFileSink::create(path)?)
+        };
+        sinks.push((sink, file_level));
+    }
+    obs::install(sinks);
+    Ok(())
 }
 
 fn build_config(args: &cfl::cli::Args) -> Result<ExperimentConfig> {
@@ -259,7 +308,21 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     for group in grid.zip_keys() {
         println!("  zip {}", group.join("+"));
     }
-    eprintln!("running on {workers} worker thread(s)");
+    cfl::obs_event!(Info, "sweep_start", workers = workers, scenarios = grid.len());
+    // touch the fleet-traffic counters up front so the end-of-sweep
+    // metrics snapshot carries the same keys for every backend (a sim
+    // sweep sends no frames; zeros say so explicitly)
+    {
+        let reg = cfl::obs::registry();
+        for name in [
+            "transport.frames_sent",
+            "transport.frames_recv",
+            "transport.bytes_sent",
+            "transport.bytes_recv",
+        ] {
+            reg.counter(name);
+        }
+    }
 
     let opts = SweepOptions {
         workers,
@@ -279,17 +342,19 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
             // config fingerprint must match this grid's scenario too
             state.check_compat(&scenarios)?;
             let recovered = scenarios.iter().filter(|s| state.contains(&s.id)).count();
-            eprintln!("resume: {recovered} completed scenario(s) recovered from {path}");
+            cfl::obs_event!(Info, "resume_recovered", recovered = recovered, csv = path);
             if state.len() > recovered {
-                eprintln!(
-                    "resume: {} row(s) in {path} do not belong to this grid — ignored",
-                    state.len() - recovered
+                cfl::obs_event!(
+                    Warn,
+                    "resume_foreign_rows_ignored",
+                    ignored = state.len() - recovered,
+                    csv = path,
                 );
             }
             state
         }
         Some(path) => {
-            eprintln!("resume: {path} not found — running the full grid");
+            cfl::obs_event!(Info, "resume_csv_missing", csv = path);
             sweep::ResumeState::empty()
         }
         None => sweep::ResumeState::empty(),
@@ -301,6 +366,8 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     // killed sweep keeps every finished row for the next --resume
     let csv_path = format!("{out_dir}/sweep_scenarios.csv");
     let traces_dir = args.get("traces-dir");
+    let decimate = args.get_or("trace-decimate", 1usize)?;
+    anyhow::ensure!(decimate >= 1, "--trace-decimate must be ≥ 1, got {decimate}");
     if let Some(dir) = traces_dir {
         std::fs::create_dir_all(dir).with_context(|| format!("mkdir -p {dir}"))?;
     }
@@ -308,7 +375,7 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     let outcomes = sweep::run_scenarios_streaming(todo, &opts, |o| {
         merged.push(o)?;
         if let Some(dir) = traces_dir {
-            sweep::write_outcome_traces(dir, o)?;
+            sweep::write_outcome_traces_decimated(dir, o, decimate)?;
         }
         Ok(())
     })?;
@@ -318,19 +385,27 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     sweep::write_json(&json_path, &grid, &outcomes)?;
     if let Some(bench_path) = args.get("bench-out") {
         sweep::write_bench_json(bench_path, &outcomes)?;
-        eprintln!("bench report written to {bench_path}");
+        cfl::obs_event!(Info, "bench_report_written", path = bench_path);
     }
     if !resume.is_empty() {
-        eprintln!(
-            "resume: summary/JSON below cover the {} freshly-run scenario(s); \
-             {csv_path} merges all {}",
-            outcomes.len(),
-            ids.len()
+        cfl::obs_event!(
+            Info,
+            "resume_summary_partial",
+            fresh = outcomes.len(),
+            merged_total = ids.len(),
+            csv = csv_path.as_str(),
         );
     }
     if let Some(dir) = traces_dir {
-        eprintln!("per-scenario traces written to {dir}/ ({} scenario(s))", outcomes.len());
+        cfl::obs_event!(
+            Info,
+            "traces_written",
+            dir = dir,
+            scenarios = outcomes.len(),
+            decimate = decimate,
+        );
     }
+    cfl::obs::emit_metrics_snapshot();
 
     println!("{}", sweep::summary_table(&outcomes).render());
     if let Some(matrix) = sweep::gain_matrix(&grid, &outcomes) {
@@ -437,6 +512,8 @@ fn cmd_serve(args: &cfl::cli::Args) -> Result<()> {
         anyhow::ensure!(got <= cap, "final NMSE {got:.3e} above the required {cap:.3e}");
         println!("check-nmse ok: {got:.3e} ≤ {cap:.3e}");
     }
+    // fleet-traffic totals and phase histograms for the whole session
+    cfl::obs::emit_metrics_snapshot();
     Ok(())
 }
 
@@ -446,9 +523,7 @@ fn cmd_device(args: &cfl::cli::Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("cfl device needs --connect HOST:PORT"))?;
     let id = args.get_or("id", 0usize)?;
     let quiet = args.has_flag("quiet");
-    if !quiet {
-        eprintln!("cfl device {id}: connecting to {addr}");
-    }
+    cfl::obs_event!(Info, "device_connecting", device = id, addr = addr);
     if args.has_flag("retry") {
         // survive a lost link: reconnect with backoff and re-claim the
         // slot until the coordinator sends an explicit Shutdown
@@ -456,9 +531,7 @@ fn cmd_device(args: &cfl::cli::Args) -> Result<()> {
     } else {
         run_device(addr, id, Duration::from_secs(10))?;
     }
-    if !quiet {
-        eprintln!("cfl device {id}: session over; exiting");
-    }
+    cfl::obs_event!(Info, "device_session_over", device = id);
     Ok(())
 }
 
@@ -466,10 +539,18 @@ fn cmd_bench_check(args: &cfl::cli::Args) -> Result<()> {
     let report = args.get("report").unwrap_or("BENCH_ci.json");
     let baseline = args.get("baseline").unwrap_or("bench/baseline.json");
     let tolerance = args.get_or("tolerance", 0.2)?;
+    // the wall-clock gate defaults on with a loose 50% floor (CI hosts
+    // are noisy; the gate is for halvings, not jitter); it only fires
+    // for baseline scenarios that record an epochs_per_sec
+    let wall_tolerance = match args.get("wall-tolerance") {
+        Some(s) if s.eq_ignore_ascii_case("off") => None,
+        Some(s) => Some(s.parse::<f64>().with_context(|| format!("--wall-tolerance '{s}'"))?),
+        None => Some(0.5),
+    };
     let current = std::fs::read_to_string(report).with_context(|| format!("reading {report}"))?;
     let base =
         std::fs::read_to_string(baseline).with_context(|| format!("reading {baseline}"))?;
-    let table = sweep::check_gain_regression(&base, &current, tolerance)?;
+    let table = sweep::check_regression(&base, &current, tolerance, wall_tolerance)?;
     println!("bench-check ok ({report} vs {baseline}, tolerance {tolerance}):");
     println!("{table}");
     Ok(())
@@ -485,7 +566,8 @@ fn main() -> Result<()> {
             return Ok(());
         }
     };
-    match args.subcommand() {
+    init_obs(&args)?;
+    let result = match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -497,5 +579,8 @@ fn main() -> Result<()> {
             println!("{}", parser().help("cfl"));
             Ok(())
         }
-    }
+    };
+    // flush buffered JSONL lines and tear the sinks down even on error
+    cfl::obs::shutdown();
+    result
 }

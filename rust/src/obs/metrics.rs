@@ -1,0 +1,160 @@
+//! Process-global metrics registry: named counters, gauges, histograms.
+//!
+//! Handles are get-or-created by name through [`registry`] — one mutexed
+//! `BTreeMap` lookup at creation, after which [`Counter`]/[`Gauge`] are
+//! a single relaxed atomic op per update and safe to bump from any
+//! thread (sweep workers, transport reader threads, the gemm hot path
+//! caches its handles in a `OnceLock`). Metrics are independent of the
+//! event-sink level: counters always count; they only become *visible*
+//! through [`Registry::snapshot`] / [`emit_metrics_snapshot`].
+//!
+//! [`emit_metrics_snapshot`]: super::emit_metrics_snapshot
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic event count. Cheap to clone (an `Arc` around one atomic).
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A shared fixed-range histogram (see [`crate::stats::Histogram`]).
+/// Updates take the histogram's own mutex — keep these off per-sample
+/// hot paths and record aggregates instead.
+#[derive(Clone)]
+pub struct Histo(Arc<Mutex<crate::stats::Histogram>>);
+
+impl Histo {
+    pub fn record(&self, x: f64) {
+        self.0.lock().unwrap_or_else(|p| p.into_inner()).push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.lock().unwrap_or_else(|p| p.into_inner()).count()
+    }
+
+    /// A point-in-time copy for rendering/inspection.
+    pub fn snapshot(&self) -> crate::stats::Histogram {
+        self.0.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+}
+
+enum Cell {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histo(Histo),
+}
+
+/// Name → metric map. `new` is `const`, so the process-global instance
+/// ([`registry`]) needs no lazy-init machinery; tests can also build
+/// private registries.
+pub struct Registry {
+    cells: Mutex<BTreeMap<String, Cell>>,
+}
+
+impl Registry {
+    pub const fn new() -> Self {
+        Self { cells: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get or create the counter `name`. If `name` already holds a
+    /// different metric kind, a detached (unregistered) counter is
+    /// returned — it counts, but never appears in snapshots; don't
+    /// reuse names across kinds.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut cells = self.cells.lock().unwrap_or_else(|p| p.into_inner());
+        let cell = cells
+            .entry(name.to_string())
+            .or_insert_with(|| Cell::Counter(Counter::default()));
+        match cell {
+            Cell::Counter(c) => c.clone(),
+            _ => Counter::default(),
+        }
+    }
+
+    /// Get or create the gauge `name` (same kind-mismatch rule as
+    /// [`Registry::counter`]).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut cells = self.cells.lock().unwrap_or_else(|p| p.into_inner());
+        let cell =
+            cells.entry(name.to_string()).or_insert_with(|| Cell::Gauge(Gauge::default()));
+        match cell {
+            Cell::Gauge(g) => g.clone(),
+            _ => Gauge::default(),
+        }
+    }
+
+    /// Get or create the histogram `name` over `[lo, hi)` with `nbins`
+    /// bins. The range/bin arguments only matter on first creation.
+    pub fn histogram(&self, name: &str, lo: f64, hi: f64, nbins: usize) -> Histo {
+        let mut cells = self.cells.lock().unwrap_or_else(|p| p.into_inner());
+        let cell = cells.entry(name.to_string()).or_insert_with(|| {
+            Cell::Histo(Histo(Arc::new(Mutex::new(crate::stats::Histogram::new(lo, hi, nbins)))))
+        });
+        match cell {
+            Cell::Histo(h) => h.clone(),
+            _ => Histo(Arc::new(Mutex::new(crate::stats::Histogram::new(lo, hi, nbins)))),
+        }
+    }
+
+    /// Every registered metric as `(name, value)` in name order:
+    /// counter value, gauge value, or sample count for histograms
+    /// (reported under `name.count`).
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let cells = self.cells.lock().unwrap_or_else(|p| p.into_inner());
+        cells
+            .iter()
+            .map(|(name, cell)| match cell {
+                Cell::Counter(c) => (name.clone(), c.get() as f64),
+                Cell::Gauge(g) => (name.clone(), g.get()),
+                Cell::Histo(h) => (format!("{name}.count"), h.count() as f64),
+            })
+            .collect()
+    }
+
+    /// Drop every metric (tests; existing handles keep working but are
+    /// detached from future snapshots).
+    pub fn reset(&self) {
+        self.cells.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-global registry every instrumented subsystem reports to.
+pub fn registry() -> &'static Registry {
+    static GLOBAL: Registry = Registry::new();
+    &GLOBAL
+}

@@ -1,0 +1,395 @@
+//! Structured observability: spans, events, counters, and phase timers.
+//!
+//! The paper's headline claim is a *wall-clock* one — CFL converges ~4×
+//! faster because the master preempts stragglers — so the repo needs to
+//! see where an epoch's time actually goes (parity encode vs. local
+//! gradient vs. gather wait vs. aggregation) and what the live fleet is
+//! doing (disconnects, rejoins, stale-incarnation discards). This module
+//! is that layer, hand-rolled because the build is offline (no `tracing`
+//! or `log` crates):
+//!
+//! * **Events and spans** — [`emit`] / [`span`], usually via the
+//!   [`obs_event!`] / [`obs_span!`] macros. A span is an RAII timer: it
+//!   records `Instant::now()` at creation and emits a single record with
+//!   `dur_us` on drop (including panic unwinding, so a span around a
+//!   crashing section still reports its duration). Every record carries
+//!   a monotonic per-process sequence number and a microsecond timestamp
+//!   relative to the first emission.
+//! * **Levels and sinks** — [`install`] takes `(sink, level)` pairs; a
+//!   record is dispatched to each sink whose level admits it. The global
+//!   max level lives in one relaxed atomic, so the disabled path — the
+//!   library default, no sinks installed — is a single atomic load with
+//!   no locks and no allocation. Field expressions inside the macros are
+//!   not evaluated when the level is off.
+//! * **Scopes** — [`scope`] tags the current thread's records with a
+//!   label (the sweep runner sets the scenario id), which the
+//!   [`JsonlDirSink`](sink::JsonlDirSink) uses to route events into
+//!   per-scenario files.
+//! * **Metrics** — a process-global [`Registry`] of named counters,
+//!   gauges, and histograms ([`registry`]); handles are lock-free after
+//!   creation. Independent of sinks/levels: counters always count, and
+//!   [`emit_metrics_snapshot`] publishes them as one `metrics` event.
+//! * **Phase timing** — [`PhaseBook`] accumulates per-phase wall-clock
+//!   samples inside a training run; its [`PhaseBook::summaries`]
+//!   (count/total/p50/p95 per phase) land in
+//!   [`RunResult::phases`](crate::coordinator::RunResult) and from there
+//!   in the bench JSON that `cfl bench-check` gates on.
+//!
+//! Event records serialize to self-describing JSONL via the shared
+//! [`sweep::json`](crate::sweep) escaper:
+//!
+//! ```json
+//! {"seq":12,"t_us":48210,"level":"debug","event":"epoch","kind":"span",
+//!  "dur_us":913,"scope":"s1__nu=0.2","fields":{"epoch":3,"nmse":0.41}}
+//! ```
+//!
+//! `seq`, `t_us`, `level`, `event`, and `kind` are always present;
+//! `dur_us` only on spans, `scope` only inside a [`scope`] guard,
+//! `fields` only when non-empty.
+
+mod metrics;
+mod phase;
+mod sink;
+
+pub use metrics::{registry, Counter, Gauge, Histo, Registry};
+pub use phase::{Phase, PhaseBook, PhaseSummary, PHASES};
+pub use sink::{EventRecord, JsonlDirSink, JsonlFileSink, MemorySink, Sink, StderrSink};
+
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+#[cfg(test)]
+mod tests;
+
+/// Severity/verbosity of an event. Higher numeric value = more verbose;
+/// a sink installed at `Debug` admits `Error..=Debug` but not `Trace`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    /// Parse a `--log-level` / `CFL_LOG` value.
+    pub fn parse(s: &str) -> Result<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            "trace" => Ok(Level::Trace),
+            _ => bail!("unknown log level '{s}' (expected error|warn|info|debug|trace)"),
+        }
+    }
+
+    /// Lowercase name as it appears in JSONL and stderr output.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// One structured field value. Conversions exist for the usual numeric
+/// types, `bool`, and strings, so macro call sites just write `k = v`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    /// JSON rendering (strings escaped, non-finite floats become null).
+    pub fn json(&self) -> String {
+        match self {
+            Value::U64(v) => v.to_string(),
+            Value::I64(v) => v.to_string(),
+            Value::F64(v) => crate::sweep::json::num(*v),
+            Value::Bool(v) => v.to_string(),
+            Value::Str(s) => format!("\"{}\"", crate::sweep::json::escape(s)),
+        }
+    }
+
+    /// Human rendering for the stderr sink (strings unquoted).
+    pub fn text(&self) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            Value::F64(v) => format!("{v:.6}"),
+            other => other.json(),
+        }
+    }
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::U64(v)
+    }
+}
+
+impl From<u32> for Value {
+    fn from(v: u32) -> Value {
+        Value::U64(u64::from(v))
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::U64(v as u64)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::I64(v)
+    }
+}
+
+impl From<i32> for Value {
+    fn from(v: i32) -> Value {
+        Value::I64(i64::from(v))
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::F64(v)
+    }
+}
+
+impl From<f32> for Value {
+    fn from(v: f32) -> Value {
+        Value::F64(f64::from(v))
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::Bool(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::Str(v.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(v: String) -> Value {
+        Value::Str(v)
+    }
+}
+
+/// Most-verbose level any installed sink admits; 0 = observability off
+/// (the library default). Read with a relaxed load on every potential
+/// emission — this atomic IS the "zero cost when disabled" guarantee.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// Monotonic per-process record sequence.
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Installed `(sink, level)` pairs. Only touched when [`enabled`] says
+/// some sink wants the record, so the hot path never takes this lock.
+static SINKS: RwLock<Vec<(Arc<dyn Sink>, Level)>> = RwLock::new(Vec::new());
+
+/// `t_us` origin: the first emission after process start (or after the
+/// clock is first read).
+fn clock() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static SCOPE: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Would a record at `level` reach any installed sink? This is the
+/// guard the macros evaluate before touching field expressions.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Install sinks (replacing any previous set) and raise the global
+/// level to the most verbose one requested.
+pub fn install(sinks: Vec<(Arc<dyn Sink>, Level)>) {
+    let max = sinks.iter().map(|(_, l)| *l as u8).max().unwrap_or(0);
+    let mut w = SINKS.write().unwrap_or_else(|p| p.into_inner());
+    *w = sinks;
+    MAX_LEVEL.store(max, Ordering::Relaxed);
+}
+
+/// Flush and remove every sink; observability returns to the disabled
+/// (zero-cost) state.
+pub fn shutdown() {
+    MAX_LEVEL.store(0, Ordering::Relaxed);
+    let mut w = SINKS.write().unwrap_or_else(|p| p.into_inner());
+    for (sink, _) in w.iter() {
+        sink.flush();
+    }
+    w.clear();
+}
+
+/// Emit one structured event (no duration). Prefer [`obs_event!`],
+/// which short-circuits field construction when the level is off.
+pub fn emit(level: Level, name: &str, fields: &[(&str, Value)]) {
+    if !enabled(level) {
+        return;
+    }
+    dispatch(level, name, None, fields);
+}
+
+fn dispatch(level: Level, name: &str, dur_us: Option<u64>, fields: &[(&str, Value)]) {
+    let sinks = SINKS.read().unwrap_or_else(|p| p.into_inner());
+    if sinks.is_empty() {
+        return;
+    }
+    let scope = SCOPE.with(|s| s.borrow().clone());
+    let rec = EventRecord {
+        seq: SEQ.fetch_add(1, Ordering::Relaxed),
+        t_us: clock().elapsed().as_micros() as u64,
+        level,
+        name,
+        kind: if dur_us.is_some() { "span" } else { "event" },
+        dur_us,
+        scope: scope.as_deref(),
+        fields,
+    };
+    for (sink, admit) in sinks.iter() {
+        if level as u8 <= *admit as u8 {
+            sink.event(&rec);
+        }
+    }
+}
+
+/// RAII span timer from [`span`]: emits one `kind:"span"` record with
+/// `dur_us` when dropped — including during panic unwinding, so the
+/// last span before a crash still lands in the event stream. Inert
+/// (no clock read, fields ignored) when the level was off at creation.
+pub struct SpanGuard {
+    armed: Option<(Level, &'static str, Instant)>,
+    fields: Vec<(&'static str, Value)>,
+}
+
+impl SpanGuard {
+    /// Attach a field, reported when the span closes. No-op when the
+    /// span is inert; guard expensive field computation with
+    /// [`SpanGuard::active`].
+    pub fn field(&mut self, key: &'static str, value: impl Into<Value>) {
+        if self.armed.is_some() {
+            self.fields.push((key, value.into()));
+        }
+    }
+
+    /// Whether this span will emit on drop.
+    pub fn active(&self) -> bool {
+        self.armed.is_some()
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((level, name, start)) = self.armed.take() {
+            let dur_us = start.elapsed().as_micros() as u64;
+            let fields = std::mem::take(&mut self.fields);
+            dispatch(level, name, Some(dur_us), &fields);
+        }
+    }
+}
+
+/// Open a span timer. Prefer [`obs_span!`].
+pub fn span(level: Level, name: &'static str) -> SpanGuard {
+    if enabled(level) {
+        SpanGuard { armed: Some((level, name, Instant::now())), fields: Vec::new() }
+    } else {
+        SpanGuard { armed: None, fields: Vec::new() }
+    }
+}
+
+/// Restores the thread's previous scope label on drop (see [`scope`]).
+pub struct ScopeGuard {
+    prev: Option<String>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        SCOPE.with(|s| *s.borrow_mut() = prev);
+    }
+}
+
+/// Tag every record emitted by this thread (until the guard drops)
+/// with `label` — e.g. the scenario id inside a sweep worker. Nests:
+/// an inner scope shadows the outer one and restores it on drop.
+pub fn scope(label: &str) -> ScopeGuard {
+    let prev = SCOPE.with(|s| s.replace(Some(label.to_string())));
+    ScopeGuard { prev }
+}
+
+/// Publish the current [`registry`] contents as one `metrics` event
+/// (info level) with a field per metric, in deterministic name order.
+pub fn emit_metrics_snapshot() {
+    if !enabled(Level::Info) {
+        return;
+    }
+    let snap = registry().snapshot();
+    if snap.is_empty() {
+        return;
+    }
+    let fields: Vec<(&str, Value)> =
+        snap.iter().map(|(name, v)| (name.as_str(), Value::F64(*v))).collect();
+    dispatch(Level::Info, "metrics", None, &fields);
+}
+
+/// Emit a structured event: `obs_event!(Info, "name", key = value, ...)`.
+///
+/// The level check happens *before* any field expression is evaluated,
+/// so call sites are free on the disabled path.
+#[macro_export]
+macro_rules! obs_event {
+    ($level:ident, $name:expr) => {
+        if $crate::obs::enabled($crate::obs::Level::$level) {
+            $crate::obs::emit($crate::obs::Level::$level, $name, &[]);
+        }
+    };
+    ($level:ident, $name:expr, $($key:ident = $val:expr),+ $(,)?) => {
+        if $crate::obs::enabled($crate::obs::Level::$level) {
+            $crate::obs::emit(
+                $crate::obs::Level::$level,
+                $name,
+                &[$((stringify!($key), $crate::obs::Value::from($val))),+],
+            );
+        }
+    };
+}
+
+/// Open an RAII span timer: `let _s = obs_span!(Debug, "epoch");`
+/// optionally with initial fields (`obs_span!(Debug, "epoch", n = 3)`).
+/// Field expressions are only evaluated when the span is active.
+#[macro_export]
+macro_rules! obs_span {
+    ($level:ident, $name:expr) => {
+        $crate::obs::span($crate::obs::Level::$level, $name)
+    };
+    ($level:ident, $name:expr, $($key:ident = $val:expr),+ $(,)?) => {{
+        let mut guard = $crate::obs::span($crate::obs::Level::$level, $name);
+        if guard.active() {
+            $(guard.field(stringify!($key), $val);)+
+        }
+        guard
+    }};
+}

@@ -1,0 +1,123 @@
+//! Per-phase wall-clock accounting inside a training run.
+//!
+//! Both coordinators carry a [`PhaseBook`] through training and record
+//! how long each epoch spends in each [`Phase`]; the resulting
+//! [`PhaseSummary`] list (count / total / p50 / p95 per phase) rides in
+//! [`RunResult::phases`](crate::coordinator::RunResult) and surfaces in
+//! the bench JSON, where `cfl bench-check` gates wall-clock throughput.
+//!
+//! The book is deliberately always-on (the bench gate needs the numbers
+//! even with event sinks off) and hot-path-safe: recording a sample is
+//! one `Vec::push` into storage preallocated for the run's epoch count —
+//! no locks, no allocation, ~4 `Instant::now()` calls per epoch.
+
+use crate::stats::quantile;
+
+/// The phases of one training epoch (plus one-off setup phases). These
+/// names are the keys of the bench JSON `phases` object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// §III-A parity encoding during setup (one sample per run).
+    ParityEncode,
+    /// Gradient computation: the master's composite-parity GEMM and, in
+    /// the simulator, the per-device systematic gradients.
+    LocalGrad,
+    /// Waiting on / collecting device gradients up to the deadline.
+    Gather,
+    /// Assembling the aggregate, applying the model update, NMSE.
+    Aggregate,
+    /// Live-fleet RTT calibration before epoch 1 (one sample per run).
+    Calibrate,
+}
+
+/// All phases, in reporting order.
+pub const PHASES: [Phase; 5] =
+    [Phase::ParityEncode, Phase::LocalGrad, Phase::Gather, Phase::Aggregate, Phase::Calibrate];
+
+impl Phase {
+    pub const fn name(self) -> &'static str {
+        match self {
+            Phase::ParityEncode => "parity_encode",
+            Phase::LocalGrad => "local_grad",
+            Phase::Gather => "gather",
+            Phase::Aggregate => "aggregate",
+            Phase::Calibrate => "calibrate",
+        }
+    }
+
+    const fn index(self) -> usize {
+        match self {
+            Phase::ParityEncode => 0,
+            Phase::LocalGrad => 1,
+            Phase::Gather => 2,
+            Phase::Aggregate => 3,
+            Phase::Calibrate => 4,
+        }
+    }
+}
+
+/// Accumulates wall-clock samples per phase for one training run.
+#[derive(Debug, Default)]
+pub struct PhaseBook {
+    samples: [Vec<f64>; 5],
+}
+
+impl PhaseBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Preallocate for `n` samples per phase (pass the run's epoch
+    /// budget so per-epoch recording never allocates).
+    pub fn with_capacity(n: usize) -> Self {
+        Self { samples: std::array::from_fn(|_| Vec::with_capacity(n)) }
+    }
+
+    pub fn record(&mut self, phase: Phase, secs: f64) {
+        self.samples[phase.index()].push(secs);
+    }
+
+    pub fn count(&self, phase: Phase) -> usize {
+        self.samples[phase.index()].len()
+    }
+
+    pub fn total(&self, phase: Phase) -> f64 {
+        self.samples[phase.index()].iter().sum()
+    }
+
+    /// The most recent sample for `phase`, if any.
+    pub fn last(&self, phase: Phase) -> Option<f64> {
+        self.samples[phase.index()].last().copied()
+    }
+
+    /// Count/total/p50/p95 for every phase that saw at least one
+    /// sample, in [`PHASES`] order.
+    pub fn summaries(&self) -> Vec<PhaseSummary> {
+        PHASES
+            .iter()
+            .filter(|p| !self.samples[p.index()].is_empty())
+            .map(|p| {
+                let xs = &self.samples[p.index()];
+                PhaseSummary {
+                    phase: p.name(),
+                    count: xs.len() as u64,
+                    total_s: xs.iter().sum(),
+                    p50_s: quantile(xs, 0.5),
+                    p95_s: quantile(xs, 0.95),
+                }
+            })
+            .collect()
+    }
+}
+
+/// One phase's digest over a run — the shape that rides in
+/// [`RunResult`](crate::coordinator::RunResult) and the bench JSON.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseSummary {
+    /// [`Phase::name`] of the phase.
+    pub phase: &'static str,
+    pub count: u64,
+    pub total_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}

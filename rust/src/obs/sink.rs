@@ -1,0 +1,214 @@
+//! Event sinks: where dispatched records go.
+//!
+//! A [`Sink`] receives fully-assembled [`EventRecord`]s from the global
+//! dispatcher; the built-ins cover the CLI's needs (human stderr lines,
+//! JSONL files) plus an in-memory sink for tests. Sinks must be
+//! `Send + Sync` — sweep workers and transport reader threads all emit
+//! through the same installed set — and each built-in serializes its own
+//! output behind a `Mutex`, so interleaved records never shear a line.
+//!
+//! JSONL sinks flush after every line: an event stream truncated by a
+//! kill still parses up to the last complete record.
+
+use super::{Level, Value};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A destination for event records. Implementations must tolerate
+/// concurrent calls and should never panic — a sink failure (e.g. a
+/// full disk) silently drops the record rather than killing training.
+pub trait Sink: Send + Sync {
+    fn event(&self, rec: &EventRecord<'_>);
+    fn flush(&self) {}
+}
+
+/// One fully-assembled record, borrowed for the duration of dispatch.
+pub struct EventRecord<'a> {
+    /// Monotonic per-process sequence number.
+    pub seq: u64,
+    /// Microseconds since the first emission of the process.
+    pub t_us: u64,
+    pub level: Level,
+    /// Event name (`epoch`, `endpoint_gone`, ...).
+    pub name: &'a str,
+    /// `"event"` or `"span"`.
+    pub kind: &'static str,
+    /// Span duration; `None` for plain events.
+    pub dur_us: Option<u64>,
+    /// Thread scope label (scenario id inside a sweep worker).
+    pub scope: Option<&'a str>,
+    pub fields: &'a [(&'a str, Value)],
+}
+
+impl EventRecord<'_> {
+    /// One self-describing JSON object (no trailing newline). Keys
+    /// `seq`/`t_us`/`level`/`event`/`kind` are always present.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = format!(
+            "{{\"seq\":{},\"t_us\":{},\"level\":\"{}\",\"event\":\"{}\",\"kind\":\"{}\"",
+            self.seq,
+            self.t_us,
+            self.level.tag(),
+            crate::sweep::json::escape(self.name),
+            self.kind,
+        );
+        if let Some(d) = self.dur_us {
+            let _ = write!(s, ",\"dur_us\":{d}");
+        }
+        if let Some(scope) = self.scope {
+            let _ = write!(s, ",\"scope\":\"{}\"", crate::sweep::json::escape(scope));
+        }
+        if !self.fields.is_empty() {
+            s.push_str(",\"fields\":{");
+            for (i, (k, v)) in self.fields.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                let _ = write!(s, "\"{}\":{}", crate::sweep::json::escape(k), v.json());
+            }
+            s.push('}');
+        }
+        s.push('}');
+        s
+    }
+
+    /// One human line for the stderr sink.
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = format!("cfl[{}] {}", self.level.tag(), self.name);
+        if let Some(scope) = self.scope {
+            let _ = write!(s, " [{scope}]");
+        }
+        if let Some(d) = self.dur_us {
+            let _ = write!(s, " dur={:.1}ms", d as f64 / 1000.0);
+        }
+        for (k, v) in self.fields.iter() {
+            let _ = write!(s, " {k}={}", v.text());
+        }
+        s
+    }
+}
+
+/// Human-readable lines on stderr — the CLI's default sink, replacing
+/// the old scattered `eprintln!` diagnostics.
+pub struct StderrSink;
+
+impl Sink for StderrSink {
+    fn event(&self, rec: &EventRecord<'_>) {
+        eprintln!("{}", rec.to_text());
+    }
+}
+
+/// All records appended to a single JSONL file (`cfl serve
+/// --events-out FILE`).
+pub struct JsonlFileSink {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl JsonlFileSink {
+    /// Create (truncate) `path`, making parent directories as needed.
+    pub fn create(path: &str) -> Result<Self> {
+        let p = Path::new(path);
+        if let Some(dir) = p.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).with_context(|| format!("mkdir -p {dir:?}"))?;
+            }
+        }
+        let file = File::create(p).with_context(|| format!("creating event log {path}"))?;
+        Ok(Self { w: Mutex::new(BufWriter::new(file)) })
+    }
+}
+
+impl Sink for JsonlFileSink {
+    fn event(&self, rec: &EventRecord<'_>) {
+        let mut w = self.w.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = writeln!(w, "{}", rec.to_json());
+        let _ = w.flush();
+    }
+
+    fn flush(&self) {
+        let mut w = self.w.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = w.flush();
+    }
+}
+
+/// Records routed into per-scope JSONL files under one directory
+/// (`cfl sweep --events-out DIR`): a record scoped to scenario `id`
+/// lands in `DIR/<stem(id)>.events.jsonl` (same filename sanitizer as
+/// the trace CSVs), unscoped records in `DIR/run.events.jsonl`.
+pub struct JsonlDirSink {
+    dir: PathBuf,
+    files: Mutex<HashMap<String, BufWriter<File>>>,
+}
+
+impl JsonlDirSink {
+    pub fn create(dir: &str) -> Result<Self> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir -p {dir}"))?;
+        Ok(Self { dir: PathBuf::from(dir), files: Mutex::new(HashMap::new()) })
+    }
+}
+
+impl Sink for JsonlDirSink {
+    fn event(&self, rec: &EventRecord<'_>) {
+        let stem = match rec.scope {
+            Some(scope) => crate::sweep::trace_file_stem(scope),
+            None => "run".to_string(),
+        };
+        let mut files = self.files.lock().unwrap_or_else(|p| p.into_inner());
+        if !files.contains_key(&stem) {
+            let path = self.dir.join(format!("{stem}.events.jsonl"));
+            match File::create(&path) {
+                Ok(f) => {
+                    files.insert(stem.clone(), BufWriter::new(f));
+                }
+                Err(_) => return, // unwritable dir: drop, don't kill training
+            }
+        }
+        if let Some(w) = files.get_mut(&stem) {
+            let _ = writeln!(w, "{}", rec.to_json());
+            let _ = w.flush();
+        }
+    }
+
+    fn flush(&self) {
+        let mut files = self.files.lock().unwrap_or_else(|p| p.into_inner());
+        for w in files.values_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Captures rendered JSONL lines in memory — the test sink.
+#[derive(Default)]
+pub struct MemorySink {
+    lines: Mutex<Vec<String>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Every captured line, in dispatch order.
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Captured lines whose `event` key equals `name` (tests filter by
+    /// unique names so concurrent emitters don't interfere).
+    pub fn lines_for(&self, name: &str) -> Vec<String> {
+        let tag = format!("\"event\":\"{name}\"");
+        self.lines().into_iter().filter(|l| l.contains(&tag)).collect()
+    }
+}
+
+impl Sink for MemorySink {
+    fn event(&self, rec: &EventRecord<'_>) {
+        self.lines.lock().unwrap_or_else(|p| p.into_inner()).push(rec.to_json());
+    }
+}

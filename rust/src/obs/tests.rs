@@ -1,0 +1,263 @@
+use super::*;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Sink installation is process-global, so tests that install sinks
+/// serialize on this lock (and always `shutdown()` before releasing
+/// it). Registry tests use unique metric names instead — the registry
+/// is shared with every other concurrently-running test.
+static SINK_LOCK: Mutex<()> = Mutex::new(());
+
+fn with_memory_sink(level: Level, f: impl FnOnce(&MemorySink)) {
+    let _guard = SINK_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let sink = Arc::new(MemorySink::new());
+    let as_dyn: Arc<dyn Sink> = sink.clone();
+    install(vec![(as_dyn, level)]);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&sink)));
+    shutdown();
+    if let Err(payload) = result {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+#[test]
+fn levels_parse_and_order() {
+    assert_eq!(Level::parse("info").unwrap(), Level::Info);
+    assert_eq!(Level::parse("WARN").unwrap(), Level::Warn);
+    assert_eq!(Level::parse("Trace").unwrap(), Level::Trace);
+    assert!(Level::parse("verbose").is_err());
+    assert!(Level::Error < Level::Trace);
+    assert_eq!(Level::Debug.tag(), "debug");
+}
+
+#[test]
+fn disabled_by_default_and_filtered_by_level() {
+    let _guard = SINK_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    shutdown();
+    assert!(!enabled(Level::Error), "library default must be fully off");
+
+    let sink = Arc::new(MemorySink::new());
+    let as_dyn: Arc<dyn Sink> = sink.clone();
+    install(vec![(as_dyn, Level::Info)]);
+    assert!(enabled(Level::Info));
+    assert!(!enabled(Level::Debug));
+    crate::obs_event!(Info, "obs_test_lvl_kept");
+    crate::obs_event!(Debug, "obs_test_lvl_dropped");
+    assert_eq!(sink.lines_for("obs_test_lvl_kept").len(), 1);
+    assert!(sink.lines_for("obs_test_lvl_dropped").is_empty());
+    shutdown();
+    assert!(!enabled(Level::Error));
+}
+
+#[test]
+fn events_round_trip_schema_and_escaping() {
+    with_memory_sink(Level::Debug, |sink| {
+        crate::obs_event!(
+            Info,
+            "obs_test_roundtrip",
+            n = 3usize,
+            ratio = 0.5f64,
+            bad = f64::NAN,
+            ok = true,
+            tag = "a \"quoted\"\nlabel",
+        );
+        let lines = sink.lines_for("obs_test_roundtrip");
+        assert_eq!(lines.len(), 1);
+        let line = &lines[0];
+        for key in ["\"seq\":", "\"t_us\":", "\"level\":\"info\"", "\"kind\":\"event\""] {
+            assert!(line.contains(key), "missing {key} in {line}");
+        }
+        assert!(line.contains("\"fields\":{"));
+        assert!(line.contains("\"n\":3"));
+        assert!(line.contains("\"ratio\":0.5"));
+        assert!(line.contains("\"bad\":null"), "NaN must serialize as null: {line}");
+        assert!(line.contains("\"ok\":true"));
+        assert!(line.contains("\"tag\":\"a \\\"quoted\\\"\\nlabel\""), "bad escaping: {line}");
+        assert!(!line.contains("dur_us"), "plain events carry no duration");
+    });
+}
+
+#[test]
+fn sequence_numbers_are_strictly_increasing() {
+    with_memory_sink(Level::Debug, |sink| {
+        for _ in 0..5 {
+            crate::obs_event!(Info, "obs_test_seq");
+        }
+        let seqs: Vec<u64> = sink
+            .lines_for("obs_test_seq")
+            .iter()
+            .map(|l| {
+                let at = l.find("\"seq\":").unwrap() + 6;
+                l[at..].chars().take_while(|c| c.is_ascii_digit()).collect::<String>().parse().unwrap()
+            })
+            .collect();
+        assert_eq!(seqs.len(), 5);
+        for w in seqs.windows(2) {
+            assert!(w[1] > w[0], "seq must be monotonic: {seqs:?}");
+        }
+    });
+}
+
+#[test]
+fn spans_nest_and_time_correctly() {
+    with_memory_sink(Level::Debug, |sink| {
+        {
+            let mut outer = crate::obs_span!(Debug, "obs_test_outer");
+            outer.field("k", 1u64);
+            {
+                let _inner = crate::obs_span!(Debug, "obs_test_inner");
+                thread::sleep(std::time::Duration::from_millis(5));
+            } // inner closes first
+        }
+        let inner = sink.lines_for("obs_test_inner");
+        let outer = sink.lines_for("obs_test_outer");
+        assert_eq!((inner.len(), outer.len()), (1, 1));
+        assert!(inner[0].contains("\"kind\":\"span\""));
+        let dur = |l: &str| -> u64 {
+            let at = l.find("\"dur_us\":").unwrap() + 9;
+            l[at..].chars().take_while(|c| c.is_ascii_digit()).collect::<String>().parse().unwrap()
+        };
+        assert!(dur(&inner[0]) >= 4_000, "inner span slept 5ms: {}", inner[0]);
+        assert!(dur(&outer[0]) >= dur(&inner[0]), "outer span encloses inner");
+        assert!(outer[0].contains("\"k\":1"));
+        // inner emitted before outer (drop order), so its seq is lower
+        let seq = |l: &str| -> u64 {
+            let at = l.find("\"seq\":").unwrap() + 6;
+            l[at..].chars().take_while(|c| c.is_ascii_digit()).collect::<String>().parse().unwrap()
+        };
+        assert!(seq(&inner[0]) < seq(&outer[0]));
+    });
+}
+
+#[test]
+fn span_emits_during_panic_unwinding() {
+    with_memory_sink(Level::Debug, |sink| {
+        let unwound = std::panic::catch_unwind(|| {
+            let _span = crate::obs_span!(Debug, "obs_test_unwind");
+            panic!("boom");
+        });
+        assert!(unwound.is_err());
+        let lines = sink.lines_for("obs_test_unwind");
+        assert_eq!(lines.len(), 1, "span must emit while unwinding");
+        assert!(lines[0].contains("\"kind\":\"span\""));
+    });
+}
+
+#[test]
+fn disabled_spans_are_inert_and_skip_fields() {
+    let _guard = SINK_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    shutdown();
+    let mut evaluated = false;
+    {
+        let _span = crate::obs_span!(Debug, "obs_test_inert", x = {
+            evaluated = true;
+            1u64
+        });
+        assert!(!_span.active());
+    }
+    assert!(!evaluated, "field expressions must not run when disabled");
+    crate::obs_event!(Info, "obs_test_inert_event", x = {
+        evaluated = true;
+        1u64
+    });
+    assert!(!evaluated, "event fields must not run when disabled");
+}
+
+#[test]
+fn scope_tags_records_and_restores_on_drop() {
+    with_memory_sink(Level::Debug, |sink| {
+        crate::obs_event!(Info, "obs_test_scope_none");
+        {
+            let _outer = scope("outer-scn");
+            crate::obs_event!(Info, "obs_test_scope_outer");
+            {
+                let _inner = scope("inner-scn");
+                crate::obs_event!(Info, "obs_test_scope_inner");
+            }
+            crate::obs_event!(Info, "obs_test_scope_restored");
+        }
+        crate::obs_event!(Info, "obs_test_scope_cleared");
+        assert!(!sink.lines_for("obs_test_scope_none")[0].contains("\"scope\""));
+        assert!(sink.lines_for("obs_test_scope_outer")[0].contains("\"scope\":\"outer-scn\""));
+        assert!(sink.lines_for("obs_test_scope_inner")[0].contains("\"scope\":\"inner-scn\""));
+        assert!(sink.lines_for("obs_test_scope_restored")[0].contains("\"scope\":\"outer-scn\""));
+        assert!(!sink.lines_for("obs_test_scope_cleared")[0].contains("\"scope\""));
+    });
+}
+
+#[test]
+fn registry_counters_survive_concurrent_hammering() {
+    // parallel sweep workers bump shared counters through the global
+    // registry; 8 threads × 10k increments must lose nothing
+    let name = "obs_test.concurrency.hits";
+    let before = registry().counter(name).get();
+    thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                let c = registry().counter(name);
+                for _ in 0..10_000 {
+                    c.incr();
+                }
+            });
+        }
+    });
+    assert_eq!(registry().counter(name).get() - before, 80_000);
+}
+
+#[test]
+fn registry_gauges_histograms_and_snapshot() {
+    let reg = Registry::new();
+    reg.counter("b.count").add(7);
+    reg.gauge("a.level").set(0.25);
+    let h = reg.histogram("c.delay", 0.0, 1.0, 4);
+    h.record(0.1);
+    h.record(0.9);
+    assert_eq!(h.count(), 2);
+    let snap = reg.snapshot();
+    assert_eq!(
+        snap,
+        vec![
+            ("a.level".to_string(), 0.25),
+            ("b.count".to_string(), 7.0),
+            ("c.delay.count".to_string(), 2.0),
+        ]
+    );
+    // kind mismatch: detached handle, registry keeps the original
+    let detached = reg.counter("a.level");
+    detached.incr();
+    assert_eq!(reg.gauge("a.level").get(), 0.25);
+    reg.reset();
+    assert!(reg.snapshot().is_empty());
+}
+
+#[test]
+fn phase_book_summarizes_p50_p95() {
+    let mut book = PhaseBook::with_capacity(100);
+    for i in 1..=100 {
+        book.record(Phase::LocalGrad, f64::from(i) / 1000.0);
+    }
+    book.record(Phase::ParityEncode, 0.5);
+    assert_eq!(book.count(Phase::LocalGrad), 100);
+    assert_eq!(book.last(Phase::ParityEncode), Some(0.5));
+    assert_eq!(book.count(Phase::Calibrate), 0);
+
+    let summaries = book.summaries();
+    // only phases with samples appear, in PHASES order
+    let names: Vec<&str> = summaries.iter().map(|s| s.phase).collect();
+    assert_eq!(names, vec!["parity_encode", "local_grad"]);
+    let grad = &summaries[1];
+    assert_eq!(grad.count, 100);
+    assert!((grad.total_s - 5.05).abs() < 1e-9);
+    assert!((grad.p50_s - 0.0505).abs() < 1e-6, "p50 was {}", grad.p50_s);
+    assert!((grad.p95_s - 0.09505).abs() < 1e-6, "p95 was {}", grad.p95_s);
+}
+
+#[test]
+fn value_rendering() {
+    assert_eq!(Value::from(3u32).json(), "3");
+    assert_eq!(Value::from(-2i64).json(), "-2");
+    assert_eq!(Value::from(true).json(), "true");
+    assert_eq!(Value::from(f64::INFINITY).json(), "null");
+    assert_eq!(Value::from("x\"y").json(), "\"x\\\"y\"");
+    assert_eq!(Value::from("plain").text(), "plain");
+}

@@ -1,29 +1,37 @@
 //! Bench-smoke baselines: a tiny gain report and its regression check.
 //!
 //! CI's `bench-smoke` job runs a small fixed sweep, writes the compact
-//! per-scenario report below (`BENCH_ci.json` — coding gain + wall time),
-//! and compares its gains against the committed `bench/baseline.json`
-//! with `cfl bench-check`, failing the build when a scenario's gain drops
-//! more than the tolerance (default 20%).
+//! per-scenario report below (`BENCH_ci.json` — coding gain, wall time,
+//! wall-clock throughput, and the per-phase timing digests), and compares
+//! it against the committed `bench/baseline.json` with `cfl bench-check`,
+//! failing the build when a scenario's gain drops more than the tolerance
+//! (default 20%).
 //!
 //! There is deliberately no JSON parser dependency (the build is
-//! offline): [`parse_gains`] is a scanner for the two reports *this repo
-//! writes* — it keys on the `"id"`/`"gain"` fields that both the bench
-//! report and [`super::report::write_json`]'s scenario records emit, so a
-//! full sweep report works as a baseline too. It is not a general JSON
-//! reader and does not try to be.
+//! offline): [`parse_bench_records`] is a scanner for the two reports
+//! *this repo writes* — it keys on the `"id"`/`"gain"`/`"epochs_per_sec"`
+//! fields that both the bench report and [`super::report::write_json`]'s
+//! scenario records emit, so a full sweep report works as a baseline too.
+//! It is not a general JSON reader and does not try to be.
 //!
-//! Wall times are recorded for eyeballing host drift but never gated on:
-//! CI runners are too noisy for a hard wall-clock threshold, while the
-//! coding gain is a simulated-time ratio — stable per seed.
+//! The coding gain is a simulated-time ratio — stable per seed — and is
+//! always gated. Wall-clock throughput (`epochs_per_sec`) is host-noisy,
+//! so its gate is opt-in with its own, looser tolerance
+//! ([`check_regression`] with `wall_tolerance = Some(..)`; `cfl
+//! bench-check --wall-tolerance`), and only fires for baseline scenarios
+//! that record a throughput — a `null` baseline keeps the scenario
+//! gain-gated only.
 
-use super::json::escape as json_escape;
+use super::json::{escape as json_escape, num as json_num, opt as json_opt};
 use super::runner::ScenarioOutcome;
+use crate::metrics::Table;
 use anyhow::{bail, ensure, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Write the compact bench report: one record per scenario with the
-/// coding gain (`null` when a run missed its target) and the host wall
-/// time the scenario took (coded + uncoded runs).
+/// coding gain (`null` when a run missed its target), the host wall time
+/// the scenario took (coded + uncoded runs), the coded run's wall-clock
+/// throughput, and its per-phase timing digests.
 pub fn write_bench_json(path: &str, outcomes: &[ScenarioOutcome]) -> Result<()> {
     let mut s = String::from("{\n  \"scenarios\": [");
     for (i, o) in outcomes.iter().enumerate() {
@@ -39,13 +47,33 @@ pub fn write_bench_json(path: &str, outcomes: &[ScenarioOutcome]) -> Result<()> 
         if let Some(u) = &o.uncoded {
             wall += u.wall_secs;
         }
+        let epochs = o.coded.epoch_times.len();
+        let eps = (o.coded.wall_secs > 0.0)
+            .then(|| epochs as f64 / o.coded.wall_secs)
+            .filter(|p| p.is_finite());
         s.push_str(&format!(
             "\n    {{\"id\": \"{}\", \"backend\": \"{}\", \"gain\": {gain}, \
-             \"wall_s\": {:.3}}}",
+             \"wall_s\": {:.3}, \"epochs\": {epochs}, \"epochs_per_sec\": {}",
             json_escape(&o.scenario.id),
             json_escape(o.backend),
-            wall
+            wall,
+            json_opt(eps),
         ));
+        s.push_str(", \"phases\": {");
+        for (j, p) in o.coded.phases.iter().enumerate() {
+            if j > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "\"{}\": {{\"count\": {}, \"total_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}}}",
+                p.phase,
+                p.count,
+                json_num(p.total_s * 1e3),
+                json_num(p.p50_s * 1e3),
+                json_num(p.p95_s * 1e3),
+            ));
+        }
+        s.push_str("}}");
     }
     s.push_str("\n  ]\n}\n");
     let path_ref = std::path::Path::new(path);
@@ -77,7 +105,8 @@ fn str_end(s: &str) -> Option<usize> {
 /// just inside the record's `{`): bytes up to — excluding — the record's
 /// own closing `}`. String-aware, so braces inside escaped ids or axis
 /// values don't fool the scan; nested objects (the sweep report's
-/// `"assignment": {…}`) are skipped whole.
+/// `"assignment": {…}`, the bench report's `"phases": {…}`) are skipped
+/// whole.
 fn record_end(tail: &str) -> usize {
     let mut depth = 1usize;
     let mut in_str = false;
@@ -108,14 +137,49 @@ fn record_end(tail: &str) -> usize {
     tail.len()
 }
 
-/// Scan a bench (or full sweep) report for `(scenario id, gain)` pairs.
-/// `gain: null` (target never reached) is preserved as `None`; ids are
-/// returned in their JSON-escaped form (all this repo's reports pass
-/// through [`write_bench_json`]'s escaper, so baseline and current
-/// reports compare consistently). The gain lookup is bounded to each
-/// record — a record with no gain field is an error, never a silent
-/// borrow of the *next* record's gain.
-pub fn parse_gains(json: &str) -> Result<Vec<(String, Option<f64>)>> {
+/// Raw (untrimmed-of-JSON, trimmed-of-whitespace) text of a scalar field
+/// inside one record's interior, or `None` when the record has no such
+/// field. Top-level scan only — `key` must not name a key that also
+/// appears inside a record's nested objects.
+fn field_raw<'a>(record: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\": ");
+    let at = record.find(&needle)?;
+    let tail = &record[at + needle.len()..];
+    let end = tail.find(&[',', '\n', '}'][..]).unwrap_or(tail.len());
+    Some(tail[..end].trim())
+}
+
+/// Parse a scalar field's raw text: `null` → `None`, a number → `Some`.
+fn parse_opt_f64(id: &str, key: &str, raw: &str) -> Result<Option<f64>> {
+    if raw == "null" {
+        return Ok(None);
+    }
+    raw.parse::<f64>()
+        .map(Some)
+        .map_err(|e| anyhow::anyhow!("scenario {id}: bad {key} '{raw}': {e}"))
+}
+
+/// One scenario's gated metrics, scanned out of a bench (or full sweep)
+/// report. `None` means the metric was `null` — or, for
+/// `epochs_per_sec`, absent entirely (reports predating the field).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Scenario id in its JSON-escaped form (all this repo's reports
+    /// pass through [`write_bench_json`]'s escaper, so baseline and
+    /// current reports compare consistently).
+    pub id: String,
+    /// Coding gain; `None` when the run never reached its target.
+    pub gain: Option<f64>,
+    /// Coded-run wall-clock throughput; `None` when unrecorded.
+    pub epochs_per_sec: Option<f64>,
+}
+
+/// Scan a bench (or full sweep) report for per-scenario records. The
+/// field lookups are bounded to each record — a record with no gain
+/// field is an error, never a silent borrow of the *next* record's gain;
+/// a record with no `epochs_per_sec` field (older reports, the full
+/// sweep report) parses with `epochs_per_sec: None`.
+pub fn parse_bench_records(json: &str) -> Result<Vec<BenchRecord>> {
     let mut out = Vec::new();
     let mut rest = json;
     while let Some(at) = rest.find("\"id\": \"") {
@@ -124,67 +188,151 @@ pub fn parse_gains(json: &str) -> Result<Vec<(String, Option<f64>)>> {
         let id = &after[..id_end];
         let tail = &after[id_end + 1..];
         let record = &tail[..record_end(tail)];
-        let g = record
-            .find("\"gain\": ")
+        let graw = field_raw(record, "gain")
             .with_context(|| format!("scenario {id}: record has no gain field"))?;
-        let gtail = &record[g + 8..];
-        let g_end = gtail.find(&[',', '\n'][..]).unwrap_or(gtail.len());
-        let raw = gtail[..g_end].trim();
-        let gain = if raw == "null" {
-            None
-        } else {
-            Some(
-                raw.parse::<f64>()
-                    .map_err(|e| anyhow::anyhow!("scenario {id}: bad gain '{raw}': {e}"))?,
-            )
+        let gain = parse_opt_f64(id, "gain", graw)?;
+        let epochs_per_sec = match field_raw(record, "epochs_per_sec") {
+            Some(raw) => parse_opt_f64(id, "epochs_per_sec", raw)?,
+            None => None,
         };
-        out.push((id.to_string(), gain));
+        out.push(BenchRecord { id: id.to_string(), gain, epochs_per_sec });
         rest = &tail[record.len()..];
     }
     Ok(out)
 }
 
-/// Compare a current report against a baseline: every baseline scenario
-/// with a recorded gain must appear in the current report with a gain of
-/// at least `baseline × (1 − tolerance)`. Returns the per-scenario
-/// comparison table on success; fails listing every regression.
-pub fn check_gain_regression(baseline: &str, current: &str, tolerance: f64) -> Result<String> {
+/// Scan a report for `(scenario id, gain)` pairs — the gain-only view of
+/// [`parse_bench_records`].
+pub fn parse_gains(json: &str) -> Result<Vec<(String, Option<f64>)>> {
+    Ok(parse_bench_records(json)?.into_iter().map(|r| (r.id, r.gain)).collect())
+}
+
+fn fmt_gain(v: Option<f64>) -> String {
+    v.map(|g| format!("{g:.2}")).unwrap_or_else(|| "—".into())
+}
+
+fn fmt_delta(base: Option<f64>, now: Option<f64>) -> String {
+    match (base, now) {
+        (Some(b), Some(n)) if b != 0.0 => format!("{:+.1}%", (n / b - 1.0) * 100.0),
+        _ => "—".into(),
+    }
+}
+
+/// Compare a current report against a baseline. Gate one: every baseline
+/// scenario with a recorded gain must appear in the current report with
+/// a gain of at least `baseline × (1 − tolerance)`. Gate two (only when
+/// `wall_tolerance` is `Some`): every baseline scenario with a recorded
+/// `epochs_per_sec` must report a throughput of at least `baseline ×
+/// (1 − wall_tolerance)`. A current scenario the baseline has never seen
+/// is an error in both modes — a silently un-gated scenario is how
+/// regressions hide — fixed by re-running with `--update-baseline`.
+/// Returns the per-scenario comparison (legacy gain lines plus a delta
+/// table) on success; fails listing every regression.
+pub fn check_regression(
+    baseline: &str,
+    current: &str,
+    tolerance: f64,
+    wall_tolerance: Option<f64>,
+) -> Result<String> {
     ensure!(
         (0.0..1.0).contains(&tolerance),
         "tolerance must be a fraction in [0, 1), got {tolerance}"
     );
-    let base = parse_gains(baseline)?;
-    ensure!(!base.is_empty(), "the baseline report contains no scenarios");
-    let current: std::collections::BTreeMap<String, Option<f64>> =
-        parse_gains(current)?.into_iter().collect();
-
-    let mut ok_lines = Vec::new();
-    let mut regressions = Vec::new();
-    for (id, bg) in &base {
-        let Some(bg) = bg else {
-            ok_lines.push(format!("{id}: no baseline gain recorded — skipped"));
-            continue;
-        };
-        let floor = bg * (1.0 - tolerance);
-        match current.get(id) {
-            None => regressions.push(format!("{id}: missing from the current report")),
-            Some(None) => regressions.push(format!(
-                "{id}: target never reached (baseline gain {bg:.2}×)"
-            )),
-            Some(Some(g)) if *g < floor => regressions.push(format!(
-                "{id}: gain {g:.2}× below the {floor:.2}× floor (baseline {bg:.2}×)"
-            )),
-            Some(Some(g)) => ok_lines
-                .push(format!("{id}: gain {g:.2}× (baseline {bg:.2}×, floor {floor:.2}×)")),
-        }
-    }
-    if regressions.is_empty() {
-        Ok(ok_lines.join("\n"))
-    } else {
-        bail!(
-            "coding-gain regression (tolerance {:.0}%):\n{}",
-            tolerance * 100.0,
-            regressions.join("\n")
+    if let Some(wt) = wall_tolerance {
+        ensure!(
+            (0.0..1.0).contains(&wt),
+            "wall tolerance must be a fraction in [0, 1), got {wt}"
         );
     }
+    let base = parse_bench_records(baseline)?;
+    ensure!(!base.is_empty(), "the baseline report contains no scenarios");
+    let current = parse_bench_records(current)?;
+
+    let mut regressions = Vec::new();
+    let known: BTreeSet<&str> = base.iter().map(|r| r.id.as_str()).collect();
+    for rec in &current {
+        if !known.contains(rec.id.as_str()) {
+            regressions.push(format!(
+                "{}: not in the baseline (stale bench/baseline.json? re-run with \
+                 --update-baseline to admit it)",
+                rec.id
+            ));
+        }
+    }
+    let by_id: BTreeMap<&str, &BenchRecord> = current.iter().map(|r| (r.id.as_str(), r)).collect();
+
+    let mut ok_lines = Vec::new();
+    let mut table = Table::new(&[
+        "scenario", "gain (base)", "gain (now)", "Δgain", "eps (base)", "eps (now)", "Δeps",
+    ]);
+    for brec in &base {
+        let id = &brec.id;
+        let cur = by_id.get(id.as_str()).copied();
+        match (brec.gain, cur.map(|c| c.gain)) {
+            (None, _) => ok_lines.push(format!("{id}: no baseline gain recorded — skipped")),
+            (Some(_), None) => regressions.push(format!("{id}: missing from the current report")),
+            (Some(bg), Some(None)) => regressions.push(format!(
+                "{id}: target never reached (baseline gain {bg:.2}×)"
+            )),
+            (Some(bg), Some(Some(g))) => {
+                let floor = bg * (1.0 - tolerance);
+                if g < floor {
+                    regressions.push(format!(
+                        "{id}: gain {g:.2}× below the {floor:.2}× floor (baseline {bg:.2}×)"
+                    ));
+                } else {
+                    ok_lines.push(format!(
+                        "{id}: gain {g:.2}× (baseline {bg:.2}×, floor {floor:.2}×)"
+                    ));
+                }
+            }
+        }
+        // the wall gate never double-reports a scenario the gain gate
+        // already flagged as missing — hence the `if let Some(cur)`
+        if let (Some(wt), Some(beps), Some(cur)) = (wall_tolerance, brec.epochs_per_sec, cur) {
+            let floor = beps * (1.0 - wt);
+            match cur.epochs_per_sec {
+                None => regressions.push(format!(
+                    "{id}: wall-clock throughput missing from the report \
+                     (baseline {beps:.2} epochs/s)"
+                )),
+                Some(eps) if eps < floor => regressions.push(format!(
+                    "{id}: {eps:.2} epochs/s below the {floor:.2} floor (baseline {beps:.2})"
+                )),
+                Some(_) => {}
+            }
+        }
+        table.row(&[
+            id.clone(),
+            fmt_gain(brec.gain),
+            fmt_gain(cur.and_then(|c| c.gain)),
+            fmt_delta(brec.gain, cur.and_then(|c| c.gain)),
+            fmt_gain(brec.epochs_per_sec),
+            fmt_gain(cur.and_then(|c| c.epochs_per_sec)),
+            fmt_delta(brec.epochs_per_sec, cur.and_then(|c| c.epochs_per_sec)),
+        ]);
+    }
+    if regressions.is_empty() {
+        Ok(format!("{}\n\n{}", ok_lines.join("\n"), table.render()))
+    } else {
+        match wall_tolerance {
+            Some(wt) => bail!(
+                "bench regression (gain tolerance {:.0}%, wall tolerance {:.0}%):\n{}",
+                tolerance * 100.0,
+                wt * 100.0,
+                regressions.join("\n")
+            ),
+            None => bail!(
+                "coding-gain regression (tolerance {:.0}%):\n{}",
+                tolerance * 100.0,
+                regressions.join("\n")
+            ),
+        }
+    }
+}
+
+/// [`check_regression`] with the wall-clock gate off — the historical
+/// gain-only check CI ran before throughput was recorded.
+pub fn check_gain_regression(baseline: &str, current: &str, tolerance: f64) -> Result<String> {
+    check_regression(baseline, current, tolerance, None)
 }

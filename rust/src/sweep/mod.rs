@@ -67,16 +67,20 @@
 
 pub mod baseline;
 pub mod grid;
-mod json;
+pub(crate) mod json;
 pub mod report;
 pub mod resume;
 pub mod runner;
 
-pub use baseline::{check_gain_regression, parse_gains, write_bench_json};
+pub use baseline::{
+    check_gain_regression, check_regression, parse_bench_records, parse_gains, write_bench_json,
+    BenchRecord,
+};
 pub use grid::{config_fingerprint, Axis, Dim, Scenario, ScenarioGrid, SWEEPABLE_KEYS};
 pub use report::{
     gain_matrix, gain_stats, scenario_csv_header, scenario_csv_row, summary_table,
-    trace_file_stem, write_json, write_outcome_traces, write_scenario_csv,
+    trace_file_stem, write_json, write_outcome_traces, write_outcome_traces_decimated,
+    write_scenario_csv,
 };
 pub use resume::{MergedScenarioCsv, ResumeState};
 pub use runner::{

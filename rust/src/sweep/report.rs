@@ -84,13 +84,22 @@ pub fn trace_file_stem(id: &str) -> String {
 ///
 /// [`RunResult`]: crate::coordinator::RunResult
 pub fn write_outcome_traces(dir: &str, o: &ScenarioOutcome) -> Result<()> {
+    write_outcome_traces_decimated(dir, o, 1)
+}
+
+/// [`write_outcome_traces`] keeping only every `every`-th epoch row
+/// (plus the first and last — see
+/// [`crate::coordinator::RunResult::write_trace_csv_decimated`]), the
+/// `cfl sweep --traces-dir … --trace-decimate N` export for long sweeps
+/// whose full traces would dwarf the report.
+pub fn write_outcome_traces_decimated(dir: &str, o: &ScenarioOutcome, every: usize) -> Result<()> {
     let stem = trace_file_stem(&o.scenario.id);
     let ctx = |what: &str| format!("scenario {}: writing {what} trace", o.scenario.id);
     o.coded
-        .write_trace_csv(&format!("{dir}/{stem}__cfl.csv"))
+        .write_trace_csv_decimated(&format!("{dir}/{stem}__cfl.csv"), every)
         .with_context(|| ctx("CFL"))?;
     if let Some(u) = &o.uncoded {
-        u.write_trace_csv(&format!("{dir}/{stem}__uncoded.csv"))
+        u.write_trace_csv_decimated(&format!("{dir}/{stem}__uncoded.csv"), every)
             .with_context(|| ctx("uncoded"))?;
     }
     Ok(())

@@ -24,6 +24,7 @@ use crate::lb::LoadPolicy;
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc;
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// Runner knobs.
 #[derive(Clone, Debug)]
@@ -36,7 +37,10 @@ pub struct SweepOptions {
     /// Also train the uncoded baseline per scenario (needed for the
     /// coding-gain and comm-load report columns).
     pub uncoded_baseline: bool,
-    /// Emit a stderr line as each scenario completes.
+    /// Raise the stderr log level so per-scenario `scenario_done` Info
+    /// events render as progress lines (`cfl sweep --progress` wiring —
+    /// the runner itself always emits the events; this knob only matters
+    /// to the caller installing the sinks).
     pub progress: bool,
     /// Which coordinator executes each scenario (`cfl sweep --live`
     /// selects [`CoordinatorKind::Live`]).
@@ -189,9 +193,16 @@ where
     };
 
     if workers == 1 {
+        let reg = crate::obs::registry();
+        let busy = reg.counter("sweep.worker0.busy_us");
+        let tasks = reg.counter("sweep.worker0.tasks");
         let mut out = Vec::with_capacity(n);
         for (position, item) in items.into_iter().enumerate() {
-            let output = run(item)?;
+            let t = Instant::now();
+            let output = run(item);
+            busy.add(t.elapsed().as_micros() as u64);
+            tasks.incr();
+            let output = output?;
             sink(position, &output)?;
             out.push(output);
         }
@@ -220,16 +231,26 @@ where
     let mut slots: Vec<Option<Result<O>>> = (0..n).map(|_| None).collect();
     let mut first_err: Option<anyhow::Error> = None;
     std::thread::scope(|scope| {
-        for _ in 0..workers {
+        for w in 0..workers {
             let result_tx = result_tx.clone();
             let work_rx = &work_rx;
             let run = &run;
-            scope.spawn(move || loop {
-                // take the next item, releasing the lock before running
-                let Ok((position, item)) = pop(work_rx) else { break };
-                let output = run(item);
-                if result_tx.send((position, output)).is_err() {
-                    break;
+            scope.spawn(move || {
+                // per-worker utilization counters: busy_us / (pool wall
+                // time × workers) is the sweep's utilization ratio
+                let reg = crate::obs::registry();
+                let busy = reg.counter(&format!("sweep.worker{w}.busy_us"));
+                let tasks = reg.counter(&format!("sweep.worker{w}.tasks"));
+                loop {
+                    // take the next item, releasing the lock before running
+                    let Ok((position, item)) = pop(work_rx) else { break };
+                    let t = Instant::now();
+                    let output = run(item);
+                    busy.add(t.elapsed().as_micros() as u64);
+                    tasks.incr();
+                    if result_tx.send((position, output)).is_err() {
+                        break;
+                    }
                 }
             });
         }
@@ -284,6 +305,10 @@ where
 
 /// Run a single scenario to completion on the current thread.
 fn run_one(scenario: Scenario, opts: &SweepOptions) -> Result<ScenarioOutcome> {
+    // every event/span the runs below emit lands in this scenario's
+    // scope, which is what routes them to per-scenario JSONL files
+    // under `--events-out DIR`
+    let _scope = crate::obs::scope(&scenario.id);
     let ctx = |what: &str| format!("scenario {}: {what}", scenario.id);
     let mut coord: Box<dyn Coordinator> =
         opts.backend.build(&scenario.cfg).with_context(|| ctx("building"))?;
@@ -296,20 +321,15 @@ fn run_one(scenario: Scenario, opts: &SweepOptions) -> Result<ScenarioOutcome> {
     };
     let outcome =
         ScenarioOutcome { scenario, policy, backend: coord.kind(), coded, uncoded };
-    if opts.progress {
-        let target = outcome.scenario.cfg.target_nmse;
-        eprintln!(
-            "  [{}] {} δ={:.3} t_cfl={} gain={}",
-            outcome.scenario.id,
-            outcome.backend,
-            outcome.coded.delta,
-            outcome
-                .coded
-                .time_to(target)
-                .map(|t| format!("{t:.1}s"))
-                .unwrap_or_else(|| "—".into()),
-            outcome.gain().map(|g| format!("{g:.2}×")).unwrap_or_else(|| "—".into()),
-        );
-    }
+    let target = outcome.scenario.cfg.target_nmse;
+    crate::obs_event!(
+        Info,
+        "scenario_done",
+        backend = outcome.backend,
+        delta = outcome.coded.delta,
+        epochs = outcome.coded.epoch_times.len(),
+        t_cfl_s = outcome.coded.time_to(target).unwrap_or(f64::NAN),
+        gain = outcome.gain().unwrap_or(f64::NAN),
+    );
     Ok(outcome)
 }

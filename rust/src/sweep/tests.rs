@@ -800,3 +800,139 @@ fn gain_regression_check_passes_and_fails_correctly() {
     // garbage tolerance is rejected
     assert!(check_gain_regression(baseline, ok, 1.5).is_err());
 }
+
+#[test]
+fn bench_report_carries_wall_clock_and_phase_fields() {
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0]).unwrap();
+    let opts =
+        SweepOptions { workers: 1, uncoded_baseline: true, progress: false, ..Default::default() };
+    let outcomes = run_grid(&grid, &opts).unwrap();
+    let dir = std::env::temp_dir().join("cfl_bench_wall");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_ci.json");
+    write_bench_json(path.to_str().unwrap(), &outcomes).unwrap();
+    let json = std::fs::read_to_string(&path).unwrap();
+    for needle in ["\"epochs\": ", "\"epochs_per_sec\": ", "\"phases\": {", "\"local_grad\""] {
+        assert!(json.contains(needle), "missing {needle}: {json}");
+    }
+    // the scanner reads its own output back, throughput included
+    let records = parse_bench_records(&json).unwrap();
+    assert_eq!(records.len(), 1);
+    assert_eq!(records[0].id, "s0__nu=0");
+    let eps = records[0].epochs_per_sec.expect("sim runs record a wall clock");
+    assert!(eps > 0.0 && eps.is_finite(), "bad epochs_per_sec {eps}");
+    // the legacy format (no epochs_per_sec field) still parses, as None
+    let legacy = r#"{"scenarios": [{"id": "a", "gain": 2.0, "wall_s": 1.0}]}"#;
+    let records = parse_bench_records(legacy).unwrap();
+    assert_eq!(
+        records,
+        vec![BenchRecord { id: "a".into(), gain: Some(2.0), epochs_per_sec: None }]
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wall_clock_gate_catches_throughput_regressions() {
+    let baseline = r#"{"scenarios": [
+    {"id": "a", "gain": 2.0, "wall_s": 1.0, "epochs_per_sec": 100.0},
+    {"id": "b", "gain": 1.5, "wall_s": 1.0, "epochs_per_sec": null}
+  ]}"#;
+    // a's throughput halved-and-then-some: the wall gate fails on a
+    // doctored report even though every gain is healthy
+    let doctored = r#"{"scenarios": [
+    {"id": "a", "gain": 2.0, "wall_s": 9.0, "epochs_per_sec": 10.0},
+    {"id": "b", "gain": 1.5, "wall_s": 9.0, "epochs_per_sec": 500.0}
+  ]}"#;
+    let err = check_regression(baseline, doctored, 0.2, Some(0.5)).unwrap_err().to_string();
+    assert!(err.contains("a: 10.00 epochs/s below the 50.00 floor"), "{err}");
+    assert!(!err.contains("b:"), "b has no baseline throughput to gate: {err}");
+
+    // the gain-only check ignores the same report's throughput
+    check_gain_regression(baseline, doctored, 0.2).unwrap();
+
+    // throughput vanishing from the report is a wall regression
+    let stripped = r#"{"scenarios": [
+    {"id": "a", "gain": 2.0, "wall_s": 9.0},
+    {"id": "b", "gain": 1.5, "wall_s": 9.0}
+  ]}"#;
+    let err = check_regression(baseline, stripped, 0.2, Some(0.5)).unwrap_err().to_string();
+    assert!(err.contains("a: wall-clock throughput missing"), "{err}");
+
+    // within tolerance passes, and the success output carries the
+    // per-scenario delta table
+    let fine = r#"{"scenarios": [
+    {"id": "a", "gain": 2.0, "wall_s": 1.0, "epochs_per_sec": 80.0},
+    {"id": "b", "gain": 1.5, "wall_s": 1.0, "epochs_per_sec": 7.0}
+  ]}"#;
+    let out = check_regression(baseline, fine, 0.2, Some(0.5)).unwrap();
+    assert!(out.contains("a: gain 2.00"), "{out}");
+    assert!(out.contains("Δgain"), "missing the delta table: {out}");
+    assert!(out.contains("-20.0%"), "eps delta 80/100 should render: {out}");
+
+    // garbage wall tolerance is rejected
+    assert!(check_regression(baseline, fine, 0.2, Some(1.5)).is_err());
+}
+
+#[test]
+fn unknown_scenario_in_the_report_fails_the_check() {
+    let baseline = r#"{"scenarios": [{"id": "a", "gain": 2.0, "wall_s": 1.0}]}"#;
+    let current = r#"{"scenarios": [
+    {"id": "a", "gain": 2.0, "wall_s": 1.0},
+    {"id": "zz", "gain": 9.0, "wall_s": 1.0}
+  ]}"#;
+    // an id the baseline has never seen is never silently un-gated —
+    // with or without the wall gate
+    let err = check_gain_regression(baseline, current, 0.2).unwrap_err().to_string();
+    assert!(err.contains("zz: not in the baseline"), "{err}");
+    let err = check_regression(baseline, current, 0.2, Some(0.5)).unwrap_err().to_string();
+    assert!(err.contains("zz: not in the baseline"), "{err}");
+}
+
+#[test]
+fn trace_decimation_keeps_first_and_last_rows() {
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0]).unwrap();
+    let opts =
+        SweepOptions { workers: 1, uncoded_baseline: false, progress: false, ..Default::default() };
+    let outcomes = run_grid(&grid, &opts).unwrap();
+    let dir = std::env::temp_dir().join("cfl_trace_decimate");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let rows_at = |every: usize| -> Vec<String> {
+        std::fs::create_dir_all(&dir).unwrap();
+        write_outcome_traces_decimated(dir.to_str().unwrap(), &outcomes[0], every).unwrap();
+        let text = std::fs::read_to_string(dir.join("s0__nu=0__cfl.csv")).unwrap();
+        assert!(text.starts_with("time_s,epoch,nmse"), "{text}");
+        let rows: Vec<String> = text.lines().skip(1).map(String::from).collect();
+        std::fs::remove_dir_all(&dir).ok();
+        rows
+    };
+
+    let full = rows_at(1);
+    let n = full.len();
+    assert!(n > 40, "tiny() runs to the epoch cap; got {n} rows");
+
+    // N in the middle: every 7th row plus the final one, in order
+    let dec = rows_at(7);
+    let expect: Vec<String> = full
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % 7 == 0 || i + 1 == n)
+        .map(|(_, r)| r.clone())
+        .collect();
+    assert_eq!(dec, expect);
+    assert_eq!(dec.last(), full.last(), "the final row must always survive");
+
+    // N beyond the trace length: first and last rows only
+    let sparse = rows_at(100_000);
+    assert_eq!(sparse.len(), 2);
+    assert_eq!(sparse[0], full[0]);
+    assert_eq!(sparse[1], *full.last().unwrap());
+
+    // a zero stride is rejected, not a divide-by-zero
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = write_outcome_traces_decimated(dir.to_str().unwrap(), &outcomes[0], 0)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("≥ 1"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -15,7 +15,10 @@
 //! incarnation (a late reply, a stale death notice) are discarded when a
 //! newer incarnation holds the slot, exactly like the TCP transport.
 
-use super::{run_device_loop, DeviceInit, DeviceLink, Event, FromDevice, ToDevice, Transport};
+use super::{
+    run_device_loop, stale_discard, DeviceInit, DeviceLink, Event, FromDevice, ToDevice, Transport,
+};
+use crate::obs::Counter;
 use anyhow::Result;
 use std::sync::mpsc;
 use std::thread;
@@ -87,6 +90,12 @@ pub struct ChannelTransport {
     up_rx: mpsc::Receiver<ChanEvent>,
     up_tx: mpsc::Sender<ChanEvent>,
     handles: Vec<thread::JoinHandle<()>>,
+    /// Fleet-traffic counters (message counts only — the in-process wire
+    /// never serializes, so there are no byte totals to report). Shared
+    /// names with the TCP transport, resolved once so the epoch hot path
+    /// stays lock-free.
+    frames_sent: Counter,
+    frames_recv: Counter,
 }
 
 /// Spawn one worker incarnation; returns the coordinator-side sender.
@@ -122,7 +131,16 @@ impl ChannelTransport {
             let tx = spawn_worker(slot, 0, &up_tx, &mut handles);
             to_devices.push(Some(tx));
         }
-        Self { to_devices, gens: vec![0; n], up_rx, up_tx, handles }
+        let reg = crate::obs::registry();
+        Self {
+            to_devices,
+            gens: vec![0; n],
+            up_rx,
+            up_tx,
+            handles,
+            frames_sent: reg.counter("transport.frames_sent"),
+            frames_recv: reg.counter("transport.frames_recv"),
+        }
     }
 
     /// A fault-injection handle (see [`ChannelCtl`]).
@@ -138,16 +156,26 @@ impl ChannelTransport {
             ChanEvent::Msg(slot, gen, msg) => {
                 // a reply from a dead incarnation must not be attributed
                 // to its replacement
-                (gen == self.gens[slot]).then_some(Event::Msg(slot, msg))
+                if gen != self.gens[slot] {
+                    stale_discard(slot, gen);
+                    return None;
+                }
+                self.frames_recv.incr();
+                Some(Event::Msg(slot, msg))
             }
             ChanEvent::Gone(slot, gen) => {
                 if gen != self.gens[slot] {
+                    stale_discard(slot, gen);
                     return None; // stale death notice: the slot respawned
                 }
                 // a death notice is one-shot: record it at the transport
                 // level too, so the endpoint stays dead across runs until
                 // a respawn re-claims the slot
                 self.to_devices[slot] = None;
+                crate::obs::registry()
+                    .counter(&format!("transport.slot{slot}.disconnects"))
+                    .incr();
+                crate::obs_event!(Debug, "endpoint_gone", slot = slot, gen = gen);
                 Some(Event::Gone(slot))
             }
             ChanEvent::Kill(slot) => {
@@ -165,6 +193,10 @@ impl ChannelTransport {
                 self.gens[slot] += 1;
                 let tx = spawn_worker(slot, self.gens[slot], &self.up_tx, &mut self.handles);
                 self.to_devices[slot] = Some(tx);
+                crate::obs::registry()
+                    .counter(&format!("transport.slot{slot}.rejoins"))
+                    .incr();
+                crate::obs_event!(Debug, "endpoint_rejoined", slot = slot, gen = self.gens[slot]);
                 Some(Event::Rejoined(slot))
             }
         }
@@ -202,6 +234,7 @@ impl Transport for ChannelTransport {
                 self.to_devices[slot] = None;
                 delivered.push(false);
             } else {
+                self.frames_sent.incr();
                 delivered.push(true);
             }
         }
@@ -216,6 +249,7 @@ impl Transport for ChannelTransport {
             self.to_devices[slot] = None;
             return Ok(false);
         }
+        self.frames_sent.incr();
         Ok(true)
     }
 

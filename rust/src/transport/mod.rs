@@ -51,6 +51,14 @@ mod tcp;
 pub use channel::{ChannelCtl, ChannelTransport};
 pub use tcp::{run_device, run_device_retry, TcpTransport};
 
+/// Account one discarded stale-incarnation event (a reply or death
+/// notice from a generation that no longer holds its slot) — shared by
+/// both transports' generation filters.
+fn stale_discard(slot: usize, gen: u64) {
+    crate::obs::registry().counter(&format!("transport.slot{slot}.stale_discards")).incr();
+    crate::obs_event!(Trace, "stale_discard", slot = slot, gen = gen);
+}
+
 /// Which wire a live fleet speaks — the `--transport` CLI knob.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum TransportKind {

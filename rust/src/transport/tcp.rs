@@ -36,9 +36,10 @@
 //! children when the transport drops.
 
 use super::{
-    frame, run_device_loop, DeviceInit, DeviceLink, Event, FromDevice, SessionEnd, ToDevice,
-    Transport,
+    frame, run_device_loop, stale_discard, DeviceInit, DeviceLink, Event, FromDevice, SessionEnd,
+    ToDevice, Transport,
 };
+use crate::obs::Counter;
 use anyhow::{ensure, Context, Result};
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -71,6 +72,25 @@ enum TcpUp {
     Rejoin(TcpStream),
 }
 
+/// Downstream fleet-traffic counters (wire bytes include the 4-byte
+/// length prefix), resolved once so the per-frame accounting on the
+/// broadcast hot path is a pair of relaxed atomic adds. The upstream
+/// counterparts live in each [`reader_loop`] thread.
+struct WireCounters {
+    frames_sent: Counter,
+    bytes_sent: Counter,
+}
+
+impl WireCounters {
+    fn new() -> Self {
+        let reg = crate::obs::registry();
+        Self {
+            frames_sent: reg.counter("transport.frames_sent"),
+            bytes_sent: reg.counter("transport.bytes_sent"),
+        }
+    }
+}
+
 /// Coordinator-side TCP fleet: one framed socket per device slot.
 pub struct TcpTransport {
     /// Write halves, slot-indexed; `None` = endpoint gone.
@@ -85,6 +105,7 @@ pub struct TcpTransport {
     stop: Arc<AtomicBool>,
     /// Locally-spawned `cfl device` subprocesses (empty under `serve`).
     children: Vec<Child>,
+    ctr: WireCounters,
 }
 
 impl TcpTransport {
@@ -109,6 +130,7 @@ impl TcpTransport {
             acceptor: Some(acceptor),
             stop,
             children: Vec::new(),
+            ctr: WireCounters::new(),
         })
     }
 
@@ -123,6 +145,8 @@ impl TcpTransport {
             self.links[slot] = None;
             return false;
         }
+        self.ctr.frames_sent.incr();
+        self.ctr.bytes_sent.add(payload.len() as u64 + 4);
         true
     }
 
@@ -171,15 +195,26 @@ impl TcpTransport {
         match up {
             // a reply from a dead incarnation must not be attributed to
             // its replacement
-            TcpUp::Msg(msg) => (gen == self.gens[slot]).then_some(Event::Msg(slot, msg)),
+            TcpUp::Msg(msg) => {
+                if gen != self.gens[slot] {
+                    stale_discard(slot, gen);
+                    return None;
+                }
+                Some(Event::Msg(slot, msg))
+            }
             TcpUp::Gone => {
                 if gen != self.gens[slot] {
+                    stale_discard(slot, gen);
                     return None; // stale death notice: the slot rejoined
                 }
                 // a death notice is one-shot (the reader thread is gone):
                 // record it at the transport level too, so the endpoint
                 // stays dead across runs until a rejoin re-claims it
                 self.links[slot] = None;
+                crate::obs::registry()
+                    .counter(&format!("transport.slot{slot}.disconnects"))
+                    .incr();
+                crate::obs_event!(Debug, "endpoint_gone", slot = slot, gen = gen);
                 Some(Event::Gone(slot))
             }
             TcpUp::Rejoin(stream) => {
@@ -200,6 +235,10 @@ impl TcpTransport {
                 let tx = self.up_tx.clone();
                 thread::spawn(move || reader_loop(slot, gen, stream, tx));
                 self.links[slot] = Some(writer);
+                crate::obs::registry()
+                    .counter(&format!("transport.slot{slot}.rejoins"))
+                    .incr();
+                crate::obs_event!(Info, "endpoint_rejoined", slot = slot, gen = gen);
                 Some(Event::Rejoined(slot))
             }
         }
@@ -353,9 +392,11 @@ fn accept_fleet(
             Ok((stream, peer)) => match handshake(stream, n) {
                 Handshake::Candidate(slot, stream) => {
                     if let Some(old) = links[slot].take() {
-                        eprintln!(
-                            "cfl: slot {slot} re-claimed by {peer} during formation; \
-                             dropping the previous connection"
+                        crate::obs_event!(
+                            Warn,
+                            "slot_reclaimed",
+                            slot = slot,
+                            peer = peer.to_string(),
                         );
                         let _ = old.shutdown(std::net::Shutdown::Both);
                         gens[slot] += 1;
@@ -378,7 +419,12 @@ fn accept_fleet(
                 // device started twice) must not strand the fleet —
                 // drop it and keep accepting until the deadline
                 Handshake::Rejected(reason) => {
-                    eprintln!("cfl: ignoring a connection from {peer}: {reason}");
+                    crate::obs_event!(
+                        Debug,
+                        "conn_rejected",
+                        peer = peer.to_string(),
+                        reason = reason,
+                    );
                 }
             },
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -415,13 +461,21 @@ fn acceptor_loop(
                     }
                 }
                 Handshake::VersionMismatch(v) => {
-                    eprintln!(
-                        "cfl: rejecting a rejoin from {peer}: device speaks v{v}, coordinator v{}",
-                        frame::PROTOCOL_VERSION
+                    crate::obs_event!(
+                        Warn,
+                        "rejoin_version_mismatch",
+                        peer = peer.to_string(),
+                        device_protocol = v,
+                        coordinator_protocol = frame::PROTOCOL_VERSION,
                     );
                 }
                 Handshake::Rejected(reason) => {
-                    eprintln!("cfl: ignoring a connection from {peer}: {reason}");
+                    crate::obs_event!(
+                        Debug,
+                        "conn_rejected",
+                        peer = peer.to_string(),
+                        reason = reason,
+                    );
                 }
             },
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => thread::sleep(ACCEPT_POLL),
@@ -479,11 +533,17 @@ fn handshake(mut stream: TcpStream, n: usize) -> Handshake {
 /// Per-socket reader: frames in, events out; any EOF or framing fault
 /// ends the endpoint with a `Gone` carrying this incarnation's tag.
 fn reader_loop(slot: usize, gen: u64, stream: TcpStream, tx: mpsc::Sender<(usize, u64, TcpUp)>) {
+    // upstream counters resolved once per incarnation, then lock-free
+    let reg = crate::obs::registry();
+    let frames_recv = reg.counter("transport.frames_recv");
+    let bytes_recv = reg.counter("transport.bytes_recv");
     let mut reader = BufReader::new(stream);
     loop {
         match frame::read_frame(&mut reader) {
             Ok(Some(payload)) => match frame::decode_from_device(&payload) {
                 Ok(msg) => {
+                    frames_recv.incr();
+                    bytes_recv.add(payload.len() as u64 + 4);
                     if tx.send((slot, gen, TcpUp::Msg(msg))).is_err() {
                         return; // transport dropped; nobody is listening
                     }
@@ -619,12 +679,22 @@ pub fn run_device_retry(
             Ok(SessionEnd::Shutdown) => return Ok(()),
             Ok(SessionEnd::HangUp) => {
                 if !quiet {
-                    eprintln!("cfl device {device_id}: link closed without Shutdown; rejoining");
+                    crate::obs_event!(
+                        Info,
+                        "device_rejoining",
+                        device = device_id,
+                        reason = "link closed without Shutdown",
+                    );
                 }
             }
             Err(e) => {
                 if !quiet {
-                    eprintln!("cfl device {device_id}: session error ({e}); rejoining");
+                    crate::obs_event!(
+                        Info,
+                        "device_rejoining",
+                        device = device_id,
+                        reason = format!("session error: {e}"),
+                    );
                 }
             }
         }

@@ -2,7 +2,10 @@
 # CI bench smoke: run a tiny fixed sweep (3 heterogeneity scenarios on
 # the deterministic sim backend), write the compact BENCH_ci.json report
 # (coding gain + wall time per scenario), and gate it against the
-# committed bench/baseline.json — a >20% coding-gain drop fails.
+# committed bench/baseline.json — a >20% coding-gain drop fails, as does
+# a >50% wall-clock throughput drop for scenarios with a recorded
+# epochs_per_sec baseline. The sweep also exports JSONL events; every
+# line must parse as JSON and carry the required schema keys.
 #
 # Usage:
 #   scripts/bench_smoke.sh                    # run + check (the CI path)
@@ -32,7 +35,73 @@ OUT=${BENCH_OUT:-bench_out}
 # command line (modulo libm differences across platforms, which the 20%
 # tolerance absorbs comfortably)
 "$BIN" sweep --seed 2020 --axis nu=0,0.2,0.4 --workers 2 \
-    --out "$OUT" --bench-out BENCH_ci.json --quiet
+    --out "$OUT" --bench-out BENCH_ci.json --quiet \
+    --events-out "$OUT/events"
+
+# --- JSONL event export: structural validation -------------------------
+shopt -s nullglob
+event_files=("$OUT"/events/*.events.jsonl)
+shopt -u nullglob
+if [[ ${#event_files[@]} -eq 0 ]]; then
+    echo "bench_smoke: no *.events.jsonl files written under $OUT/events" >&2
+    exit 1
+fi
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "${event_files[@]}" <<'PY'
+import json, sys
+
+required = {"seq", "t_us", "level", "event", "kind"}
+levels = {"error", "warn", "info", "debug", "trace"}
+total = 0
+for path in sys.argv[1:]:
+    with open(path) as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as exc:
+                sys.exit(f"{path}:{lineno}: not valid JSON: {exc}")
+            missing = required - rec.keys()
+            if missing:
+                sys.exit(f"{path}:{lineno}: missing keys {sorted(missing)}")
+            if rec["level"] not in levels:
+                sys.exit(f"{path}:{lineno}: bad level {rec['level']!r}")
+            total += 1
+if total == 0:
+    sys.exit("bench_smoke: event files exist but contain no records")
+print(f"bench_smoke: {total} JSONL event records validated "
+      f"across {len(sys.argv) - 1} file(s)")
+PY
+else
+    # minimal fallback: every non-empty line must look like a JSON object
+    # carrying the required keys (no python3 in this environment)
+    for f in "${event_files[@]}"; do
+        while IFS= read -r line; do
+            [[ -z "$line" ]] && continue
+            if [[ "$line" != \{* || "$line" != *\} ]]; then
+                echo "bench_smoke: $f: line is not a JSON object: $line" >&2
+                exit 1
+            fi
+            for key in '"seq"' '"t_us"' '"level"' '"event"' '"kind"'; do
+                if [[ "$line" != *"$key"* ]]; then
+                    echo "bench_smoke: $f: line missing $key: $line" >&2
+                    exit 1
+                fi
+            done
+        done < "$f"
+    done
+    echo "bench_smoke: JSONL events spot-checked (python3 unavailable)"
+fi
+
+# --- bench report: wall-clock fields must be present -------------------
+for field in '"epochs_per_sec"' '"phases"'; do
+    if ! grep -q "$field" BENCH_ci.json; then
+        echo "bench_smoke: BENCH_ci.json is missing the $field field" >&2
+        exit 1
+    fi
+done
 
 if [[ "${1:-}" == "--update-baseline" ]]; then
     mkdir -p bench
