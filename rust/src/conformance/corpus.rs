@@ -1,0 +1,176 @@
+//! The fixture corpus: scenario configs every backend must agree on.
+//!
+//! Each fixture is a complete [`ExperimentConfig`] (the check seed is
+//! substituted at run time, so `--seed` replays a failure exactly). The
+//! quick tier runs the small fixtures through sim vs live(channel) plus
+//! one live(channel) vs live(tcp) wire leg; `--full` adds the medium
+//! fixture and a wire leg per fixture.
+//!
+//! Live legs run at microsecond time scale with a pinned grace window, so
+//! every simulated delay sleeps out in nanoseconds and the gather loop
+//! exits the moment the last reply lands — a full fixture is milliseconds
+//! of wall clock, not simulated-seconds of it.
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, ShardingKind};
+use crate::coordinator::{LiveCoordinator, SimCoordinator};
+use crate::transport::{run_device, TcpTransport};
+
+use super::{diff, CheckDef, Outcome, DEFAULT_SEED};
+
+/// Wall-seconds per simulated second for conformance live legs.
+const TIME_SCALE: f64 = 1e-6;
+/// Pinned per-epoch grace: large against host jitter at this scale, so
+/// the live gather collects every reply deterministically.
+const GRACE: Duration = Duration::from_millis(250);
+/// Device connect / fleet accept timeout for the TCP legs.
+const TCP_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One conformance fixture.
+pub struct Fixture {
+    pub id: &'static str,
+    /// Runs only under `cfl conformance --full`.
+    pub full_only: bool,
+    pub cfg: ExperimentConfig,
+}
+
+/// The committed fixture corpus. Axes covered: fleet size (4/6/8),
+/// redundancy (optimized δ vs pinned δ=0.25), MEC heterogeneity
+/// (ν ∈ {0, 0.2, 0.3}), data sharding (equal vs power-law), stop rule
+/// (fixed epoch budget vs target-NMSE early stop), model size (16/24).
+pub fn fixtures() -> Vec<Fixture> {
+    let small = |nu: f64| {
+        let mut cfg = ExperimentConfig::small();
+        cfg.n_devices = 4;
+        cfg.points_per_device = 40;
+        cfg.model_dim = 16;
+        cfg.max_epochs = 60;
+        cfg.target_nmse = 0.0;
+        cfg.nu_comp = nu;
+        cfg.nu_link = nu;
+        cfg
+    };
+
+    let base_homog = small(0.0);
+    let hetero_mid = small(0.3);
+    let mut fleet6_delta25 = small(0.2);
+    fleet6_delta25.n_devices = 6;
+    fleet6_delta25.delta = Some(0.25);
+    let mut early_stop = small(0.2);
+    early_stop.target_nmse = 0.85;
+    early_stop.max_epochs = 300;
+    let mut powerlaw_shards = small(0.2);
+    powerlaw_shards.sharding = ShardingKind::PowerLaw(1.2);
+    let mut medium_fleet8 = small(0.2);
+    medium_fleet8.n_devices = 8;
+    medium_fleet8.model_dim = 24;
+    medium_fleet8.max_epochs = 80;
+
+    vec![
+        Fixture { id: "base_homog", full_only: false, cfg: base_homog },
+        Fixture { id: "hetero_mid", full_only: false, cfg: hetero_mid },
+        Fixture { id: "fleet6_delta25", full_only: false, cfg: fleet6_delta25 },
+        Fixture { id: "early_stop", full_only: false, cfg: early_stop },
+        Fixture { id: "powerlaw_shards", full_only: false, cfg: powerlaw_shards },
+        Fixture { id: "medium_fleet8", full_only: true, cfg: medium_fleet8 },
+    ]
+}
+
+/// Sim vs live(channel), coded and uncoded, through the declared
+/// tolerances.
+fn run_fixture(mut cfg: ExperimentConfig, seed: u64) -> Result<Outcome> {
+    cfg.seed = seed;
+    let mut sim = SimCoordinator::new(&cfg)?;
+    let sim_cfl = sim.train_cfl()?;
+    let sim_unc = sim.train_uncoded()?;
+    let mut live = LiveCoordinator::new(&cfg, TIME_SCALE)?;
+    live.grace = Some(GRACE);
+    let live_cfl = live.train_cfl()?;
+    let live_unc = live.train_uncoded()?;
+    Ok(diff::sim_vs_live(&sim_cfl, &live_cfl, &sim_unc, &live_unc, cfg.target_nmse, &diff::Tol::default()))
+}
+
+fn loopback() -> Option<TcpListener> {
+    match TcpListener::bind("127.0.0.1:0") {
+        Ok(l) => Some(l),
+        Err(e) => {
+            eprintln!("conformance: loopback TCP bind denied ({e})");
+            None
+        }
+    }
+}
+
+/// live(channel) vs live(tcp), coded, same config and seed.
+fn run_wire(mut cfg: ExperimentConfig, seed: u64) -> Result<Outcome> {
+    cfg.seed = seed;
+    let mut chan = LiveCoordinator::new(&cfg, TIME_SCALE)?;
+    chan.grace = Some(GRACE);
+    let chan_cfl = chan.train_cfl()?;
+    drop(chan);
+
+    let Some(listener) = loopback() else {
+        return Ok(Outcome::skip("loopback TCP bind denied in this sandbox"));
+    };
+    let addr = listener.local_addr()?.to_string();
+    let n = cfg.n_devices;
+    let devices: Vec<_> = (0..n)
+        .map(|id| {
+            let addr = addr.clone();
+            thread::spawn(move || run_device(&addr, id, TCP_TIMEOUT))
+        })
+        .collect();
+    let transport = TcpTransport::serve(listener, n, TCP_TIMEOUT)?;
+    let mut tcp = LiveCoordinator::with_transport(&cfg, TIME_SCALE, Box::new(transport))?;
+    tcp.grace = Some(GRACE);
+    let tcp_cfl = tcp.train_cfl()?;
+    // dropping the coordinator broadcasts Shutdown, releasing the devices
+    drop(tcp);
+    for d in devices {
+        match d.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Ok(Outcome::fail(format!("device thread error: {e:#}"))),
+            Err(_) => return Ok(Outcome::fail("device thread panicked")),
+        }
+    }
+    Ok(diff::wire(&chan_cfl, &tcp_cfl, &diff::Tol::default()))
+}
+
+pub(crate) fn checks(full: bool) -> Vec<CheckDef> {
+    let mut out = Vec::new();
+    for (i, fx) in fixtures().into_iter().enumerate() {
+        if fx.full_only && !full {
+            continue;
+        }
+        let seed = DEFAULT_SEED + i as u64;
+        let cfg = fx.cfg.clone();
+        out.push(CheckDef {
+            kind: "fixture",
+            id: format!("fixture__{}", fx.id),
+            seed,
+            run: Box::new(move |s| match run_fixture(cfg.clone(), s) {
+                Ok(o) => o,
+                Err(e) => Outcome::fail(format!("fixture run error: {e:#}")),
+            }),
+        });
+        // the wire leg is expensive (real sockets, device threads), so
+        // the quick tier exercises it once; --full covers every fixture
+        if full || fx.id == "base_homog" {
+            let cfg = fx.cfg.clone();
+            out.push(CheckDef {
+                kind: "fixture",
+                id: format!("fixture__{}__wire", fx.id),
+                seed,
+                run: Box::new(move |s| match run_wire(cfg.clone(), s) {
+                    Ok(o) => o,
+                    Err(e) => Outcome::fail(format!("wire run error: {e:#}")),
+                }),
+            });
+        }
+    }
+    out
+}

@@ -1,0 +1,233 @@
+//! Tolerance policy: what "the backends agree" means, quantity by
+//! quantity.
+//!
+//! The three execution paths are *designed* to diverge in places — the
+//! DES backend drops simulated stragglers at the t* deadline while the
+//! time-scaled live cluster (microsecond scale + grace window) gathers
+//! every reply, so per-epoch NMSE is not comparable point-for-point
+//! between sim and live. What must agree, and how tightly, is declared
+//! here rather than scattered through assertions:
+//!
+//! | quantity                          | sim vs live   | chan vs tcp |
+//! |-----------------------------------|---------------|-------------|
+//! | δ, t*, setup cost, parity bits    | ≤ 1e-12 rel   | (same runs) |
+//! | trace length (target = 0)         | equal         | equal       |
+//! | coded virtual time axis           | ≤ 1e-9 rel    | exact       |
+//! | per-epoch NMSE                    | not compared  | ≤ 1e-3 rel  |
+//! | final NMSE                        | ≤ 1.5 decades | ≤ 1e-3 rel  |
+//! | on-time gradient count            | not compared  | equal       |
+//! | convergence + gain (target > 0)   | ratio ≤ 3×    | (same runs) |
+//!
+//! Both backends additionally must actually *learn* (final NMSE below
+//! [`Tol::learn_threshold`]) so a pair of equally-broken runs cannot
+//! agree their way to a pass.
+
+use crate::coordinator::RunResult;
+
+use super::Outcome;
+
+/// Declared agreement tolerances (see the module table).
+#[derive(Clone, Copy, Debug)]
+pub struct Tol {
+    /// Policy quantities both backends derive from the identical
+    /// [`Session`](crate::coordinator::Session): δ, t*, setup seconds,
+    /// parity upload bits. Bit-equal in practice; the tolerance absorbs
+    /// nothing but gives failures a number to report against.
+    pub policy_rel: f64,
+    /// Coded virtual time axes (sums of the same per-epoch deadline,
+    /// accumulated independently per backend).
+    pub time_rel: f64,
+    /// Per-epoch NMSE between the two live transports, which execute the
+    /// same gather semantics over the same delay streams.
+    pub nmse_rel: f64,
+    /// Final NMSE between sim and live, in log10 decades — the backends
+    /// aggregate different straggler sets, so floors differ but must land
+    /// in the same regime.
+    pub final_decades: f64,
+    /// Every compared run must get at least this far below NMSE 1.0.
+    pub learn_threshold: f64,
+    /// Early-stop fixtures: sim and live coding gains must agree within
+    /// this multiplicative ratio.
+    pub gain_ratio: f64,
+}
+
+impl Default for Tol {
+    fn default() -> Self {
+        Self {
+            policy_rel: 1e-12,
+            time_rel: 1e-9,
+            nmse_rel: 1e-3,
+            final_decades: 1.5,
+            learn_threshold: 0.95,
+            gain_ratio: 3.0,
+        }
+    }
+}
+
+fn rel_close(a: f64, b: f64, rel: f64) -> bool {
+    if a == b {
+        return true;
+    }
+    if !a.is_finite() || !b.is_finite() {
+        return false;
+    }
+    (a - b).abs() <= rel * a.abs().max(b.abs())
+}
+
+fn check_rel(errs: &mut Vec<String>, what: &str, a: f64, b: f64, rel: f64) {
+    if !rel_close(a, b, rel) {
+        errs.push(format!("{what}: {a} vs {b} (rel tol {rel:e})"));
+    }
+}
+
+fn final_nmse(r: &RunResult) -> f64 {
+    r.trace.points.last().map(|p| p.nmse).unwrap_or(f64::INFINITY)
+}
+
+/// Compare one leg's (coded or uncoded) final NMSE across backends: both
+/// must have learned, and agree within `tol.final_decades`.
+fn check_final(errs: &mut Vec<String>, leg: &str, sim: &RunResult, live: &RunResult, tol: &Tol) {
+    let (s, l) = (final_nmse(sim), final_nmse(live));
+    if !(s < tol.learn_threshold) {
+        errs.push(format!("{leg} sim did not learn: final NMSE {s}"));
+    }
+    if !(l < tol.learn_threshold) {
+        errs.push(format!("{leg} live did not learn: final NMSE {l}"));
+    }
+    let decades = (s.max(1e-300).log10() - l.max(1e-300).log10()).abs();
+    if decades > tol.final_decades {
+        errs.push(format!(
+            "{leg} final NMSE disagrees by {decades:.2} decades: sim {s} vs live {l}"
+        ));
+    }
+}
+
+fn verdict(errs: Vec<String>, ok: String) -> Outcome {
+    if errs.is_empty() {
+        Outcome::pass(ok)
+    } else {
+        Outcome::fail(errs.join("; "))
+    }
+}
+
+/// Sim-backend vs live(channel) agreement for one fixture (coded and
+/// uncoded runs of each).
+pub fn sim_vs_live(
+    sim_cfl: &RunResult,
+    live_cfl: &RunResult,
+    sim_unc: &RunResult,
+    live_unc: &RunResult,
+    target_nmse: f64,
+    tol: &Tol,
+) -> Outcome {
+    let mut errs = Vec::new();
+    // policy quantities: pure functions of the shared Session
+    check_rel(&mut errs, "delta", sim_cfl.delta, live_cfl.delta, tol.policy_rel);
+    check_rel(&mut errs, "epoch_deadline", sim_cfl.epoch_deadline, live_cfl.epoch_deadline, tol.policy_rel);
+    check_rel(&mut errs, "setup_secs", sim_cfl.setup_secs, live_cfl.setup_secs, tol.policy_rel);
+    check_rel(&mut errs, "parity_upload_bits", sim_cfl.parity_upload_bits, live_cfl.parity_upload_bits, tol.policy_rel);
+
+    if target_nmse <= 0.0 {
+        // fixed-epoch fixtures: every run goes to the epoch cap, so the
+        // trace shapes are comparable even though the NMSE paths are not
+        let (ns, nl) = (sim_cfl.trace.points.len(), live_cfl.trace.points.len());
+        if ns != nl {
+            errs.push(format!("coded trace length: sim {ns} vs live {nl}"));
+        } else {
+            for (i, (s, l)) in
+                sim_cfl.trace.points.iter().zip(&live_cfl.trace.points).enumerate()
+            {
+                if s.epoch != l.epoch {
+                    errs.push(format!("coded epoch index [{i}]: sim {} vs live {}", s.epoch, l.epoch));
+                    break;
+                }
+                if !rel_close(s.time_s, l.time_s, tol.time_rel) {
+                    errs.push(format!(
+                        "coded time axis [{i}]: sim {} vs live {}",
+                        s.time_s, l.time_s
+                    ));
+                    break;
+                }
+            }
+        }
+        let (us, ul) = (sim_unc.trace.points.len(), live_unc.trace.points.len());
+        if us != ul {
+            errs.push(format!("uncoded trace length: sim {us} vs live {ul}"));
+        }
+        check_final(&mut errs, "coded", sim_cfl, live_cfl, tol);
+        check_final(&mut errs, "uncoded", sim_unc, live_unc, tol);
+    } else {
+        // early-stop fixtures: all four runs must reach the target, and
+        // the backends' coding gains must land in the same regime
+        for (name, r) in [
+            ("sim coded", sim_cfl),
+            ("sim uncoded", sim_unc),
+            ("live coded", live_cfl),
+            ("live uncoded", live_unc),
+        ] {
+            if r.converged.is_none() {
+                errs.push(format!("{name} never reached target NMSE {target_nmse}"));
+            }
+        }
+        if errs.is_empty() {
+            let gain = |cfl: &RunResult, unc: &RunResult| -> Option<f64> {
+                let (tc, tu) = (cfl.time_to(target_nmse)?, unc.time_to(target_nmse)?);
+                (tc > 0.0).then(|| tu / tc)
+            };
+            match (gain(sim_cfl, sim_unc), gain(live_cfl, live_unc)) {
+                (Some(gs), Some(gl)) if gs > 0.0 && gl > 0.0 => {
+                    let ratio = (gs / gl).max(gl / gs);
+                    if ratio > tol.gain_ratio {
+                        errs.push(format!(
+                            "coding gain disagrees {ratio:.2}×: sim {gs:.3} vs live {gl:.3}"
+                        ));
+                    }
+                }
+                (gs, gl) => errs.push(format!("gain undefined: sim {gs:?} vs live {gl:?}")),
+            }
+        }
+    }
+    verdict(
+        errs,
+        format!(
+            "sim and live agree (final NMSE {:.3e} vs {:.3e})",
+            final_nmse(sim_cfl),
+            final_nmse(live_cfl)
+        ),
+    )
+}
+
+/// live(channel) vs live(tcp) agreement for one coded run: identical
+/// gather semantics over identical delay streams, so the wire may not
+/// change the trajectory beyond float noise.
+pub fn wire(chan: &RunResult, tcp: &RunResult, tol: &Tol) -> Outcome {
+    let mut errs = Vec::new();
+    let (nc, nt) = (chan.trace.points.len(), tcp.trace.points.len());
+    if nc != nt {
+        errs.push(format!("trace length: chan {nc} vs tcp {nt}"));
+    } else {
+        for (i, (c, t)) in chan.trace.points.iter().zip(&tcp.trace.points).enumerate() {
+            if c.epoch != t.epoch || c.time_s != t.time_s {
+                errs.push(format!(
+                    "virtual time axis [{i}]: chan ({}, {}) vs tcp ({}, {})",
+                    c.epoch, c.time_s, t.epoch, t.time_s
+                ));
+                break;
+            }
+            if !rel_close(c.nmse, t.nmse, tol.nmse_rel) {
+                errs.push(format!("NMSE [{i}]: chan {} vs tcp {}", c.nmse, t.nmse));
+                break;
+            }
+        }
+    }
+    if chan.on_time_gradients != tcp.on_time_gradients {
+        errs.push(format!(
+            "on-time gradients: chan {} vs tcp {}",
+            chan.on_time_gradients, tcp.on_time_gradients
+        ));
+    }
+    verdict(
+        errs,
+        format!("chan and tcp traces agree over {nc} points"),
+    )
+}

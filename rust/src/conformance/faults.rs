@@ -1,0 +1,225 @@
+//! Fault-injection matrix: kill/respawn a device at each lifecycle
+//! phase and assert both convergence and exact lifecycle accounting.
+//!
+//! All cells run the live coordinator over a [`ChannelTransport`] with a
+//! [`ChannelCtl`] handle injecting the faults. The matrix covers the
+//! phases a disconnect can land in:
+//!
+//! | cell                    | kill lands                   | tier  |
+//! |-------------------------|------------------------------|-------|
+//! | `fault__calibration`    | before the run begins        | full  |
+//! | `fault__mid_epoch`      | inside an epoch's gather     | quick |
+//! | `fault__epoch_boundary` | between two runs             | quick |
+//! | `fault__respawn_race`   | kill→respawn→kill back-to-back (exercises the generation filter's suppressed-death accounting) | full |
+//!
+//! Every cell asserts: the run still learns, `disconnects`/`rejoins`
+//! count the injected faults, `epoch_members` tracks the dip and the
+//! recovery, and the members series stays aligned with the trace.
+//!
+//! [`ChannelTransport`]: crate::transport::ChannelTransport
+//! [`ChannelCtl`]: crate::transport::ChannelCtl
+
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{LiveCoordinator, RunResult};
+use crate::transport::{ChannelCtl, ChannelTransport};
+
+use super::{CheckDef, Outcome, DEFAULT_SEED};
+
+/// Homogeneous fleet so any slot's death measurably shrinks the gather
+/// set, and target 0 so runs go the full epoch budget.
+fn fault_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::small();
+    cfg.n_devices = 4;
+    cfg.points_per_device = 40;
+    cfg.model_dim = 16;
+    cfg.target_nmse = 0.0;
+    cfg.nu_comp = 0.0;
+    cfg.nu_link = 0.0;
+    cfg.seed = seed;
+    cfg
+}
+
+fn chan_live(cfg: &ExperimentConfig, scale: f64) -> Result<(LiveCoordinator, ChannelCtl)> {
+    let chan = ChannelTransport::new(cfg.n_devices);
+    let ctl = chan.controller();
+    let mut live = LiveCoordinator::with_transport(cfg, scale, Box::new(chan))?;
+    live.grace = Some(Duration::from_millis(250));
+    Ok((live, ctl))
+}
+
+/// The shared post-run assertions (`expect_dip`: whether the fault must
+/// have visibly shrunk at least one epoch's broadcast set).
+fn accounting(errs: &mut Vec<String>, r: &RunResult, n: usize, expect_dip: bool) {
+    if r.disconnects < 1 {
+        errs.push(format!("disconnects {} < 1: the kill went unobserved", r.disconnects));
+    }
+    if r.rejoins < 1 {
+        errs.push(format!("rejoins {} < 1: the respawn went unobserved", r.rejoins));
+    }
+    match r.epoch_members.last() {
+        Some(&last) if last == n => {}
+        other => errs.push(format!("final members {other:?} != fleet size {n}: no recovery")),
+    }
+    if expect_dip && !r.epoch_members.iter().any(|&m| m < n) {
+        errs.push("members never dipped below fleet size: the kill missed the run".to_string());
+    }
+    if r.epoch_members.len() != r.trace.points.len() {
+        errs.push(format!(
+            "members series length {} != trace length {}",
+            r.epoch_members.len(),
+            r.trace.points.len()
+        ));
+    }
+    let fin = r.trace.points.last().map(|p| p.nmse).unwrap_or(f64::INFINITY);
+    if !(fin < 0.95) {
+        errs.push(format!("did not learn through the fault: final NMSE {fin}"));
+    }
+}
+
+fn verdict(errs: Vec<String>, r: &RunResult) -> Outcome {
+    if errs.is_empty() {
+        Outcome::pass(format!(
+            "converged through the fault (disconnects {}, rejoins {}, final NMSE {:.3e})",
+            r.disconnects,
+            r.rejoins,
+            r.trace.points.last().map(|p| p.nmse).unwrap_or(f64::NAN)
+        ))
+    } else {
+        Outcome::fail(errs.join("; "))
+    }
+}
+
+/// Kill queued before the run starts: the death surfaces during setup
+/// delivery / calibration; the respawn lands mid-run and is re-admitted
+/// at an epoch boundary. (The dip is not asserted — a rejoin processed
+/// during calibration restores the fleet before the first broadcast.)
+fn fault_calibration(seed: u64) -> Result<Outcome> {
+    let mut cfg = fault_cfg(seed);
+    cfg.max_epochs = 200;
+    let (mut live, ctl) = chan_live(&cfg, 0.2)?;
+    ctl.kill(2);
+    let churn = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(50));
+        ctl.respawn(2);
+    });
+    let r = live.train_cfl()?;
+    churn.join().ok();
+    let mut errs = Vec::new();
+    accounting(&mut errs, &r, cfg.n_devices, false);
+    Ok(verdict(errs, &r))
+}
+
+/// Kill inside an epoch's gather window, respawn 100 ms later.
+fn fault_mid_epoch(seed: u64) -> Result<Outcome> {
+    let mut cfg = fault_cfg(seed);
+    cfg.max_epochs = 200;
+    let (mut live, ctl) = chan_live(&cfg, 0.2)?;
+    let churn = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(60));
+        ctl.kill(2);
+        thread::sleep(Duration::from_millis(100));
+        ctl.respawn(2);
+    });
+    let r = live.train_cfl()?;
+    churn.join().ok();
+    let mut errs = Vec::new();
+    accounting(&mut errs, &r, cfg.n_devices, true);
+    Ok(verdict(errs, &r))
+}
+
+/// Kill between two runs of the same coordinator: run 1 ends short one
+/// member, the respawn is admitted by run 2's setup delivery, and run 2
+/// gathers the full fleet every epoch.
+fn fault_epoch_boundary(seed: u64) -> Result<Outcome> {
+    let mut cfg = fault_cfg(seed);
+    cfg.max_epochs = 6;
+    let (mut live, ctl) = chan_live(&cfg, 1e-6)?;
+    let n = cfg.n_devices;
+    ctl.kill(1);
+    let r1 = live.train_uncoded()?;
+    ctl.respawn(1);
+    let r2 = live.train_uncoded()?;
+    let mut errs = Vec::new();
+    if r1.disconnects < 1 {
+        errs.push(format!("run 1 disconnects {} < 1", r1.disconnects));
+    }
+    match r1.epoch_members.last() {
+        Some(&last) if last == n - 1 => {}
+        other => errs.push(format!("run 1 final members {other:?} != {}", n - 1)),
+    }
+    if r2.rejoins != 1 {
+        errs.push(format!("run 2 rejoins {} != 1", r2.rejoins));
+    }
+    if r2.on_time_gradients != (n * cfg.max_epochs) as u64 {
+        errs.push(format!(
+            "run 2 on-time gradients {} != {}: the rejoined device missed epochs",
+            r2.on_time_gradients,
+            n * cfg.max_epochs
+        ));
+    }
+    match r2.epoch_members.last() {
+        Some(&last) if last == n => {}
+        other => errs.push(format!("run 2 final members {other:?} != fleet size {n}")),
+    }
+    let fin = r2.trace.points.last().map(|p| p.nmse).unwrap_or(f64::INFINITY);
+    if errs.is_empty() {
+        Ok(Outcome::pass(format!(
+            "boundary kill/rejoin accounted exactly (run 2 final NMSE {fin:.3e})"
+        )))
+    } else {
+        Ok(Outcome::fail(errs.join("; ")))
+    }
+}
+
+/// Kill, respawn 5 ms later, kill again, then respawn for good: the
+/// second kill can race the rejoin Setup, and the generation filter may
+/// suppress the old incarnation's death notice — the coordinator must
+/// account the implicit disconnect and still recover.
+fn fault_respawn_race(seed: u64) -> Result<Outcome> {
+    let mut cfg = fault_cfg(seed);
+    cfg.max_epochs = 200;
+    let (mut live, ctl) = chan_live(&cfg, 0.2)?;
+    let churn = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(60));
+        ctl.kill(1);
+        thread::sleep(Duration::from_millis(5));
+        ctl.respawn(1);
+        thread::sleep(Duration::from_millis(5));
+        ctl.kill(1);
+        thread::sleep(Duration::from_millis(100));
+        ctl.respawn(1);
+    });
+    let r = live.train_cfl()?;
+    churn.join().ok();
+    let mut errs = Vec::new();
+    accounting(&mut errs, &r, cfg.n_devices, true);
+    Ok(verdict(errs, &r))
+}
+
+pub(crate) fn checks(full: bool) -> Vec<CheckDef> {
+    let def = |id: &'static str, full_only: bool, f: fn(u64) -> Result<Outcome>| {
+        (!full_only || full).then(|| CheckDef {
+            kind: "fault",
+            id: id.to_string(),
+            seed: DEFAULT_SEED,
+            run: Box::new(move |seed| match f(seed) {
+                Ok(o) => o,
+                Err(e) => Outcome::fail(format!("fault cell error: {e:#}")),
+            }),
+        })
+    };
+    [
+        def("fault__mid_epoch", false, fault_mid_epoch),
+        def("fault__epoch_boundary", false, fault_epoch_boundary),
+        def("fault__calibration", true, fault_calibration),
+        def("fault__respawn_race", true, fault_respawn_race),
+    ]
+    .into_iter()
+    .flatten()
+    .collect()
+}

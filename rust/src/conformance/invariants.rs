@@ -1,0 +1,237 @@
+//! Metamorphic invariants: transformations of an experiment that must
+//! not change its outcome, checked through [`crate::testing::prop`].
+//!
+//! Each invariant is a named property with committed regression seeds in
+//! `testing/corpus.txt` (replayed before fresh generation), wrapped so a
+//! property panic becomes a conformance failure whose detail carries the
+//! shrunk counterexample and the `CFL_PROP_SEED` reproduction line.
+//!
+//! * **sim rerun determinism** — two fresh [`SimCoordinator`]s over the
+//!   same config produce bit-identical traces, epoch times, and policy.
+//! * **train order independence** — a sweep's per-scenario records are a
+//!   pure function of each scenario's config: running the grid reversed
+//!   and on a different worker count changes nothing.
+//! * **zip equals cross diagonal** — a zipped axis group expands to
+//!   exactly the diagonal of the cartesian expansion of the same axes.
+//! * **device relabeling symmetry** — reversing the fleet's device order
+//!   permutes the load optimizer's output and nothing else.
+//!
+//! [`SimCoordinator`]: crate::coordinator::SimCoordinator
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::coordinator::SimCoordinator;
+use crate::lb::{optimal_load, optimize_fixed_c};
+use crate::rng::Rng;
+use crate::simnet::Fleet;
+use crate::sweep::{
+    config_fingerprint, run_scenarios, scenario_json_record, ScenarioGrid, ScenarioOutcome,
+    SweepOptions,
+};
+use crate::testing::prop::{self, assert_close, assert_that, Gen, PropResult};
+
+use super::{CheckDef, Outcome, DEFAULT_SEED};
+
+/// Run a named property, converting a `prop::check` panic (which carries
+/// the shrunk counterexample and reproduction seed) into a failure.
+fn run_prop(
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+    body: fn(&mut Gen) -> PropResult,
+) -> Outcome {
+    let cfg = prop::Config { cases, seed, max_shrink: 200 };
+    match catch_unwind(AssertUnwindSafe(|| prop::check(name, cfg, body))) {
+        Ok(()) => Outcome::pass(format!("{cases} cases + corpus seeds")),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "property panicked without a message".to_string());
+            Outcome::fail(msg)
+        }
+    }
+}
+
+fn prop_sim_rerun(g: &mut Gen) -> PropResult {
+    let cfg = g.fleet_config();
+    let mut a = SimCoordinator::new(&cfg).map_err(|e| format!("sim a: {e:#}"))?;
+    let ra = a.train_cfl().map_err(|e| format!("train a: {e:#}"))?;
+    let mut b = SimCoordinator::new(&cfg).map_err(|e| format!("sim b: {e:#}"))?;
+    let rb = b.train_cfl().map_err(|e| format!("train b: {e:#}"))?;
+    assert_that(
+        ra.setup_secs == rb.setup_secs,
+        format!("setup_secs: {} vs {}", ra.setup_secs, rb.setup_secs),
+    )?;
+    assert_that(ra.delta == rb.delta, format!("delta: {} vs {}", ra.delta, rb.delta))?;
+    assert_that(
+        ra.epoch_deadline == rb.epoch_deadline,
+        format!("epoch_deadline: {} vs {}", ra.epoch_deadline, rb.epoch_deadline),
+    )?;
+    assert_that(ra.epoch_times == rb.epoch_times, "epoch_times differ between reruns")?;
+    assert_that(
+        ra.trace.points.len() == rb.trace.points.len(),
+        format!("trace length: {} vs {}", ra.trace.points.len(), rb.trace.points.len()),
+    )?;
+    for (i, (p, q)) in ra.trace.points.iter().zip(&rb.trace.points).enumerate() {
+        assert_that(
+            p.time_s == q.time_s && p.epoch == q.epoch && p.nmse == q.nmse,
+            format!(
+                "trace point {i}: ({}, {}, {}) vs ({}, {}, {})",
+                p.time_s, p.epoch, p.nmse, q.time_s, q.epoch, q.nmse
+            ),
+        )?;
+    }
+    Ok(())
+}
+
+fn prop_train_order(g: &mut Gen) -> PropResult {
+    let es = |e: anyhow::Error| format!("{e:#}");
+    let cfg = g.fleet_config();
+    // distinct-by-construction axis values: offsets larger than the draw
+    // range keep scenario ids unique
+    let base = g.f64_in(0.0, 0.1);
+    let grid = ScenarioGrid::new(&cfg)
+        .axis_f64("nu_comp", &[base, base + 0.3])
+        .map_err(es)?
+        .axis_f64("nu_link", &[base + 0.15, base + 0.45])
+        .map_err(es)?;
+    let fwd_scenarios = grid.expand().map_err(es)?;
+    let rev_scenarios = {
+        let mut v = grid.expand().map_err(es)?;
+        v.reverse();
+        v
+    };
+    let serial = SweepOptions { workers: 1, uncoded_baseline: true, ..Default::default() };
+    let pooled = SweepOptions { workers: 2, uncoded_baseline: true, ..Default::default() };
+    let fwd = run_scenarios(fwd_scenarios, &serial).map_err(es)?;
+    let rev = run_scenarios(rev_scenarios, &pooled).map_err(es)?;
+    let records = |outs: &[ScenarioOutcome]| -> Vec<(String, String)> {
+        let mut v: Vec<(String, String)> =
+            outs.iter().map(|o| (o.scenario.id.clone(), scenario_json_record(o))).collect();
+        v.sort();
+        v
+    };
+    let (f, r) = (records(&fwd), records(&rev));
+    assert_that(
+        f == r,
+        "per-scenario records depend on execution order or worker count",
+    )
+}
+
+fn prop_zip_cross(g: &mut Gen) -> PropResult {
+    let es = |e: anyhow::Error| format!("{e:#}");
+    let cfg = g.fleet_config();
+    let k = g.size_in(2, 4);
+    // distinct values per axis (offset spacing exceeds the draw range)
+    let base_a = g.f64_in(0.0, 0.1);
+    let base_b = g.f64_in(0.0, 0.1);
+    let a: Vec<f64> = (0..k).map(|j| base_a + 0.12 * j as f64).collect();
+    let b: Vec<f64> = (0..k).map(|j| base_b + 0.12 * j as f64).collect();
+    let zipped = ScenarioGrid::new(&cfg)
+        .axis_f64("nu_comp", &a)
+        .map_err(es)?
+        .axis_f64("nu_link", &b)
+        .map_err(es)?
+        .zip_axes(["nu_comp", "nu_link"])
+        .map_err(es)?
+        .expand()
+        .map_err(es)?;
+    let crossed = ScenarioGrid::new(&cfg)
+        .axis_f64("nu_comp", &a)
+        .map_err(es)?
+        .axis_f64("nu_link", &b)
+        .map_err(es)?
+        .expand()
+        .map_err(es)?;
+    assert_that(zipped.len() == k, format!("zipped count {} != {k}", zipped.len()))?;
+    assert_that(crossed.len() == k * k, format!("crossed count {} != {}", crossed.len(), k * k))?;
+    for i in 0..k {
+        // axis 0 is the slowest dimension of the row-major expansion, so
+        // the diagonal of the k×k cross sits at index i·k + i
+        let z = &zipped[i];
+        let c = &crossed[i * k + i];
+        assert_that(
+            z.assignment == c.assignment,
+            format!("assignment at diagonal {i}: {:?} vs {:?}", z.assignment, c.assignment),
+        )?;
+        assert_that(
+            config_fingerprint(&z.cfg) == config_fingerprint(&c.cfg),
+            format!("config fingerprint differs at diagonal {i}"),
+        )?;
+    }
+    Ok(())
+}
+
+fn prop_relabel(g: &mut Gen) -> PropResult {
+    let cfg = g.fleet_config();
+    let mut rng = Rng::new(cfg.seed ^ 0xF1EE7);
+    let fleet = Fleet::from_config(&cfg, &mut rng);
+    let m = fleet.total_points();
+    let c = (((m as f64) * 0.15).round() as usize).max(1);
+    let fwd = optimize_fixed_c(&fleet, c, cfg.epsilon).map_err(|e| format!("optimize fwd: {e:#}"))?;
+    let mut rev_fleet = fleet.clone();
+    rev_fleet.devices.reverse();
+    let rev =
+        optimize_fixed_c(&rev_fleet, c, cfg.epsilon).map_err(|e| format!("optimize rev: {e:#}"))?;
+    let n = fleet.devices.len();
+    // t* comes from the same bisection path; only the aggregate's float
+    // summation order changed, so the deadline and the (order-summed)
+    // expected return get a tolerance while per-device outputs are exact
+    assert_close(fwd.epoch_deadline, rev.epoch_deadline, 1e-9, "epoch_deadline under relabeling")?;
+    assert_close(fwd.expected_return, rev.expected_return, 1e-9, "expected_return under relabeling")?;
+    assert_that(fwd.delta == rev.delta, format!("delta: {} vs {}", fwd.delta, rev.delta))?;
+    assert_that(
+        fwd.parity_rows == rev.parity_rows,
+        format!("parity_rows: {} vs {}", fwd.parity_rows, rev.parity_rows),
+    )?;
+    for i in 0..n {
+        let j = n - 1 - i;
+        assert_that(
+            fwd.device_loads[i] == rev.device_loads[j],
+            format!(
+                "device {i}: load {} != relabeled load {}",
+                fwd.device_loads[i], rev.device_loads[j]
+            ),
+        )?;
+        assert_close(fwd.miss_probs[i], rev.miss_probs[j], 1e-9, "miss prob under relabeling")?;
+    }
+    // and the loads are the pure per-device optimum at the common t*
+    for (i, dev) in fleet.devices.iter().enumerate() {
+        let (l, _) = optimal_load(dev, fwd.epoch_deadline, dev.points);
+        assert_that(
+            l == fwd.device_loads[i],
+            format!("device {i}: optimal_load {l} != policy load {}", fwd.device_loads[i]),
+        )?;
+    }
+    Ok(())
+}
+
+pub(crate) fn checks(full: bool) -> Vec<CheckDef> {
+    let scale = if full { 4 } else { 1 };
+    let def = |name: &'static str, id: &'static str, cases: usize, body: fn(&mut Gen) -> PropResult| {
+        CheckDef {
+            kind: "invariant",
+            id: id.to_string(),
+            seed: DEFAULT_SEED,
+            run: Box::new(move |seed| run_prop(name, cases, seed, body)),
+        }
+    };
+    vec![
+        def("sim rerun determinism", "invariant__sim-rerun-determinism", 6 * scale, prop_sim_rerun),
+        def(
+            "train order independence",
+            "invariant__train-order-independence",
+            3 * scale,
+            prop_train_order,
+        ),
+        def("zip equals cross diagonal", "invariant__zip-cross-diagonal", 16 * scale, prop_zip_cross),
+        def(
+            "device relabeling symmetry",
+            "invariant__device-relabeling",
+            24 * scale,
+            prop_relabel,
+        ),
+    ]
+}

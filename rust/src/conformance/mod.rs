@@ -1,0 +1,221 @@
+//! Cross-backend conformance suite: one fixture corpus, three execution
+//! paths, declared tolerances.
+//!
+//! The repo has three ways to run the same experiment — the DES backend
+//! ([`SimCoordinator`]), the live threaded cluster over in-process
+//! channels, and the live cluster over real TCP framing — plus two
+//! training modes (coded CFL and the uncoded baseline). Refactors keep
+//! touching all of them at once, and "the unit tests pass" says nothing
+//! about whether the *backends still agree with each other*. This module
+//! is that check, runnable as `cfl conformance` and, for the quick tier,
+//! as ordinary `cargo test` cases:
+//!
+//! * [`corpus`] — the fixture corpus: small/medium scenario configs
+//!   spanning fleet size, redundancy δ, MEC heterogeneity ν, data
+//!   sharding, and target-NMSE early stop. Every fixture trains coded and
+//!   uncoded through sim and live(channel), and (one fixture per quick
+//!   run, all of them under `--full`) live(channel) vs live(tcp).
+//! * [`diff`] — the tolerance policy: which quantities must agree
+//!   bit-for-bit across backends (policy outputs: δ, t*, setup cost,
+//!   parity bits), which agree to float-accumulation tolerance (coded
+//!   virtual time axes), and which only loosely (final NMSE, within
+//!   decades — the backends drop different stragglers by design).
+//! * [`invariants`] — metamorphic properties through [`testing::prop`]:
+//!   rerun determinism, scenario-order/parallelism independence, zipped
+//!   grids matching the cartesian diagonal, device-relabeling symmetry of
+//!   the load optimizer.
+//! * [`faults`] — a [`ChannelCtl`] fault-injection matrix killing and
+//!   respawning a device at each lifecycle phase (calibration, mid-epoch,
+//!   run boundary, back-to-back kill/respawn racing the rejoin Setup),
+//!   asserting convergence plus exact `disconnects`/`rejoins`/
+//!   `epoch_members` accounting.
+//! * [`report`] — rendering plus CSV/JSONL artifact streaming.
+//!
+//! Every check runs under an explicit seed and a failure prints a
+//! one-command replay line (`cfl conformance --only '<id>' --seed <s>`).
+//!
+//! [`SimCoordinator`]: crate::coordinator::SimCoordinator
+//! [`ChannelCtl`]: crate::transport::ChannelCtl
+//! [`testing::prop`]: crate::testing::prop
+
+pub mod corpus;
+pub mod diff;
+pub mod faults;
+pub mod invariants;
+pub mod report;
+
+#[cfg(test)]
+mod tests;
+
+use anyhow::Result;
+
+pub use report::render;
+
+/// Base seed for every check (overridable per run with `--seed`).
+pub const DEFAULT_SEED: u64 = 0xC0DE;
+
+/// Verdict of a single conformance check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Pass,
+    Fail,
+    /// The check could not run in this environment (e.g. the sandbox
+    /// denies loopback TCP). Skips never fail a run, but they are
+    /// reported so CI coverage gaps stay visible.
+    Skip,
+}
+
+impl Status {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Status::Pass => "pass",
+            Status::Fail => "FAIL",
+            Status::Skip => "skip",
+        }
+    }
+}
+
+/// One executed check, with enough context to reproduce it.
+#[derive(Clone, Debug)]
+pub struct Check {
+    /// Check family: `"fixture"`, `"invariant"`, or `"fault"`.
+    pub kind: &'static str,
+    /// Stable identifier, e.g. `fixture__base_homog__wire`.
+    pub id: String,
+    pub status: Status,
+    /// The seed the check actually ran under.
+    pub seed: u64,
+    /// Pass summary or failure diagnostics.
+    pub detail: String,
+    /// Single-command reproduction line.
+    pub replay: String,
+    /// Host wall-clock the check took.
+    pub wall_s: f64,
+}
+
+/// Suite options (the `cfl conformance` flag surface).
+#[derive(Clone, Debug, Default)]
+pub struct Options {
+    /// Run the full tier: medium fixtures, a TCP leg per fixture, the
+    /// whole fault matrix, and more property cases.
+    pub full: bool,
+    /// Run only checks whose id contains this substring.
+    pub only: Option<String>,
+    /// Override every check's seed (for replaying a reported failure).
+    pub seed: Option<u64>,
+    /// Stream `conformance.csv` / `conformance.jsonl` into this directory.
+    pub out_dir: Option<String>,
+    /// Print a progress line per check to stderr.
+    pub progress: bool,
+}
+
+/// Result of a suite run.
+#[derive(Clone, Debug, Default)]
+pub struct ConformanceReport {
+    pub checks: Vec<Check>,
+}
+
+impl ConformanceReport {
+    /// True when no check failed (skips do not fail a run).
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.status != Status::Fail)
+    }
+
+    /// `(passed, failed, skipped)` counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut n = (0, 0, 0);
+        for c in &self.checks {
+            match c.status {
+                Status::Pass => n.0 += 1,
+                Status::Fail => n.1 += 1,
+                Status::Skip => n.2 += 1,
+            }
+        }
+        n
+    }
+
+    pub fn failures(&self) -> impl Iterator<Item = &Check> {
+        self.checks.iter().filter(|c| c.status == Status::Fail)
+    }
+}
+
+/// What a check's body reports back; the runner adds identity and replay.
+pub struct Outcome {
+    pub status: Status,
+    pub detail: String,
+}
+
+impl Outcome {
+    pub fn pass(detail: impl Into<String>) -> Self {
+        Self { status: Status::Pass, detail: detail.into() }
+    }
+
+    pub fn fail(detail: impl Into<String>) -> Self {
+        Self { status: Status::Fail, detail: detail.into() }
+    }
+
+    pub fn skip(detail: impl Into<String>) -> Self {
+        Self { status: Status::Skip, detail: detail.into() }
+    }
+}
+
+/// A registered check: identity plus a seeded body.
+pub(crate) struct CheckDef {
+    pub kind: &'static str,
+    pub id: String,
+    pub seed: u64,
+    pub run: Box<dyn Fn(u64) -> Outcome>,
+}
+
+/// The one-command reproduction line reported for failures.
+pub fn replay_command(id: &str, seed: u64, full: bool) -> String {
+    let tier = if full { " --full" } else { "" };
+    format!("cfl conformance --only '{id}' --seed {seed}{tier}")
+}
+
+/// Run the suite. Checks execute serially (live fixtures and the fault
+/// matrix own the host's wall clock; running them concurrently would
+/// distort the very deadlines under test). Artifacts stream per check, so
+/// a crashed run still leaves a usable partial report.
+pub fn run(opts: &Options) -> Result<ConformanceReport> {
+    let mut defs = Vec::new();
+    defs.extend(corpus::checks(opts.full));
+    defs.extend(invariants::checks(opts.full));
+    defs.extend(faults::checks(opts.full));
+    if let Some(pat) = &opts.only {
+        defs.retain(|d| d.id.contains(pat.as_str()));
+        anyhow::ensure!(!defs.is_empty(), "--only '{pat}' matches no conformance check");
+    }
+
+    let mut sink = report::ArtifactSink::create(opts.out_dir.as_deref())?;
+    let mut checks = Vec::with_capacity(defs.len());
+    for def in defs {
+        let seed = opts.seed.unwrap_or(def.seed);
+        let replay = replay_command(&def.id, seed, opts.full);
+        let t0 = std::time::Instant::now();
+        let outcome = (def.run)(seed);
+        let check = Check {
+            kind: def.kind,
+            id: def.id,
+            status: outcome.status,
+            seed,
+            detail: outcome.detail,
+            replay,
+            wall_s: t0.elapsed().as_secs_f64(),
+        };
+        crate::obs_event!(
+            Info,
+            "conformance_check",
+            check = check.id.as_str(),
+            status = check.status.as_str(),
+            wall_s = check.wall_s,
+        );
+        if opts.progress {
+            eprintln!("conformance: {:>4}  {}  ({:.2}s)", check.status.as_str(), check.id, check.wall_s);
+        }
+        sink.push(&check)?;
+        checks.push(check);
+    }
+    sink.flush()?;
+    Ok(ConformanceReport { checks })
+}

@@ -1,0 +1,115 @@
+//! Conformance reporting: the per-check summary table and the streamed
+//! CSV/JSONL artifacts (`conformance.csv` / `conformance.jsonl`).
+//!
+//! Artifacts flush per check, so an interrupted or crashed suite run
+//! still leaves every completed verdict on disk. The JSONL lines carry
+//! the full multi-line detail (JSON-escaped); the CSV and the table
+//! flatten it to one line.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::{CsvWriter, Table};
+use crate::sweep::json;
+
+use super::{Check, ConformanceReport};
+
+/// Table-cell width for the detail column.
+const DETAIL_WIDTH: usize = 72;
+
+fn one_line(s: &str) -> String {
+    s.replace('\n', " | ").replace('\r', "")
+}
+
+fn clipped(s: &str, width: usize) -> String {
+    let flat = one_line(s);
+    if flat.chars().count() <= width {
+        return flat;
+    }
+    let head: String = flat.chars().take(width.saturating_sub(1)).collect();
+    format!("{head}…")
+}
+
+/// Render the per-check verdict table.
+pub fn render(report: &ConformanceReport) -> String {
+    let mut table = Table::new(&["kind", "check", "status", "seed", "wall_s", "detail"]);
+    for c in &report.checks {
+        table.row(&[
+            c.kind.to_string(),
+            c.id.clone(),
+            c.status.as_str().to_string(),
+            format!("{:#x}", c.seed),
+            format!("{:.2}", c.wall_s),
+            clipped(&c.detail, DETAIL_WIDTH),
+        ]);
+    }
+    table.render()
+}
+
+fn json_line(c: &Check) -> String {
+    format!(
+        "{{\"kind\": \"{}\", \"check\": \"{}\", \"status\": \"{}\", \"seed\": {}, \
+         \"wall_s\": {}, \"detail\": \"{}\", \"replay\": \"{}\"}}",
+        json::escape(c.kind),
+        json::escape(&c.id),
+        c.status.as_str(),
+        c.seed,
+        json::num(c.wall_s),
+        json::escape(&c.detail),
+        json::escape(&c.replay),
+    )
+}
+
+/// Per-check artifact streamer; a no-op when no output directory is set.
+pub struct ArtifactSink {
+    csv: Option<CsvWriter>,
+    jsonl: Option<BufWriter<File>>,
+}
+
+impl ArtifactSink {
+    pub fn create(out_dir: Option<&str>) -> Result<Self> {
+        let Some(dir) = out_dir else {
+            return Ok(Self { csv: None, jsonl: None });
+        };
+        let csv = CsvWriter::create(
+            format!("{dir}/conformance.csv"),
+            &["kind", "check", "status", "seed", "wall_s", "detail", "replay"],
+        )?;
+        let jsonl_path = format!("{dir}/conformance.jsonl");
+        let file =
+            File::create(&jsonl_path).with_context(|| format!("create {jsonl_path}"))?;
+        Ok(Self { csv: Some(csv), jsonl: Some(BufWriter::new(file)) })
+    }
+
+    pub fn push(&mut self, c: &Check) -> Result<()> {
+        if let Some(csv) = &mut self.csv {
+            csv.write_row_str(&[
+                c.kind,
+                &c.id,
+                c.status.as_str(),
+                &c.seed.to_string(),
+                &format!("{:.3}", c.wall_s),
+                &one_line(&c.detail),
+                &c.replay,
+            ])?;
+            csv.flush()?;
+        }
+        if let Some(out) = &mut self.jsonl {
+            writeln!(out, "{}", json_line(c))?;
+            out.flush()?;
+        }
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if let Some(csv) = &mut self.csv {
+            csv.flush()?;
+        }
+        if let Some(out) = &mut self.jsonl {
+            out.flush()?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,133 @@
+use super::*;
+
+fn failures_summary(report: &ConformanceReport) -> String {
+    report
+        .failures()
+        .map(|c| format!("{}: {} (replay: {})", c.id, c.detail, c.replay))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// The quick fixture corpus is the `cargo test` face of `cfl
+/// conformance`: sim vs live(channel) on every small fixture plus one
+/// channel-vs-tcp wire leg.
+#[test]
+fn quick_fixtures_agree_across_backends() {
+    let opts = Options { only: Some("fixture__".into()), ..Options::default() };
+    let report = run(&opts).unwrap();
+    assert!(report.checks.len() >= 6, "expected the full quick fixture corpus, got {}", report.checks.len());
+    assert!(report.passed(), "fixture conformance failed:\n{}", failures_summary(&report));
+}
+
+#[test]
+fn metamorphic_invariants_hold() {
+    let opts = Options { only: Some("invariant__".into()), ..Options::default() };
+    let report = run(&opts).unwrap();
+    assert_eq!(report.checks.len(), 4);
+    assert!(report.passed(), "invariant conformance failed:\n{}", failures_summary(&report));
+}
+
+#[test]
+fn fault_matrix_quick_cells_account_lifecycle() {
+    let opts = Options { only: Some("fault__".into()), ..Options::default() };
+    let report = run(&opts).unwrap();
+    assert_eq!(report.checks.len(), 2, "quick tier runs the mid-epoch and boundary cells");
+    assert!(report.passed(), "fault conformance failed:\n{}", failures_summary(&report));
+}
+
+#[test]
+fn full_tier_registers_the_whole_matrix() {
+    // registration only — the full tier's execution belongs to CI's
+    // non-blocking job, not to `cargo test`
+    let quick: Vec<String> = corpus::checks(false)
+        .iter()
+        .chain(&invariants::checks(false))
+        .chain(&faults::checks(false))
+        .map(|d| d.id.clone())
+        .collect();
+    let full: Vec<String> = corpus::checks(true)
+        .iter()
+        .chain(&invariants::checks(true))
+        .chain(&faults::checks(true))
+        .map(|d| d.id.clone())
+        .collect();
+    for id in &quick {
+        assert!(full.contains(id), "quick check {id} missing from the full tier");
+    }
+    for id in ["fixture__medium_fleet8", "fixture__early_stop__wire", "fault__calibration", "fault__respawn_race"] {
+        assert!(full.iter().any(|f| f == id), "full tier missing {id}");
+        assert!(!quick.iter().any(|q| q == id), "{id} should be full-tier only");
+    }
+}
+
+#[test]
+fn replay_line_reproduces_a_check() {
+    assert_eq!(
+        replay_command("fixture__base_homog", 0xC0DE, false),
+        "cfl conformance --only 'fixture__base_homog' --seed 49374"
+    );
+    assert_eq!(
+        replay_command("fault__respawn_race", 7, true),
+        "cfl conformance --only 'fault__respawn_race' --seed 7 --full"
+    );
+}
+
+#[test]
+fn unknown_only_filter_is_an_error() {
+    let opts = Options { only: Some("no_such_check".into()), ..Options::default() };
+    let err = run(&opts).unwrap_err().to_string();
+    assert!(err.contains("no_such_check"), "unhelpful error: {err}");
+}
+
+#[test]
+fn artifacts_stream_one_line_per_check() {
+    let dir = std::env::temp_dir().join("cfl_conformance_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = Options {
+        only: Some("invariant__zip-cross-diagonal".into()),
+        out_dir: Some(dir.to_string_lossy().into_owned()),
+        ..Options::default()
+    };
+    let report = run(&opts).unwrap();
+    assert_eq!(report.checks.len(), 1);
+    assert!(report.passed(), "{}", failures_summary(&report));
+
+    let csv = std::fs::read_to_string(dir.join("conformance.csv")).unwrap();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), 2, "header + one check row:\n{csv}");
+    assert!(lines[0].starts_with("kind,check,status,"));
+    assert!(lines[1].contains("invariant__zip-cross-diagonal"));
+
+    let jsonl = std::fs::read_to_string(dir.join("conformance.jsonl")).unwrap();
+    let records: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(records.len(), 1);
+    assert!(records[0].contains("\"check\": \"invariant__zip-cross-diagonal\""));
+    assert!(records[0].contains("\"status\": \"pass\""));
+    assert!(records[0].contains("\"replay\": \"cfl conformance --only "));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn failing_checks_render_with_replay_and_fail_the_report() {
+    let check = Check {
+        kind: "fixture",
+        id: "fixture__broken".into(),
+        status: Status::Fail,
+        seed: 0xBAD,
+        detail: "delta: 0.1 vs 0.2 (rel tol 1e-12)\nsecond line".into(),
+        replay: replay_command("fixture__broken", 0xBAD, false),
+        wall_s: 0.5,
+    };
+    let report = ConformanceReport { checks: vec![check] };
+    assert!(!report.passed());
+    assert_eq!(report.counts(), (0, 1, 0));
+    let rendered = render(&report);
+    assert!(rendered.contains("FAIL"), "{rendered}");
+    assert!(rendered.contains("fixture__broken"));
+    // multi-line details flatten into the table cell
+    assert!(rendered.contains("(rel tol 1e-12) | second line"), "{rendered}");
+    assert_eq!(
+        report.checks[0].replay,
+        "cfl conformance --only 'fixture__broken' --seed 2989"
+    );
+}

@@ -47,12 +47,16 @@
 //! fleet itself speaks a pluggable [`transport`] — in-process channel
 //! threads by default, or TCP sockets so devices are real OS processes
 //! (`cfl serve` / `cfl device`, or `cfl sweep --live --transport tcp`).
-//! See `docs/ARCHITECTURE.md` for the crate map, the wire format, and
-//! the paper-equation index.
+//! The [`conformance`] suite (`cfl conformance`) checks that all of
+//! these execution paths still agree — fixture corpus, metamorphic
+//! invariants, and a device fault-injection matrix under declared
+//! tolerances. See `docs/ARCHITECTURE.md` for the crate map, the wire
+//! format, and the paper-equation index.
 
 pub mod cli;
 pub mod coding;
 pub mod config;
+pub mod conformance;
 pub mod coordinator;
 pub mod data;
 pub mod des;

@@ -21,6 +21,12 @@
 //!   compute partial gradients until the session shuts down.
 //! * `bench-check` — compare a bench/sweep JSON report against a
 //!   committed baseline and fail on coding-gain regressions (CI).
+//! * `conformance` — run the cross-backend conformance suite: fixture
+//!   corpus (sim vs live(chan) vs live(tcp), coded vs uncoded under
+//!   declared tolerances), metamorphic invariants, and the device
+//!   fault-injection matrix. `--full` adds the medium fixtures, a TCP
+//!   leg per fixture, and the whole fault matrix; failures print a
+//!   one-command replay line (`--only <id> --seed <s>`).
 //!
 //! Configuration: paper-scale defaults (`--paper`) or test-scale
 //! (`--small`, default), overridable by an INI file (`--config`) and then
@@ -44,6 +50,7 @@ fn parser() -> Parser {
         .subcommand("serve", "TCP coordinator: bind, wait for devices, train")
         .subcommand("device", "TCP device worker: join a cfl serve coordinator")
         .subcommand("bench-check", "compare a bench report against a committed baseline")
+        .subcommand("conformance", "run the sim/live/tcp conformance suite (fixtures, invariants, faults)")
         .opt("config", "file.ini", "INI config file ([experiment] + [sweep] sections)")
         .opt("seed", "u64", "root seed (default from config)")
         .opt("delta", "f64|auto", "coding redundancy δ = c/m (default: optimizer)")
@@ -75,6 +82,7 @@ fn parser() -> Parser {
             "f64|off",
             "bench-check: allowed fractional epochs/s drop (default 0.5; off = gain-only)",
         )
+        .opt("only", "substr", "conformance: run only checks whose id contains this substring")
         .opt("log-level", "error|warn|info|debug|trace", "stderr log level (default info; CFL_LOG env var works too)")
         .opt(
             "events-out",
@@ -82,6 +90,7 @@ fn parser() -> Parser {
             "write structured JSONL events (sweep: a directory, one file per scenario; otherwise one file)",
         )
         .opt("trace-decimate", "N", "sweep --traces-dir: keep every Nth trace row (first and last always kept)")
+        .flag("full", "conformance: run the full tier (tcp everywhere, medium fixtures, whole fault matrix)")
         .flag("retry", "device: reconnect with backoff after a lost link (rejoin the fleet)")
         .flag("live", "sweep: run scenarios through the live coordinator")
         .flag("probe", "serve: just test that the address can be bound, then exit")
@@ -331,16 +340,32 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
         backend,
     };
 
-    // --resume: recover completed rows from the prior run's CSV and run
-    // only the remainder; a missing file just means nothing completed
+    // --resume: recover completed rows from the prior run's CSV (and
+    // their report records from its sidecar) and run only the remainder;
+    // a missing file just means nothing completed
     let header = sweep::scenario_csv_header(&grid);
     let scenarios = grid.expand()?;
-    let resume = match args.get("resume") {
+    let (resume, records) = match args.get("resume") {
         Some(path) if std::path::Path::new(path).exists() => {
-            let state = sweep::ResumeState::load(path, &header)?;
+            let mut state = sweep::ResumeState::load(path, &header)?;
             // same columns is necessary but not sufficient: each row's
             // config fingerprint must match this grid's scenario too
             state.check_compat(&scenarios)?;
+            // the record sidecar is what lets --resume regenerate the
+            // JSON/bench reports too; a CSV row whose record is missing
+            // (torn sidecar line) is simply re-run so all three
+            // artifacts stay consistent. A sidecar-less CSV (from a
+            // pre-sidecar sweep) still resumes, falling back to
+            // fresh-outcome-only reports.
+            let side = sweep::sidecar_path(path);
+            let records = if std::path::Path::new(&side).exists() {
+                let records = sweep::SidecarRecords::load(&side)?;
+                state.retain(|id| records.contains(id));
+                records
+            } else {
+                cfl::obs_event!(Warn, "resume_sidecar_missing", sidecar = side.as_str());
+                sweep::SidecarRecords::empty()
+            };
             let recovered = scenarios.iter().filter(|s| state.contains(&s.id)).count();
             cfl::obs_event!(Info, "resume_recovered", recovered = recovered, csv = path);
             if state.len() > recovered {
@@ -351,13 +376,13 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
                     csv = path,
                 );
             }
-            state
+            (state, records)
         }
         Some(path) => {
             cfl::obs_event!(Info, "resume_csv_missing", csv = path);
-            sweep::ResumeState::empty()
+            (sweep::ResumeState::empty(), sweep::SidecarRecords::empty())
         }
-        None => sweep::ResumeState::empty(),
+        None => (sweep::ResumeState::empty(), sweep::SidecarRecords::empty()),
     };
     let ids: Vec<String> = scenarios.iter().map(|s| s.id.clone()).collect();
     let todo: Vec<_> = scenarios.into_iter().filter(|s| !resume.contains(&s.id)).collect();
@@ -372,8 +397,11 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
         std::fs::create_dir_all(dir).with_context(|| format!("mkdir -p {dir}"))?;
     }
     let mut merged = sweep::MergedScenarioCsv::create(&csv_path, &header, &ids, &resume)?;
+    let mut recs =
+        sweep::RecordLog::create(&sweep::sidecar_path(&csv_path), &ids, &resume, &records)?;
     let outcomes = sweep::run_scenarios_streaming(todo, &opts, |o| {
         merged.push(o)?;
+        recs.push(o)?;
         if let Some(dir) = traces_dir {
             sweep::write_outcome_traces_decimated(dir, o, decimate)?;
         }
@@ -382,10 +410,27 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     merged.finish()?;
 
     let json_path = format!("{out_dir}/sweep_report.json");
-    sweep::write_json(&json_path, &grid, &outcomes)?;
-    if let Some(bench_path) = args.get("bench-out") {
-        sweep::write_bench_json(bench_path, &outcomes)?;
-        cfl::obs_event!(Info, "bench_report_written", path = bench_path);
+    match recs.finish()? {
+        Some(pairs) => {
+            let (sweep_recs, bench_recs): (Vec<String>, Vec<String>) =
+                pairs.into_iter().unzip();
+            sweep::write_json_records(&json_path, &grid, &sweep_recs)?;
+            if let Some(bench_path) = args.get("bench-out") {
+                sweep::write_bench_json_records(bench_path, &bench_recs)?;
+                cfl::obs_event!(Info, "bench_report_written", path = bench_path);
+            }
+        }
+        None => {
+            // pre-sidecar resume: the recovered scenarios' records are
+            // gone, so the reports cover the freshly-run remainder only
+            // (the merged CSV is still complete)
+            cfl::obs_event!(Warn, "resume_reports_fresh_only", json = json_path.as_str());
+            sweep::write_json(&json_path, &grid, &outcomes)?;
+            if let Some(bench_path) = args.get("bench-out") {
+                sweep::write_bench_json(bench_path, &outcomes)?;
+                cfl::obs_event!(Info, "bench_report_written", path = bench_path);
+            }
+        }
     }
     if !resume.is_empty() {
         cfl::obs_event!(
@@ -556,6 +601,31 @@ fn cmd_bench_check(args: &cfl::cli::Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_conformance(args: &cfl::cli::Args) -> Result<()> {
+    use cfl::conformance::{self, Options};
+    let seed = args
+        .get("seed")
+        .map(|s| s.parse::<u64>().with_context(|| format!("--seed '{s}'")))
+        .transpose()?;
+    let opts = Options {
+        full: args.has_flag("full"),
+        only: args.get("only").map(String::from),
+        seed,
+        out_dir: Some(args.get_or("out", "results".to_string())?),
+        progress: !args.has_flag("quiet"),
+    };
+    let report = conformance::run(&opts)?;
+    println!("{}", conformance::render(&report));
+    let (pass, fail, skip) = report.counts();
+    let tier = if opts.full { "full" } else { "quick" };
+    println!("conformance ({tier} tier): {pass} passed, {fail} failed, {skip} skipped");
+    for c in report.failures() {
+        println!("  FAIL {} — replay: {}", c.id, c.replay);
+    }
+    anyhow::ensure!(report.passed(), "{fail} conformance check(s) failed");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     // --help is a parse outcome, not a parser-side exit (see cli docs) —
     // rendering and terminating are this binary's decisions alone
@@ -575,6 +645,7 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("device") => cmd_device(&args),
         Some("bench-check") => cmd_bench_check(&args),
+        Some("conformance") => cmd_conformance(&args),
         _ => {
             println!("{}", parser().help("cfl"));
             Ok(())

@@ -28,52 +28,70 @@ use crate::metrics::Table;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 
+/// Render one scenario's bench record — the single-line `{…}` object
+/// [`write_bench_json`] emits per scenario. Factored out so the resume
+/// path can persist records as scenarios finish and later interleave
+/// recovered records verbatim ([`write_bench_json_records`]).
+pub fn bench_json_record(o: &ScenarioOutcome) -> String {
+    let gain = o
+        .gain()
+        .filter(|g| g.is_finite())
+        .map(|g| g.to_string())
+        .unwrap_or_else(|| "null".into());
+    let mut wall = o.coded.wall_secs;
+    if let Some(u) = &o.uncoded {
+        wall += u.wall_secs;
+    }
+    let epochs = o.coded.epoch_times.len();
+    let eps = (o.coded.wall_secs > 0.0)
+        .then(|| epochs as f64 / o.coded.wall_secs)
+        .filter(|p| p.is_finite());
+    let mut s = format!(
+        "{{\"id\": \"{}\", \"backend\": \"{}\", \"gain\": {gain}, \
+         \"wall_s\": {:.3}, \"epochs\": {epochs}, \"epochs_per_sec\": {}",
+        json_escape(&o.scenario.id),
+        json_escape(o.backend),
+        wall,
+        json_opt(eps),
+    );
+    s.push_str(", \"phases\": {");
+    for (j, p) in o.coded.phases.iter().enumerate() {
+        if j > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!(
+            "\"{}\": {{\"count\": {}, \"total_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}}}",
+            p.phase,
+            p.count,
+            json_num(p.total_s * 1e3),
+            json_num(p.p50_s * 1e3),
+            json_num(p.p95_s * 1e3),
+        ));
+    }
+    s.push_str("}}");
+    s
+}
+
 /// Write the compact bench report: one record per scenario with the
 /// coding gain (`null` when a run missed its target), the host wall time
 /// the scenario took (coded + uncoded runs), the coded run's wall-clock
 /// throughput, and its per-phase timing digests.
 pub fn write_bench_json(path: &str, outcomes: &[ScenarioOutcome]) -> Result<()> {
+    let records: Vec<String> = outcomes.iter().map(bench_json_record).collect();
+    write_bench_json_records(path, &records)
+}
+
+/// [`write_bench_json`] from pre-rendered records — the resume path,
+/// where recovered records (with their original host wall times) are
+/// interleaved verbatim with freshly-run scenarios' records.
+pub fn write_bench_json_records(path: &str, records: &[String]) -> Result<()> {
     let mut s = String::from("{\n  \"scenarios\": [");
-    for (i, o) in outcomes.iter().enumerate() {
+    for (i, r) in records.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
-        let gain = o
-            .gain()
-            .filter(|g| g.is_finite())
-            .map(|g| g.to_string())
-            .unwrap_or_else(|| "null".into());
-        let mut wall = o.coded.wall_secs;
-        if let Some(u) = &o.uncoded {
-            wall += u.wall_secs;
-        }
-        let epochs = o.coded.epoch_times.len();
-        let eps = (o.coded.wall_secs > 0.0)
-            .then(|| epochs as f64 / o.coded.wall_secs)
-            .filter(|p| p.is_finite());
-        s.push_str(&format!(
-            "\n    {{\"id\": \"{}\", \"backend\": \"{}\", \"gain\": {gain}, \
-             \"wall_s\": {:.3}, \"epochs\": {epochs}, \"epochs_per_sec\": {}",
-            json_escape(&o.scenario.id),
-            json_escape(o.backend),
-            wall,
-            json_opt(eps),
-        ));
-        s.push_str(", \"phases\": {");
-        for (j, p) in o.coded.phases.iter().enumerate() {
-            if j > 0 {
-                s.push_str(", ");
-            }
-            s.push_str(&format!(
-                "\"{}\": {{\"count\": {}, \"total_ms\": {}, \"p50_ms\": {}, \"p95_ms\": {}}}",
-                p.phase,
-                p.count,
-                json_num(p.total_s * 1e3),
-                json_num(p.p50_s * 1e3),
-                json_num(p.p95_s * 1e3),
-            ));
-        }
-        s.push_str("}}");
+        s.push_str("\n    ");
+        s.push_str(r);
     }
     s.push_str("\n  ]\n}\n");
     let path_ref = std::path::Path::new(path);
@@ -87,7 +105,7 @@ pub fn write_bench_json(path: &str, outcomes: &[ScenarioOutcome]) -> Result<()> 
 
 /// Index of the first unescaped `"` in `s` (the end of a JSON string
 /// whose opening quote has already been consumed).
-fn str_end(s: &str) -> Option<usize> {
+pub(crate) fn str_end(s: &str) -> Option<usize> {
     let mut escaped = false;
     for (i, b) in s.bytes().enumerate() {
         if escaped {
@@ -107,7 +125,7 @@ fn str_end(s: &str) -> Option<usize> {
 /// values don't fool the scan; nested objects (the sweep report's
 /// `"assignment": {…}`, the bench report's `"phases": {…}`) are skipped
 /// whole.
-fn record_end(tail: &str) -> usize {
+pub(crate) fn record_end(tail: &str) -> usize {
     let mut depth = 1usize;
     let mut in_str = false;
     let mut escaped = false;
@@ -141,7 +159,7 @@ fn record_end(tail: &str) -> usize {
 /// inside one record's interior, or `None` when the record has no such
 /// field. Top-level scan only — `key` must not name a key that also
 /// appears inside a record's nested objects.
-fn field_raw<'a>(record: &'a str, key: &str) -> Option<&'a str> {
+pub(crate) fn field_raw<'a>(record: &'a str, key: &str) -> Option<&'a str> {
     let needle = format!("\"{key}\": ");
     let at = record.find(&needle)?;
     let tail = &record[at + needle.len()..];
@@ -149,8 +167,19 @@ fn field_raw<'a>(record: &'a str, key: &str) -> Option<&'a str> {
     Some(tail[..end].trim())
 }
 
+/// Id of a scenario record (its JSON-escaped form, emitted verbatim
+/// when re-interpolated — already-escaped text must not be re-escaped).
+/// Every record this repo writes starts `{"id": "…`.
+pub(crate) fn record_id(record: &str) -> Result<String> {
+    let rest = record
+        .strip_prefix("{\"id\": \"")
+        .with_context(|| format!("scenario record does not start with an id: {record}"))?;
+    let end = str_end(rest).context("unterminated scenario id")?;
+    Ok(rest[..end].to_string())
+}
+
 /// Parse a scalar field's raw text: `null` → `None`, a number → `Some`.
-fn parse_opt_f64(id: &str, key: &str, raw: &str) -> Result<Option<f64>> {
+pub(crate) fn parse_opt_f64(id: &str, key: &str, raw: &str) -> Result<Option<f64>> {
     if raw == "null" {
         return Ok(None);
     }

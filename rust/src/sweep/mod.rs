@@ -34,7 +34,10 @@
 //! * [`resume`] — `cfl sweep --resume <csv>`: recover completed rows
 //!   from a partial per-scenario CSV, re-run only the remainder, and
 //!   merge to a CSV byte-identical (sim backend) to an uninterrupted
-//!   run.
+//!   run. A `.records.jsonl` sidecar streams each finished scenario's
+//!   report + bench records alongside the CSV, so resumed JSON and
+//!   bench reports cover recovered scenarios too (the JSON report
+//!   byte-identically).
 //! * [`baseline`] — the CI bench-smoke pipeline: a compact per-scenario
 //!   gain/wall-time report (`cfl sweep --bench-out`) and the regression
 //!   check against a committed baseline (`cfl bench-check`).
@@ -73,16 +76,16 @@ pub mod resume;
 pub mod runner;
 
 pub use baseline::{
-    check_gain_regression, check_regression, parse_bench_records, parse_gains, write_bench_json,
-    BenchRecord,
+    bench_json_record, check_gain_regression, check_regression, parse_bench_records, parse_gains,
+    write_bench_json, write_bench_json_records, BenchRecord,
 };
 pub use grid::{config_fingerprint, Axis, Dim, Scenario, ScenarioGrid, SWEEPABLE_KEYS};
 pub use report::{
-    gain_matrix, gain_stats, scenario_csv_header, scenario_csv_row, summary_table,
-    trace_file_stem, write_json, write_outcome_traces, write_outcome_traces_decimated,
-    write_scenario_csv,
+    gain_matrix, gain_stats, scenario_csv_header, scenario_csv_row, scenario_json_record,
+    summary_table, trace_file_stem, write_json, write_json_records, write_outcome_traces,
+    write_outcome_traces_decimated, write_scenario_csv,
 };
-pub use resume::{MergedScenarioCsv, ResumeState};
+pub use resume::{sidecar_path, MergedScenarioCsv, RecordLog, ResumeState, SidecarRecords};
 pub use runner::{
     run_grid, run_scenarios, run_scenarios_streaming, run_tasks, run_tasks_streaming,
     ScenarioOutcome, SweepOptions,

@@ -186,9 +186,54 @@ pub fn gain_stats(outcomes: &[ScenarioOutcome]) -> Option<(Summary, String)> {
     best.map(|(_, id)| (summary, id.to_string()))
 }
 
+/// Render one scenario's report record — the single-line `{…}` object
+/// [`write_json`] emits per scenario. Free of wall-clock values, so the
+/// bytes are a pure function of the scenario config; the resume path
+/// persists these as scenarios finish and later re-assembles the full
+/// report from recovered + fresh records ([`write_json_records`]).
+pub fn scenario_json_record(o: &ScenarioOutcome) -> String {
+    let target = o.scenario.cfg.target_nmse;
+    let mut s = format!("{{\"id\": \"{}\", ", json_escape(&o.scenario.id));
+    s.push_str("\"assignment\": {");
+    for (j, (k, v)) in o.scenario.assignment.iter().enumerate() {
+        if j > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
+    }
+    s.push_str("}, ");
+    s.push_str(&format!("\"backend\": \"{}\", ", json_escape(o.backend)));
+    s.push_str(&format!("\"seed\": {}, ", o.scenario.cfg.seed));
+    s.push_str(&format!("\"delta\": {}, ", json_num(o.coded.delta)));
+    s.push_str(&format!("\"epoch_deadline_s\": {}, ", json_num(o.coded.epoch_deadline)));
+    s.push_str(&format!("\"setup_s\": {}, ", json_num(o.coded.setup_secs)));
+    s.push_str(&format!("\"epochs\": {}, ", o.coded.epoch_times.len()));
+    s.push_str(&format!("\"final_nmse\": {}, ", json_opt(o.coded.trace.final_nmse())));
+    s.push_str(&format!("\"t_cfl_s\": {}, ", json_opt(o.coded.time_to(target))));
+    s.push_str(&format!(
+        "\"t_uncoded_s\": {}, ",
+        json_opt(o.uncoded.as_ref().and_then(|u| u.time_to(target)))
+    ));
+    s.push_str(&format!("\"gain\": {}, ", json_opt(o.gain())));
+    s.push_str(&format!("\"comm_load\": {}}}", json_opt(o.comm_load())));
+    s
+}
+
 /// Write the machine-readable report: axes, zip groups, per-scenario
 /// metrics, and the gain aggregate.
 pub fn write_json(path: &str, grid: &ScenarioGrid, outcomes: &[ScenarioOutcome]) -> Result<()> {
+    let records: Vec<String> = outcomes.iter().map(scenario_json_record).collect();
+    write_json_records(path, grid, &records)
+}
+
+/// [`write_json`] from pre-rendered scenario records — the resume path.
+/// The envelope (axes, zips, aggregate) is recomputed from the grid and
+/// the records' `gain` fields, and `f64` text round-trips exactly
+/// (shortest-representation `Display`), so a resumed sim sweep's report
+/// is byte-identical to an uninterrupted run's.
+pub fn write_json_records(path: &str, grid: &ScenarioGrid, records: &[String]) -> Result<()> {
+    use super::baseline::{field_raw, parse_opt_f64, record_id};
+
     let mut s = String::from("{\n  \"axes\": [");
     for (i, axis) in grid.axes().iter().enumerate() {
         if i > 0 {
@@ -218,50 +263,42 @@ pub fn write_json(path: &str, grid: &ScenarioGrid, outcomes: &[ScenarioOutcome])
         s.push(']');
     }
     s.push_str("],\n  \"scenarios\": [");
-    for (i, o) in outcomes.iter().enumerate() {
+    for (i, r) in records.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
-        let target = o.scenario.cfg.target_nmse;
-        s.push_str(&format!("\n    {{\"id\": \"{}\", ", json_escape(&o.scenario.id)));
-        s.push_str("\"assignment\": {");
-        for (j, (k, v)) in o.scenario.assignment.iter().enumerate() {
-            if j > 0 {
-                s.push_str(", ");
-            }
-            s.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
-        }
-        s.push_str("}, ");
-        s.push_str(&format!("\"backend\": \"{}\", ", json_escape(o.backend)));
-        s.push_str(&format!("\"seed\": {}, ", o.scenario.cfg.seed));
-        s.push_str(&format!("\"delta\": {}, ", json_num(o.coded.delta)));
-        s.push_str(&format!("\"epoch_deadline_s\": {}, ", json_num(o.coded.epoch_deadline)));
-        s.push_str(&format!("\"setup_s\": {}, ", json_num(o.coded.setup_secs)));
-        s.push_str(&format!("\"epochs\": {}, ", o.coded.epoch_times.len()));
-        s.push_str(&format!("\"final_nmse\": {}, ", json_opt(o.coded.trace.final_nmse())));
-        s.push_str(&format!("\"t_cfl_s\": {}, ", json_opt(o.coded.time_to(target))));
-        s.push_str(&format!(
-            "\"t_uncoded_s\": {}, ",
-            json_opt(o.uncoded.as_ref().and_then(|u| u.time_to(target)))
-        ));
-        s.push_str(&format!("\"gain\": {}, ", json_opt(o.gain())));
-        s.push_str(&format!("\"comm_load\": {}}}", json_opt(o.comm_load())));
+        s.push_str("\n    ");
+        s.push_str(r);
     }
     s.push_str("\n  ],\n  \"aggregate\": ");
-    match gain_stats(outcomes) {
-        Some((summary, best_id)) => s.push_str(&format!(
+    // the gain aggregate, mirroring gain_stats() over parsed records:
+    // first strict maximum wins, ids stay in their escaped form
+    let mut summary = Summary::new();
+    let mut best: Option<(f64, String)> = None;
+    for r in records {
+        let id = record_id(r)?;
+        let graw = field_raw(r, "gain")
+            .with_context(|| format!("scenario {id}: record has no gain field"))?;
+        if let Some(g) = parse_opt_f64(&id, "gain", graw)? {
+            summary.push(g);
+            if best.as_ref().map(|(bg, _)| g > *bg).unwrap_or(true) {
+                best = Some((g, id));
+            }
+        }
+    }
+    match best {
+        Some((_, best_id)) => s.push_str(&format!(
             "{{\"scenarios\": {}, \"gains\": {}, \"gain_mean\": {}, \"gain_min\": {}, \
-             \"gain_max\": {}, \"best_scenario\": \"{}\"}}",
-            outcomes.len(),
+             \"gain_max\": {}, \"best_scenario\": \"{best_id}\"}}",
+            records.len(),
             summary.count(),
             json_num(summary.mean()),
             json_num(summary.min()),
             json_num(summary.max()),
-            json_escape(&best_id)
         )),
         None => s.push_str(&format!(
             "{{\"scenarios\": {}, \"gains\": 0}}",
-            outcomes.len()
+            records.len()
         )),
     }
     s.push_str("\n}\n");

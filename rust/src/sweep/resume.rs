@@ -20,12 +20,15 @@
 //!    deterministic sim backend the result is byte-identical to an
 //!    uninterrupted run.
 
+use super::baseline::{bench_json_record, record_end, str_end};
 use super::grid::{config_fingerprint, Scenario};
-use super::report::scenario_csv_row;
+use super::json::escape as json_escape;
+use super::report::{scenario_csv_row, scenario_json_record};
 use super::runner::ScenarioOutcome;
 use crate::metrics::CsvWriter;
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
+use std::io::Write;
 
 /// Render a header/row line exactly as [`CsvWriter`] would.
 fn csv_line(fields: &[String]) -> String {
@@ -134,6 +137,261 @@ impl ResumeState {
     /// True when nothing was recovered.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
+    }
+
+    /// Drop recovered rows whose id fails `keep` — used to narrow CSV
+    /// recovery to scenarios the record sidecar also holds, so the three
+    /// artifacts (CSV, JSON, bench) stay mutually consistent: a scenario
+    /// whose row survived a kill but whose record did not is simply
+    /// re-run.
+    pub fn retain(&mut self, mut keep: impl FnMut(&str) -> bool) {
+        self.rows.retain(|id, _| keep(id));
+    }
+}
+
+/// Path of the record sidecar a sweep streams next to its per-scenario
+/// CSV (`<csv stem>.records.jsonl`): one line per completed scenario
+/// carrying the pre-rendered JSON-report and bench-report records, which
+/// is what lets `--resume` regenerate *all three* artifacts, not just
+/// the CSV.
+pub fn sidecar_path(csv_path: &str) -> String {
+    format!("{}.records.jsonl", csv_path.strip_suffix(".csv").unwrap_or(csv_path))
+}
+
+/// Reverse of the report writers' JSON string escaping (see
+/// `sweep::json::escape`): `\" \\ \n \r \t \uXXXX`.
+fn json_unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('/') => out.push('/'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                ensure!(hex.len() == 4, "truncated \\u escape");
+                let code = u32::from_str_radix(&hex, 16)
+                    .with_context(|| format!("bad \\u escape {hex}"))?;
+                out.push(char::from_u32(code).context("bad \\u codepoint")?);
+            }
+            other => bail!("unsupported JSON escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Split one `{…}` object off the front of `s`, returning it (braces
+/// included) and the rest.
+fn take_object(s: &str) -> Result<(&str, &str)> {
+    ensure!(s.starts_with('{'), "expected an object, found: {s}");
+    let end = record_end(&s[1..]);
+    ensure!(end < s.len() - 1, "unterminated object: {s}");
+    Ok((&s[..end + 2], &s[end + 2..]))
+}
+
+/// One sidecar line: `{"id": "<escaped>", "sweep": {…}, "bench": {…}}`.
+fn parse_record_line(line: &str) -> Result<(String, String, String)> {
+    let rest = line.strip_prefix("{\"id\": \"").context("sidecar line has no leading id")?;
+    let end = str_end(rest).context("unterminated sidecar id")?;
+    let id = json_unescape(&rest[..end])?;
+    let tail =
+        rest[end + 1..].strip_prefix(", \"sweep\": ").context("sidecar line has no sweep record")?;
+    let (sweep, tail) = take_object(tail)?;
+    let tail = tail.strip_prefix(", \"bench\": ").context("sidecar line has no bench record")?;
+    let (bench, tail) = take_object(tail)?;
+    ensure!(tail == "}", "trailing bytes after the sidecar records: {tail}");
+    Ok((id, sweep.to_string(), bench.to_string()))
+}
+
+/// Pre-rendered report records recovered from a prior sweep's sidecar,
+/// keyed by scenario id. Records are kept verbatim, so a resumed
+/// sweep's JSON report is byte-identical to an uninterrupted run's and
+/// the bench report keeps the recovered scenarios' original wall times.
+#[derive(Clone, Debug, Default)]
+pub struct SidecarRecords {
+    rows: BTreeMap<String, (String, String)>,
+}
+
+impl SidecarRecords {
+    /// No recovered records — the fresh-run (or sidecar-less) case.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// Parse a prior sweep's sidecar. As with the CSV, a final line not
+    /// terminated by `\n` is the kill landing mid-write and is dropped;
+    /// a malformed line anywhere *else* means the artifact is corrupt
+    /// and is an error.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading resume record sidecar {path}"))?;
+        let complete = match text.strip_suffix('\n') {
+            Some(t) => t,
+            None => match text.rfind('\n') {
+                Some(i) => &text[..i], // torn final line from the kill
+                None => "",
+            },
+        };
+        let mut rows = BTreeMap::new();
+        for line in complete.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            let (id, sweep, bench) = parse_record_line(line)
+                .with_context(|| format!("corrupt record sidecar {path}"))?;
+            rows.insert(id, (sweep, bench));
+        }
+        Ok(Self { rows })
+    }
+
+    /// Were this scenario's records already persisted by the prior run?
+    pub fn contains(&self, id: &str) -> bool {
+        self.rows.contains_key(id)
+    }
+
+    /// Number of recovered record pairs.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when nothing was recovered.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+enum RecordSlot {
+    /// Recovered from the prior run's sidecar: re-emitted verbatim.
+    Recovered(String, String),
+    /// Awaiting this run's freshly-pushed outcome.
+    Fresh,
+    /// CSV row recovered but no sidecar record (a pre-sidecar CSV):
+    /// the scenario is not re-run, so full reports cannot be rebuilt.
+    Gap,
+}
+
+/// Streams the record sidecar in grid order as scenarios finish —
+/// the report-record counterpart of [`MergedScenarioCsv`], flushed per
+/// line so a kill keeps every completed scenario's records on disk.
+/// [`RecordLog::finish`] hands back the full in-order record set when
+/// coverage is complete, which is what the report writers consume.
+pub struct RecordLog {
+    out: std::io::BufWriter<std::fs::File>,
+    plan: Vec<(String, RecordSlot)>,
+    cursor: usize,
+    collected: Vec<(String, String)>,
+    gaps: usize,
+}
+
+impl RecordLog {
+    /// Create the sidecar at `path` for a grid expanding to `ids`.
+    /// `resume` decides which scenarios are *not* re-run this sweep;
+    /// `records` holds their recovered record pairs (a resumed id
+    /// missing from `records` — a pre-sidecar CSV — becomes a gap: its
+    /// line is skipped and [`RecordLog::finish`] reports incomplete
+    /// coverage).
+    pub fn create(
+        path: &str,
+        ids: &[String],
+        resume: &ResumeState,
+        records: &SidecarRecords,
+    ) -> Result<Self> {
+        let plan = ids
+            .iter()
+            .map(|id| {
+                let slot = if resume.contains(id) {
+                    match records.rows.get(id) {
+                        Some((s, b)) => RecordSlot::Recovered(s.clone(), b.clone()),
+                        None => RecordSlot::Gap,
+                    }
+                } else {
+                    RecordSlot::Fresh
+                };
+                (id.clone(), slot)
+            })
+            .collect();
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating record sidecar {path}"))?;
+        let mut log = Self {
+            out: std::io::BufWriter::new(file),
+            plan,
+            cursor: 0,
+            collected: Vec::new(),
+            gaps: 0,
+        };
+        log.advance()?;
+        Ok(log)
+    }
+
+    fn write_line(&mut self, id: &str, sweep: &str, bench: &str) -> Result<()> {
+        writeln!(
+            self.out,
+            "{{\"id\": \"{}\", \"sweep\": {sweep}, \"bench\": {bench}}}",
+            json_escape(id)
+        )
+        .context("writing record sidecar line")?;
+        self.out.flush().context("flushing record sidecar")
+    }
+
+    fn advance(&mut self) -> Result<()> {
+        while self.cursor < self.plan.len() {
+            match &self.plan[self.cursor] {
+                (id, RecordSlot::Recovered(sweep, bench)) => {
+                    let (id, sweep, bench) = (id.clone(), sweep.clone(), bench.clone());
+                    self.write_line(&id, &sweep, &bench)?;
+                    self.collected.push((sweep, bench));
+                }
+                (_, RecordSlot::Gap) => self.gaps += 1,
+                (_, RecordSlot::Fresh) => break,
+            }
+            self.cursor += 1;
+        }
+        Ok(())
+    }
+
+    /// Append one freshly-run outcome's records. As with
+    /// [`MergedScenarioCsv::push`], outcomes must arrive in grid order
+    /// over the scenarios left to run.
+    pub fn push(&mut self, o: &ScenarioOutcome) -> Result<()> {
+        match self.plan.get(self.cursor) {
+            Some((id, RecordSlot::Fresh)) if *id == o.scenario.id => {}
+            other => bail!(
+                "scenario {} arrived out of grid order (expected {})",
+                o.scenario.id,
+                other.map(|(id, _)| id.as_str()).unwrap_or("no further scenarios")
+            ),
+        }
+        let sweep = scenario_json_record(o);
+        let bench = bench_json_record(o);
+        self.write_line(&o.scenario.id, &sweep, &bench)?;
+        self.collected.push((sweep, bench));
+        self.cursor += 1;
+        self.advance()
+    }
+
+    /// Finish the log: every grid scenario must have been visited. When
+    /// coverage is complete, returns the full record set in grid order —
+    /// `(sweep record, bench record)` per scenario — for the report
+    /// writers; `None` when pre-sidecar gaps left recovered scenarios
+    /// without records (the reports then fall back to fresh outcomes
+    /// only).
+    pub fn finish(mut self) -> Result<Option<Vec<(String, String)>>> {
+        ensure!(
+            self.cursor == self.plan.len(),
+            "sweep ended with {} of {} scenario records written",
+            self.cursor,
+            self.plan.len()
+        );
+        self.out.flush().context("flushing record sidecar")?;
+        Ok((self.gaps == 0).then_some(self.collected))
     }
 }
 

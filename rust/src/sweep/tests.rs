@@ -936,3 +936,219 @@ fn trace_decimation_keeps_first_and_last_rows() {
     assert!(err.contains("≥ 1"), "{err}");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ---------------------------------------------------------------------
+// record sidecar: --resume regenerates the JSON and bench reports too
+// ---------------------------------------------------------------------
+
+#[test]
+fn resume_regenerates_the_json_report_byte_identically() {
+    let grid = ScenarioGrid::new(&tiny())
+        .axis_f64("nu", &[0.0, 0.2])
+        .unwrap()
+        .axis("delta", ["0.15", "auto"])
+        .unwrap();
+    let opts =
+        SweepOptions { workers: 2, uncoded_baseline: true, progress: false, ..Default::default() };
+    let header = scenario_csv_header(&grid);
+    let ids = grid.ids();
+    let dir = std::env::temp_dir().join("cfl_sweep_resume_records");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // uninterrupted run: CSV and record sidecar streamed together
+    let full_csv = dir.join("full.csv");
+    let full_csv = full_csv.to_str().unwrap();
+    let full_sidecar = sidecar_path(full_csv);
+    assert!(full_sidecar.ends_with("full.records.jsonl"), "{full_sidecar}");
+    let mut merged =
+        MergedScenarioCsv::create(full_csv, &header, &ids, &ResumeState::empty()).unwrap();
+    let mut recs =
+        RecordLog::create(&full_sidecar, &ids, &ResumeState::empty(), &SidecarRecords::empty())
+            .unwrap();
+    let outcomes = run_scenarios_streaming(grid.expand().unwrap(), &opts, |o| {
+        merged.push(o)?;
+        recs.push(o)
+    })
+    .unwrap();
+    merged.finish().unwrap();
+    let full_records = recs.finish().unwrap().expect("a fresh run has no gaps");
+    assert_eq!(full_records.len(), 4);
+    let (full_sweep, full_bench): (Vec<_>, Vec<_>) = full_records.into_iter().unzip();
+
+    // the records-based writers reproduce the outcome-based reports
+    // byte-for-byte — there is a single render path
+    let fresh_json = dir.join("fresh.json");
+    write_json(fresh_json.to_str().unwrap(), &grid, &outcomes).unwrap();
+    let from_records = dir.join("from_records.json");
+    write_json_records(from_records.to_str().unwrap(), &grid, &full_sweep).unwrap();
+    assert_eq!(
+        std::fs::read(&fresh_json).unwrap(),
+        std::fs::read(&from_records).unwrap(),
+        "record-based JSON report must match write_json"
+    );
+    let fresh_bench = dir.join("fresh_bench.json");
+    write_bench_json(fresh_bench.to_str().unwrap(), &outcomes).unwrap();
+    let bench_from_records = dir.join("bench_from_records.json");
+    write_bench_json_records(bench_from_records.to_str().unwrap(), &full_bench).unwrap();
+    assert_eq!(
+        std::fs::read(&fresh_bench).unwrap(),
+        std::fs::read(&bench_from_records).unwrap()
+    );
+
+    // simulate a mid-run kill: both artifacts keep the first 2 scenarios
+    let full_csv_text = std::fs::read_to_string(full_csv).unwrap();
+    let part_csv = dir.join("partial.csv");
+    let kept: Vec<&str> = full_csv_text.lines().take(3).collect();
+    std::fs::write(&part_csv, format!("{}\n", kept.join("\n"))).unwrap();
+    let full_sidecar_text = std::fs::read_to_string(&full_sidecar).unwrap();
+    let part_sidecar = sidecar_path(part_csv.to_str().unwrap());
+    let kept_recs: Vec<&str> = full_sidecar_text.lines().take(2).collect();
+    std::fs::write(&part_sidecar, format!("{}\n", kept_recs.join("\n"))).unwrap();
+
+    let mut resume = ResumeState::load(part_csv.to_str().unwrap(), &header).unwrap();
+    let records = SidecarRecords::load(&part_sidecar).unwrap();
+    assert_eq!(records.len(), 2);
+    resume.retain(|id| records.contains(id));
+    assert_eq!(resume.len(), 2, "CSV and sidecar agree on the first 2 scenarios");
+    let todo: Vec<Scenario> =
+        grid.expand().unwrap().into_iter().filter(|s| !resume.contains(&s.id)).collect();
+    assert_eq!(todo.len(), 2);
+
+    // resumed run: CSV and sweep records land byte-identical; the bench
+    // records keep the recovered scenarios' original wall times verbatim
+    let res_csv = dir.join("resumed.csv");
+    let res_csv = res_csv.to_str().unwrap();
+    let mut merged = MergedScenarioCsv::create(res_csv, &header, &ids, &resume).unwrap();
+    let mut recs = RecordLog::create(&sidecar_path(res_csv), &ids, &resume, &records).unwrap();
+    run_scenarios_streaming(todo, &opts, |o| {
+        merged.push(o)?;
+        recs.push(o)
+    })
+    .unwrap();
+    merged.finish().unwrap();
+    let (res_sweep, res_bench): (Vec<_>, Vec<_>) =
+        recs.finish().unwrap().expect("full record coverage").into_iter().unzip();
+    assert_eq!(std::fs::read_to_string(res_csv).unwrap(), full_csv_text);
+    assert_eq!(res_sweep, full_sweep, "sweep records are wall-free and deterministic");
+    let resumed_json = dir.join("resumed.json");
+    write_json_records(resumed_json.to_str().unwrap(), &grid, &res_sweep).unwrap();
+    assert_eq!(
+        std::fs::read(&fresh_json).unwrap(),
+        std::fs::read(&resumed_json).unwrap(),
+        "resumed JSON report must be byte-identical to the uninterrupted run's"
+    );
+    assert_eq!(&res_bench[..2], &full_bench[..2], "recovered bench records pass verbatim");
+    let resumed_bench = dir.join("resumed_bench.json");
+    write_bench_json_records(resumed_bench.to_str().unwrap(), &res_bench).unwrap();
+    let parsed =
+        parse_bench_records(&std::fs::read_to_string(&resumed_bench).unwrap()).unwrap();
+    assert_eq!(parsed.len(), 4, "resumed bench report covers the whole grid");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pre_sidecar_resume_reports_incomplete_record_coverage() {
+    // a CSV from before the sidecar existed resumes fine, but the record
+    // log cannot rebuild full reports: finish() says so with None, and
+    // the recovered-but-recordless scenario is skipped in the new sidecar
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0, 0.2]).unwrap();
+    let opts =
+        SweepOptions { workers: 1, uncoded_baseline: false, progress: false, ..Default::default() };
+    let header = scenario_csv_header(&grid);
+    let ids = grid.ids();
+    let dir = std::env::temp_dir().join("cfl_sweep_sidecar_gap");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let csv = dir.join("sweep.csv");
+    let csv = csv.to_str().unwrap();
+    let mut merged =
+        MergedScenarioCsv::create(csv, &header, &ids, &ResumeState::empty()).unwrap();
+    run_scenarios_streaming(grid.expand().unwrap(), &opts, |o| merged.push(o)).unwrap();
+    merged.finish().unwrap();
+    let text = std::fs::read_to_string(csv).unwrap();
+    let part_csv = dir.join("partial.csv");
+    let kept: Vec<&str> = text.lines().take(2).collect();
+    std::fs::write(&part_csv, format!("{}\n", kept.join("\n"))).unwrap();
+
+    let resume = ResumeState::load(part_csv.to_str().unwrap(), &header).unwrap();
+    assert_eq!(resume.len(), 1);
+    let todo: Vec<Scenario> =
+        grid.expand().unwrap().into_iter().filter(|s| !resume.contains(&s.id)).collect();
+    let sidecar = sidecar_path(csv);
+    let mut recs =
+        RecordLog::create(&sidecar, &ids, &resume, &SidecarRecords::empty()).unwrap();
+    run_scenarios_streaming(todo, &opts, |o| recs.push(o)).unwrap();
+    assert!(
+        recs.finish().unwrap().is_none(),
+        "a recovered scenario without records must disable the record reports"
+    );
+    let lines: Vec<String> =
+        std::fs::read_to_string(&sidecar).unwrap().lines().map(String::from).collect();
+    assert_eq!(lines.len(), 1, "only the freshly-run scenario has a record");
+    assert!(lines[0].starts_with("{\"id\": \"s1__nu=0.2\""), "{}", lines[0]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sidecar_load_round_trips_exotic_ids_and_drops_torn_lines() {
+    let grid = ScenarioGrid::new(&tiny()).axis_f64("nu", &[0.0]).unwrap();
+    let opts =
+        SweepOptions { workers: 1, uncoded_baseline: false, progress: false, ..Default::default() };
+    let mut outcomes = run_grid(&grid, &opts).unwrap();
+    // quote/backslash-bearing ids (reachable via zipped-axis values) must
+    // survive the write → load round trip un-double-escaped
+    let exotic = "s0__note=\"q\"\\p";
+    outcomes[0].scenario.id = exotic.to_string();
+
+    let dir = std::env::temp_dir().join("cfl_sidecar_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let sidecar = dir.join("sweep.records.jsonl");
+    let sidecar = sidecar.to_str().unwrap();
+    let ids = vec![exotic.to_string()];
+    let mut recs =
+        RecordLog::create(sidecar, &ids, &ResumeState::empty(), &SidecarRecords::empty())
+            .unwrap();
+    recs.push(&outcomes[0]).unwrap();
+    let (sweep_rec, bench_rec) = recs.finish().unwrap().unwrap().remove(0);
+
+    let loaded = SidecarRecords::load(sidecar).unwrap();
+    assert_eq!(loaded.len(), 1);
+    assert!(loaded.contains(exotic), "id must load unescaped");
+
+    // a recovered record re-emits verbatim: mark the scenario as
+    // completed (via a one-row CSV), recover through a RecordLog with
+    // nothing left to run, and compare against the original render
+    let text = std::fs::read_to_string(sidecar).unwrap();
+    let replay = dir.join("replay.records.jsonl");
+    let replay = replay.to_str().unwrap();
+    let header = scenario_csv_header(&grid);
+    let row = scenario_csv_row(&outcomes[0]);
+    let csv_path = dir.join("fake.csv");
+    {
+        use crate::metrics::CsvWriter;
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut w = CsvWriter::create(csv_path.to_str().unwrap(), &header_refs).unwrap();
+        let row_refs: Vec<&str> = row.iter().map(|s| s.as_str()).collect();
+        w.write_row_str(&row_refs).unwrap();
+        w.flush().unwrap();
+    }
+    let resume = ResumeState::load(csv_path.to_str().unwrap(), &header).unwrap();
+    assert!(resume.contains(exotic));
+    let recs = RecordLog::create(replay, &ids, &resume, &loaded).unwrap();
+    let (replay_sweep, replay_bench) = recs.finish().unwrap().unwrap().remove(0);
+    assert_eq!(replay_sweep, sweep_rec, "recovered sweep record must be verbatim");
+    assert_eq!(replay_bench, bench_rec, "recovered bench record must be verbatim");
+    assert_eq!(std::fs::read_to_string(replay).unwrap(), text);
+
+    // a torn final line (kill landed mid-write) is dropped on load …
+    let torn = dir.join("torn.records.jsonl");
+    std::fs::write(&torn, format!("{text}{{\"id\": \"half")).unwrap();
+    let loaded = SidecarRecords::load(torn.to_str().unwrap()).unwrap();
+    assert_eq!(loaded.len(), 1, "the complete line survives, the torn line is dropped");
+    // … but a malformed line elsewhere means the artifact is corrupt
+    let corrupt = dir.join("corrupt.records.jsonl");
+    std::fs::write(&corrupt, format!("not json\n{text}")).unwrap();
+    let err = SidecarRecords::load(corrupt.to_str().unwrap()).unwrap_err().to_string();
+    assert!(err.contains("corrupt record sidecar"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,6 +1,33 @@
 //! Minimal property-based testing: seeded generation + greedy shrinking.
 
+use crate::config::ExperimentConfig;
+use crate::linalg::Mat;
 use crate::rng::Rng;
+
+/// Committed regression-seed corpus, replayed by [`check`] before fresh
+/// generation. One entry per line: the property name (spaces allowed)
+/// followed by a base seed (decimal or `0x` hex); `#` starts a comment.
+const CORPUS: &str = include_str!("corpus.txt");
+
+fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
+    }
+}
+
+/// Regression seeds recorded for `name` in the committed corpus.
+pub fn corpus_seeds(name: &str) -> Vec<u64> {
+    CORPUS
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| l.rsplit_once(char::is_whitespace))
+        .filter(|(n, _)| n.trim() == name)
+        .filter_map(|(_, s)| parse_seed(s))
+        .collect()
+}
 
 /// Property outcome: `Ok(())` pass, `Err(msg)` failure (will be shrunk).
 pub type PropResult = Result<(), String>;
@@ -138,23 +165,68 @@ impl<'a> Gen<'a> {
         let stream = self.draw(0, i64::MAX - 1) as u64;
         Rng::new(stream)
     }
+
+    /// Seeded `rows × cols` f32 matrix with standard-normal entries. The
+    /// payload comes from a sub-RNG ([`Gen::rng`]), so only the stream seed
+    /// enters the shrink log, not every entry.
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> Mat {
+        let mut r = self.rng();
+        let data = (0..rows * cols).map(|_| r.normal() as f32).collect();
+        Mat::from_vec(rows, cols, data)
+    }
+
+    /// Random fleet configuration, always within [`ExperimentConfig::validate`]
+    /// ranges and small enough that a full training run takes milliseconds.
+    /// Target NMSE is pinned to 0 so runs go to the epoch cap and traces
+    /// from equal configs have equal lengths.
+    pub fn fleet_config(&mut self) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::small();
+        cfg.n_devices = self.size_in(2, 8);
+        cfg.points_per_device = self.size_in(8, 40);
+        cfg.model_dim = self.size_in(4, 24);
+        cfg.nu_comp = self.f64_in(0.0, 0.6);
+        cfg.nu_link = self.f64_in(0.0, 0.6);
+        cfg.delta = if self.bool() { Some(self.f64_in(0.05, 0.25)) } else { None };
+        cfg.max_epochs = self.size_in(3, 20);
+        cfg.target_nmse = 0.0;
+        cfg.seed = self.int_in(0, 0xFFFF) as u64;
+        cfg
+    }
 }
 
 /// Run `prop` for `cfg.cases` random cases; on failure, shrink the draw
 /// sequence and panic with the minimal failing case and reproduction seed.
+///
+/// Before fresh generation, every seed recorded for `name` in the committed
+/// regression corpus (`testing/corpus.txt`) is replayed as case 0 of that
+/// seed, so once-seen failures stay fixed forever. A corpus failure reports
+/// the corpus seed — `CFL_PROP_SEED=<seed>` reproduces it directly.
 pub fn check(name: &str, cfg: Config, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    for seed in corpus_seeds(name) {
+        run_case(name, &cfg, seed, 0, &mut prop);
+    }
     for case in 0..cfg.cases {
-        let mut rng = Rng::new(cfg.seed).split(case as u64);
-        let mut g = Gen::new(&mut rng);
-        if let Err(msg) = prop(&mut g) {
-            let draws = g.log.clone();
-            let (min_draws, min_msg) = shrink(&cfg, &mut prop, draws, msg);
-            panic!(
-                "property '{name}' failed (case {case}, seed {seed:#x}, CFL_PROP_SEED={seed}):\n  \
-                 minimal draws: {min_draws:?}\n  error: {min_msg}",
-                seed = cfg.seed,
-            );
-        }
+        run_case(name, &cfg, cfg.seed, case, &mut prop);
+    }
+}
+
+fn run_case(
+    name: &str,
+    cfg: &Config,
+    seed: u64,
+    case: usize,
+    prop: &mut impl FnMut(&mut Gen) -> PropResult,
+) {
+    let mut rng = Rng::new(seed).split(case as u64);
+    let mut g = Gen::new(&mut rng);
+    if let Err(msg) = prop(&mut g) {
+        let draws = g.log.clone();
+        let shrink_cfg = Config { seed, ..cfg.clone() };
+        let (min_draws, min_msg) = shrink(&shrink_cfg, prop, draws, msg);
+        panic!(
+            "property '{name}' failed (case {case}, seed {seed:#x}, CFL_PROP_SEED={seed}):\n  \
+             minimal draws: {min_draws:?}\n  error: {min_msg}",
+        );
     }
 }
 

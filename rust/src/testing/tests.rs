@@ -66,3 +66,49 @@ fn assert_close_tolerates_scale() {
     assert!(assert_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
     assert!(assert_close(1.0, 1.1, 1e-6, "off").is_err());
 }
+
+#[test]
+fn corpus_seeds_replay_before_fresh_cases() {
+    // corpus.txt records two seeds for this name: they run first, then the
+    // configured fresh cases
+    assert_eq!(prop::corpus_seeds("corpus-replay-smoke"), vec![0x5EED, 12345]);
+    let mut runs = 0;
+    prop::check("corpus-replay-smoke", prop::cfg_cases(3), |g| {
+        runs += 1;
+        let _ = g.int_in(0, 10);
+        Ok(())
+    });
+    assert_eq!(runs, 2 + 3, "2 corpus replays + 3 fresh cases");
+
+    // a name with no corpus entries runs fresh cases only
+    assert!(prop::corpus_seeds("no such property").is_empty());
+}
+
+#[test]
+fn corpus_failure_reports_the_corpus_seed() {
+    // zero fresh cases: the only execution is the corpus replay, and the
+    // panic must carry the corpus seed as the reproduction command
+    let result = std::panic::catch_unwind(|| {
+        prop::check("corpus-always-fails", prop::cfg_cases(0), |g| {
+            let _ = g.int_in(0, 10);
+            Err("nope".to_string())
+        });
+    });
+    let msg = *result.unwrap_err().downcast::<String>().unwrap();
+    assert!(msg.contains("seed 0xbad5eed"), "missing corpus seed: {msg}");
+    assert!(msg.contains("CFL_PROP_SEED=195911405"), "missing repro seed: {msg}");
+}
+
+#[test]
+fn matrix_and_fleet_config_generators_are_valid() {
+    prop::check("generators stay in range", prop::cfg_cases(20), |g| {
+        let rows = g.size_in(1, 6);
+        let cols = g.size_in(1, 6);
+        let m = g.matrix(rows, cols);
+        assert_that(m.rows() == rows && m.cols() == cols, "matrix dims")?;
+        assert_that(m.as_slice().iter().all(|v| v.is_finite()), "matrix entries finite")?;
+        let cfg = g.fleet_config();
+        cfg.validate().map_err(|e| format!("generated config invalid: {e}"))?;
+        assert_that(cfg.target_nmse == 0.0, "fleet configs run to the epoch cap")
+    });
+}

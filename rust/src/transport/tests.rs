@@ -399,3 +399,168 @@ fn tcp_rejects_a_protocol_mismatch() {
     assert!(err.contains("protocol mismatch"), "{err}");
     bad.join().unwrap();
 }
+
+// ---------------------------------------------------------------------
+// wire-format properties: the primary guard for the frame codec. The
+// hand-enumerated corruption cases above pin historically seen inputs;
+// these sweep the space. All properties lean on a structural fact of the
+// format (no optional fields, `done()` rejects trailing bytes): decoding
+// is positional and bijective, so a payload that decodes at all must
+// re-encode to the exact same bytes — which sidesteps NaN-equality holes
+// a value-level comparison would have.
+
+use crate::testing::prop::{self, assert_that};
+
+fn arb_mat(g: &mut prop::Gen) -> Mat {
+    let rows = g.size_in(0, 5);
+    let cols = g.size_in(0, 5);
+    g.matrix(rows, cols)
+}
+
+fn arb_profile(g: &mut prop::Gen) -> DeviceProfile {
+    DeviceProfile {
+        compute: ComputeModel {
+            secs_per_point: g.f64_in(0.0, 1.0),
+            mem_rate: g.f64_in(0.1, 16.0),
+        },
+        link: LinkModel {
+            secs_per_packet: g.f64_in(0.0, 1.0),
+            erasure_prob: g.f64_in(0.0, 0.9),
+        },
+        points: g.size_in(0, 256),
+    }
+}
+
+fn arb_to_device(g: &mut prop::Gen) -> ToDevice {
+    match g.int_in(0, 4) {
+        0 => ToDevice::Setup(Box::new(DeviceInit {
+            run: g.int_in(0, 1 << 40) as u64,
+            device_index: g.size_in(0, 64),
+            load: g.size_in(0, 512),
+            delay_seed: g.int_in(0, i64::MAX - 1) as u64,
+            time_scale: g.f64_in(1e-9, 1.0),
+            max_scaled_secs: g.f64_in(0.0, 1.0),
+            profile: arb_profile(g),
+            x_sys: arb_mat(g),
+            y_sys: arb_mat(g),
+        })),
+        1 => ToDevice::Model { epoch: g.size_in(0, 100_000), beta: arb_mat(g) },
+        2 => ToDevice::Ping { nonce: g.int_in(0, i64::MAX - 1) as u64 },
+        3 => ToDevice::Stop,
+        _ => ToDevice::Shutdown,
+    }
+}
+
+fn arb_from_device(g: &mut prop::Gen) -> FromDevice {
+    match g.int_in(0, 2) {
+        0 => FromDevice::Hello {
+            device_id: g.size_in(0, 1 << 20),
+            protocol: g.int_in(0, u32::MAX as i64) as u32,
+        },
+        1 => FromDevice::Pong { nonce: g.int_in(0, i64::MAX - 1) as u64 },
+        _ => FromDevice::Grad {
+            run: g.int_in(0, 1 << 40) as u64,
+            epoch: g.size_in(0, 100_000),
+            delay: g.f64_in(0.0, 60.0),
+            grad: arb_mat(g),
+        },
+    }
+}
+
+#[test]
+fn prop_to_device_frames_round_trip() {
+    prop::check("frame to-device round-trip", prop::cfg(), |g| {
+        let msg = arb_to_device(g);
+        let bytes = encode_to_device(&msg);
+        let decoded = decode_to_device(&bytes).map_err(|e| format!("decode failed: {e}"))?;
+        assert_that(decoded == msg, "decoded message differs from the original")?;
+        assert_that(encode_to_device(&decoded) == bytes, "re-encode changed the bytes")
+    });
+}
+
+#[test]
+fn prop_from_device_frames_round_trip() {
+    prop::check("frame from-device round-trip", prop::cfg(), |g| {
+        let msg = arb_from_device(g);
+        let bytes = encode_from_device(&msg);
+        let decoded = decode_from_device(&bytes).map_err(|e| format!("decode failed: {e}"))?;
+        assert_that(decoded == msg, "decoded message differs from the original")?;
+        assert_that(encode_from_device(&decoded) == bytes, "re-encode changed the bytes")
+    });
+}
+
+#[test]
+fn prop_truncated_frames_never_decode() {
+    prop::check("frame truncation never decodes", prop::cfg(), |g| {
+        let to = g.bool();
+        let bytes = if to {
+            encode_to_device(&arb_to_device(g))
+        } else {
+            encode_from_device(&arb_from_device(g))
+        };
+        let cut = g.size_in(0, bytes.len() - 1);
+        let err = if to {
+            decode_to_device(&bytes[..cut]).is_err()
+        } else {
+            decode_from_device(&bytes[..cut]).is_err()
+        };
+        assert_that(err, format!("a strict {cut}/{}-byte prefix decoded", bytes.len()))
+    });
+}
+
+#[test]
+fn prop_corrupt_byte_is_rejected_or_bijective() {
+    prop::check("frame corrupt byte is rejected or bijective", prop::cfg(), |g| {
+        let to = g.bool();
+        let mut bytes = if to {
+            encode_to_device(&arb_to_device(g))
+        } else {
+            encode_from_device(&arb_from_device(g))
+        };
+        let idx = g.size_in(0, bytes.len() - 1);
+        let delta = g.int_in(1, 255) as u8;
+        bytes[idx] = bytes[idx].wrapping_add(delta);
+        // a flipped byte may land on another valid message (e.g. a float
+        // payload bit, or Stop→Shutdown in the tag) — that is fine as long
+        // as the decode is exact; what must never happen is a panic or a
+        // message that re-encodes differently than what was on the wire
+        if to {
+            match decode_to_device(&bytes) {
+                Err(_) => Ok(()),
+                Ok(msg) => assert_that(
+                    encode_to_device(&msg) == bytes,
+                    format!("byte {idx} corrupted, decode not bijective"),
+                ),
+            }
+        } else {
+            match decode_from_device(&bytes) {
+                Err(_) => Ok(()),
+                Ok(msg) => assert_that(
+                    encode_from_device(&msg) == bytes,
+                    format!("byte {idx} corrupted, decode not bijective"),
+                ),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_frame_streams_round_trip() {
+    prop::check("frame stream round-trip", prop::cfg_cases(32), |g| {
+        let n = g.size_in(0, 5);
+        let msgs: Vec<ToDevice> = (0..n).map(|_| arb_to_device(g)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_frame(&mut wire, &encode_to_device(m)).map_err(|e| e.to_string())?;
+        }
+        let mut r = Cursor::new(wire);
+        let mut count = 0usize;
+        while let Some(payload) = read_frame(&mut r).map_err(|e| e.to_string())? {
+            assert_that(count < n, "more frames than were written")?;
+            let msg = decode_to_device(&payload).map_err(|e| e.to_string())?;
+            assert_that(msg == msgs[count], format!("stream frame {count} mismatch"))?;
+            count += 1;
+        }
+        assert_that(count == n, "clean EOF must come after the last frame")
+    });
+}

@@ -1,0 +1,59 @@
+#!/usr/bin/env bash
+# Conformance smoke: run the cross-backend conformance suite and assert
+# the verdict artifacts stream out. The quick tier (default) gates the
+# CI check matrix; `conformance_smoke.sh full` runs the whole matrix
+# (tcp legs everywhere, medium fixtures, all fault cells) for the
+# non-blocking CI job.
+#
+# Usage: scripts/conformance_smoke.sh [full]
+# Env: CFL_BIN overrides the binary (default: target/{release,debug}/cfl),
+#      CONFORMANCE_OUT overrides the scratch directory (default: conformance_out).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${CFL_BIN:-}
+if [[ -z "$BIN" ]]; then
+    for candidate in target/release/cfl target/debug/cfl; do
+        if [[ -x "$candidate" ]]; then
+            BIN=$candidate
+            break
+        fi
+    done
+fi
+if [[ -z "${BIN:-}" || ! -x "$BIN" ]]; then
+    echo "conformance_smoke: cfl binary not built (run cargo build --release first)" >&2
+    exit 1
+fi
+
+TIER=${1:-quick}
+OUT=${CONFORMANCE_OUT:-conformance_out}
+rm -rf "$OUT"
+mkdir -p "$OUT"
+
+ARGS=(conformance --out "$OUT")
+if [[ "$TIER" == "full" ]]; then
+    ARGS+=(--full)
+fi
+
+"$BIN" "${ARGS[@]}"
+
+# the artifacts stream per check: a header plus one CSV row / one JSONL
+# line per executed check
+for f in "$OUT/conformance.csv" "$OUT/conformance.jsonl"; do
+    if [[ ! -s "$f" ]]; then
+        echo "conformance_smoke: missing artifact $f" >&2
+        exit 1
+    fi
+done
+rows=$(($(wc -l < "$OUT/conformance.csv") - 1))
+lines=$(wc -l < "$OUT/conformance.jsonl")
+if [[ "$rows" -lt 1 || "$rows" -ne "$lines" ]]; then
+    echo "conformance_smoke: artifact mismatch ($rows CSV rows vs $lines JSONL lines)" >&2
+    exit 1
+fi
+if grep -q ',FAIL,' "$OUT/conformance.csv"; then
+    echo "conformance_smoke: FAIL rows present in $OUT/conformance.csv" >&2
+    exit 1
+fi
+
+echo "conformance_smoke ok: $TIER tier, $rows checks recorded"

@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
 # Kill-and-resume smoke: a sim-backend sweep interrupted halfway and
-# restarted with --resume must produce a per-scenario CSV byte-identical
-# to an uninterrupted run, and --traces-dir must emit one per-epoch
-# trace file per run (CFL + uncoded baseline per scenario).
+# restarted with --resume must produce a per-scenario CSV *and* a
+# sweep_report.json byte-identical to an uninterrupted run, and
+# --traces-dir must emit one per-epoch trace file per run (CFL +
+# uncoded baseline per scenario).
 #
 # The "kill" is simulated deterministically: run the full grid once,
-# truncate the CSV to the header plus half the scenario rows (what a
-# real kill leaves behind, since rows stream to disk in grid order),
-# then re-run with --resume and compare.
+# truncate the CSV to the header plus half the scenario rows and the
+# record sidecar to the same boundary (what a real kill leaves behind,
+# since both stream to disk in grid order), then re-run with --resume
+# and compare.
 #
 # Usage: scripts/resume_smoke.sh
 # Env: CFL_BIN overrides the binary (default: target/{release,debug}/cfl),
@@ -40,16 +42,27 @@ ARGS=(sweep --seed 2020 --axis nu=0,0.2,0.4 --axis delta=0.1,0.15 --workers 2 --
 "$BIN" "${ARGS[@]}" --out "$OUT/full" --traces-dir "$OUT/full/traces"
 
 CSV=$OUT/full/sweep_scenarios.csv
+SIDECAR=$OUT/full/sweep_scenarios.records.jsonl
 rows=$(($(wc -l < "$CSV") - 1))
 keep=$((rows / 2))
 echo "resume_smoke: $rows scenarios ran; truncating the CSV to $keep to simulate a kill"
 head -n $((1 + keep)) "$CSV" > "$OUT/resumed/sweep_scenarios.csv"
+# the record sidecar streams in lockstep with the CSV (no header line) —
+# a real kill truncates both at the same scenario boundary
+head -n "$keep" "$SIDECAR" > "$OUT/resumed/sweep_scenarios.records.jsonl"
 
 "$BIN" "${ARGS[@]}" --out "$OUT/resumed" \
     --resume "$OUT/resumed/sweep_scenarios.csv" --traces-dir "$OUT/resumed/traces"
 
 cmp "$CSV" "$OUT/resumed/sweep_scenarios.csv" || {
     echo "resume_smoke: resumed CSV differs from the uninterrupted run" >&2
+    exit 1
+}
+
+# with the sidecar recovered, the resumed run regenerates the JSON report
+# from recovered + fresh records — byte-identical to the full run's
+cmp "$OUT/full/sweep_report.json" "$OUT/resumed/sweep_report.json" || {
+    echo "resume_smoke: resumed sweep_report.json differs from the uninterrupted run" >&2
     exit 1
 }
 
@@ -67,4 +80,4 @@ if [[ "$resumed_traces" -ne $(((rows - keep) * 2)) ]]; then
     exit 1
 fi
 
-echo "resume_smoke ok: resumed CSV byte-identical ($rows scenarios, $keep recovered, $got traces)"
+echo "resume_smoke ok: resumed CSV + JSON report byte-identical ($rows scenarios, $keep recovered, $got traces)"
