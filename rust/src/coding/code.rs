@@ -53,6 +53,41 @@ impl DeviceCode {
         Self { generator, weights, permutation, systematic_count }
     }
 
+    /// Prefix variant of [`DeviceCode::draw`] for memory-lean fleets:
+    /// identical generator and weights model, but the permutation is the
+    /// identity, so the systematic set is the *first*
+    /// `systematic_count` local rows.
+    ///
+    /// With iid rows the private shuffle carries no statistical content —
+    /// it only hides which rows are punctured, which the sim does not
+    /// model — and a prefix systematic set lets a lean device materialize
+    /// exactly its first ℓᵢ rows per epoch (the
+    /// [`LeanDataset::shard_view`](crate::data::LeanDataset::shard_view)
+    /// prefix) instead of scattered indices from the full shard. Skipping
+    /// the shuffle also skips its `points − 1` RNG draws, keeping lean
+    /// setup O(c·points) draws per device.
+    pub fn draw_prefix(
+        points: usize,
+        parity_rows: usize,
+        systematic_count: usize,
+        prob_miss: f64,
+        kind: GeneratorKind,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(systematic_count <= points, "load exceeds local data");
+        let generator = match kind {
+            GeneratorKind::Gaussian => Mat::randn(parity_rows, points, rng),
+            GeneratorKind::Bernoulli => Mat::rademacher(parity_rows, points, rng),
+        };
+        let permutation: Vec<usize> = (0..points).collect();
+        let mut weights = vec![1.0f32; points];
+        let w_sys = (prob_miss.clamp(0.0, 1.0)).sqrt() as f32;
+        for w in weights.iter_mut().take(systematic_count) {
+            *w = w_sys;
+        }
+        Self { generator, weights, permutation, systematic_count }
+    }
+
     /// Local row indices processed each epoch (systematic set).
     pub fn systematic_rows(&self) -> &[usize] {
         &self.permutation[..self.systematic_count]

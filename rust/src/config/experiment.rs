@@ -85,6 +85,66 @@ impl std::str::FromStr for ShardingKind {
     }
 }
 
+/// Per-epoch client participation: which devices are even *candidates*
+/// for an epoch's gather. Composes with the paper's §V return-time
+/// selection — sampling picks the candidate pool, the Eq. 16 deadline
+/// then keeps the fastest returners within it, and the master's parity
+/// gradient compensates for everyone else (unsampled and stragglers
+/// alike, Eq. 18–19).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Participation {
+    /// Every device participates every epoch (the paper's evaluation).
+    All,
+    /// A seeded uniform sample of `⌈f·n⌉` devices per epoch.
+    Fraction(f64),
+    /// A seeded uniform sample of exactly `k` devices per epoch
+    /// (clamped to the fleet size) — the production-FL fixed-quorum
+    /// shape, and the knob the million-device scale scenarios use.
+    Count(usize),
+}
+
+impl std::str::FromStr for Participation {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("all") {
+            return Ok(Self::All);
+        }
+        if let Some(rest) = s.strip_prefix("frac:") {
+            return Ok(Self::Fraction(rest.parse()?));
+        }
+        if let Some(rest) = s.strip_prefix("count:") {
+            return Ok(Self::Count(rest.parse()?));
+        }
+        anyhow::bail!("unknown participation '{s}' (all | frac:<f> | count:<k>)")
+    }
+}
+
+/// How the per-device training data is held in memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataMode {
+    /// The global dataset and every shard are materialized up front —
+    /// exact, byte-stable, and O(m·d) resident (the default).
+    Materialized,
+    /// Devices hold shard *descriptors* (seed + row range); shard views
+    /// are regenerated on demand from the descriptor stream, so resident
+    /// memory is O(fleet metadata), not O(m·d). Statistically identical
+    /// to materialized data but a different RNG layout, so results are
+    /// not bit-comparable across modes. See docs/SCALING.md.
+    Lean,
+}
+
+impl std::str::FromStr for DataMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "materialized" | "dense" => Ok(Self::Materialized),
+            "lean" | "streamed" => Ok(Self::Lean),
+            other => anyhow::bail!("unknown data mode '{other}' (materialized | lean)"),
+        }
+    }
+}
+
 /// Every knob of the paper's evaluation (§IV), with the published values
 /// as defaults. One struct drives data generation, the delay models, the
 /// load optimizer and the training loop, so a config file (or CLI flags)
@@ -148,6 +208,29 @@ pub struct ExperimentConfig {
     /// Tolerance ε of the t* search (Eq. 16), in expected returned points.
     pub epsilon: f64,
 
+    // -- scale (million-device sim backend) ----------------------------------
+    /// Per-epoch participation sampling (see [`Participation`]).
+    /// `All` (default) reproduces the pre-sampling behavior exactly.
+    pub participation: Participation,
+    /// Data residency (see [`DataMode`]). `Materialized` (default) is the
+    /// exact paper path; `Lean` streams shard views for huge fleets.
+    pub data_mode: DataMode,
+    /// Cap on retained convergence-trace points in a sim run's
+    /// [`RunResult`](crate::coordinator::RunResult) (stride-doubling
+    /// decimation keeps the first/last points and the curve's shape).
+    /// 0 (default) retains every epoch — the pre-cap behavior.
+    pub trace_points: usize,
+    /// Fan-in of the hierarchical aggregation tree in the sim gather.
+    /// 0 (default) is the flat left-to-right sum (byte-identical to the
+    /// pre-tree behavior); ≥ 2 reduces gradients in groups of this size.
+    pub agg_fanin: usize,
+    /// Number of distinct rungs on the §IV heterogeneity ladders
+    /// (device i gets exponent `i mod tiers`). 0 (default) gives every
+    /// device its own rung — the paper's ladder — which underflows to
+    /// zero rates for huge fleets; the scale scenarios pin 24 tiers to
+    /// mirror the paper's 24-device spread at any fleet size.
+    pub ladder_tiers: usize,
+
     // -- plumbing ------------------------------------------------------------
     /// Root seed for all randomness.
     pub seed: u64,
@@ -182,6 +265,11 @@ impl ExperimentConfig {
             setup_cost: SetupCostKind::BaseRate,
             client_fraction: 1.0,
             epsilon: 1.0,
+            participation: Participation::All,
+            data_mode: DataMode::Materialized,
+            trace_points: 0,
+            agg_fanin: 0,
+            ladder_tiers: 0,
             seed: 0xCF1_2019,
             artifacts_dir: None,
         }
@@ -206,6 +294,23 @@ impl ExperimentConfig {
     /// Total raw training points m = Σ ℓᵢ.
     pub fn total_points(&self) -> usize {
         self.n_devices * self.points_per_device
+    }
+
+    /// Devices sampled as candidates each epoch, resolving
+    /// [`Participation`] against the fleet size (and the legacy
+    /// `client_fraction` spelling when participation is `All`). Returns
+    /// `n_devices` when sampling is off — coordinators use `k == n` as
+    /// the no-sampling fast path, so `count:<n>` and `frac:1` are
+    /// byte-identical to `all`.
+    pub fn sampled_per_epoch(&self) -> usize {
+        let n = self.n_devices;
+        match self.participation {
+            Participation::All => {
+                ((self.client_fraction * n as f64).round() as usize).clamp(1, n)
+            }
+            Participation::Fraction(f) => ((f * n as f64).round() as usize).clamp(1, n),
+            Participation::Count(k) => k.clamp(1, n),
+        }
     }
 
     /// Merge values from an INI document (section `[experiment]`; any
@@ -244,6 +349,15 @@ impl ExperimentConfig {
         self.client_fraction = ini.get_or(S, "client_fraction", self.client_fraction)?;
         self.c_up_fraction = ini.get_or(S, "c_up_fraction", self.c_up_fraction)?;
         self.epsilon = ini.get_or(S, "epsilon", self.epsilon)?;
+        if let Some(s) = ini.get(S, "participation") {
+            self.participation = s.parse()?;
+        }
+        if let Some(s) = ini.get(S, "data_mode") {
+            self.data_mode = s.parse()?;
+        }
+        self.trace_points = ini.get_or(S, "trace_points", self.trace_points)?;
+        self.agg_fanin = ini.get_or(S, "agg_fanin", self.agg_fanin)?;
+        self.ladder_tiers = ini.get_or(S, "ladder_tiers", self.ladder_tiers)?;
         self.seed = ini.get_or(S, "seed", self.seed)?;
         if let Some(s) = ini.get(S, "artifacts_dir") {
             self.artifacts_dir = if s.is_empty() { None } else { Some(s.to_string()) };
@@ -269,6 +383,46 @@ impl ExperimentConfig {
             self.client_fraction > 0.0 && self.client_fraction <= 1.0,
             "client_fraction in (0,1]"
         );
+        match self.participation {
+            Participation::All => {}
+            Participation::Fraction(f) => {
+                anyhow::ensure!(f > 0.0 && f <= 1.0, "participation frac in (0,1]");
+            }
+            Participation::Count(k) => {
+                anyhow::ensure!(k > 0, "participation count must be > 0");
+            }
+        }
+        anyhow::ensure!(
+            self.participation == Participation::All || self.client_fraction >= 1.0,
+            "participation and client_fraction are alternative spellings of per-epoch \
+             sampling; set only one (client_fraction = {}, participation = {:?})",
+            self.client_fraction,
+            self.participation
+        );
+        anyhow::ensure!(
+            self.trace_points == 0 || self.trace_points >= 2,
+            "trace_points must be 0 (unbounded) or ≥ 2"
+        );
+        anyhow::ensure!(self.agg_fanin != 1, "agg_fanin must be 0 (flat) or ≥ 2");
+        // per-rung ladders underflow f64 at huge fleet sizes: the slowest
+        // device's rate (1−ν)^(n−1)·base hits 0, its delay becomes
+        // infinite, and the Eq. 16 bracket search can never cover m.
+        // Those configs already fail today (deep in the optimizer);
+        // reject them up front with the fix spelled out.
+        if self.ladder_tiers == 0 && self.n_devices > 1 {
+            let steps = (self.n_devices - 1) as f64;
+            for (name, nu) in [("nu_comp", self.nu_comp), ("nu_link", self.nu_link)] {
+                if nu > 0.0 {
+                    anyhow::ensure!(
+                        steps * -(1.0 - nu).ln() <= 700.0,
+                        "{name}={nu} over {} devices underflows the per-device \
+                         heterogeneity ladder (slowest rate rounds to 0); set \
+                         ladder_tiers (e.g. 24) to tile the ladder instead",
+                        self.n_devices
+                    );
+                }
+            }
+        }
         Ok(())
     }
 }

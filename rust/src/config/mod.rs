@@ -9,7 +9,9 @@
 mod experiment;
 mod ini;
 
-pub use experiment::{ExperimentConfig, GeneratorKind, SetupCostKind, ShardingKind};
+pub use experiment::{
+    DataMode, ExperimentConfig, GeneratorKind, Participation, SetupCostKind, ShardingKind,
+};
 pub use ini::Ini;
 
 #[cfg(test)]

@@ -110,3 +110,77 @@ fn generator_parse_aliases() {
     assert_eq!("normal".parse::<GeneratorKind>().unwrap(), GeneratorKind::Gaussian);
     assert_eq!("rademacher".parse::<GeneratorKind>().unwrap(), GeneratorKind::Bernoulli);
 }
+
+#[test]
+fn participation_parse_and_validate() {
+    assert_eq!("all".parse::<Participation>().unwrap(), Participation::All);
+    assert_eq!("frac:0.25".parse::<Participation>().unwrap(), Participation::Fraction(0.25));
+    assert_eq!("count:256".parse::<Participation>().unwrap(), Participation::Count(256));
+    assert!("frac:".parse::<Participation>().is_err());
+    assert!("half".parse::<Participation>().is_err());
+
+    let mut c = ExperimentConfig::small();
+    c.participation = Participation::Fraction(1.5);
+    assert!(c.validate().is_err());
+    c.participation = Participation::Count(0);
+    assert!(c.validate().is_err());
+    c.participation = Participation::Count(3);
+    c.validate().unwrap();
+    // the legacy spelling and the new one cannot be combined
+    c.client_fraction = 0.5;
+    assert!(c.validate().is_err());
+}
+
+#[test]
+fn sampled_per_epoch_resolves_and_clamps() {
+    let mut c = ExperimentConfig::small(); // 8 devices
+    assert_eq!(c.sampled_per_epoch(), 8);
+    c.participation = Participation::Count(3);
+    assert_eq!(c.sampled_per_epoch(), 3);
+    c.participation = Participation::Count(99);
+    assert_eq!(c.sampled_per_epoch(), 8);
+    c.participation = Participation::Fraction(0.5);
+    assert_eq!(c.sampled_per_epoch(), 4);
+    c.participation = Participation::Fraction(1.0);
+    assert_eq!(c.sampled_per_epoch(), 8);
+    c.participation = Participation::All;
+    c.client_fraction = 0.25;
+    assert_eq!(c.sampled_per_epoch(), 2);
+}
+
+#[test]
+fn scale_knobs_apply_ini_and_validate() {
+    let mut c = ExperimentConfig::small();
+    let ini = Ini::parse(
+        "[experiment]\nparticipation = count:4\ndata_mode = lean\ntrace_points = 64\n\
+         agg_fanin = 32\nladder_tiers = 24\n",
+    )
+    .unwrap();
+    c.apply_ini(&ini).unwrap();
+    assert_eq!(c.participation, Participation::Count(4));
+    assert_eq!(c.data_mode, DataMode::Lean);
+    assert_eq!(c.trace_points, 64);
+    assert_eq!(c.agg_fanin, 32);
+    assert_eq!(c.ladder_tiers, 24);
+
+    let mut bad = ExperimentConfig::small();
+    bad.trace_points = 1;
+    assert!(bad.validate().is_err());
+    bad.trace_points = 0;
+    bad.agg_fanin = 1;
+    assert!(bad.validate().is_err());
+}
+
+#[test]
+fn ladder_underflow_rejected_without_tiers() {
+    let mut c = ExperimentConfig::small();
+    c.n_devices = 100_000;
+    c.points_per_device = 4;
+    c.nu_comp = 0.2;
+    // per-device rungs: (1−0.2)^99999 underflows f64 → rejected up front
+    let err = c.validate().unwrap_err().to_string();
+    assert!(err.contains("ladder_tiers"), "unexpected error: {err}");
+    // tiling the ladder makes the same fleet valid
+    c.ladder_tiers = 24;
+    c.validate().unwrap();
+}

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::{ExperimentConfig, ShardingKind};
+use crate::config::{ExperimentConfig, Participation, ShardingKind};
 use crate::coordinator::{LiveCoordinator, SimCoordinator};
 use crate::transport::{run_device, TcpTransport};
 
@@ -42,7 +42,8 @@ pub struct Fixture {
 /// The committed fixture corpus. Axes covered: fleet size (4/6/8),
 /// redundancy (optimized δ vs pinned δ=0.25), MEC heterogeneity
 /// (ν ∈ {0, 0.2, 0.3}), data sharding (equal vs power-law), stop rule
-/// (fixed epoch budget vs target-NMSE early stop), model size (16/24).
+/// (fixed epoch budget vs target-NMSE early stop), model size (16/24),
+/// per-epoch participation (all vs sampled count:3).
 pub fn fixtures() -> Vec<Fixture> {
     let small = |nu: f64| {
         let mut cfg = ExperimentConfig::small();
@@ -70,6 +71,15 @@ pub fn fixtures() -> Vec<Fixture> {
     medium_fleet8.n_devices = 8;
     medium_fleet8.model_dim = 24;
     medium_fleet8.max_epochs = 80;
+    // per-epoch sampled participation (count:3 of 6): both backends must
+    // sample the same sets from the run RNG and apply the same n/k
+    // gradient upscale, so the coded runs stay comparable under the
+    // usual sim-vs-live tolerances (appended last: fixture seeds are
+    // index-derived and earlier fixtures must keep theirs)
+    let mut sampled_part = small(0.2);
+    sampled_part.n_devices = 6;
+    sampled_part.participation = Participation::Count(3);
+    sampled_part.max_epochs = 80;
 
     vec![
         Fixture { id: "base_homog", full_only: false, cfg: base_homog },
@@ -78,6 +88,7 @@ pub fn fixtures() -> Vec<Fixture> {
         Fixture { id: "early_stop", full_only: false, cfg: early_stop },
         Fixture { id: "powerlaw_shards", full_only: false, cfg: powerlaw_shards },
         Fixture { id: "medium_fleet8", full_only: true, cfg: medium_fleet8 },
+        Fixture { id: "sampled_part", full_only: false, cfg: sampled_part },
     ]
 }
 

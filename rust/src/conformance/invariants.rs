@@ -15,6 +15,11 @@
 //!   exactly the diagonal of the cartesian expansion of the same axes.
 //! * **device relabeling symmetry** — reversing the fleet's device order
 //!   permutes the load optimizer's output and nothing else.
+//! * **participation sampling** — per-epoch sampled sets are a pure
+//!   function of the seed (bit-identical reruns), and the no-sampling
+//!   spellings (`all`, `count:<n>`, `frac:1`) are byte-identical to each
+//!   other — i.e. sampling-off reproduces the pre-sampling simulator
+//!   exactly.
 //!
 //! [`SimCoordinator`]: crate::coordinator::SimCoordinator
 
@@ -208,6 +213,59 @@ fn prop_relabel(g: &mut Gen) -> PropResult {
     Ok(())
 }
 
+fn prop_participation(g: &mut Gen) -> PropResult {
+    use crate::config::Participation;
+    use crate::coordinator::RunResult;
+
+    let same_run = |what: &str, a: &RunResult, b: &RunResult| -> PropResult {
+        assert_that(
+            a.setup_secs == b.setup_secs && a.delta == b.delta,
+            format!("{what}: setup/δ differ"),
+        )?;
+        assert_that(a.epoch_times == b.epoch_times, format!("{what}: epoch_times differ"))?;
+        assert_that(
+            a.trace.points.len() == b.trace.points.len(),
+            format!("{what}: trace length {} vs {}", a.trace.points.len(), b.trace.points.len()),
+        )?;
+        for (i, (p, q)) in a.trace.points.iter().zip(&b.trace.points).enumerate() {
+            assert_that(
+                p.time_s == q.time_s && p.epoch == q.epoch && p.nmse == q.nmse,
+                format!("{what}: trace point {i} differs"),
+            )?;
+        }
+        Ok(())
+    };
+    let train = |cfg: &crate::config::ExperimentConfig| -> Result<RunResult, String> {
+        SimCoordinator::new(cfg)
+            .map_err(|e| format!("sim: {e:#}"))?
+            .train_cfl()
+            .map_err(|e| format!("train: {e:#}"))
+    };
+
+    let mut cfg = g.fleet_config();
+    let n = cfg.n_devices;
+    // k may equal n: the boundary where sampling degenerates to the
+    // no-sampling fast path
+    let k = g.size_in(1, n);
+    cfg.participation = Participation::Count(k);
+    // the sampled sets are drawn from the run RNG: same seed ⇒ the same
+    // devices are sampled every epoch ⇒ bit-identical trajectories
+    same_run("sampled rerun", &train(&cfg)?, &train(&cfg)?)?;
+
+    // spelling equivalence: `all`, `count:<n>` and `frac:1` all mean
+    // no sampling, and must reproduce the legacy simulator byte for byte
+    let mut all = cfg.clone();
+    all.participation = Participation::All;
+    let mut count_n = cfg.clone();
+    count_n.participation = Participation::Count(n);
+    let mut frac_one = cfg.clone();
+    frac_one.participation = Participation::Fraction(1.0);
+    let ra = train(&all)?;
+    same_run("count:n vs all", &train(&count_n)?, &ra)?;
+    same_run("frac:1 vs all", &train(&frac_one)?, &ra)?;
+    Ok(())
+}
+
 pub(crate) fn checks(full: bool) -> Vec<CheckDef> {
     let scale = if full { 4 } else { 1 };
     let def = |name: &'static str, id: &'static str, cases: usize, body: fn(&mut Gen) -> PropResult| {
@@ -232,6 +290,12 @@ pub(crate) fn checks(full: bool) -> Vec<CheckDef> {
             "invariant__device-relabeling",
             24 * scale,
             prop_relabel,
+        ),
+        def(
+            "participation sampling",
+            "invariant__participation-sampling",
+            4 * scale,
+            prop_participation,
         ),
     ]
 }

@@ -8,10 +8,12 @@
 //! protocol ([`SimCoordinator`] on simulated time, [`LiveCoordinator`] on
 //! real threads), and everything execution-independent lives here:
 //!
-//! * [`Session`] — the frozen problem instance: config, fleet, dataset,
-//!   shards, and the root randomness stream. Both coordinators build
-//!   their setup phase from it, so parity/shard state is identical by
-//!   construction for a given seed.
+//! * [`Session`] — the frozen problem instance: config, fleet, the
+//!   training data (a materialized dataset + shards, or — in
+//!   `data_mode = lean` — per-shard generator descriptors that
+//!   rematerialize rows on demand), and the root randomness stream.
+//!   Both coordinators build their setup phase from it, so parity/shard
+//!   state is identical by construction for a given seed.
 //! * [`CflSetup`] / [`DeviceSetup`] — the output of the §III-A setup
 //!   phase: the master's composite parity set, each device's frozen
 //!   systematic submatrix, and the setup-time accounting.
@@ -38,12 +40,12 @@
 
 use super::{LiveCoordinator, SimCoordinator};
 use crate::coding::{CompositeParity, DeviceCode};
-use crate::config::ExperimentConfig;
-use crate::data::{shard_sizes, split, Dataset, Shard};
+use crate::config::{DataMode, ExperimentConfig};
+use crate::data::{shard_sizes, split, Dataset, LeanDataset, Shard};
 use crate::fl::GradBackend;
 use crate::lb::{optimize, optimize_fixed_c, LoadPolicy};
 use crate::linalg::{solve_ls, Mat};
-use crate::metrics::ConvergenceTrace;
+use crate::metrics::{BoundedTraceLog, ConvergenceTrace};
 use crate::rng::Rng;
 use crate::simnet::Fleet;
 use crate::transport::{TcpTransport, TransportKind};
@@ -60,6 +62,14 @@ pub struct RunResult {
     /// t*, uncoded epochs by the slowest device's modeled delay — so both
     /// backends plot on one chart; host overheads show up only in
     /// `wall_secs`.
+    ///
+    /// With `trace_points = 0` (the default) every epoch is a point.
+    /// With `trace_points = N > 0` the sim backend records through a
+    /// [`BoundedTraceLog`]: at most `2N + 1` evenly-strided points are
+    /// kept, always including the first and last epoch — million-epoch
+    /// runs keep a bounded, plot-faithful curve instead of an O(epochs)
+    /// vector. `converged` and the epoch counters are exact either way
+    /// (they are tracked outside the trace).
     pub trace: ConvergenceTrace,
     /// Per-epoch gather durations (Fig. 3 histograms), simulated seconds.
     pub epoch_times: Vec<f64>,
@@ -187,22 +197,35 @@ pub struct CflSetup {
     pub parity_upload_bits: f64,
 }
 
+/// The session's training data in one of two residency modes.
+enum SessionData {
+    /// The classic layout: the full m×d dataset plus per-device shard
+    /// slices, all resident (what every pre-scale release produced —
+    /// byte-identical for a given seed).
+    Materialized { dataset: Dataset, shards: Vec<Shard> },
+    /// `data_mode = lean`: per-shard generator descriptors; rows are
+    /// rematerialized on demand and dropped after use (million-device
+    /// fleets). Same distribution, different RNG stream — lean bytes are
+    /// *not* comparable to materialized bytes.
+    Lean(LeanDataset),
+}
+
 /// The frozen problem instance both coordinators consume: one seed ⇒ one
 /// fleet, one dataset, one sharding, and one stream of per-run RNGs.
 ///
 /// Construction performs the setup steps [`SimCoordinator`] and
 /// [`LiveCoordinator`] used to duplicate: validate the config, build the
-/// §IV heterogeneity fleet, generate the regression problem, and split it
-/// into per-device shards. [`Session::build_setup`] then runs the §III-A
-/// coding phase against any [`GradBackend`].
+/// §IV heterogeneity fleet, generate (or, in lean mode, *describe*) the
+/// regression problem, and split it into per-device shards.
+/// [`Session::build_setup`] then runs the §III-A coding phase against any
+/// [`GradBackend`].
 ///
 /// [`SimCoordinator`]: crate::coordinator::SimCoordinator
 /// [`LiveCoordinator`]: crate::coordinator::LiveCoordinator
 pub struct Session {
     pub cfg: ExperimentConfig,
     pub fleet: Fleet,
-    pub dataset: Dataset,
-    pub shards: Vec<Shard>,
+    data: SessionData,
     root_rng: Rng,
     run_counter: u64,
 }
@@ -210,16 +233,91 @@ pub struct Session {
 impl Session {
     /// Build the problem instance from a config: fleet ladders, dataset,
     /// shard split — all drawn from `cfg.seed` in a fixed order.
+    ///
+    /// `data_mode = materialized` consumes exactly the draws previous
+    /// releases consumed, so existing results stay byte-identical;
+    /// `data_mode = lean` keeps only descriptors (no m×d matrix is ever
+    /// resident).
     pub fn new(cfg: &ExperimentConfig) -> Result<Self> {
         cfg.validate()?;
         let mut root_rng = Rng::new(cfg.seed);
         let mut fleet = Fleet::from_config(cfg, &mut root_rng);
-        let dataset =
-            Dataset::generate(cfg.total_points(), cfg.model_dim, cfg.snr_db, &mut root_rng);
-        let sizes = shard_sizes(cfg.sharding, cfg.total_points(), cfg.n_devices, &mut root_rng);
-        fleet.set_points(&sizes);
-        let shards = split(&dataset, &sizes);
-        Ok(Self { cfg: cfg.clone(), fleet, dataset, shards, root_rng, run_counter: 0 })
+        let data = match cfg.data_mode {
+            DataMode::Materialized => {
+                let dataset = Dataset::generate(
+                    cfg.total_points(),
+                    cfg.model_dim,
+                    cfg.snr_db,
+                    &mut root_rng,
+                );
+                let sizes =
+                    shard_sizes(cfg.sharding, cfg.total_points(), cfg.n_devices, &mut root_rng);
+                fleet.set_points(&sizes);
+                let shards = split(&dataset, &sizes);
+                SessionData::Materialized { dataset, shards }
+            }
+            DataMode::Lean => {
+                let sizes =
+                    shard_sizes(cfg.sharding, cfg.total_points(), cfg.n_devices, &mut root_rng);
+                fleet.set_points(&sizes);
+                SessionData::Lean(LeanDataset::new(
+                    cfg.model_dim,
+                    cfg.snr_db,
+                    sizes,
+                    &mut root_rng,
+                ))
+            }
+        };
+        crate::obs::registry().gauge("fleet.devices").set(fleet.n_devices() as f64);
+        Ok(Self { cfg: cfg.clone(), fleet, data, root_rng, run_counter: 0 })
+    }
+
+    /// The fully materialized dataset — available only in
+    /// `data_mode = materialized` (lean sessions never hold it).
+    pub fn dataset(&self) -> Result<&Dataset> {
+        match &self.data {
+            SessionData::Materialized { dataset, .. } => Ok(dataset),
+            SessionData::Lean(_) => anyhow::bail!(
+                "the full dataset is not resident in data_mode = lean \
+                 (use data_mode = materialized)"
+            ),
+        }
+    }
+
+    /// The resident per-device shards — available only in
+    /// `data_mode = materialized`.
+    pub fn shards(&self) -> Result<&[Shard]> {
+        match &self.data {
+            SessionData::Materialized { shards, .. } => Ok(shards),
+            SessionData::Lean(_) => anyhow::bail!(
+                "shards are not resident in data_mode = lean \
+                 (use Session::lean to stream shard views)"
+            ),
+        }
+    }
+
+    /// The lean descriptor set, when `data_mode = lean`.
+    pub fn lean(&self) -> Option<&LeanDataset> {
+        match &self.data {
+            SessionData::Lean(lean) => Some(lean),
+            SessionData::Materialized { .. } => None,
+        }
+    }
+
+    /// Ground-truth model β* — the NMSE reference, resident in both modes.
+    pub fn beta_star(&self) -> &Mat {
+        match &self.data {
+            SessionData::Materialized { dataset, .. } => &dataset.beta_star,
+            SessionData::Lean(lean) => lean.beta_star(),
+        }
+    }
+
+    /// Rows held by device `i`'s shard (both modes).
+    pub fn shard_rows(&self, i: usize) -> usize {
+        match &self.data {
+            SessionData::Materialized { shards, .. } => shards[i].rows(),
+            SessionData::Lean(lean) => lean.shard_rows(i),
+        }
     }
 
     /// Fresh RNG stream per run so `train_cfl(); train_uncoded()` order
@@ -246,10 +344,18 @@ impl Session {
         }
     }
 
-    /// Closed-form least-squares NMSE — the Fig. 2 lower bound.
+    /// Closed-form least-squares NMSE — the Fig. 2 lower bound. Requires
+    /// the materialized dataset (a lean session would have to regenerate
+    /// all m rows to form the normal equations, defeating its purpose).
     pub fn ls_bound(&self) -> Result<f64> {
-        let ls = solve_ls(&self.dataset.x, &self.dataset.y)?;
-        Ok(ls.nmse(&self.dataset.beta_star))
+        let dataset = self.dataset().map_err(|_| {
+            anyhow::anyhow!(
+                "ls_bound needs the full dataset resident; \
+                 data_mode = lean does not support it"
+            )
+        })?;
+        let ls = solve_ls(&dataset.x, &dataset.y)?;
+        Ok(ls.nmse(&dataset.beta_star))
     }
 
     /// Bits of one parity row: d features + 1 label, with header overhead.
@@ -270,6 +376,11 @@ impl Session {
     /// Per-device RNG draw order (code, then upload sample) is fixed, so
     /// a given `(seed, policy)` yields byte-identical setup state no
     /// matter which coordinator consumes it.
+    ///
+    /// In lean mode each shard is rematerialized just long enough to
+    /// encode its parity, then dropped; `x_sys`/`y_sys` stay empty
+    /// (devices regenerate their ℓᵢ-row prefix per epoch instead), so
+    /// peak residency during setup is one shard, not the fleet.
     pub fn build_setup(
         &self,
         policy: &LoadPolicy,
@@ -278,23 +389,45 @@ impl Session {
     ) -> Result<CflSetup> {
         let d = self.cfg.model_dim;
         let c = policy.parity_rows;
+        let n = self.fleet.n_devices();
         let mut composite = CompositeParity::zeros(c, d);
-        let mut devices = Vec::with_capacity(self.shards.len());
+        let mut devices = Vec::with_capacity(n);
         let mut setup_secs = 0.0f64;
         let mut parity_bits = 0.0f64;
         let row_bits = self.parity_row_bits();
+        let rows_counter = crate::obs::registry().counter("data.rows_materialized");
 
-        for (i, shard) in self.shards.iter().enumerate() {
+        for i in 0..n {
             let load = policy.device_loads[i];
-            let code = DeviceCode::draw(
-                shard.rows(),
-                c,
-                load,
-                policy.miss_probs[i],
-                self.cfg.generator,
-                rng,
-            );
-            let (xt, yt) = backend.encode(&code.generator, &code.weights, &shard.x, &shard.y)?;
+            let points = self.shard_rows(i);
+            let (code, owned_shard);
+            let (shard_x, shard_y): (&Mat, &Mat) = match &self.data {
+                SessionData::Materialized { shards, .. } => {
+                    code = DeviceCode::draw(
+                        points,
+                        c,
+                        load,
+                        policy.miss_probs[i],
+                        self.cfg.generator,
+                        rng,
+                    );
+                    (&shards[i].x, &shards[i].y)
+                }
+                SessionData::Lean(lean) => {
+                    code = DeviceCode::draw_prefix(
+                        points,
+                        c,
+                        load,
+                        policy.miss_probs[i],
+                        self.cfg.generator,
+                        rng,
+                    );
+                    owned_shard = lean.shard(i);
+                    rows_counter.add(points as u64);
+                    (&owned_shard.x, &owned_shard.y)
+                }
+            };
+            let (xt, yt) = backend.encode(&code.generator, &code.weights, shard_x, shard_y)?;
             composite.accumulate(&xt, &yt);
 
             // parity upload: c rows over this device's link, all devices in
@@ -303,15 +436,33 @@ impl Session {
             setup_secs = setup_secs.max(upload);
             parity_bits += c as f64 * row_bits;
 
-            // freeze the systematic submatrix (private permutation order)
-            let mut x_sys = Mat::zeros(load, d);
-            let mut y_sys = Mat::zeros(load, 1);
-            for (r, &src) in code.systematic_rows().iter().enumerate() {
-                x_sys.row_mut(r).copy_from_slice(shard.x.row(src));
-                y_sys[(r, 0)] = shard.y[(src, 0)];
-            }
-            let handle = if load > 0 { backend.register_shard(&x_sys, &y_sys)? } else { None };
-            devices.push(DeviceSetup { x_sys, y_sys, load, handle });
+            let setup = match &self.data {
+                SessionData::Materialized { .. } => {
+                    // freeze the systematic submatrix (private permutation
+                    // order)
+                    let mut x_sys = Mat::zeros(load, d);
+                    let mut y_sys = Mat::zeros(load, 1);
+                    for (r, &src) in code.systematic_rows().iter().enumerate() {
+                        x_sys.row_mut(r).copy_from_slice(shard_x.row(src));
+                        y_sys[(r, 0)] = shard_y[(src, 0)];
+                    }
+                    let handle =
+                        if load > 0 { backend.register_shard(&x_sys, &y_sys)? } else { None };
+                    DeviceSetup { x_sys, y_sys, load, handle }
+                }
+                SessionData::Lean(_) => {
+                    // the systematic set is the shard's ℓᵢ-row prefix
+                    // (identity permutation); it is streamed per epoch,
+                    // never frozen
+                    DeviceSetup {
+                        x_sys: Mat::zeros(0, d),
+                        y_sys: Mat::zeros(0, 1),
+                        load,
+                        handle: None,
+                    }
+                }
+            };
+            devices.push(setup);
         }
         Ok(CflSetup { composite, devices, setup_secs, parity_upload_bits: parity_bits })
     }
@@ -322,6 +473,15 @@ impl Session {
         let mut trace = ConvergenceTrace::new(label);
         trace.push(setup_secs, 0, nmse0);
         trace
+    }
+
+    /// [`Session::start_trace`] as a bounded recorder honouring
+    /// `cfg.trace_points` (the sim backend's path; `trace_points = 0`
+    /// keeps every epoch and finishes byte-identical to the plain trace).
+    pub fn start_trace_log(&self, label: String, setup_secs: f64, nmse0: f64) -> BoundedTraceLog {
+        let mut log = BoundedTraceLog::new(label, self.cfg.trace_points);
+        log.push(setup_secs, 0, nmse0);
+        log
     }
 }
 

@@ -51,7 +51,7 @@
 
 use super::core::{Coordinator, RunResult, Session};
 use crate::coding::CompositeParity;
-use crate::config::ExperimentConfig;
+use crate::config::{DataMode, ExperimentConfig, Participation};
 use crate::fl::{assemble_coded_gradient, GlobalModel, GradBackend, NativeBackend};
 use crate::lb::LoadPolicy;
 use crate::linalg::Mat;
@@ -129,8 +129,14 @@ impl LiveCoordinator {
         anyhow::ensure!(
             cfg.client_fraction >= 1.0,
             "the live coordinator does not implement client selection \
-             (client_fraction = {}); use the sim backend",
+             (client_fraction = {}); use the sim backend or the \
+             `participation` axis",
             cfg.client_fraction
+        );
+        anyhow::ensure!(
+            cfg.data_mode == DataMode::Materialized,
+            "the live coordinator requires data_mode = materialized \
+             (lean fleets are sim-only)"
         );
         anyhow::ensure!(
             transport.n_endpoints() == cfg.n_devices,
@@ -202,7 +208,7 @@ impl LiveCoordinator {
         } else {
             let devices: Vec<Frozen> = self
                 .session
-                .shards
+                .shards()?
                 .iter()
                 .enumerate()
                 .map(|(i, s)| (i, s.x.clone(), s.y.clone(), s.rows()))
@@ -294,7 +300,7 @@ impl LiveCoordinator {
         let mut trace = self.session.start_trace(
             label.clone(),
             setup_secs,
-            model.nmse(&self.session.dataset.beta_star),
+            model.nmse(self.session.beta_star()),
         );
         let deadline_wall = if coded {
             Duration::from_secs_f64((policy.epoch_deadline * scale).min(MAX_SCALED_SECS)) + grace
@@ -307,6 +313,13 @@ impl LiveCoordinator {
         let mut late = 0u64;
         let mut on_time = 0u64;
         let mut now = setup_secs;
+
+        // sampled participation (the scale axis): each coded epoch
+        // broadcasts to k of n devices only. Uncoded FL is wait-for-all
+        // by definition, so sampling applies to the coded path alone.
+        let n_fleet = cfg.n_devices;
+        let k_sample = cfg.sampled_per_epoch();
+        let sampling = coded && cfg.participation != Participation::All && k_sample < n_fleet;
 
         for epoch in 0..cfg.max_epochs {
             let mut ep_span = crate::obs_span!(Debug, "epoch");
@@ -365,7 +378,15 @@ impl LiveCoordinator {
             let mut sent_to = vec![false; n_endpoints];
             let mut pending = 0usize;
             let msg = ToDevice::Model { epoch, beta: model.beta.clone() };
-            let targets: Vec<usize> = active.iter().copied().filter(|&s| alive[s]).collect();
+            let targets: Vec<usize> = if sampling {
+                let mut mask = vec![false; n_fleet];
+                for i in rng.sample_indices_sparse(n_fleet, k_sample) {
+                    mask[i] = true;
+                }
+                active.iter().copied().filter(|&s| alive[s] && mask[s]).collect()
+            } else {
+                active.iter().copied().filter(|&s| alive[s]).collect()
+            };
             let delivered = self.transport.broadcast(&targets, &msg)?;
             for (&slot, ok) in targets.iter().zip(delivered) {
                 if ok {
@@ -470,6 +491,12 @@ impl LiveCoordinator {
             // lost, or its endpoint died mid-flight
             late += (sent - grads.len()) as u64;
             epoch_members.push(sent);
+            if sampling {
+                // inverse-probability weighting, matching the sim backend
+                for g in &mut grads {
+                    g.scale(n_fleet as f32 / k_sample as f32);
+                }
+            }
             let refs: Vec<&Mat> = grads.iter().collect();
             let grad = assemble_coded_gradient(d, parity.as_ref(), &refs);
             model.apply_gradient(&grad);
@@ -488,7 +515,7 @@ impl LiveCoordinator {
             };
             now += epoch_secs;
             epoch_times.push(epoch_secs);
-            let nmse = model.nmse(&self.session.dataset.beta_star);
+            let nmse = model.nmse(self.session.beta_star());
             trace.push(now, epoch + 1, nmse);
             phases.record(Phase::Aggregate, t_aggregate.elapsed().as_secs_f64());
             if ep_span.active() {

@@ -1,9 +1,9 @@
 //! DES-driven training coordinator (the paper's evaluation harness).
 
 use super::core::{Coordinator, RunResult, Session};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, Participation};
 use crate::des::Simulator;
-use crate::fl::{assemble_coded_gradient, GlobalModel, GradBackend, NativeBackend};
+use crate::fl::{assemble_coded_gradient_tree, GlobalModel, GradBackend, NativeBackend};
 use crate::lb::LoadPolicy;
 use crate::linalg::Mat;
 use crate::obs::{Phase, PhaseBook};
@@ -96,17 +96,19 @@ impl SimCoordinator {
         let c = policy.parity_rows;
         let t_star = policy.epoch_deadline;
 
+        let label = format!("cfl δ={:.3}", policy.delta);
         let mut model = GlobalModel::zeros(d, self.session.cfg.learning_rate, m);
-        let mut trace = self.session.start_trace(
-            format!("cfl δ={:.3}", policy.delta),
+        let mut trace_log = self.session.start_trace_log(
+            label.clone(),
             setup.setup_secs,
-            model.nmse(&self.session.dataset.beta_star),
+            model.nmse(self.session.beta_star()),
         );
         let mut epoch_times = Vec::new();
         let mut gather_mc_times = Vec::new();
         // membership trace: the sim fleet never churns, but client
-        // selection (§V) varies the per-epoch gather set — record it so
-        // sim and live traces carry the same members column
+        // selection (§V) and sampled participation vary the per-epoch
+        // gather set — record it so sim and live traces carry the same
+        // members column
         let mut epoch_members = vec![states.iter().filter(|s| s.load > 0).count()];
         let mut converged = None;
         let mut on_time = 0u64;
@@ -114,6 +116,7 @@ impl SimCoordinator {
         let mut now = setup.setup_secs;
         // §Perf: keep the composite parity device-resident (PJRT fast path)
         let parity_handle = self.backend.register_parity(&composite.xt, &composite.yt, c)?;
+        let rows_streamed = crate::obs::registry().counter("data.rows_streamed");
 
         /// DES event payload: who finished computing.
         #[derive(Clone, Copy, PartialEq)]
@@ -122,33 +125,53 @@ impl SimCoordinator {
             Master,
         }
 
-        // client selection (§V extension): sample k of n devices per epoch
+        // per-epoch participation: the legacy §V client_fraction mask and
+        // the scale-mode `participation` axis both resolve to k of n
+        // devices per epoch (config validation forbids combining them)
         let n = self.session.fleet.n_devices();
-        let k =
-            ((self.session.cfg.client_fraction * n as f64).round() as usize).clamp(1, n);
+        let k = self.session.cfg.sampled_per_epoch();
+        // `participation != all` walks only the O(k) sampled set per epoch;
+        // the legacy mask path scans the whole fleet and is kept verbatim
+        // so client_fraction runs stay byte-identical
+        let sparse = self.session.cfg.participation != Participation::All;
 
         for epoch in 0..self.session.cfg.max_epochs {
             let mut ep_span = crate::obs_span!(Debug, "epoch");
             let t_epoch = Instant::now();
             // --- timing: schedule every completion, gather until t* ------
-            let selected: Option<Vec<bool>> = if k < n {
-                let mut mask = vec![false; n];
-                for i in rng.sample_indices(n, k) {
-                    mask[i] = true;
-                }
-                Some(mask)
-            } else {
-                None
-            };
             let mut sim = Simulator::new();
             let mut scheduled_devices = 0u64;
-            for (i, (dev, st)) in self.session.fleet.devices.iter().zip(states).enumerate() {
-                if st.load == 0 || selected.as_ref().is_some_and(|m| !m[i]) {
-                    continue;
+            if sparse && k < n {
+                // O(k) per epoch: draw the sampled set, touch only it
+                for i in rng.sample_indices_sparse(n, k) {
+                    if states[i].load == 0 {
+                        continue;
+                    }
+                    let t = self.session.fleet.devices[i]
+                        .sample_total_delay(states[i].load, &mut rng);
+                    sim.schedule_at(t, Actor::Device(i));
+                    scheduled_devices += 1;
                 }
-                let t = dev.sample_total_delay(st.load, &mut rng);
-                sim.schedule_at(t, Actor::Device(i));
-                scheduled_devices += 1;
+            } else {
+                let selected: Option<Vec<bool>> = if k < n {
+                    let mut mask = vec![false; n];
+                    for i in rng.sample_indices(n, k) {
+                        mask[i] = true;
+                    }
+                    Some(mask)
+                } else {
+                    None
+                };
+                for (i, (dev, st)) in
+                    self.session.fleet.devices.iter().zip(states).enumerate()
+                {
+                    if st.load == 0 || selected.as_ref().is_some_and(|m| !m[i]) {
+                        continue;
+                    }
+                    let t = dev.sample_total_delay(st.load, &mut rng);
+                    sim.schedule_at(t, Actor::Device(i));
+                    scheduled_devices += 1;
+                }
             }
             let t_master = self.session.fleet.master.sample_total_delay(c, &mut rng);
             sim.schedule_at(t_master, Actor::Master);
@@ -190,9 +213,20 @@ impl SimCoordinator {
                         let st = &states[i];
                         let mut g = match st.handle {
                             Some(h) => self.backend.partial_grad_registered(h, &model.beta)?,
-                            None => {
-                                self.backend.partial_grad(&st.x_sys, &model.beta, &st.y_sys)?
-                            }
+                            None => match self.session.lean() {
+                                // lean fleet: stream exactly the ℓᵢ-row
+                                // systematic prefix, then drop it
+                                Some(lean) => {
+                                    let view = lean.shard_view(i, st.load);
+                                    rows_streamed.add(st.load as u64);
+                                    self.backend.partial_grad(&view.x, &model.beta, &view.y)?
+                                }
+                                None => self.backend.partial_grad(
+                                    &st.x_sys,
+                                    &model.beta,
+                                    &st.y_sys,
+                                )?,
+                            },
                         };
                         if k < n {
                             // inverse-probability weighting keeps the
@@ -208,13 +242,18 @@ impl SimCoordinator {
             late += scheduled_devices - device_grads.len() as u64;
             epoch_members.push(scheduled_devices as usize);
             let grad_refs: Vec<&Mat> = device_grads.iter().collect();
-            let grad = assemble_coded_gradient(d, parity_grad.as_ref(), &grad_refs);
+            let grad = assemble_coded_gradient_tree(
+                d,
+                parity_grad.as_ref(),
+                &grad_refs,
+                self.session.cfg.agg_fanin,
+            );
             model.apply_gradient(&grad);
 
             now += t_star;
             epoch_times.push(t_star);
-            let nmse = model.nmse(&self.session.dataset.beta_star);
-            trace.push(now, epoch + 1, nmse);
+            let nmse = model.nmse(self.session.beta_star());
+            trace_log.push(now, epoch + 1, nmse);
 
             let gather_s = t_gather.duration_since(t_epoch).as_secs_f64();
             let grad_s = t_grad.duration_since(t_gather).as_secs_f64();
@@ -240,13 +279,13 @@ impl SimCoordinator {
         crate::obs_event!(
             Debug,
             "run_done",
-            label = trace.label.as_str(),
+            label = label.as_str(),
             epochs = epoch_times.len(),
             wall_s = started.elapsed().as_secs_f64(),
         );
         Ok(RunResult {
-            label: trace.label.clone(),
-            trace,
+            label,
+            trace: trace_log.finish(),
             epoch_times,
             setup_secs: setup.setup_secs,
             parity_upload_bits: setup.parity_upload_bits,
@@ -267,18 +306,27 @@ impl SimCoordinator {
 
     /// Train uncoded FL: full loads, the master waits for all m partial
     /// gradients each epoch (Fig. 3 top's heavy-tailed gather).
+    ///
+    /// Requires `data_mode = materialized`: the exact full-data gradient
+    /// needs every row resident each epoch, which is precisely what lean
+    /// mode exists to avoid (scale sweeps run `--skip-uncoded`).
     pub fn train_uncoded(&mut self) -> Result<RunResult> {
         let started = Instant::now();
         let mut phases = PhaseBook::with_capacity(self.session.cfg.max_epochs);
         let mut rng = self.session.run_rng();
         let d = self.session.cfg.model_dim;
         let m = self.session.fleet.total_points();
+        anyhow::ensure!(
+            self.session.lean().is_none(),
+            "train_uncoded needs the full dataset resident; \
+             data_mode = lean supports train_cfl only (use --skip-uncoded)"
+        );
 
         let mut model = GlobalModel::zeros(d, self.session.cfg.learning_rate, m);
         let mut trace = self.session.start_trace(
             "uncoded".into(),
             0.0,
-            model.nmse(&self.session.dataset.beta_star),
+            model.nmse(self.session.beta_star()),
         );
         let mut epoch_times = Vec::new();
         let mut converged = None;
@@ -288,16 +336,17 @@ impl SimCoordinator {
         // §Perf: pre-register the full dataset in row chunks so the exact
         // full gradient is a handful of β-only PJRT calls per epoch
         // (native backend: returns None, slow path below)
+        let dataset = self.session.dataset()?;
         let chunk = 512;
         let mut chunk_handles: Vec<(u64, usize)> = Vec::new(); // (handle, start)
         let mut all_registered = true;
         {
             let mut start = 0;
-            while start < self.session.dataset.rows() {
-                let end = (start + chunk).min(self.session.dataset.rows());
+            while start < dataset.rows() {
+                let end = (start + chunk).min(dataset.rows());
                 match self.backend.register_shard(
-                    &self.session.dataset.x.slice_rows(start, end),
-                    &self.session.dataset.y.slice_rows(start, end),
+                    &dataset.x.slice_rows(start, end),
+                    &dataset.y.slice_rows(start, end),
                 )? {
                     Some(h) => chunk_handles.push((h, start)),
                     None => {
@@ -326,11 +375,7 @@ impl SimCoordinator {
                 }
                 acc
             } else {
-                self.backend.partial_grad(
-                    &self.session.dataset.x,
-                    &model.beta,
-                    &self.session.dataset.y,
-                )?
+                self.backend.partial_grad(&dataset.x, &model.beta, &dataset.y)?
             };
             let t_grad = Instant::now();
             model.apply_gradient(&grad);
@@ -338,7 +383,7 @@ impl SimCoordinator {
 
             now += epoch_len;
             epoch_times.push(epoch_len);
-            let nmse = model.nmse(&self.session.dataset.beta_star);
+            let nmse = model.nmse(&dataset.beta_star);
             trace.push(now, epoch + 1, nmse);
 
             let gather_s = t_gather.duration_since(t_epoch).as_secs_f64();

@@ -206,10 +206,12 @@ fn sim_and_live_share_the_session_state() {
     let sim = SimCoordinator::new(&cfg).unwrap();
     let live = LiveCoordinator::new(&cfg, 1e-3).unwrap();
     assert_eq!(sim.session().fleet.devices, live.session().fleet.devices);
-    assert_eq!(sim.session().dataset.x, live.session().dataset.x);
-    assert_eq!(sim.session().dataset.y, live.session().dataset.y);
-    assert_eq!(sim.session().shards.len(), live.session().shards.len());
-    for (a, b) in sim.session().shards.iter().zip(&live.session().shards) {
+    let (sd, ld) = (sim.session().dataset().unwrap(), live.session().dataset().unwrap());
+    assert_eq!(sd.x, ld.x);
+    assert_eq!(sd.y, ld.y);
+    let (ss, ls) = (sim.session().shards().unwrap(), live.session().shards().unwrap());
+    assert_eq!(ss.len(), ls.len());
+    for (a, b) in ss.iter().zip(ls) {
         assert_eq!(a.x, b.x);
         assert_eq!(a.offset, b.offset);
     }
@@ -709,4 +711,122 @@ fn backend_failure_propagates_cleanly() {
     let mut sim = SimCoordinator::with_backend(&cfg, Box::new(backend)).unwrap();
     let err = sim.train_cfl().unwrap_err().to_string();
     assert!(err.contains("injected backend failure"), "lost error context: {err}");
+}
+
+// ---------------------------------------------------------------------
+// million-device scale knobs: sampled participation, lean data, bounded
+// traces, hierarchical aggregation
+
+#[test]
+fn participation_count_n_is_byte_identical_to_all() {
+    // sampling every device is the no-sampling fast path: `count:<n>`
+    // must reproduce the legacy `all` run bit for bit (same RNG
+    // consumption, same float summation order)
+    let base = small_cfg();
+    let mut sampled = base.clone();
+    sampled.participation = crate::config::Participation::Count(base.n_devices);
+    let ra = SimCoordinator::new(&base).unwrap().train_cfl().unwrap();
+    let rb = SimCoordinator::new(&sampled).unwrap().train_cfl().unwrap();
+    assert_eq!(ra.setup_secs, rb.setup_secs);
+    assert_eq!(ra.delta, rb.delta);
+    assert_eq!(ra.parity_upload_bits, rb.parity_upload_bits);
+    assert_eq!(ra.epoch_times, rb.epoch_times);
+    assert_eq!(ra.trace.points.len(), rb.trace.points.len());
+    for (pa, pb) in ra.trace.points.iter().zip(&rb.trace.points) {
+        assert_eq!(pa.time_s, pb.time_s);
+        assert_eq!(pa.nmse, pb.nmse);
+    }
+}
+
+#[test]
+fn sampled_participation_is_deterministic_and_changes_the_run() {
+    let mut cfg = small_cfg();
+    cfg.participation = crate::config::Participation::Count(3);
+    cfg.max_epochs = 200;
+    cfg.target_nmse = 0.0;
+    let ra = SimCoordinator::new(&cfg).unwrap().train_cfl().unwrap();
+    let rb = SimCoordinator::new(&cfg).unwrap().train_cfl().unwrap();
+    assert_eq!(ra.epoch_times, rb.epoch_times, "sampling must be seed-deterministic");
+    for (pa, pb) in ra.trace.points.iter().zip(&rb.trace.points) {
+        assert_eq!(pa.nmse, pb.nmse);
+    }
+    // and it really is a different run than full participation
+    let mut full_cfg = small_cfg();
+    full_cfg.max_epochs = 200;
+    full_cfg.target_nmse = 0.0;
+    let full = SimCoordinator::new(&full_cfg).unwrap().train_cfl().unwrap();
+    assert_ne!(ra.epoch_times, full.epoch_times, "count:3 of 8 must subsample epochs");
+    // the n/k upscale keeps the estimator unbiased: a sampled run still
+    // descends instead of stalling at NMSE 1
+    assert!(ra.trace.final_nmse().unwrap() < 0.9, "sampled run did not learn");
+}
+
+#[test]
+fn lean_mode_is_deterministic_and_learns() {
+    let mut cfg = small_cfg();
+    cfg.data_mode = crate::config::DataMode::Lean;
+    let ra = SimCoordinator::new(&cfg).unwrap().train_cfl().unwrap();
+    let rb = SimCoordinator::new(&cfg).unwrap().train_cfl().unwrap();
+    assert_eq!(ra.epoch_times, rb.epoch_times, "lean streams must be seed-stable");
+    for (pa, pb) in ra.trace.points.iter().zip(&rb.trace.points) {
+        assert_eq!(pa.time_s, pb.time_s);
+        assert_eq!(pa.nmse, pb.nmse);
+    }
+    assert!(
+        ra.converged.is_some(),
+        "lean CFL did not reach the target (final {:?})",
+        ra.trace.final_nmse()
+    );
+}
+
+#[test]
+fn lean_mode_refuses_the_resident_dataset_paths() {
+    let mut cfg = small_cfg();
+    cfg.data_mode = crate::config::DataMode::Lean;
+    let mut sim = SimCoordinator::new(&cfg).unwrap();
+    let err = sim.session().dataset().unwrap_err().to_string();
+    assert!(err.contains("lean"), "unclear lean error: {err}");
+    let err = sim.train_uncoded().unwrap_err().to_string();
+    assert!(err.contains("skip-uncoded"), "missing remediation hint: {err}");
+}
+
+#[test]
+fn trace_points_bounds_the_trace_and_keeps_the_ends() {
+    let mut cfg = small_cfg();
+    cfg.max_epochs = 500;
+    cfg.target_nmse = 0.0;
+    cfg.trace_points = 8;
+    let run = SimCoordinator::new(&cfg).unwrap().train_cfl().unwrap();
+    let pts = &run.trace.points;
+    assert!(pts.len() <= 2 * 8 + 1, "trace not bounded: {} points", pts.len());
+    assert!(pts.len() >= 8, "decimated too aggressively: {} points", pts.len());
+    assert_eq!(pts.first().unwrap().epoch, 0, "the setup point must survive");
+    assert_eq!(pts.last().unwrap().epoch, 500, "the final epoch must survive");
+    // the decimated trace samples the same trajectory the exact run walks
+    let mut exact_cfg = cfg.clone();
+    exact_cfg.trace_points = 0;
+    let exact = SimCoordinator::new(&exact_cfg).unwrap().train_cfl().unwrap();
+    assert_eq!(exact.trace.points.len(), 501);
+    for p in pts {
+        let full = exact.trace.points.iter().find(|q| q.epoch == p.epoch).unwrap();
+        assert_eq!(p.nmse, full.nmse, "epoch {} diverged under decimation", p.epoch);
+    }
+}
+
+#[test]
+fn agg_fanin_tree_stays_on_the_flat_trajectory() {
+    let mut cfg = small_cfg();
+    cfg.max_epochs = 200;
+    cfg.target_nmse = 0.0;
+    let flat = SimCoordinator::new(&cfg).unwrap().train_cfl().unwrap();
+    cfg.agg_fanin = 4;
+    let tree = SimCoordinator::new(&cfg).unwrap().train_cfl().unwrap();
+    // same RNG consumption: the timing axis is bit-identical; only the
+    // float association order of the gradient sum differs
+    assert_eq!(flat.epoch_times, tree.epoch_times);
+    let (a, b) = (flat.trace.final_nmse().unwrap(), tree.trace.final_nmse().unwrap());
+    assert!(
+        (a.log10() - b.log10()).abs() < 0.5,
+        "fanin 4 diverged from flat: {a:.3e} vs {b:.3e}"
+    );
 }

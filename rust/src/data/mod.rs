@@ -13,9 +13,11 @@
 
 mod dataset;
 mod shard;
+mod stream;
 
 pub use dataset::Dataset;
 pub use shard::{shard_sizes, split, Shard};
+pub use stream::LeanDataset;
 
 #[cfg(test)]
 mod tests;

@@ -1,0 +1,120 @@
+//! Memory-lean dataset representation for million-device fleets.
+//!
+//! [`Dataset::generate`](super::Dataset::generate) + [`split`](super::split)
+//! materialize the full m×d feature matrix and hold every device's shard
+//! resident for the whole run — at the paper's scale (7200×500) that is
+//! ~14 MB, but a million-device fleet at 4 points/device and d = 16 would
+//! be 4M×16 f32 ≈ 256 MB of features *plus* a second copy sliced into
+//! shards. [`LeanDataset`] stores none of it: each device holds only a
+//! *shard descriptor* — a row count, a global offset, and a deterministic
+//! RNG stream id — and shard contents are regenerated on demand, one
+//! device at a time, from a per-shard counter-mode stream.
+//!
+//! # Prefix property
+//!
+//! Each shard draws from **two** split substreams: one for features, one
+//! for label noise. Features fill row-major, noise is added one draw per
+//! row — so materializing only the first `k` rows of a shard (a device's
+//! assigned load ℓᵢ ≤ shard size) consumes prefixes of both streams and
+//! is **bitwise identical** to the first `k` rows of the fully
+//! materialized shard. Per-epoch gradient evaluation can therefore stream
+//! exactly the rows it needs.
+//!
+//! Lean shards are generated per-shard rather than sliced from one global
+//! matrix, so their bytes differ from [`Dataset`]'s (same distribution,
+//! different RNG consumption order). That is why lean mode is a separate
+//! [`DataMode`](crate::config::DataMode) — the materialized path remains
+//! byte-identical to previous releases.
+
+use super::Shard;
+use crate::linalg::{matmul, Mat};
+use crate::rng::{mix_seed, Rng};
+
+/// The global regression problem held as generator state: β*, the noise
+/// level, and one descriptor per shard. Total resident size is O(d + n),
+/// independent of the number of data points.
+#[derive(Clone, Debug)]
+pub struct LeanDataset {
+    /// Ground-truth model β*, d×1 — shared NMSE reference, always resident.
+    beta_star: Mat,
+    /// Noise standard deviation (same per-element SNR convention as
+    /// [`Dataset`](super::Dataset)).
+    noise_std: f64,
+    /// Root of the per-shard stream family.
+    stream_root: u64,
+    /// Rows held by each shard.
+    sizes: Vec<usize>,
+    /// First global row index of each shard (prefix sums of `sizes`).
+    offsets: Vec<usize>,
+}
+
+impl LeanDataset {
+    /// Build descriptors for shards of the given `sizes` over a `d`-dim
+    /// problem at `snr_db`. Draws β* and the stream root from `rng`;
+    /// no data rows are generated here.
+    pub fn new(d: usize, snr_db: f64, sizes: Vec<usize>, rng: &mut Rng) -> Self {
+        let mut beta_rng = rng.split(0xBE7A);
+        let beta_star = Mat::randn(d, 1, &mut beta_rng);
+        let stream_root = rng.split(0x57E4).next_u64();
+        let noise_std = 10f64.powf(-snr_db / 20.0);
+        let mut offsets = Vec::with_capacity(sizes.len());
+        let mut acc = 0usize;
+        for &s in &sizes {
+            offsets.push(acc);
+            acc += s;
+        }
+        Self { beta_star, noise_std, stream_root, sizes, offsets }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.beta_star.rows()
+    }
+
+    /// Total rows across all shards (m of the paper).
+    pub fn rows(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    pub fn noise_std(&self) -> f64 {
+        self.noise_std
+    }
+
+    pub fn beta_star(&self) -> &Mat {
+        &self.beta_star
+    }
+
+    /// Rows held by shard `i`.
+    pub fn shard_rows(&self, i: usize) -> usize {
+        self.sizes[i]
+    }
+
+    /// First global row index of shard `i`.
+    pub fn shard_offset(&self, i: usize) -> usize {
+        self.offsets[i]
+    }
+
+    /// Materialize the first `rows` rows of shard `i` (ℓᵢ-row view).
+    /// Bitwise-stable under the prefix property: the result's rows equal
+    /// the corresponding rows of the full shard regardless of `rows`.
+    pub fn shard_view(&self, i: usize, rows: usize) -> Shard {
+        assert!(rows <= self.sizes[i], "view of {rows} rows exceeds shard {i}");
+        let base = Rng::new(mix_seed(self.stream_root, i as u64));
+        let mut x_rng = base.split(1);
+        let mut noise_rng = base.split(2);
+        let x = Mat::randn(rows, self.dim(), &mut x_rng);
+        let mut y = matmul(&x, &self.beta_star);
+        for v in y.as_mut_slice() {
+            *v += (self.noise_std * noise_rng.normal()) as f32;
+        }
+        Shard { x, y, offset: self.offsets[i] }
+    }
+
+    /// Materialize all of shard `i`.
+    pub fn shard(&self, i: usize) -> Shard {
+        self.shard_view(i, self.sizes[i])
+    }
+}

@@ -150,3 +150,64 @@ fn split_rejects_bad_sizes() {
     let ds = Dataset::generate(10, 2, 0.0, &mut Rng::new(9));
     split(&ds, &[3, 3]);
 }
+
+#[test]
+fn lean_shapes_offsets_and_determinism() {
+    let sizes = vec![10, 20, 30];
+    let lean = LeanDataset::new(4, 10.0, sizes.clone(), &mut Rng::new(10));
+    assert_eq!(lean.n_shards(), 3);
+    assert_eq!(lean.dim(), 4);
+    assert_eq!(lean.rows(), 60);
+    assert!((lean.noise_std() - 10f64.powf(-0.5)).abs() < 1e-12);
+    assert_eq!(lean.shard_offset(0), 0);
+    assert_eq!(lean.shard_offset(2), 30);
+    for i in 0..3 {
+        let sh = lean.shard(i);
+        assert_eq!(sh.rows(), sizes[i]);
+        assert_eq!(sh.x.cols(), 4);
+        assert_eq!(sh.y.rows(), sizes[i]);
+        assert_eq!(sh.offset, lean.shard_offset(i));
+    }
+    // same seed ⇒ identical regeneration, every time
+    let again = LeanDataset::new(4, 10.0, sizes, &mut Rng::new(10));
+    assert_eq!(again.beta_star(), lean.beta_star());
+    for i in 0..3 {
+        assert_eq!(again.shard(i).x, lean.shard(i).x);
+        assert_eq!(again.shard(i).y, lean.shard(i).y);
+    }
+    // distinct shards draw from decorrelated streams
+    assert_ne!(lean.shard(0).x.row(0), lean.shard(1).x.row(0));
+}
+
+#[test]
+fn lean_shard_view_prefix_is_bitwise_stable() {
+    let lean = LeanDataset::new(6, 0.0, vec![40, 25], &mut Rng::new(11));
+    for i in 0..2 {
+        let full = lean.shard(i);
+        for k in [1usize, 7, 25] {
+            let view = lean.shard_view(i, k);
+            assert_eq!(view.rows(), k);
+            for r in 0..k {
+                assert_eq!(view.x.row(r), full.x.row(r), "shard {i} x row {r} at k={k}");
+                assert_eq!(view.y.row(r), full.y.row(r), "shard {i} y row {r} at k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lean_labels_follow_the_model() {
+    // y − Xβ* must be N(0, σ²) noise: check empirical variance
+    let lean = LeanDataset::new(8, 0.0, vec![4000], &mut Rng::new(12));
+    let sh = lean.shard(0);
+    let signal = crate::linalg::matmul(&sh.x, lean.beta_star());
+    let noise_sq = sh.y.dist_sq(&signal) / 4000.0;
+    assert!((noise_sq - 1.0).abs() < 0.1, "noise var {noise_sq} not ≈ 1");
+}
+
+#[test]
+#[should_panic(expected = "exceeds shard")]
+fn lean_view_rejects_overrun() {
+    let lean = LeanDataset::new(2, 0.0, vec![5], &mut Rng::new(13));
+    lean.shard_view(0, 6);
+}

@@ -53,3 +53,56 @@ pub fn assemble_coded_gradient(
     }
     g
 }
+
+/// [`assemble_coded_gradient`] with a hierarchical reduction: gradients
+/// are summed in groups of `fanin`, then the group sums are summed in
+/// groups of `fanin`, and so on — the aggregation-tree shape a real
+/// million-device deployment would use (edge aggregators feeding regional
+/// ones feeding the master). The parity gradient joins at the root.
+///
+/// `fanin = 0` (the default) delegates to the flat left-to-right sum and
+/// is **byte-identical** to [`assemble_coded_gradient`]. With `fanin ≥ 2`
+/// the result differs from the flat sum only by float association order
+/// (same set of addends), while the depth drops from O(k) to
+/// O(log_fanin k) — the per-epoch critical path of the Eq. 19 gather.
+pub fn assemble_coded_gradient_tree(
+    dim: usize,
+    parity_grad: Option<&Mat>,
+    device_grads: &[&Mat],
+    fanin: usize,
+) -> Mat {
+    if fanin == 0 {
+        return assemble_coded_gradient(dim, parity_grad, device_grads);
+    }
+    assert!(fanin >= 2, "fanin must be 0 (flat) or >= 2");
+    // leaf level: sum each group of `fanin` gradients
+    let mut level: Vec<Mat> = device_grads
+        .chunks(fanin)
+        .map(|group| {
+            let mut s = Mat::zeros(dim, 1);
+            for dg in group {
+                s.add_assign(dg);
+            }
+            s
+        })
+        .collect();
+    // inner levels
+    while level.len() > 1 {
+        level = level
+            .chunks(fanin)
+            .map(|group| {
+                let mut it = group.iter();
+                let mut s = it.next().expect("nonempty chunk").clone();
+                for dg in it {
+                    s.add_assign(dg);
+                }
+                s
+            })
+            .collect();
+    }
+    let mut g = level.pop().unwrap_or_else(|| Mat::zeros(dim, 1));
+    if let Some(p) = parity_grad {
+        g.add_assign(p);
+    }
+    g
+}

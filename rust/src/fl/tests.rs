@@ -85,6 +85,38 @@ fn assemble_combines_parity_and_devices() {
 }
 
 #[test]
+fn tree_assemble_fanin_zero_is_flat_sum() {
+    let mut rng = Rng::new(21);
+    let grads: Vec<Mat> = (0..37).map(|_| Mat::randn(8, 1, &mut rng)).collect();
+    let refs: Vec<&Mat> = grads.iter().collect();
+    let p = Mat::randn(8, 1, &mut rng);
+    let flat = assemble_coded_gradient(8, Some(&p), &refs);
+    let tree0 = assemble_coded_gradient_tree(8, Some(&p), &refs, 0);
+    assert_eq!(flat.as_slice(), tree0.as_slice(), "fanin 0 must be byte-identical");
+}
+
+#[test]
+fn tree_assemble_matches_flat_sum_numerically() {
+    let mut rng = Rng::new(22);
+    let grads: Vec<Mat> = (0..100).map(|_| Mat::randn(6, 1, &mut rng)).collect();
+    let refs: Vec<&Mat> = grads.iter().collect();
+    let p = Mat::randn(6, 1, &mut rng);
+    let flat = assemble_coded_gradient(6, Some(&p), &refs);
+    for fanin in [2usize, 3, 8, 32, 128] {
+        let tree = assemble_coded_gradient_tree(6, Some(&p), &refs, fanin);
+        assert!(
+            tree.max_abs_diff(&flat) < 1e-4,
+            "fanin {fanin} diverged from flat sum"
+        );
+    }
+    // degenerate inputs
+    let empty = assemble_coded_gradient_tree(6, None, &[], 4);
+    assert_eq!(empty.as_slice(), Mat::zeros(6, 1).as_slice());
+    let only_parity = assemble_coded_gradient_tree(6, Some(&p), &[], 4);
+    assert_eq!(only_parity.as_slice(), p.as_slice());
+}
+
+#[test]
 fn full_batch_gd_converges_on_clean_data() {
     // closed-loop sanity: iterating Eq. 2+3 on noiseless data drives NMSE→0
     let mut rng = Rng::new(5);

@@ -61,19 +61,66 @@ pub fn optimal_load(profile: &DeviceProfile, t: f64, cap: usize) -> (usize, f64)
     best
 }
 
+/// Devices deduplicated into *profile classes* — exact-bit equality on
+/// every delay-model parameter plus the shard size. `optimal_load` is a
+/// pure function of (profile, t, cap), so devices in the same class get
+/// the same answer and the inner scan only needs to run once per class
+/// per bisection step. On a tiered million-device fleet
+/// (`ladder_tiers = 24` ⇒ ≤ 24² link×compute combinations) this turns
+/// each bisection evaluation from O(n · points) CDF work into
+/// O(classes · points) + an O(n) table walk.
+struct ProfileClasses<'a> {
+    /// `class_of[i]` — class id of device i.
+    class_of: Vec<usize>,
+    /// One representative profile per class, in first-seen order.
+    profiles: Vec<&'a DeviceProfile>,
+}
+
+impl<'a> ProfileClasses<'a> {
+    fn build(fleet: &'a Fleet) -> Self {
+        let mut map = std::collections::HashMap::new();
+        let mut class_of = Vec::with_capacity(fleet.n_devices());
+        let mut profiles: Vec<&DeviceProfile> = Vec::new();
+        for dev in &fleet.devices {
+            let key = (
+                dev.compute.secs_per_point.to_bits(),
+                dev.compute.mem_rate.to_bits(),
+                dev.link.secs_per_packet.to_bits(),
+                dev.link.erasure_prob.to_bits(),
+                dev.points,
+            );
+            let next_id = profiles.len();
+            let id = *map.entry(key).or_insert_with(|| {
+                profiles.push(dev);
+                next_id
+            });
+            class_of.push(id);
+        }
+        Self { class_of, profiles }
+    }
+}
+
 /// Expected aggregate return at deadline `t` with per-step optimal loads
 /// (the objective of Eq. 16). Returns (aggregate, device loads, master
 /// load). `fixed_c` pins the master's parity load instead of optimizing.
+///
+/// The per-device loop walks devices in their original order and adds the
+/// same `optimal_load` value the direct scan would produce, so the float
+/// summation — and therefore every byte of the resulting policy — is
+/// identical to the pre-memoization implementation.
 fn aggregate_at(
     fleet: &Fleet,
+    classes: &ProfileClasses,
     t: f64,
     c_up: usize,
     fixed_c: Option<usize>,
 ) -> (f64, Vec<usize>, usize) {
+    let per_class: Vec<(usize, f64)> =
+        classes.profiles.iter().map(|p| optimal_load(p, t, p.points)).collect();
     let mut total = 0.0;
     let mut loads = Vec::with_capacity(fleet.n_devices());
-    for dev in &fleet.devices {
-        let (l, r) = optimal_load(dev, t, dev.points);
+    for &cls in &classes.class_of {
+        let (l, r) = per_class[cls];
         loads.push(l);
         total += r;
     }
@@ -114,20 +161,21 @@ fn optimize_inner(
     let m = fleet.total_points() as f64;
     anyhow::ensure!(m > 0.0, "fleet holds no data");
     anyhow::ensure!(epsilon >= 0.0, "epsilon must be nonnegative");
+    let classes = ProfileClasses::build(fleet);
 
     // bracket: grow t until the aggregate reaches m
     let mut lo = 0.0f64;
-    let mut hi = fleet
-        .devices
+    let mut hi = classes
+        .profiles
         .iter()
         .map(|p| p.mean_total_delay(p.points))
         .fold(0.0f64, f64::max)
         .max(1e-6);
-    let mut hi_agg = aggregate_at(fleet, hi, c_up, fixed_c).0;
+    let mut hi_agg = aggregate_at(fleet, &classes, hi, c_up, fixed_c).0;
     let mut guard = 0;
     while hi_agg < m {
         hi *= 2.0;
-        hi_agg = aggregate_at(fleet, hi, c_up, fixed_c).0;
+        hi_agg = aggregate_at(fleet, &classes, hi, c_up, fixed_c).0;
         guard += 1;
         anyhow::ensure!(
             guard <= 60,
@@ -139,7 +187,7 @@ fn optimize_inner(
     // bisect to the smallest t with aggregate ≥ m (within ε or time-res)
     for _ in 0..200 {
         let mid = 0.5 * (lo + hi);
-        let agg = aggregate_at(fleet, mid, c_up, fixed_c).0;
+        let agg = aggregate_at(fleet, &classes, mid, c_up, fixed_c).0;
         if agg >= m {
             hi = mid;
             hi_agg = agg;
@@ -155,7 +203,8 @@ fn optimize_inner(
     }
 
     let t_star = hi;
-    let (expected_return, device_loads, master_load) = aggregate_at(fleet, t_star, c_up, fixed_c);
+    let (expected_return, device_loads, master_load) =
+        aggregate_at(fleet, &classes, t_star, c_up, fixed_c);
     debug_assert!((expected_return - hi_agg).abs() < 1e-6);
     let miss_probs = fleet
         .devices

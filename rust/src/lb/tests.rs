@@ -132,6 +132,31 @@ fn homogeneous_fleet_needs_little_parity() {
 }
 
 #[test]
+fn tiered_fleet_policy_matches_per_device_scan() {
+    // profile-class memoization must be invisible: on a fleet with many
+    // duplicate profiles, every device's load is exactly the answer the
+    // direct per-device scan gives at t*
+    let mut cfg = ExperimentConfig::paper();
+    cfg.n_devices = 48;
+    cfg.ladder_tiers = 8;
+    let fleet = Fleet::from_config(&cfg, &mut Rng::new(11));
+    let m = fleet.total_points() as f64;
+    let policy = optimize(&fleet, (0.3 * m) as usize, 1.0).unwrap();
+    for (dev, &l) in fleet.devices.iter().zip(&policy.device_loads) {
+        let (want, _) = optimal_load(dev, policy.epoch_deadline, dev.points);
+        assert_eq!(l, want);
+    }
+    // identical profiles ⇒ identical loads
+    for (i, a) in fleet.devices.iter().enumerate() {
+        for (j, b) in fleet.devices.iter().enumerate().skip(i + 1) {
+            if a == b {
+                assert_eq!(policy.device_loads[i], policy.device_loads[j]);
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_optimizer_invariants() {
     prop::check("optimizer invariants", prop::cfg_cases(12), |g| {
         let mut cfg = ExperimentConfig::paper();

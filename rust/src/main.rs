@@ -6,7 +6,9 @@
 //!   NMSE-vs-time CSV traces.
 //! * `optimize` — solve the Eq. 13–16 load/redundancy policy and print it.
 //! * `sweep`    — expand a scenario grid (INI `[sweep]` section and/or
-//!   repeated `--axis key=v1,v2,…`; `--zip a+b` pairs correlated axes)
+//!   repeated `--axis key=v1,v2,…`; `--zip a+b` pairs correlated axes;
+//!   `--scenario scale` starts from a named preset — the million-device
+//!   scaling ladder of docs/SCALING.md)
 //!   and run it on a worker pool; writes per-scenario CSV (streamed in
 //!   grid order, so `--resume <csv>` restarts a killed grid where it
 //!   left off) and an aggregate coding-gain report. `--traces-dir`
@@ -62,6 +64,7 @@ fn parser() -> Parser {
         .opt("artifacts", "dir", "PJRT artifacts directory (default: native backend)")
         .opt("out", "dir", "output directory for CSV traces (default: results)")
         .opt("time-scale", "f64", "live/serve/sweep --live: simulated→wall seconds factor")
+        .opt("scenario", "name", "sweep: start from a named preset grid (scale | scale-ci)")
         .opt("axis", "key=v1,v2,..", "sweep: add a grid axis (repeatable)")
         .opt("zip", "key1+key2", "sweep: pair declared axes so they sweep together (repeatable)")
         .opt("resume", "file.csv", "sweep: skip scenarios already in this CSV, run the rest")
@@ -255,8 +258,17 @@ fn cmd_optimize(args: &cfl::cli::Args) -> Result<()> {
 
 fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     let ini = load_ini(args)?;
-    let cfg = build_config_with(args, ini.as_ref())?;
-    let mut grid = ScenarioGrid::new(&cfg);
+    // --scenario: start from a named preset grid (its own base config and
+    // axes) instead of the flag/INI-built base; --axis/--zip still extend
+    // it. Without a preset the grid's base comes from --config + flags.
+    let preset = args.get("scenario").map(sweep::scenario_preset).transpose()?;
+    let mut grid = match &preset {
+        Some(p) => {
+            println!("cfl sweep scenario '{}': {}", p.name, p.about);
+            p.grid.clone()
+        }
+        None => ScenarioGrid::new(&build_config_with(args, ini.as_ref())?),
+    };
     if let Some(ini) = &ini {
         grid = grid.with_ini(ini)?;
     }
@@ -268,8 +280,8 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
     }
     anyhow::ensure!(
         !grid.axes().is_empty(),
-        "sweep needs at least one axis: repeat --axis key=v1,v2,... or add a [sweep] \
-         section to --config"
+        "sweep needs at least one axis: repeat --axis key=v1,v2,..., add a [sweep] \
+         section to --config, or pick a preset with --scenario"
     );
 
     let transport = match args.get("transport") {
@@ -333,9 +345,12 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
         }
     }
 
+    // a lean-mode preset cannot run the uncoded baseline (it needs the
+    // dataset resident), so presets carry their own baseline policy
+    let preset_uncoded = preset.as_ref().map(|p| p.uncoded_baseline).unwrap_or(true);
     let opts = SweepOptions {
         workers,
-        uncoded_baseline: !args.has_flag("skip-uncoded"),
+        uncoded_baseline: !args.has_flag("skip-uncoded") && preset_uncoded,
         progress: !args.has_flag("quiet"),
         backend,
     };
@@ -449,6 +464,12 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
             scenarios = outcomes.len(),
             decimate = decimate,
         );
+    }
+    // the memory high-water mark is part of the scale-smoke contract:
+    // record it as a gauge (Linux VmHWM) and print it alongside the wall
+    // summary so budget gates can grep a single line
+    if let Some(bytes) = cfl::obs::record_peak_rss() {
+        println!("peak RSS: {:.1} MiB", bytes as f64 / (1024.0 * 1024.0));
     }
     cfl::obs::emit_metrics_snapshot();
 

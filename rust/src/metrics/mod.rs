@@ -10,7 +10,7 @@ mod trace;
 
 pub use csv::CsvWriter;
 pub use table::Table;
-pub use trace::{ConvergenceTrace, TracePoint};
+pub use trace::{BoundedTraceLog, ConvergenceTrace, TracePoint};
 
 #[cfg(test)]
 mod tests;

@@ -80,6 +80,52 @@ fn trace_decimate_keeps_ends() {
 }
 
 #[test]
+fn bounded_log_cap_zero_is_exact() {
+    let mut log = BoundedTraceLog::new("exact", 0);
+    let mut direct = ConvergenceTrace::new("exact");
+    for i in 0..1000 {
+        let (t, n) = (i as f64 * 0.5, 1.0 / (i + 1) as f64);
+        log.push(t, i, n);
+        direct.push(t, i, n);
+    }
+    assert_eq!(log.finish().points, direct.points);
+}
+
+#[test]
+fn bounded_log_bounds_residency_and_keeps_ends() {
+    let cap = 16;
+    let mut log = BoundedTraceLog::new("b", cap);
+    for i in 0..10_000 {
+        log.push(i as f64, i, 1.0 / (i + 1) as f64);
+        assert!(log.len() <= 2 * cap + 1, "resident {} at push {i}", log.len());
+        // the latest push is always observable
+        assert_eq!(log.last().unwrap().epoch, i);
+    }
+    assert_eq!(log.pushes(), 10_000);
+    let tr = log.finish();
+    assert!(tr.points.len() <= 2 * cap + 1);
+    assert_eq!(tr.points[0].epoch, 0, "first point retained");
+    assert_eq!(tr.points.last().unwrap().epoch, 9_999, "last point retained");
+    // kept epochs strictly increasing (push order preserved)
+    assert!(tr.points.windows(2).all(|w| w[0].epoch < w[1].epoch));
+    // interior points are evenly spaced at the final power-of-two stride
+    let strides: Vec<usize> =
+        tr.points.windows(2).map(|w| w[1].epoch - w[0].epoch).collect();
+    let s = strides[0];
+    assert!(s.is_power_of_two());
+    assert!(strides[..strides.len() - 1].iter().all(|&x| x == s));
+}
+
+#[test]
+fn bounded_log_short_run_keeps_everything() {
+    let mut log = BoundedTraceLog::new("s", 64);
+    for i in 0..50 {
+        log.push(i as f64, i, 0.5);
+    }
+    assert_eq!(log.finish().points.len(), 50);
+}
+
+#[test]
 fn trace_csv_roundtrip() {
     let dir = std::env::temp_dir().join("cfl_trace_test");
     let path = dir.join("trace.csv");

@@ -71,3 +71,100 @@ impl ConvergenceTrace {
         w.flush()
     }
 }
+
+/// Online, bounded-memory trace recorder: stride-doubling decimation.
+///
+/// A million-device run over thousands of epochs cannot afford to keep
+/// every `(time, epoch, nmse)` point, but decimating *after* the run
+/// (as [`ConvergenceTrace::decimate`] does) still pays the full storage
+/// bill. `BoundedTraceLog` decimates *as it records*: points are kept at
+/// a power-of-two epoch stride, and whenever the buffer would exceed
+/// `2·cap` the stride doubles and every other kept point is dropped —
+/// so at most `2·cap + 1` points are resident at any moment, the kept
+/// epochs are evenly spaced, and the first point is always retained.
+/// The most recent push is tracked separately so the final epoch is
+/// always present in [`BoundedTraceLog::finish`]'s output.
+///
+/// `cap = 0` disables decimation entirely: every push is kept, and the
+/// finished trace is byte-identical to pushing straight into a
+/// [`ConvergenceTrace`] — the sim backend's default, preserving existing
+/// results exactly.
+#[derive(Clone, Debug)]
+pub struct BoundedTraceLog {
+    label: String,
+    cap: usize,
+    stride: usize,
+    /// (push index, point) for kept points, ascending.
+    kept: Vec<(usize, TracePoint)>,
+    /// Last pushed point, if not already in `kept`.
+    tail: Option<(usize, TracePoint)>,
+    pushes: usize,
+}
+
+impl BoundedTraceLog {
+    /// `cap = 0` keeps everything; `cap ≥ 2` bounds residency to
+    /// `2·cap + 1` points.
+    pub fn new(label: impl Into<String>, cap: usize) -> Self {
+        assert!(cap == 0 || cap >= 2, "cap must be 0 (unbounded) or >= 2");
+        Self {
+            label: label.into(),
+            cap,
+            stride: 1,
+            kept: Vec::new(),
+            tail: None,
+            pushes: 0,
+        }
+    }
+
+    pub fn push(&mut self, time_s: f64, epoch: usize, nmse: f64) {
+        let p = TracePoint { time_s, epoch, nmse };
+        let idx = self.pushes;
+        self.pushes += 1;
+        if self.cap == 0 {
+            self.kept.push((idx, p));
+            return;
+        }
+        if idx % self.stride == 0 {
+            self.kept.push((idx, p));
+            self.tail = None;
+            if self.kept.len() > 2 * self.cap {
+                self.stride *= 2;
+                self.kept.retain(|(i, _)| i % self.stride == 0);
+            }
+        } else {
+            self.tail = Some((idx, p));
+        }
+    }
+
+    /// Points currently resident (kept + pending tail).
+    pub fn len(&self) -> usize {
+        self.kept.len() + usize::from(self.tail.is_some())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Last recorded point (always the most recent push).
+    pub fn last(&self) -> Option<&TracePoint> {
+        match &self.tail {
+            Some((_, p)) => Some(p),
+            None => self.kept.last().map(|(_, p)| p),
+        }
+    }
+
+    /// Total pushes seen (≥ the resident count once decimation kicks in).
+    pub fn pushes(&self) -> usize {
+        self.pushes
+    }
+
+    /// Freeze into a [`ConvergenceTrace`]: kept points in push order, plus
+    /// the final push if the stride skipped it.
+    pub fn finish(self) -> ConvergenceTrace {
+        let mut points: Vec<TracePoint> = self.kept.into_iter().map(|(_, p)| p).collect();
+        if let Some((_, p)) = self.tail {
+            points.push(p);
+        }
+        ConvergenceTrace { label: self.label, points }
+    }
+}

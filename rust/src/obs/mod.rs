@@ -340,6 +340,26 @@ pub fn scope(label: &str) -> ScopeGuard {
     ScopeGuard { prev }
 }
 
+/// The process' peak resident set size (Linux `VmHWM`, in bytes), or
+/// `None` where `/proc/self/status` is unavailable or unparsable (other
+/// platforms, restricted sandboxes). This is the number the scale-smoke
+/// budget gates on, so it is read from the kernel rather than estimated.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+/// Record [`peak_rss_bytes`] as the `process.peak_rss_bytes` gauge (a
+/// no-op off Linux) so metrics snapshots carry the memory high-water
+/// mark; returns the reading for callers that print it.
+pub fn record_peak_rss() -> Option<u64> {
+    let bytes = peak_rss_bytes()?;
+    registry().gauge("process.peak_rss_bytes").set(bytes as f64);
+    Some(bytes)
+}
+
 /// Publish the current [`registry`] contents as one `metrics` event
 /// (info level) with a field per metric, in deterministic name order.
 pub fn emit_metrics_snapshot() {

@@ -111,4 +111,27 @@ impl Rng {
         idx.truncate(k);
         idx
     }
+
+    /// Sample `k` distinct indices from [0, n) in O(k) time and memory
+    /// (Floyd's algorithm), returned **sorted ascending**.
+    ///
+    /// [`Rng::sample_indices`] scans all n positions, which is fine for
+    /// the paper's 24-device fleet but not for sampling 256 participants
+    /// out of a million-device sim fleet — this variant's cost depends
+    /// only on `k`. Exactly `k` draws are consumed, and the sorted output
+    /// makes the result independent of hash-set iteration order, so a
+    /// given `(rng state, n, k)` always yields the same set.
+    pub fn sample_indices_sparse(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct of {n}");
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.next_below((j + 1) as u64) as usize;
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        let mut out: Vec<usize> = chosen.into_iter().collect();
+        out.sort_unstable();
+        out
+    }
 }

@@ -198,6 +198,43 @@ fn sample_indices_distinct_and_in_range() {
 }
 
 #[test]
+fn sample_indices_sparse_distinct_sorted_deterministic() {
+    let mut r = Rng::new(17);
+    for _ in 0..100 {
+        let idx = r.sample_indices_sparse(1_000_000, 64);
+        assert_eq!(idx.len(), 64);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "sorted + distinct");
+        assert!(idx.iter().all(|&i| i < 1_000_000));
+    }
+    // same rng state → same set (hash-order independent by construction)
+    let mut a = Rng::new(18);
+    let mut b = Rng::new(18);
+    for _ in 0..50 {
+        assert_eq!(a.sample_indices_sparse(500, 20), b.sample_indices_sparse(500, 20));
+    }
+    // exhaustive sample is the full range
+    let mut r = Rng::new(19);
+    assert_eq!(r.sample_indices_sparse(12, 12), (0..12).collect::<Vec<_>>());
+}
+
+#[test]
+fn sample_indices_sparse_uniform_marginals() {
+    // each of 8 indices should appear in a size-2 sample w.p. 1/4
+    let mut r = Rng::new(20);
+    let mut counts = [0usize; 8];
+    let trials = 40000;
+    for _ in 0..trials {
+        for i in r.sample_indices_sparse(8, 2) {
+            counts[i] += 1;
+        }
+    }
+    for &c in &counts {
+        let f = c as f64 / trials as f64;
+        assert!((f - 0.25).abs() < 0.02, "f={f}");
+    }
+}
+
+#[test]
 fn fill_normal_f32_moments() {
     let mut r = Rng::new(16);
     let mut buf = vec![0f32; 40000];

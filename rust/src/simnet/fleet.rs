@@ -40,21 +40,31 @@ impl Fleet {
     ///   `τᵢ = packet_bits / throughputᵢ`.
     /// * Master MAC rate = `master_speedup ×` the *base* (fastest) rate,
     ///   zero-latency link, same memory-overhead model.
+    ///
+    /// With `cfg.ladder_tiers = T > 0` the ladder exponent is `i mod T`
+    /// instead of `i`: the fleet tiles T distinct rungs, so a
+    /// million-device fleet keeps the paper's heterogeneity *spread*
+    /// (T = 24 mirrors the §IV 24-device ladder) without the slowest
+    /// rate underflowing to zero. T = 0 is the per-device ladder,
+    /// byte-identical to the pre-tier construction.
     pub fn from_config(cfg: &ExperimentConfig, rng: &mut Rng) -> Self {
         let n = cfg.n_devices;
         let d = cfg.model_dim as f64;
         let pkt = packet_bits(cfg.model_dim, cfg.header_overhead);
+        let rung = |i: usize| {
+            if cfg.ladder_tiers > 0 { (i % cfg.ladder_tiers) as i32 } else { i as i32 }
+        };
 
         // compute ladder
         let mut mac_rates: Vec<f64> = (0..n)
-            .map(|i| (1.0 - cfg.nu_comp).powi(i as i32) * cfg.base_mac_rate_kmacs * 1000.0)
+            .map(|i| (1.0 - cfg.nu_comp).powi(rung(i)) * cfg.base_mac_rate_kmacs * 1000.0)
             .collect();
         let mut comp_rng = rng.split(0xFEE7);
         comp_rng.shuffle(&mut mac_rates);
 
         // link ladder (independent shuffle)
         let mut throughputs: Vec<f64> = (0..n)
-            .map(|i| (1.0 - cfg.nu_link).powi(i as i32) * cfg.base_throughput_kbps * 1000.0)
+            .map(|i| (1.0 - cfg.nu_link).powi(rung(i)) * cfg.base_throughput_kbps * 1000.0)
             .collect();
         let mut link_rng = rng.split(0x11CC);
         link_rng.shuffle(&mut throughputs);

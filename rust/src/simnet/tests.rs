@@ -232,6 +232,36 @@ fn fleet_shuffles_are_seed_reproducible_and_independent() {
 }
 
 #[test]
+fn ladder_tiers_tile_the_ladder() {
+    // 48 devices on a 24-tier ladder: each rung appears exactly twice
+    let mut cfg = ExperimentConfig::paper();
+    cfg.n_devices = 48;
+    cfg.ladder_tiers = 24;
+    let fleet = Fleet::from_config(&cfg, &mut Rng::new(9));
+    let mut got: Vec<f64> = fleet.devices.iter().map(|p| p.compute.secs_per_point).collect();
+    got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut want: Vec<f64> =
+        (0..48).map(|i| 500.0 / (0.8f64.powi((i % 24) as i32) * 1536e3)).collect();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits(), "tiled rung must be bit-exact");
+    }
+}
+
+#[test]
+fn ladder_tiers_covering_fleet_is_identity() {
+    // T = n means i mod T = i: bit-identical to the per-device ladder
+    let mut cfg = ExperimentConfig::paper();
+    let per_device = Fleet::from_config(&cfg, &mut Rng::new(10));
+    cfg.ladder_tiers = cfg.n_devices;
+    let tiled = Fleet::from_config(&cfg, &mut Rng::new(10));
+    for (a, b) in per_device.devices.iter().zip(&tiled.devices) {
+        assert_eq!(a, b);
+    }
+    assert_eq!(per_device.throughputs_bps, tiled.throughputs_bps);
+}
+
+#[test]
 fn homogeneous_fleet_is_uniform() {
     let mut cfg = ExperimentConfig::paper();
     cfg.nu_comp = 0.0;

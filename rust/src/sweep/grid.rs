@@ -53,6 +53,11 @@ pub const SWEEPABLE_KEYS: &[&str] = &[
     "sharding",
     "generator",
     "setup_cost",
+    "participation",
+    "data_mode",
+    "trace_points",
+    "agg_fanin",
+    "ladder_tiers",
 ];
 
 /// `[sweep]` keys that configure the run rather than defining an axis.
@@ -457,6 +462,11 @@ fn apply_key(cfg: &mut ExperimentConfig, key: &str, raw: &str) -> Result<()> {
         "sharding" => cfg.sharding = parse_value(key, raw)?,
         "generator" => cfg.generator = parse_value(key, raw)?,
         "setup_cost" => cfg.setup_cost = parse_value(key, raw)?,
+        "participation" => cfg.participation = parse_value(key, raw)?,
+        "data_mode" => cfg.data_mode = parse_value(key, raw)?,
+        "trace_points" => cfg.trace_points = parse_value(key, raw)?,
+        "agg_fanin" => cfg.agg_fanin = parse_value(key, raw)?,
+        "ladder_tiers" => cfg.ladder_tiers = parse_value(key, raw)?,
         other => bail!(
             "unknown sweep axis '{other}' (sweepable keys: {})",
             SWEEPABLE_KEYS.join(", ")

@@ -13,7 +13,12 @@
 //!   groups** ([`ScenarioGrid::zip_axes`] / `--zip a+b`) that sweep
 //!   correlated parameters together instead of multiplying them, and
 //!   parsing from INI `[sweep]` sections and `--axis key=v1,v2,…` CLI
-//!   specs.
+//!   specs. The scale knobs (`participation`, `data_mode`,
+//!   `trace_points`, `agg_fanin`, `ladder_tiers`) are sweepable like
+//!   any other field.
+//! * [`presets`] — named grids behind `cfl sweep --scenario <name>`:
+//!   the million-device scaling ladder (`scale`) and its CI budget cell
+//!   (`scale-ci`); see `docs/SCALING.md`.
 //! * [`runner`] — a `std::thread` worker pool over a channel work queue.
 //!   Each worker instantiates its own [`Coordinator`] — the DES backend
 //!   by default, or the threaded live cluster via
@@ -71,6 +76,7 @@
 pub mod baseline;
 pub mod grid;
 pub(crate) mod json;
+pub mod presets;
 pub mod report;
 pub mod resume;
 pub mod runner;
@@ -80,6 +86,7 @@ pub use baseline::{
     write_bench_json, write_bench_json_records, BenchRecord,
 };
 pub use grid::{config_fingerprint, Axis, Dim, Scenario, ScenarioGrid, SWEEPABLE_KEYS};
+pub use presets::{scenario_preset, Preset, PRESET_NAMES};
 pub use report::{
     gain_matrix, gain_stats, scenario_csv_header, scenario_csv_row, scenario_json_record,
     summary_table, trace_file_stem, write_json, write_json_records, write_outcome_traces,

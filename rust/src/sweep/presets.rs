@@ -1,0 +1,89 @@
+//! Named sweep presets — curated grids behind `cfl sweep --scenario`.
+//!
+//! A preset bundles a base config and its axes so the headline
+//! experiments are one flag, not a paragraph of `--axis` specs. The
+//! first residents are the million-device scaling ladder from
+//! `docs/SCALING.md`:
+//!
+//! * `scale` — n_devices ∈ {1k, 10k, 100k, 1M} with δ zipped so the
+//!   parity block stays a constant c = 64 rows while the fleet grows
+//!   (δ = c/m and m = 4·n, so δ shrinks 10× per rung). Lean data,
+//!   `participation = count:256`, a 24-tier device ladder, fan-in-32
+//!   aggregation and 64-point traces: per-epoch cost tracks the
+//!   *sampled* set, not the fleet, which is what lets the 1M cell
+//!   finish on a laptop.
+//! * `scale-ci` — the single 100k-device cell of the same ladder; the
+//!   wall-clock + peak-RSS budget gate `scripts/scale_smoke.sh` runs in
+//!   CI.
+//!
+//! Presets run CFL only (`uncoded_baseline = false`): the uncoded
+//! baseline needs the full dataset resident, which is exactly what lean
+//! mode exists to avoid. `--axis`/`--zip` still extend a preset grid,
+//! and an explicit `seed` axis works as usual.
+
+use super::grid::ScenarioGrid;
+use crate::config::{DataMode, ExperimentConfig, Participation};
+use anyhow::{bail, Result};
+
+/// Names [`scenario_preset`] accepts, in documentation order.
+pub const PRESET_NAMES: &[&str] = &["scale", "scale-ci"];
+
+/// A named, ready-to-run sweep grid.
+#[derive(Clone, Debug)]
+pub struct Preset {
+    pub name: &'static str,
+    /// One-line description, printed in the sweep header.
+    pub about: &'static str,
+    pub grid: ScenarioGrid,
+    /// Whether the preset can run the uncoded baseline (lean-mode
+    /// presets cannot — the baseline needs the resident dataset).
+    pub uncoded_baseline: bool,
+}
+
+/// The shared base of the scaling ladder: a tiny per-device problem
+/// (4 points, d = 16) so the interesting dimension is fleet size, with
+/// every millions-scale knob on — lean descriptors, sampled
+/// participation, tiered ladder, bounded traces, tree aggregation.
+fn scale_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper();
+    cfg.points_per_device = 4;
+    cfg.model_dim = 16;
+    cfg.snr_db = 10.0;
+    cfg.max_epochs = 30;
+    cfg.target_nmse = 0.0; // epoch-capped: every cell runs exactly 30 epochs
+    cfg.nu_comp = 0.2;
+    cfg.nu_link = 0.2;
+    cfg.ladder_tiers = 24; // tile the paper's 24-device ladder across the fleet
+    cfg.data_mode = DataMode::Lean;
+    cfg.participation = Participation::Count(256);
+    cfg.agg_fanin = 32;
+    cfg.trace_points = 64;
+    cfg
+}
+
+/// Resolve a preset by name. Unknown names list the valid ones.
+pub fn scenario_preset(name: &str) -> Result<Preset> {
+    match name {
+        "scale" => Ok(Preset {
+            name: "scale",
+            about: "million-device scaling ladder: n ∈ {1k, 10k, 100k, 1M}, c = 64 parity rows",
+            grid: ScenarioGrid::new(&scale_base())
+                .axis("n_devices", ["1000", "10000", "100000", "1000000"])?
+                .axis("delta", ["0.016", "0.0016", "0.00016", "0.000016"])?
+                .zip_axes(["n_devices", "delta"])?,
+            uncoded_baseline: false,
+        }),
+        "scale-ci" => Ok(Preset {
+            name: "scale-ci",
+            about: "the ladder's 100k-device cell alone (the CI budget gate)",
+            grid: ScenarioGrid::new(&scale_base())
+                .axis("n_devices", ["100000"])?
+                .axis("delta", ["0.00016"])?,
+            uncoded_baseline: false,
+        }),
+        other => bail!(
+            "unknown sweep scenario '{other}' (available: {})",
+            PRESET_NAMES.join(", ")
+        ),
+    }
+}

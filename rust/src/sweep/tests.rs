@@ -1152,3 +1152,85 @@ fn sidecar_load_round_trips_exotic_ids_and_drops_torn_lines() {
     assert!(err.contains("corrupt record sidecar"), "{err}");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+// ---------------------------------------------------------------------
+// scale knobs as sweep axes, and the named preset grids
+// ---------------------------------------------------------------------
+
+#[test]
+fn scale_knobs_are_sweepable_axes() {
+    let grid = ScenarioGrid::new(&tiny())
+        .axis("participation", ["all", "count:2"])
+        .unwrap()
+        .axis("data_mode", ["materialized", "lean"])
+        .unwrap()
+        .axis("trace_points", ["0", "8"])
+        .unwrap()
+        .axis("agg_fanin", ["0", "4"])
+        .unwrap()
+        .axis("ladder_tiers", ["0", "2"])
+        .unwrap();
+    assert_eq!(grid.len(), 32);
+    let scenarios = grid.expand().unwrap();
+    let last = scenarios.last().unwrap();
+    assert_eq!(last.cfg.participation, crate::config::Participation::Count(2));
+    assert_eq!(last.cfg.data_mode, crate::config::DataMode::Lean);
+    assert_eq!(last.cfg.trace_points, 8);
+    assert_eq!(last.cfg.agg_fanin, 4);
+    assert_eq!(last.cfg.ladder_tiers, 2);
+    // bad values fail at declaration, like any other axis
+    assert!(ScenarioGrid::new(&tiny()).axis("participation", ["sometimes"]).is_err());
+    assert!(ScenarioGrid::new(&tiny()).axis("data_mode", ["sparse"]).is_err());
+}
+
+#[test]
+fn scale_preset_zips_fleet_size_with_delta() {
+    let preset = scenario_preset("scale").unwrap();
+    assert!(!preset.uncoded_baseline, "lean presets cannot run the uncoded baseline");
+    let scenarios = preset.grid.expand().unwrap();
+    assert_eq!(scenarios.len(), 4, "zipped ladder, not a 4×4 product");
+    let rungs: Vec<(usize, Option<f64>)> =
+        scenarios.iter().map(|s| (s.cfg.n_devices, s.cfg.delta)).collect();
+    assert_eq!(
+        rungs,
+        vec![
+            (1_000, Some(0.016)),
+            (10_000, Some(0.0016)),
+            (100_000, Some(0.00016)),
+            (1_000_000, Some(0.000016)),
+        ]
+    );
+    for s in &scenarios {
+        // constant parity block: c = δ·m = 64 rows on every rung
+        let c = s.cfg.delta.unwrap() * s.cfg.total_points() as f64;
+        assert!((c - 64.0).abs() < 1e-6, "{}: c = {c}", s.id);
+        assert_eq!(s.cfg.data_mode, crate::config::DataMode::Lean);
+        assert_eq!(s.cfg.participation, crate::config::Participation::Count(256));
+        assert!(s.cfg.trace_points > 0 && s.cfg.agg_fanin > 0 && s.cfg.ladder_tiers > 0);
+    }
+}
+
+#[test]
+fn scale_ci_preset_is_the_single_budget_cell() {
+    let preset = scenario_preset("scale-ci").unwrap();
+    let scenarios = preset.grid.expand().unwrap();
+    assert_eq!(scenarios.len(), 1);
+    assert_eq!(scenarios[0].cfg.n_devices, 100_000);
+    assert_eq!(scenarios[0].cfg.delta, Some(0.00016));
+    let err = scenario_preset("warp").unwrap_err().to_string();
+    assert!(err.contains("scale-ci"), "unknown preset must list the names: {err}");
+}
+
+#[test]
+fn scale_preset_smallest_rung_runs_end_to_end() {
+    // run the 1k-device rung for a couple of epochs: every scale knob on
+    // at once (lean + sampled + tiered + tree + bounded trace) must
+    // produce a well-formed RunResult through the normal sweep machinery
+    let preset = scenario_preset("scale").unwrap();
+    let mut cfg = preset.grid.expand().unwrap()[0].cfg.clone();
+    cfg.max_epochs = 2;
+    let run = SimCoordinator::new(&cfg).unwrap().train_cfl().unwrap();
+    assert_eq!(run.epoch_times.len(), 2);
+    assert_eq!(run.trace.points.len(), 3, "short run keeps every trace point");
+    assert!(run.setup_secs > 0.0 && run.delta > 0.0);
+}

@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# CI scale smoke: prove the million-device sim machinery holds its budget
+# at the 100k rung. Runs `cfl sweep --scenario scale-ci` (the scaling
+# ladder's single 100k-device cell: lean data, participation count:256,
+# 24-tier ladder, fan-in-32 aggregation, 64-point traces) under a
+# wall-clock budget, then checks the kernel-reported peak RSS the CLI
+# prints (Linux VmHWM) against a memory budget, and pins the report
+# schema against bench/scale_baseline.json with `cfl bench-check`.
+#
+# Budgets are deliberately loose multiples of the expected cost (a 100k
+# fleet should take single-digit seconds and tens of MiB): the gate is
+# for O(fleet)-per-epoch regressions — which blow these numbers up by
+# orders of magnitude — not for host jitter.
+#
+# Usage: scripts/scale_smoke.sh
+# Env:   CFL_BIN overrides the binary (default target/{release,debug}/cfl)
+#        SCALE_WALL_BUDGET_S (default 300), SCALE_RSS_BUDGET_MIB (default 2048)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${CFL_BIN:-}
+if [[ -z "$BIN" ]]; then
+    for candidate in target/release/cfl target/debug/cfl; do
+        if [[ -x "$candidate" ]]; then
+            BIN=$candidate
+            break
+        fi
+    done
+fi
+if [[ -z "${BIN:-}" || ! -x "$BIN" ]]; then
+    echo "scale_smoke: cfl binary not built (run cargo build --release first)" >&2
+    exit 1
+fi
+
+WALL_BUDGET=${SCALE_WALL_BUDGET_S:-300}
+RSS_BUDGET_MIB=${SCALE_RSS_BUDGET_MIB:-2048}
+OUT=${SCALE_OUT:-scale_out}
+LOG="$OUT/scale_smoke.log"
+mkdir -p "$OUT"
+
+# `timeout` turns a hung/quadratic run into a clean failure instead of a
+# 6-hour CI job; the sweep itself is deterministic (sim backend)
+start=$(date +%s)
+if ! timeout "$WALL_BUDGET" "$BIN" sweep --scenario scale-ci --quiet \
+    --out "$OUT" --bench-out BENCH_scale.json | tee "$LOG"; then
+    echo "scale_smoke: sweep failed or exceeded the ${WALL_BUDGET}s wall budget" >&2
+    exit 1
+fi
+elapsed=$(( $(date +%s) - start ))
+echo "scale_smoke: 100k-device scenario finished in ${elapsed}s (budget ${WALL_BUDGET}s)"
+
+# the CLI prints the kernel's VmHWM high-water mark after the sweep; on
+# platforms without /proc the line is absent and the RSS gate self-skips
+rss_line=$(grep -E '^peak RSS: ' "$LOG" || true)
+if [[ -n "$rss_line" ]]; then
+    rss_mib=$(echo "$rss_line" | awk '{print $3}')
+    over=$(awk -v r="$rss_mib" -v b="$RSS_BUDGET_MIB" 'BEGIN {print (r > b) ? 1 : 0}')
+    if [[ "$over" == "1" ]]; then
+        echo "scale_smoke: peak RSS ${rss_mib} MiB exceeds the ${RSS_BUDGET_MIB} MiB budget" >&2
+        exit 1
+    fi
+    echo "scale_smoke: peak RSS ${rss_mib} MiB (budget ${RSS_BUDGET_MIB} MiB)"
+else
+    echo "scale_smoke: no peak RSS line (non-Linux host?) — RSS gate skipped"
+fi
+
+# pin the report schema + scenario id; the scale cells run epoch-capped
+# (target 0), so the baseline records no gain and the bench gate is the
+# schema/id check, not a gain floor
+"$BIN" bench-check --report BENCH_scale.json --baseline bench/scale_baseline.json \
+    --tolerance 0.2 --wall-tolerance off
+echo "scale_smoke: ok"
