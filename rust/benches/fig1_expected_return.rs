@@ -37,8 +37,7 @@ fn main() {
         .min_by(|a, b| {
             (a.mean_total_delay(300) - 1.3)
                 .abs()
-                .partial_cmp(&(b.mean_total_delay(300) - 1.3).abs())
-                .unwrap()
+                .total_cmp(&(b.mean_total_delay(300) - 1.3).abs())
         })
         .unwrap();
     println!(

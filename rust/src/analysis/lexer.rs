@@ -1,0 +1,431 @@
+//! A small Rust lexer for the lint engine — tokens, not syntax trees.
+//!
+//! The vendored-deps constraint rules out `syn`/`proc-macro2`, so the
+//! rule engine works on a token stream produced here. The lexer's one
+//! job is to be *literal-aware*: rule patterns must never fire on text
+//! inside comments, doc comments (and therefore doctests), string
+//! literals, raw strings, byte strings, or char literals — and must
+//! still fire inside macro bodies, which are lexed like any other code.
+//!
+//! Covered Rust surface:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments
+//!   (`/* /* */ */`), captured as [`Comment`] records so the rule layer
+//!   can parse `cfl-lint: allow(...)` suppressions and check for
+//!   justifying comments (rule R6);
+//! * string literals with escapes, raw strings `r"…"` / `r#"…"#` with
+//!   any number of hashes, byte strings `b"…"` and raw byte strings
+//!   `br#"…"#`;
+//! * char literals (`'a'`, `'\n'`, `b'\0'`) distinguished from
+//!   lifetimes (`'static`, `'_`) by lookahead — the classic tick
+//!   ambiguity;
+//! * raw identifiers (`r#type` lexes as the identifier `type`);
+//! * numeric literals (decimal, `0x`/`0o`/`0b`, underscores, float
+//!   fractions and signed exponents, type suffixes), classified
+//!   [`TokKind::Int`] vs [`TokKind::Float`] — rule R5 needs to spot a
+//!   hard-coded integer seed;
+//! * identifiers and punctuation, with `::` fused into one token so
+//!   path patterns like `Instant::now` are three tokens, not four.
+//!
+//! Positions are 1-based `(line, col)` in characters; every finding the
+//! rule layer reports points back at these spans.
+
+/// Token classification — just enough structure for lexical rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `Instant`, `unwrap`, …).
+    Ident,
+    /// Integer literal (`42`, `0xF1EE7`, `1_000u64`).
+    Int,
+    /// Float literal (`0.5`, `1e-3`, `2.5f32`).
+    Float,
+    /// String literal of any flavor (escaped, raw, byte); text is the
+    /// literal body, escapes left as written.
+    Str,
+    /// Char or byte-char literal (`'a'`, `'\n'`, `b'x'`).
+    Char,
+    /// Lifetime (`'static` lexes with text `static`).
+    Lifetime,
+    /// Punctuation. One char per token, except `::` which is fused.
+    Punct,
+}
+
+/// One lexed token with its 1-based source position.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// One comment (line or block), recorded at its starting position.
+/// `text` keeps the interior verbatim (without the `//` introducer for
+/// line comments; with delimiters for block comments).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// Lexer output: code tokens plus the comment side-channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn new(src: &str) -> Self {
+        Self { chars: src.chars().collect(), i: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self, k: usize) -> Option<char> {
+        self.chars.get(self.i + k).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Lex `src` into tokens and comments. Never fails: malformed input
+/// (unterminated strings/comments) is tolerated by consuming to EOF —
+/// a linter must keep going on files that don't compile yet.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor::new(src);
+    let mut out = Lexed::default();
+    while let Some(c) = cur.peek(0) {
+        let (line, col) = (cur.line, cur.col);
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        // comments first: `//…\n` and nested `/* … */`
+        if c == '/' && cur.peek(1) == Some('/') {
+            cur.bump();
+            cur.bump();
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            out.comments.push(Comment { text, line, col });
+            continue;
+        }
+        if c == '/' && cur.peek(1) == Some('*') {
+            cur.bump();
+            cur.bump();
+            let mut depth = 1usize;
+            let mut text = String::from("/*");
+            while depth > 0 {
+                match (cur.peek(0), cur.peek(1)) {
+                    (Some('/'), Some('*')) => {
+                        depth += 1;
+                        text.push_str("/*");
+                        cur.bump();
+                        cur.bump();
+                    }
+                    (Some('*'), Some('/')) => {
+                        depth -= 1;
+                        text.push_str("*/");
+                        cur.bump();
+                        cur.bump();
+                    }
+                    (Some(ch), _) => {
+                        text.push(ch);
+                        cur.bump();
+                    }
+                    (None, _) => break, // unterminated — tolerate at EOF
+                }
+            }
+            out.comments.push(Comment { text, line, col });
+            continue;
+        }
+        // raw strings / raw identifiers: r"…", r#"…"#, r#ident
+        if c == 'r' {
+            if let Some(hashes) = raw_string_hashes(&cur, 1) {
+                cur.bump(); // r
+                let body = raw_string_body(&mut cur, hashes);
+                out.toks.push(Tok { kind: TokKind::Str, text: body, line, col });
+                continue;
+            }
+            if cur.peek(1) == Some('#') && cur.peek(2).is_some_and(is_ident_start) {
+                cur.bump(); // r
+                cur.bump(); // #
+                let name = ident_body(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Ident, text: name, line, col });
+                continue;
+            }
+        }
+        // byte literals: b'…', b"…", br"…", br#"…"#
+        if c == 'b' {
+            match cur.peek(1) {
+                Some('\'') => {
+                    cur.bump(); // b
+                    let body = char_literal_body(&mut cur);
+                    out.toks.push(Tok { kind: TokKind::Char, text: body, line, col });
+                    continue;
+                }
+                Some('"') => {
+                    cur.bump(); // b
+                    let body = string_body(&mut cur);
+                    out.toks.push(Tok { kind: TokKind::Str, text: body, line, col });
+                    continue;
+                }
+                Some('r') => {
+                    if let Some(hashes) = raw_string_hashes(&cur, 2) {
+                        cur.bump(); // b
+                        cur.bump(); // r
+                        let body = raw_string_body(&mut cur, hashes);
+                        out.toks.push(Tok { kind: TokKind::Str, text: body, line, col });
+                        continue;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if is_ident_start(c) {
+            let name = ident_body(&mut cur);
+            out.toks.push(Tok { kind: TokKind::Ident, text: name, line, col });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (text, kind) = number_body(&mut cur);
+            out.toks.push(Tok { kind, text, line, col });
+            continue;
+        }
+        if c == '"' {
+            let body = string_body(&mut cur);
+            out.toks.push(Tok { kind: TokKind::Str, text: body, line, col });
+            continue;
+        }
+        if c == '\'' {
+            // lifetime iff the tick is followed by an identifier char
+            // that is NOT itself closed by a tick ('a' is a char, 'a is
+            // a lifetime); escapes are always chars
+            let c1 = cur.peek(1);
+            let lifetime = match c1 {
+                Some('\\') => false,
+                Some(ch) if is_ident_continue(ch) => cur.peek(2) != Some('\''),
+                _ => false,
+            };
+            if lifetime {
+                cur.bump(); // '
+                let name = ident_body(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Lifetime, text: name, line, col });
+            } else {
+                let body = char_literal_body(&mut cur);
+                out.toks.push(Tok { kind: TokKind::Char, text: body, line, col });
+            }
+            continue;
+        }
+        // punctuation; fuse `::` into one token for path patterns
+        cur.bump();
+        if c == ':' && cur.peek(0) == Some(':') {
+            cur.bump();
+            out.toks.push(Tok { kind: TokKind::Punct, text: "::".into(), line, col });
+        } else {
+            out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, col });
+        }
+    }
+    out
+}
+
+/// If the cursor (at offset `at` past the current position, i.e. just
+/// after the `r`) sits on `#*k "`, return `Some(k)` — a raw string
+/// opener. `at` is 1 for `r…`, 2 for `br…`.
+fn raw_string_hashes(cur: &Cursor, at: usize) -> Option<usize> {
+    let mut k = 0usize;
+    while cur.peek(at + k) == Some('#') {
+        k += 1;
+    }
+    (cur.peek(at + k) == Some('"')).then_some(k)
+}
+
+/// Consume `#*k " … " #*k` with the cursor just after the `r`.
+fn raw_string_body(cur: &mut Cursor, hashes: usize) -> String {
+    for _ in 0..hashes {
+        cur.bump(); // opening #
+    }
+    cur.bump(); // opening "
+    let mut body = String::new();
+    loop {
+        match cur.peek(0) {
+            None => break, // unterminated — tolerate
+            Some('"') => {
+                let closes = (0..hashes).all(|k| cur.peek(1 + k) == Some('#'));
+                if closes {
+                    cur.bump();
+                    for _ in 0..hashes {
+                        cur.bump();
+                    }
+                    break;
+                }
+                body.push('"');
+                cur.bump();
+            }
+            Some(ch) => {
+                body.push(ch);
+                cur.bump();
+            }
+        }
+    }
+    body
+}
+
+/// Consume a `"…"` string (cursor on the opening quote), escapes kept
+/// verbatim in the returned body.
+fn string_body(cur: &mut Cursor) -> String {
+    cur.bump(); // "
+    let mut body = String::new();
+    loop {
+        match cur.peek(0) {
+            None => break,
+            Some('\\') => {
+                body.push('\\');
+                cur.bump();
+                if let Some(e) = cur.peek(0) {
+                    body.push(e);
+                    cur.bump();
+                }
+            }
+            Some('"') => {
+                cur.bump();
+                break;
+            }
+            Some(ch) => {
+                body.push(ch);
+                cur.bump();
+            }
+        }
+    }
+    body
+}
+
+/// Consume a `'…'` char literal (cursor on the opening tick).
+fn char_literal_body(cur: &mut Cursor) -> String {
+    cur.bump(); // '
+    let mut body = String::new();
+    loop {
+        match cur.peek(0) {
+            None => break,
+            Some('\\') => {
+                body.push('\\');
+                cur.bump();
+                if let Some(e) = cur.peek(0) {
+                    body.push(e);
+                    cur.bump();
+                }
+            }
+            Some('\'') => {
+                cur.bump();
+                break;
+            }
+            Some(ch) => {
+                body.push(ch);
+                cur.bump();
+            }
+        }
+    }
+    body
+}
+
+fn ident_body(cur: &mut Cursor) -> String {
+    let mut name = String::new();
+    while let Some(ch) = cur.peek(0) {
+        if !is_ident_continue(ch) {
+            break;
+        }
+        name.push(ch);
+        cur.bump();
+    }
+    name
+}
+
+/// Consume a numeric literal (cursor on the first digit). Underscores,
+/// radix prefixes, fraction (`.` must be followed by a digit so ranges
+/// `1..n` and tuple fields stay punctuation), signed exponents, and
+/// type suffixes are all folded into one token.
+fn number_body(cur: &mut Cursor) -> (String, TokKind) {
+    let radix_prefixed = cur.peek(0) == Some('0')
+        && matches!(cur.peek(1), Some('x' | 'X' | 'o' | 'O' | 'b' | 'B'));
+    let mut text = String::new();
+    let mut float = false;
+    let consume_run = |cur: &mut Cursor, text: &mut String| {
+        while let Some(ch) = cur.peek(0) {
+            if !(ch.is_ascii_alphanumeric() || ch == '_') {
+                break;
+            }
+            text.push(ch);
+            cur.bump();
+        }
+    };
+    consume_run(&mut *cur, &mut text);
+    loop {
+        // signed exponent: `1e-3`, `2.5E+8` (never in radix-prefixed)
+        if !radix_prefixed
+            && (text.ends_with('e') || text.ends_with('E'))
+            && matches!(cur.peek(0), Some('+' | '-'))
+            && cur.peek(1).is_some_and(|d| d.is_ascii_digit())
+        {
+            float = true;
+            text.push(cur.bump().unwrap_or('+'));
+            consume_run(&mut *cur, &mut text);
+            continue;
+        }
+        // fraction: a dot is part of the number only when a digit follows
+        if !radix_prefixed
+            && cur.peek(0) == Some('.')
+            && cur.peek(1).is_some_and(|d| d.is_ascii_digit())
+        {
+            float = true;
+            text.push('.');
+            cur.bump();
+            consume_run(&mut *cur, &mut text);
+            continue;
+        }
+        break;
+    }
+    if !radix_prefixed && !float {
+        // unsigned exponent inside the run (`1e3`) is a float too
+        // (char-closure patterns, not `[char; N]` ones — those need 1.71
+        // and the MSRV is 1.70)
+        float = text.contains('.')
+            || (text.chars().next().is_some_and(|c| c.is_ascii_digit())
+                && !text.chars().any(|c| matches!(c, 'u' | 'i' | 'f'))
+                && text.chars().filter(|c| matches!(c, 'e' | 'E')).count() == 1
+                && text
+                    .split(|c: char| matches!(c, 'e' | 'E'))
+                    .nth(1)
+                    .is_some_and(|exp| !exp.is_empty() && exp.chars().all(|c| c.is_ascii_digit())));
+    }
+    (text, if float { TokKind::Float } else { TokKind::Int })
+}

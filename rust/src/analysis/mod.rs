@@ -1,0 +1,173 @@
+//! Repo-native static analysis: `cfl lint`.
+//!
+//! The conformance suite (sim-vs-live byte identity, resume identity)
+//! only stays green if a handful of invariants hold *everywhere* in the
+//! tree: no wall-clock reads in simulated-time code, no unseeded
+//! randomness, total float ordering, panic-free fleet loops, audited
+//! atomics, and all diagnostics routed through the obs sinks. Clippy
+//! can't express those — they're about *this* repo's module boundaries
+//! — and the vendored-deps constraint rules out syn-based custom lints.
+//! So this module hand-rolls the check: a literal-aware lexer
+//! ([`lexer`]) feeds token-pattern rules ([`rules`]) with per-rule
+//! scoping and a reason-mandatory suppression syntax.
+//!
+//! Entry points: the `cfl lint` subcommand, `scripts/check.sh`, a CI
+//! step, and a quick-tier test that lints the repo on every
+//! `cargo test`. All four fail on any finding, including stale allows.
+
+pub mod lexer;
+pub mod rules;
+
+#[cfg(test)]
+mod tests;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use rules::{check_source, classify, FileClass, Finding, RuleInfo, RULES};
+
+/// Outcome of a lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings, grouped per file in walk order (files sorted,
+    /// findings line-ordered within a file) — deterministic output for
+    /// identical trees.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+impl Report {
+    /// Findings that are stale or malformed suppressions.
+    pub fn allow_problems(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.rule == rules::META_STALE || f.rule == rules::META_BAD)
+            .count()
+    }
+
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// The tree `cfl lint` covers when no paths are given, relative to the
+/// repo root: library + binary sources, figure benches, integration
+/// tests, and examples.
+pub fn default_roots() -> Vec<PathBuf> {
+    ["rust/src", "rust/benches", "rust/tests", "examples"]
+        .iter()
+        .map(PathBuf::from)
+        .collect()
+}
+
+/// Lint every `.rs` file under `roots` (files are taken as-is,
+/// directories walked recursively; `target/`, `vendor/`, and `.git/`
+/// are skipped). `rule` restricts reporting to one rule id.
+pub fn run_paths(roots: &[PathBuf], rule: Option<&str>) -> Result<Report> {
+    if let Some(id) = rule {
+        let known = RULES.iter().any(|r| r.id == id)
+            || id == rules::META_STALE
+            || id == rules::META_BAD;
+        if !known {
+            let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+            bail!("unknown rule '{id}' (rules: {})", ids.join(", "));
+        }
+    }
+    let mut files = Vec::new();
+    for root in roots {
+        collect_rs(root, &mut files)
+            .with_context(|| format!("walking {}", root.display()))?;
+    }
+    files.sort();
+    files.dedup();
+
+    let mut report = Report::default();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let display = path.to_string_lossy().replace('\\', "/");
+        let mut findings = check_source(&display, &src);
+        if let Some(id) = rule {
+            findings.retain(|f| f.rule == id);
+        }
+        report.findings.extend(findings);
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+const SKIP_DIRS: &[&str] = &["target", "vendor", ".git"];
+
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(());
+    }
+    if !root.is_dir() {
+        bail!("{} is neither a file nor a directory (run from the repo root?)", root.display());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(root)
+        .with_context(|| format!("listing {}", root.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if SKIP_DIRS.contains(&name) {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Human-readable rendering: one `file:line:col  [rule] message` row
+/// per finding plus a summary tail.
+pub fn render_text(report: &Report) -> String {
+    let mut s = String::new();
+    for f in &report.findings {
+        s.push_str(&format!("{}:{}:{}  [{}] {}\n", f.file, f.line, f.col, f.rule, f.message));
+    }
+    s.push_str(&format!(
+        "cfl lint: {} finding(s) ({} allow problem(s)) across {} file(s), {} rule(s)\n",
+        report.findings.len(),
+        report.allow_problems(),
+        report.files,
+        RULES.len(),
+    ));
+    s
+}
+
+/// Machine-readable rendering: JSONL, one `{"kind":"finding",…}` object
+/// per finding and a final `{"kind":"summary",…}` line — the same
+/// line-oriented shape `scripts/bench_smoke.sh` greps, so shell checks
+/// stay one-line.
+pub fn render_json(report: &Report) -> String {
+    use crate::sweep::json::escape;
+    let mut s = String::new();
+    for f in &report.findings {
+        s.push_str(&format!(
+            "{{\"kind\":\"finding\",\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"col\":{},\"message\":\"{}\"}}\n",
+            escape(f.rule),
+            escape(&f.file),
+            f.line,
+            f.col,
+            escape(&f.message),
+        ));
+    }
+    s.push_str(&format!(
+        "{{\"kind\":\"summary\",\"files\":{},\"rules\":{},\"findings\":{},\"stale_allows\":{}}}\n",
+        report.files,
+        RULES.len(),
+        report.findings.len(),
+        report.allow_problems(),
+    ));
+    s
+}

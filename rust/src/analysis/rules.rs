@@ -1,0 +1,634 @@
+//! The lint rules and the per-file engine that runs them.
+//!
+//! Each rule is a token-pattern check over [`super::lexer`] output —
+//! deliberately lexical, not syntactic: no type information, no name
+//! resolution. The rules are therefore written so that their patterns
+//! are unambiguous at the token level (`Instant :: now`, `. unwrap (`),
+//! and anything genuinely ambiguous (slice indexing, trait-dispatched
+//! calls) stays out of scope; see docs/ANALYSIS.md for the rationale.
+//!
+//! Suppression: a finding is silenced by an allow comment naming the
+//! rule, with a mandatory reason —
+//!
+//! ```text
+//! let t = Instant::now(); // cfl-lint: allow(no-wall-clock) — calibration reads the host clock
+//! ```
+//!
+//! A standalone allow comment on its own line targets the next code
+//! line. Allows that suppress nothing are themselves findings
+//! (`stale-allow`), as are allows that don't parse or name an unknown
+//! rule (`bad-allow`) — suppressions must never rot silently.
+
+use super::lexer::{lex, Comment, Tok, TokKind};
+
+/// One confirmed lint finding (or a meta finding about an allow).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule id (`no-wall-clock`, …) or the meta ids `stale-allow` /
+    /// `bad-allow`.
+    pub rule: &'static str,
+    /// Display path, as walked (repo-relative when invoked from the
+    /// repo root).
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+/// Static description of one rule, for `--help`-style listings and docs.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule set, in reporting order. Ids are what `--rule` and
+/// `allow(...)` accept.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "no-wall-clock",
+        summary: "Instant::now/SystemTime banned outside genuinely wall-clock modules",
+    },
+    RuleInfo {
+        id: "no-raw-print",
+        summary: "println!/eprintln! only in main.rs, cli/, obs/; use obs_event! elsewhere",
+    },
+    RuleInfo {
+        id: "no-panic-paths",
+        summary: "no unwrap/expect/panic! in transport/, coordinator/, sweep/runner non-test code",
+    },
+    RuleInfo {
+        id: "total-float-order",
+        summary: "float comparisons use total_cmp, never partial_cmp().unwrap()",
+    },
+    RuleInfo {
+        id: "seeded-rng",
+        summary: "RNG seeds derive from rng::mix_seed; no entropy sources, no literal seeds",
+    },
+    RuleInfo {
+        id: "atomic-ordering-audit",
+        summary: "every atomic Ordering:: use carries a justifying comment; Relaxed only under obs/",
+    },
+];
+
+/// Meta rule ids (reported by the engine itself, not listed in [`RULES`]).
+pub const META_STALE: &str = "stale-allow";
+pub const META_BAD: &str = "bad-allow";
+
+fn known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// How a file participates in linting, derived from its path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileClass {
+    /// Library/binary source under `rust/src/` (or any unrecognized
+    /// path — unknown files get the strictest treatment, which is what
+    /// makes lint fixtures in temp dirs behave like production code).
+    Src,
+    /// Unit-test source: `tests.rs` files and `tests/` dirs under src.
+    SrcTest,
+    /// `rust/benches/` — figure runners that print tables by design.
+    Bench,
+    /// `examples/` — user-facing demos.
+    Example,
+    /// `rust/tests/` — integration tests driving the built binary.
+    IntegrationTest,
+}
+
+/// Classify a path and compute the module-relative path used by the
+/// per-rule allowlists (for src files: the part after `rust/src/`).
+pub fn classify(path: &str) -> (FileClass, String) {
+    let norm = path.replace('\\', "/");
+    if let Some(rel) = subpath(&norm, "rust/src/") {
+        let class = if rel.ends_with("/tests.rs") || rel == "tests.rs" || rel.contains("/tests/") {
+            FileClass::SrcTest
+        } else {
+            FileClass::Src
+        };
+        return (class, rel.to_string());
+    }
+    if let Some(rel) = subpath(&norm, "rust/benches/") {
+        return (FileClass::Bench, rel.to_string());
+    }
+    if let Some(rel) = subpath(&norm, "rust/tests/") {
+        return (FileClass::IntegrationTest, rel.to_string());
+    }
+    if let Some(rel) = subpath(&norm, "examples/") {
+        return (FileClass::Example, rel.to_string());
+    }
+    (FileClass::Src, norm)
+}
+
+/// If `norm` contains the directory marker `base` (anchored at the
+/// start or at a `/` boundary), return the path after it.
+fn subpath<'a>(norm: &'a str, base: &str) -> Option<&'a str> {
+    if let Some(rest) = norm.strip_prefix(base) {
+        return Some(rest);
+    }
+    let marker = format!("/{base}");
+    norm.find(&marker).map(|i| &norm[i + marker.len()..])
+}
+
+/// Lint one file's source text. `display` is the path reported in
+/// findings; classification runs on the same string.
+pub fn check_source(display: &str, src: &str) -> Vec<Finding> {
+    let (class, rel) = classify(display);
+    let lexed = lex(src);
+    let test_regions = inline_test_regions(&lexed.toks);
+    let (mut allows, mut findings) = parse_allows(&lexed.comments, &lexed.toks);
+
+    let ctx = Ctx { toks: &lexed.toks, comments: &lexed.comments, class, rel: &rel };
+    let mut candidates = Vec::new();
+    candidates.extend(no_wall_clock(&ctx));
+    candidates.extend(no_raw_print(&ctx));
+    candidates.extend(no_panic_paths(&ctx));
+    candidates.extend(total_float_order(&ctx));
+    candidates.extend(seeded_rng(&ctx));
+    candidates.extend(atomic_ordering_audit(&ctx));
+
+    for cand in candidates {
+        // unit-test code inside a `#[cfg(test)] mod` of a src file is
+        // held to test rules, not production rules
+        if cand.skip_in_tests
+            && test_regions.iter().any(|&(lo, hi)| (lo..=hi).contains(&cand.line))
+        {
+            continue;
+        }
+        let mut suppressed = false;
+        for allow in allows.iter_mut() {
+            if allow.rule == cand.rule && allow.target == cand.line {
+                allow.used = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            findings.push(Candidate::into_finding(cand));
+        }
+    }
+    for allow in &allows {
+        if !allow.used {
+            findings.push(Finding {
+                rule: META_STALE,
+                file: String::new(),
+                line: allow.comment_line,
+                col: allow.comment_col,
+                message: format!(
+                    "allow({}) suppresses nothing on line {} — remove it",
+                    allow.rule, allow.target
+                ),
+            });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    for f in &mut findings {
+        f.file = display.to_string();
+    }
+    findings
+}
+
+struct Ctx<'a> {
+    toks: &'a [Tok],
+    comments: &'a [Comment],
+    class: FileClass,
+    rel: &'a str,
+}
+
+struct Candidate {
+    rule: &'static str,
+    line: u32,
+    col: u32,
+    message: String,
+    /// Findings of most rules don't apply inside inline `#[cfg(test)]`
+    /// modules of src files; rules that hold even in tests clear this.
+    skip_in_tests: bool,
+}
+
+impl Candidate {
+    fn into_finding(c: Candidate) -> Finding {
+        Finding { rule: c.rule, file: String::new(), line: c.line, col: c.col, message: c.message }
+    }
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn path_under(rel: &str, prefixes: &[&str], exact: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p)) || exact.iter().any(|e| rel == *e)
+}
+
+// ---------------------------------------------------------------- R1
+
+/// Modules that legitimately read the host clock: observability (it
+/// owns wall time), live-coordinator calibration/deadlines, transport
+/// socket timeouts, the sweep worker's per-scenario timing, conformance
+/// check timing, and the CLI itself.
+const WALL_CLOCK_OK_PREFIXES: &[&str] = &["obs/", "cli/", "transport/", "conformance/"];
+const WALL_CLOCK_OK_EXACT: &[&str] = &["main.rs", "coordinator/live.rs", "sweep/runner.rs"];
+
+fn no_wall_clock(ctx: &Ctx) -> Vec<Candidate> {
+    if ctx.class != FileClass::Src
+        || path_under(ctx.rel, WALL_CLOCK_OK_PREFIXES, WALL_CLOCK_OK_EXACT)
+    {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        let hit = if is_ident(&t[i], "SystemTime") {
+            Some("SystemTime")
+        } else if is_ident(&t[i], "Instant")
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "::"))
+            && t.get(i + 2).is_some_and(|n| is_ident(n, "now"))
+        {
+            Some("Instant::now")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            out.push(Candidate {
+                rule: "no-wall-clock",
+                line: t[i].line,
+                col: t[i].col,
+                message: format!(
+                    "{what} in simulated-time code — time this via obs::phase (or allow with a reason)"
+                ),
+                skip_in_tests: true,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R2
+
+const RAW_PRINT_MACROS: &[&str] = &["println", "eprintln", "print", "eprint", "dbg"];
+
+fn no_raw_print(ctx: &Ctx) -> Vec<Candidate> {
+    if ctx.class != FileClass::Src
+        || path_under(ctx.rel, &["cli/", "obs/"], &["main.rs"])
+    {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        if t[i].kind == TokKind::Ident
+            && RAW_PRINT_MACROS.contains(&t[i].text.as_str())
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "!"))
+        {
+            out.push(Candidate {
+                rule: "no-raw-print",
+                line: t[i].line,
+                col: t[i].col,
+                message: format!(
+                    "{}! bypasses the obs sinks — emit an obs_event! so --log-level governs it",
+                    t[i].text
+                ),
+                skip_in_tests: true,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R3
+
+/// Long-running fleet paths where a panic kills a whole run: the
+/// transport layer, both coordinators, and the sweep worker pool.
+const PANIC_FREE_PREFIXES: &[&str] = &["transport/", "coordinator/"];
+const PANIC_FREE_EXACT: &[&str] = &["sweep/runner.rs"];
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+fn no_panic_paths(ctx: &Ctx) -> Vec<Candidate> {
+    if ctx.class != FileClass::Src
+        || !path_under(ctx.rel, PANIC_FREE_PREFIXES, PANIC_FREE_EXACT)
+    {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        let (line, col, msg) = if (is_ident(&t[i], "unwrap") || is_ident(&t[i], "expect"))
+            && i > 0
+            && (is_punct(&t[i - 1], ".") || is_punct(&t[i - 1], "::"))
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "("))
+        {
+            (
+                t[i].line,
+                t[i].col,
+                format!(".{}() in a fleet path — return an anyhow error instead", t[i].text),
+            )
+        } else if t[i].kind == TokKind::Ident
+            && PANIC_MACROS.contains(&t[i].text.as_str())
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "!"))
+        {
+            (
+                t[i].line,
+                t[i].col,
+                format!("{}! in a fleet path — return an anyhow error instead", t[i].text),
+            )
+        } else {
+            continue;
+        };
+        out.push(Candidate {
+            rule: "no-panic-paths",
+            line,
+            col,
+            message: msg,
+            skip_in_tests: true,
+        });
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R4
+
+fn total_float_order(ctx: &Ctx) -> Vec<Candidate> {
+    // applies everywhere, tests and benches included: a NaN-ordering
+    // panic in a test comparator is exactly the bug PR 5 fixed
+    let mut out = Vec::new();
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        if is_ident(&t[i], "partial_cmp")
+            && i > 0
+            && (is_punct(&t[i - 1], ".") || is_punct(&t[i - 1], "::"))
+        {
+            out.push(Candidate {
+                rule: "total-float-order",
+                line: t[i].line,
+                col: t[i].col,
+                message: "partial_cmp on floats is not total — use f64::total_cmp".into(),
+                skip_in_tests: false,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R5
+
+const ENTROPY_IDENTS: &[&str] =
+    &["thread_rng", "ThreadRng", "OsRng", "from_entropy", "getrandom", "SystemRandom"];
+
+fn seeded_rng(ctx: &Ctx) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        // entropy sources are banned everywhere, tests included —
+        // a nondeterministic test is a flaky test
+        if t[i].kind == TokKind::Ident && ENTROPY_IDENTS.contains(&t[i].text.as_str()) {
+            out.push(Candidate {
+                rule: "seeded-rng",
+                line: t[i].line,
+                col: t[i].col,
+                message: format!(
+                    "{} is an entropy source — all randomness must flow from the run seed",
+                    t[i].text
+                ),
+                skip_in_tests: false,
+            });
+            continue;
+        }
+        // hard-coded seeds in production code hide stream collisions;
+        // derive every stream with rng::mix_seed (tests may pin seeds)
+        if ctx.class == FileClass::Src
+            && is_ident(&t[i], "Rng")
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "::"))
+            && t.get(i + 2).is_some_and(|n| is_ident(n, "new"))
+            && t.get(i + 3).is_some_and(|n| is_punct(n, "("))
+            && t.get(i + 4).is_some_and(|n| n.kind == TokKind::Int)
+        {
+            let lit = &t[i + 4];
+            out.push(Candidate {
+                rule: "seeded-rng",
+                line: lit.line,
+                col: lit.col,
+                message: format!(
+                    "hard-coded RNG seed {} — derive the stream with rng::mix_seed",
+                    lit.text
+                ),
+                skip_in_tests: true,
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R6
+
+const ATOMIC_ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+/// How close (in lines above) a justifying comment must sit.
+const JUSTIFY_WINDOW: u32 = 3;
+
+fn atomic_ordering_audit(ctx: &Ctx) -> Vec<Candidate> {
+    if ctx.class != FileClass::Src {
+        return Vec::new();
+    }
+    let in_obs = ctx.rel.starts_with("obs/");
+    let mut out = Vec::new();
+    let t = ctx.toks;
+    for i in 0..t.len() {
+        if !(is_ident(&t[i], "Ordering")
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "::"))
+            && t.get(i + 2)
+                .is_some_and(|n| n.kind == TokKind::Ident && ATOMIC_ORDERINGS.contains(&n.text.as_str())))
+        {
+            continue;
+        }
+        let variant = &t[i + 2];
+        if variant.text == "Relaxed" && !in_obs {
+            // Relaxed outside the obs counters is suspicious enough
+            // that a nearby comment doesn't clear it: force an allow
+            // so the reason is machine-checked against the rule id
+            out.push(Candidate {
+                rule: "atomic-ordering-audit",
+                line: variant.line,
+                col: variant.col,
+                message: "Ordering::Relaxed outside obs/ — justify with an explicit allow".into(),
+                skip_in_tests: true,
+            });
+            continue;
+        }
+        let justified = ctx.comments.iter().any(|c| {
+            c.line == variant.line
+                || (c.line < variant.line && variant.line - c.line <= JUSTIFY_WINDOW)
+        });
+        if !justified {
+            out.push(Candidate {
+                rule: "atomic-ordering-audit",
+                line: variant.line,
+                col: variant.col,
+                message: format!(
+                    "Ordering::{} without a justifying comment within {JUSTIFY_WINDOW} lines",
+                    variant.text
+                ),
+                skip_in_tests: true,
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------- suppressions
+
+struct Allow {
+    rule: String,
+    /// Line this allow suppresses findings on.
+    target: u32,
+    comment_line: u32,
+    comment_col: u32,
+    used: bool,
+}
+
+/// Parse `cfl-lint: allow(<rule>) — <reason>` comments. Returns the
+/// well-formed allows plus `bad-allow` findings for the rest. Only
+/// comments that *start* with the marker count (after stripping doc
+/// slashes/bangs), so prose that merely mentions the syntax is inert.
+fn parse_allows(comments: &[Comment], toks: &[Tok]) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        // closure patterns, not `[char; N]` ones (those need 1.71; MSRV 1.70)
+        let body = c.text.trim_start_matches(|ch: char| matches!(ch, '/' | '*' | '!' | ' ' | '\t'));
+        let Some(rest) = body.strip_prefix("cfl-lint") else { continue };
+        let mut err = |msg: String| {
+            bad.push(Finding {
+                rule: META_BAD,
+                file: String::new(),
+                line: c.line,
+                col: c.col,
+                message: msg,
+            });
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix(':') else {
+            err("malformed suppression — expected `cfl-lint: allow(<rule>) — <reason>`".into());
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            err("malformed suppression — expected `allow(<rule>)` after `cfl-lint:`".into());
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            err("malformed suppression — unclosed `allow(`".into());
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        if !known_rule(&rule) {
+            err(format!("allow names unknown rule `{rule}`"));
+            continue;
+        }
+        let reason = rest[close + 1..]
+            .trim_start_matches(|ch: char| matches!(ch, ' ' | '\t' | '—' | '–' | '-' | ':'))
+            .trim();
+        if reason.is_empty() {
+            err(format!("allow({rule}) has no reason — say why the rule doesn't apply here"));
+            continue;
+        }
+        // trailing comment suppresses its own line; a standalone
+        // comment line suppresses the next line with code on it
+        let target = if toks.iter().any(|t| t.line == c.line) {
+            c.line
+        } else {
+            toks.iter()
+                .map(|t| t.line)
+                .filter(|&l| l > c.line)
+                .min()
+                .unwrap_or(c.line)
+        };
+        allows.push(Allow {
+            rule,
+            target,
+            comment_line: c.line,
+            comment_col: c.col,
+            used: false,
+        });
+    }
+    (allows, bad)
+}
+
+// -------------------------------------------------- inline test mods
+
+/// Line ranges of `#[cfg(test)] mod … { … }` blocks in src files
+/// (tests that live inline rather than in a sibling `tests.rs`).
+fn inline_test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !is_cfg_test_attr(toks, i) {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        let mut j = i + 7;
+        // skip any further attributes stacked on the same item
+        while j + 1 < toks.len() && is_punct(&toks[j], "#") && is_punct(&toks[j + 1], "[") {
+            j = match skip_balanced(toks, j + 1, "[", "]") {
+                Some(k) => k,
+                None => return out, // unbalanced — give up quietly
+            };
+        }
+        if toks.get(j).is_some_and(|t| is_ident(t, "pub")) {
+            j += 1;
+            if toks.get(j).is_some_and(|t| is_punct(t, "(")) {
+                j = match skip_balanced(toks, j, "(", ")") {
+                    Some(k) => k,
+                    None => return out,
+                };
+            }
+        }
+        if toks.get(j).is_some_and(|t| is_ident(t, "mod"))
+            && toks.get(j + 1).is_some_and(|t| t.kind == TokKind::Ident)
+            && toks.get(j + 2).is_some_and(|t| is_punct(t, "{"))
+        {
+            match skip_balanced(toks, j + 2, "{", "}") {
+                Some(k) => {
+                    let end_line = toks[k - 1].line;
+                    out.push((start_line, end_line));
+                    i = k;
+                    continue;
+                }
+                None => return out,
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    i + 6 < toks.len()
+        && is_punct(&toks[i], "#")
+        && is_punct(&toks[i + 1], "[")
+        && is_ident(&toks[i + 2], "cfg")
+        && is_punct(&toks[i + 3], "(")
+        && is_ident(&toks[i + 4], "test")
+        && is_punct(&toks[i + 5], ")")
+        && is_punct(&toks[i + 6], "]")
+}
+
+/// With `toks[at]` on the opening delimiter, return the index just past
+/// its matching close (delimiters inside strings/chars are already
+/// opaque tokens, so plain depth counting is sound).
+fn skip_balanced(toks: &[Tok], at: usize, open: &str, close: &str) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut k = at;
+    while k < toks.len() {
+        if is_punct(&toks[k], open) {
+            depth += 1;
+        } else if is_punct(&toks[k], close) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k + 1);
+            }
+        }
+        k += 1;
+    }
+    None
+}

@@ -1,0 +1,364 @@
+use super::lexer::{lex, TokKind};
+use super::rules::{check_source, classify, FileClass, META_BAD, META_STALE};
+use super::{default_roots, render_json, render_text, run_paths, Finding, Report};
+use std::path::PathBuf;
+
+// ------------------------------------------------------------- lexer
+
+#[test]
+fn lexes_paths_with_fused_colons() {
+    let l = lex("std::time::Instant::now()");
+    let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+    assert_eq!(texts, ["std", "::", "time", "::", "Instant", "::", "now", "(", ")"]);
+    assert_eq!(l.toks[4].col, 12, "Instant starts at column 12");
+}
+
+#[test]
+fn masks_string_and_char_literals() {
+    // Instant::now inside a string must produce zero Ident tokens
+    let l = lex(r#"let s = "Instant::now()"; let c = 'I';"#);
+    assert!(l.toks.iter().all(|t| t.text != "Instant"));
+    assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Str).count(), 1);
+    assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+}
+
+#[test]
+fn raw_strings_with_hashes_are_opaque() {
+    let src = "let s = r##\"quote \"# unwrap() here\"##; done";
+    let l = lex(src);
+    let strs: Vec<&str> =
+        l.toks.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.as_str()).collect();
+    assert_eq!(strs, ["quote \"# unwrap() here"]);
+    assert!(l.toks.iter().any(|t| t.text == "done"), "lexing continues after the raw string");
+    assert!(l.toks.iter().all(|t| t.text != "unwrap"));
+}
+
+#[test]
+fn byte_and_raw_byte_strings() {
+    let l = lex(r##"let a = b"bytes"; let b = br#"raw "q" bytes"#; let c = b'x';"##);
+    let strs: Vec<&str> =
+        l.toks.iter().filter(|t| t.kind == TokKind::Str).map(|t| t.text.as_str()).collect();
+    assert_eq!(strs, ["bytes", r#"raw "q" bytes"#]);
+    assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+}
+
+#[test]
+fn nested_block_comments_terminate_correctly() {
+    let l = lex("/* outer /* inner */ still outer */ code");
+    assert_eq!(l.comments.len(), 1);
+    assert!(l.comments[0].text.contains("inner"));
+    let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+    assert_eq!(texts, ["code"]);
+}
+
+#[test]
+fn line_comments_capture_text_and_position() {
+    let l = lex("let x = 1; // trailing note\n// standalone\nlet y = 2;");
+    assert_eq!(l.comments.len(), 2);
+    assert_eq!(l.comments[0].text, " trailing note");
+    assert_eq!((l.comments[0].line, l.comments[1].line), (1, 2));
+}
+
+#[test]
+fn char_vs_lifetime_ticks() {
+    let l = lex(r"fn f<'a>(x: &'a str) -> char { let c = 'a'; let n = '\n'; c.max(n) }");
+    let lifetimes: Vec<&str> =
+        l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| t.text.as_str()).collect();
+    assert_eq!(lifetimes, ["a", "a"]);
+    assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+}
+
+#[test]
+fn raw_identifiers_lex_as_plain_idents() {
+    let l = lex("let r#type = 1; r#fn();");
+    let idents: Vec<&str> =
+        l.toks.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect();
+    assert_eq!(idents, ["let", "type", "fn"]);
+}
+
+#[test]
+fn numeric_literal_shapes() {
+    let l = lex("1_000u64 0xFF_u8 1e-3 2.5f32 1..n x.0.time 0b1010");
+    let kinds: Vec<(TokKind, &str)> = l
+        .toks
+        .iter()
+        .filter(|t| matches!(t.kind, TokKind::Int | TokKind::Float))
+        .map(|t| (t.kind, t.text.as_str()))
+        .collect();
+    assert_eq!(
+        kinds,
+        [
+            (TokKind::Int, "1_000u64"),
+            (TokKind::Int, "0xFF_u8"),
+            (TokKind::Float, "1e-3"),
+            (TokKind::Float, "2.5f32"),
+            (TokKind::Int, "1"),
+            (TokKind::Int, "0"),
+            (TokKind::Int, "0b1010"),
+        ]
+    );
+    // the range dots and field-access dots stay punctuation
+    assert_eq!(l.toks.iter().filter(|t| t.text == ".").count(), 4);
+}
+
+#[test]
+fn macro_bodies_are_lexed_like_code() {
+    // rules must see through macro invocations — a violation inside
+    // obs_event!/format! arguments is still a violation
+    let l = lex(r#"obs_event!(Info, "epoch_done", t = Instant::now());"#);
+    let idents: Vec<&str> =
+        l.toks.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect();
+    assert!(idents.contains(&"Instant") && idents.contains(&"now"));
+}
+
+#[test]
+fn unterminated_input_is_tolerated() {
+    // a linter must not hang or panic on files that don't compile
+    lex("let s = \"unterminated");
+    lex("/* unterminated comment");
+    lex("let s = r#\"unterminated raw");
+}
+
+// ---------------------------------------------------------- classify
+
+#[test]
+fn classifies_by_tree_position() {
+    assert_eq!(classify("rust/src/des/sim.rs"), (FileClass::Src, "des/sim.rs".into()));
+    assert_eq!(classify("/abs/repo/rust/src/obs/mod.rs"), (FileClass::Src, "obs/mod.rs".into()));
+    assert_eq!(classify("rust/src/des/tests.rs"), (FileClass::SrcTest, "des/tests.rs".into()));
+    assert_eq!(classify("rust/benches/fig1.rs").0, FileClass::Bench);
+    assert_eq!(classify("rust/tests/cli_integration.rs").0, FileClass::IntegrationTest);
+    assert_eq!(classify("examples/quickstart.rs").0, FileClass::Example);
+    // unknown paths (lint fixtures, ad-hoc files) get the strict class
+    assert_eq!(classify("/tmp/fixture.rs").0, FileClass::Src);
+}
+
+// ------------------------------------------------------------- rules
+//
+// Fixture convention: two positive and two negative sources per rule,
+// checked for the exact rule id and the file:line span of the hit.
+
+fn rule_hits<'a>(findings: &'a [Finding], rule: &str) -> Vec<&'a Finding> {
+    findings.iter().filter(|f| f.rule == rule).collect()
+}
+
+fn assert_fires(path: &str, src: &str, rule: &str, line: u32) {
+    let findings = check_source(path, src);
+    let hits = rule_hits(&findings, rule);
+    assert!(
+        hits.iter().any(|f| f.line == line && f.file == path),
+        "expected {rule} at {path}:{line}, got {findings:?}"
+    );
+}
+
+fn assert_silent(path: &str, src: &str, rule: &str) {
+    let findings = check_source(path, src);
+    let hits = rule_hits(&findings, rule);
+    assert!(hits.is_empty(), "expected no {rule} in {path}, got {hits:?}");
+}
+
+// R1 no-wall-clock ---------------------------------------------------
+
+const R1_POS_DES: &str = "use std::time::Instant;\nfn q() -> f64 {\n    let t = Instant::now();\n    t.elapsed().as_secs_f64()\n}\n";
+const R1_POS_SYS: &str = "fn stamp() -> u64 {\n    let t = std::time::SystemTime::now();\n    0\n}\n";
+
+#[test]
+fn r1_fires_on_wall_clock_in_sim_code() {
+    assert_fires("rust/src/des/clock.rs", R1_POS_DES, "no-wall-clock", 3);
+    assert_fires("rust/src/coordinator/sim.rs", R1_POS_SYS, "no-wall-clock", 2);
+}
+
+#[test]
+fn r1_silent_in_wall_clock_modules_and_tests() {
+    // obs owns wall time; unit tests may time things freely
+    assert_silent("rust/src/obs/phase.rs", R1_POS_DES, "no-wall-clock");
+    assert_silent("rust/src/des/tests.rs", R1_POS_DES, "no-wall-clock");
+}
+
+// R2 no-raw-print ----------------------------------------------------
+
+const R2_POS_EPRINT: &str = "fn progress(i: usize) {\n    eprintln!(\"scenario {i} done\");\n}\n";
+const R2_POS_PRINT: &str = "fn table() {\n    println!(\"col\");\n}\n";
+
+#[test]
+fn r2_fires_on_raw_print_in_library_code() {
+    assert_fires("rust/src/sweep/report.rs", R2_POS_EPRINT, "no-raw-print", 2);
+    assert_fires("rust/src/data/mod.rs", R2_POS_PRINT, "no-raw-print", 2);
+}
+
+#[test]
+fn r2_silent_in_cli_and_obs_sinks() {
+    assert_silent("rust/src/main.rs", R2_POS_PRINT, "no-raw-print");
+    assert_silent("rust/src/obs/sink.rs", R2_POS_EPRINT, "no-raw-print");
+}
+
+// R3 no-panic-paths --------------------------------------------------
+
+const R3_POS_UNWRAP: &str = "fn read(b: &[u8]) -> u32 {\n    u32::from_le_bytes(b.try_into().unwrap())\n}\n";
+const R3_POS_PANIC: &str = "fn agg(n: usize) {\n    if n == 0 {\n        panic!(\"empty gather\");\n    }\n}\n";
+
+#[test]
+fn r3_fires_in_fleet_paths() {
+    assert_fires("rust/src/transport/wire.rs", R3_POS_UNWRAP, "no-panic-paths", 2);
+    assert_fires("rust/src/coordinator/agg.rs", R3_POS_PANIC, "no-panic-paths", 3);
+}
+
+#[test]
+fn r3_scoped_to_fleet_modules_and_spares_unwrap_or() {
+    // linalg is pure compute — panics there fail fast in tests, not fleets
+    assert_silent("rust/src/linalg/mod.rs", R3_POS_UNWRAP, "no-panic-paths");
+    let unwrap_or = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap_or(0)\n}\n";
+    assert_silent("rust/src/transport/wire.rs", unwrap_or, "no-panic-paths");
+}
+
+#[test]
+fn r3_skips_inline_test_modules() {
+    let src = "fn ok() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n";
+    assert_silent("rust/src/transport/wire.rs", src, "no-panic-paths");
+}
+
+// R4 total-float-order -----------------------------------------------
+
+const R4_POS: &str = "fn m(v: &mut [f64]) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+
+#[test]
+fn r4_fires_everywhere_including_tests() {
+    assert_fires("rust/src/stats/mod.rs", R4_POS, "total-float-order", 2);
+    // tests are in scope — a NaN panic in a comparator is the PR 5 bug
+    assert_fires("rust/src/simnet/tests.rs", R4_POS, "total-float-order", 2);
+}
+
+#[test]
+fn r4_spares_trait_impls_and_total_cmp() {
+    let impl_def = "impl PartialOrd for E {\n    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {\n        Some(self.cmp(o))\n    }\n}\n";
+    assert_silent("rust/src/des/sim.rs", impl_def, "total-float-order");
+    let total = "fn m(v: &mut [f64]) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+    assert_silent("rust/src/stats/mod.rs", total, "total-float-order");
+}
+
+// R5 seeded-rng ------------------------------------------------------
+
+#[test]
+fn r5_fires_on_entropy_and_literal_seeds() {
+    let entropy = "fn f() -> u64 {\n    let mut r = thread_rng();\n    r.next_u64()\n}\n";
+    assert_fires("rust/src/fl/mod.rs", entropy, "seeded-rng", 2);
+    let literal = "fn f() -> Rng {\n    Rng::new(42)\n}\n";
+    assert_fires("rust/src/data/mod.rs", literal, "seeded-rng", 2);
+}
+
+#[test]
+fn r5_spares_mix_seed_derivation_and_test_seeds() {
+    let derived = "fn f(root: u64) -> Rng {\n    Rng::new(mix_seed(root, 3))\n}\n";
+    assert_silent("rust/src/data/mod.rs", derived, "seeded-rng");
+    // pinned seeds are the whole point of unit tests
+    let literal = "fn f() -> Rng {\n    Rng::new(7)\n}\n";
+    assert_silent("rust/src/data/tests.rs", literal, "seeded-rng");
+}
+
+// R6 atomic-ordering-audit -------------------------------------------
+
+#[test]
+fn r6_fires_on_unjustified_and_relaxed_outside_obs() {
+    // a comment is not enough for Relaxed outside obs/ — only an allow is
+    let relaxed = "fn stop(s: &AtomicBool) {\n    // fine, single writer\n    s.store(true, Ordering::Relaxed);\n}\n";
+    assert_fires("rust/src/transport/state.rs", relaxed, "atomic-ordering-audit", 3);
+    let bare = "fn get(s: &AtomicU64) -> u64 {\n\n\n\n\n    s.load(Ordering::Acquire)\n}\n";
+    assert_fires("rust/src/sweep/runner.rs", bare, "atomic-ordering-audit", 6);
+}
+
+#[test]
+fn r6_accepts_comments_near_and_relaxed_in_obs() {
+    let justified = "fn get(s: &AtomicU64) -> u64 {\n    // pairs with the Release store in install()\n    s.load(Ordering::Acquire)\n}\n";
+    assert_silent("rust/src/sweep/runner.rs", justified, "atomic-ordering-audit");
+    let obs = "fn bump(c: &AtomicU64) {\n    // monotonic counter, no ordering needed\n    c.fetch_add(1, Ordering::Relaxed);\n}\n";
+    assert_silent("rust/src/obs/metrics.rs", obs, "atomic-ordering-audit");
+}
+
+// ------------------------------------------------------ suppressions
+
+#[test]
+fn trailing_allow_suppresses_and_is_marked_used() {
+    let src = "fn q() -> Instant {\n    Instant::now() // cfl-lint: allow(no-wall-clock) — calibration probe\n}\n";
+    let findings = check_source("rust/src/des/clock.rs", src);
+    assert!(findings.is_empty(), "allow must suppress and not go stale: {findings:?}");
+}
+
+#[test]
+fn standalone_allow_covers_the_next_code_line() {
+    let src = "fn q() -> Instant {\n    // cfl-lint: allow(no-wall-clock) — calibration probe\n    Instant::now()\n}\n";
+    let findings = check_source("rust/src/des/clock.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn stale_allow_is_a_finding() {
+    let src = "fn q() -> u32 {\n    1 // cfl-lint: allow(no-wall-clock) — nothing here violates it\n}\n";
+    let findings = check_source("rust/src/des/clock.rs", src);
+    let hits = rule_hits(&findings, META_STALE);
+    assert_eq!(hits.len(), 1, "{findings:?}");
+    assert_eq!(hits[0].line, 2);
+}
+
+#[test]
+fn allow_without_reason_or_with_unknown_rule_is_malformed() {
+    let no_reason = "fn q() -> Instant {\n    Instant::now() // cfl-lint: allow(no-wall-clock)\n}\n";
+    let findings = check_source("rust/src/des/clock.rs", no_reason);
+    assert_eq!(rule_hits(&findings, META_BAD).len(), 1, "{findings:?}");
+    // the unsuppressed finding itself must survive
+    assert_eq!(rule_hits(&findings, "no-wall-clock").len(), 1);
+
+    let unknown = "fn q() -> u32 {\n    1 // cfl-lint: allow(no-such-rule) — typo\n}\n";
+    let findings = check_source("rust/src/des/clock.rs", unknown);
+    assert_eq!(rule_hits(&findings, META_BAD).len(), 1, "{findings:?}");
+}
+
+#[test]
+fn prose_mentioning_the_syntax_is_inert() {
+    let src = "// suppressions use cfl-lint: allow(<rule>) with a reason\nfn ok() {}\n";
+    let findings = check_source("rust/src/des/clock.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn allow_in_a_string_literal_is_inert() {
+    let src = "fn doc() -> &'static str {\n    \"// cfl-lint: allow(no-wall-clock) — example\"\n}\n";
+    let findings = check_source("rust/src/des/clock.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+// ---------------------------------------------------------- frontend
+
+#[test]
+fn json_rendering_is_line_oriented_with_summary_tail() {
+    let src = "fn q() -> f64 {\n    let t = Instant::now();\n    0.0\n}\n";
+    let report = Report { findings: check_source("rust/src/des/clock.rs", src), files: 1 };
+    assert_eq!(report.findings.len(), 1);
+    let json = render_json(&report);
+    let lines: Vec<&str> = json.lines().collect();
+    assert_eq!(lines.len(), 2);
+    assert!(lines[0].starts_with("{\"kind\":\"finding\",\"rule\":\"no-wall-clock\""));
+    assert!(lines[0].contains("\"file\":\"rust/src/des/clock.rs\",\"line\":2"));
+    assert!(lines[1].starts_with("{\"kind\":\"summary\","));
+    assert!(lines[1].contains("\"findings\":1"));
+    let text = render_text(&report);
+    assert!(text.contains("rust/src/des/clock.rs:2:"), "{text}");
+}
+
+#[test]
+fn unknown_rule_filter_is_an_error() {
+    let err = run_paths(&[PathBuf::from("rust/src")], Some("no-such-rule"));
+    assert!(err.is_err());
+}
+
+/// The quick-tier gate: the repo's own tree must lint clean on every
+/// `cargo test`. This is the enforcement point ISSUE 9 asks for — CI
+/// and scripts/check.sh call `cfl lint` too, but this test makes the
+/// invariant unskippable locally.
+#[test]
+fn repo_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots: Vec<PathBuf> = default_roots().iter().map(|p| root.join(p)).collect();
+    let report = run_paths(&roots, None).expect("walking the repo tree");
+    assert!(report.files > 50, "walked only {} files — wrong root?", report.files);
+    assert!(report.clean(), "repo has lint findings:\n{}", render_text(&report));
+}

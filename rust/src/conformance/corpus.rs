@@ -110,7 +110,7 @@ fn loopback() -> Option<TcpListener> {
     match TcpListener::bind("127.0.0.1:0") {
         Ok(l) => Some(l),
         Err(e) => {
-            eprintln!("conformance: loopback TCP bind denied ({e})");
+            crate::obs_event!(Warn, "conformance_bind_denied", error = e.to_string());
             None
         }
     }

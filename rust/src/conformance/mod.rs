@@ -104,9 +104,9 @@ pub struct Options {
     /// Override every check's seed (for replaying a reported failure).
     pub seed: Option<u64>,
     /// Stream `conformance.csv` / `conformance.jsonl` into this directory.
+    /// (Per-check progress renders from the `conformance_check` Info
+    /// events — raise the stderr log level to see them.)
     pub out_dir: Option<String>,
-    /// Print a progress line per check to stderr.
-    pub progress: bool,
 }
 
 /// Result of a suite run.
@@ -210,9 +210,6 @@ pub fn run(opts: &Options) -> Result<ConformanceReport> {
             status = check.status.as_str(),
             wall_s = check.wall_s,
         );
-        if opts.progress {
-            eprintln!("conformance: {:>4}  {}  ({:.2}s)", check.status.as_str(), check.id, check.wall_s);
-        }
         sink.push(&check)?;
         checks.push(check);
     }

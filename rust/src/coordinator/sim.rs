@@ -6,10 +6,9 @@ use crate::des::Simulator;
 use crate::fl::{assemble_coded_gradient_tree, GlobalModel, GradBackend, NativeBackend};
 use crate::lb::LoadPolicy;
 use crate::linalg::Mat;
-use crate::obs::{Phase, PhaseBook};
+use crate::obs::{Phase, PhaseBook, Stopwatch};
 use crate::simnet::Fleet;
 use anyhow::{Context, Result};
-use std::time::Instant;
 
 /// DES-driven coordinator. Owns the shared [`Session`] (fleet, data,
 /// shards, randomness streams) plus the gradient backend; per-epoch
@@ -83,12 +82,12 @@ impl SimCoordinator {
 
     /// CFL with an explicit policy (ablations sweep weights through here).
     pub fn train_cfl_with_policy(&mut self, policy: &LoadPolicy) -> Result<RunResult> {
-        let started = Instant::now();
+        let run_sw = Stopwatch::start();
         let mut phases = PhaseBook::with_capacity(self.session.cfg.max_epochs);
         let mut rng = self.session.run_rng();
         let setup =
             self.session.build_setup(policy, self.backend.as_mut(), &mut rng)?;
-        phases.record(Phase::ParityEncode, started.elapsed().as_secs_f64());
+        phases.record(Phase::ParityEncode, run_sw.elapsed_s());
         let states = &setup.devices;
         let composite = &setup.composite;
         let d = self.session.cfg.model_dim;
@@ -137,7 +136,7 @@ impl SimCoordinator {
 
         for epoch in 0..self.session.cfg.max_epochs {
             let mut ep_span = crate::obs_span!(Debug, "epoch");
-            let t_epoch = Instant::now();
+            let mut ep_sw = Stopwatch::start();
             // --- timing: schedule every completion, gather until t* ------
             let mut sim = Simulator::new();
             let mut scheduled_devices = 0u64;
@@ -191,7 +190,7 @@ impl SimCoordinator {
             }
 
             let arrived = sim.run_until(t_star);
-            let t_gather = Instant::now();
+            let gather_s = ep_sw.lap_s();
 
             // --- numerics: Eq. 18 + 19 -----------------------------------
             let mut parity_grad: Option<Mat> = None;
@@ -237,7 +236,7 @@ impl SimCoordinator {
                     }
                 }
             }
-            let t_grad = Instant::now();
+            let grad_s = ep_sw.lap_s();
             on_time += device_grads.len() as u64;
             late += scheduled_devices - device_grads.len() as u64;
             epoch_members.push(scheduled_devices as usize);
@@ -255,9 +254,7 @@ impl SimCoordinator {
             let nmse = model.nmse(self.session.beta_star());
             trace_log.push(now, epoch + 1, nmse);
 
-            let gather_s = t_gather.duration_since(t_epoch).as_secs_f64();
-            let grad_s = t_grad.duration_since(t_gather).as_secs_f64();
-            let agg_s = t_grad.elapsed().as_secs_f64();
+            let agg_s = ep_sw.lap_s();
             phases.record(Phase::Gather, gather_s);
             phases.record(Phase::LocalGrad, grad_s);
             phases.record(Phase::Aggregate, agg_s);
@@ -281,7 +278,7 @@ impl SimCoordinator {
             "run_done",
             label = label.as_str(),
             epochs = epoch_times.len(),
-            wall_s = started.elapsed().as_secs_f64(),
+            wall_s = run_sw.elapsed_s(),
         );
         Ok(RunResult {
             label,
@@ -294,7 +291,7 @@ impl SimCoordinator {
             delta: policy.delta,
             epoch_deadline: t_star,
             gather_mc_times,
-            wall_secs: started.elapsed().as_secs_f64(),
+            wall_secs: run_sw.elapsed_s(),
             on_time_gradients: on_time,
             late_gradients: late,
             epoch_members,
@@ -311,7 +308,7 @@ impl SimCoordinator {
     /// needs every row resident each epoch, which is precisely what lean
     /// mode exists to avoid (scale sweeps run `--skip-uncoded`).
     pub fn train_uncoded(&mut self) -> Result<RunResult> {
-        let started = Instant::now();
+        let run_sw = Stopwatch::start();
         let mut phases = PhaseBook::with_capacity(self.session.cfg.max_epochs);
         let mut rng = self.session.run_rng();
         let d = self.session.cfg.model_dim;
@@ -360,13 +357,13 @@ impl SimCoordinator {
 
         for epoch in 0..self.session.cfg.max_epochs {
             let mut ep_span = crate::obs_span!(Debug, "epoch");
-            let t_epoch = Instant::now();
+            let mut ep_sw = Stopwatch::start();
             // epoch duration = slowest device (wait-for-all)
             let mut epoch_len = 0.0f64;
             for dev in &self.session.fleet.devices {
                 epoch_len = epoch_len.max(dev.sample_total_delay(dev.points, &mut rng));
             }
-            let t_gather = Instant::now();
+            let gather_s = ep_sw.lap_s();
             // exact full gradient over the global data (Σᵢ inner sums)
             let grad = if all_registered {
                 let mut acc = Mat::zeros(d, 1);
@@ -377,7 +374,7 @@ impl SimCoordinator {
             } else {
                 self.backend.partial_grad(&dataset.x, &model.beta, &dataset.y)?
             };
-            let t_grad = Instant::now();
+            let grad_s = ep_sw.lap_s();
             model.apply_gradient(&grad);
             on_time += self.session.fleet.n_devices() as u64;
 
@@ -386,9 +383,7 @@ impl SimCoordinator {
             let nmse = model.nmse(&dataset.beta_star);
             trace.push(now, epoch + 1, nmse);
 
-            let gather_s = t_gather.duration_since(t_epoch).as_secs_f64();
-            let grad_s = t_grad.duration_since(t_gather).as_secs_f64();
-            let agg_s = t_grad.elapsed().as_secs_f64();
+            let agg_s = ep_sw.lap_s();
             phases.record(Phase::Gather, gather_s);
             phases.record(Phase::LocalGrad, grad_s);
             phases.record(Phase::Aggregate, agg_s);
@@ -413,7 +408,7 @@ impl SimCoordinator {
             "run_done",
             label = trace.label.as_str(),
             epochs = epoch_times.len(),
-            wall_s = started.elapsed().as_secs_f64(),
+            wall_s = run_sw.elapsed_s(),
         );
         Ok(RunResult {
             label: "uncoded".into(),
@@ -426,7 +421,7 @@ impl SimCoordinator {
             delta: 0.0,
             epoch_deadline: f64::INFINITY,
             gather_mc_times: Vec::new(),
-            wall_secs: started.elapsed().as_secs_f64(),
+            wall_secs: run_sw.elapsed_s(),
             on_time_gradients: on_time,
             late_gradients: 0,
             epoch_members,

@@ -12,12 +12,23 @@ pub struct ScheduledEvent<T> {
     pub payload: T,
 }
 
+/// Total order on `(time, seq)` event keys: `total_cmp` on the time
+/// (IEEE 754 totalOrder — NaN sorts deterministically instead of
+/// collapsing to `Equal` and corrupting heap invariants), then FIFO on
+/// the sequence number. [`Simulator::schedule_at`] rejects non-finite
+/// times at the door, but the heap's ordering must be total on its own
+/// — a partial fallback here would turn any future hole in that guard
+/// into silent event reordering rather than a loud test failure.
+pub(crate) fn event_order(a: (f64, u64), b: (f64, u64)) -> Ordering {
+    a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1))
+}
+
 // BinaryHeap is a max-heap; invert ordering for earliest-first.
 struct HeapEntry<T>(ScheduledEvent<T>);
 
 impl<T> PartialEq for HeapEntry<T> {
     fn eq(&self, other: &Self) -> bool {
-        self.0.time == other.0.time && self.0.seq == other.0.seq
+        self.0.time.total_cmp(&other.0.time).is_eq() && self.0.seq == other.0.seq
     }
 }
 impl<T> Eq for HeapEntry<T> {}
@@ -28,13 +39,8 @@ impl<T> PartialOrd for HeapEntry<T> {
 }
 impl<T> Ord for HeapEntry<T> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: smaller time (then smaller seq) = "greater" for the heap
-        other
-            .0
-            .time
-            .partial_cmp(&self.0.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.0.seq.cmp(&self.0.seq))
+        // reversed: smaller (time, seq) = "greater" for the max-heap
+        event_order((other.0.time, other.0.seq), (self.0.time, self.0.seq))
     }
 }
 

@@ -76,6 +76,61 @@ fn scheduling_nan_panics() {
     sim.schedule_at(f64::NAN, ());
 }
 
+/// Regression for the old `partial_cmp(..).unwrap_or(Equal)` heap
+/// order: with NaN collapsing to `Equal`, comparisons were not
+/// transitive and a heap could silently misorder events. The queue's
+/// ordering must be total over *every* f64, NaN included, even though
+/// `schedule_at` rejects non-finite times at the API boundary.
+#[test]
+fn event_order_is_total_over_nan_times() {
+    use super::sim::event_order;
+    use std::cmp::Ordering;
+
+    let keys = [
+        (f64::NEG_INFINITY, 0u64),
+        (-0.0, 1),
+        (0.0, 2),
+        (1.5, 3),
+        (f64::INFINITY, 4),
+        (f64::NAN, 5),
+        (f64::NAN, 6),
+        (-f64::NAN, 7),
+    ];
+    // totality: every pair is ordered, antisymmetrically
+    for &a in &keys {
+        for &b in &keys {
+            let ab = event_order(a, b);
+            let ba = event_order(b, a);
+            assert_eq!(ab.reverse(), ba, "antisymmetry broke on {a:?} vs {b:?}");
+            if a.1 == b.1 {
+                assert_eq!(ab, Ordering::Equal);
+            } else {
+                assert_ne!(ab, Ordering::Equal, "{a:?} vs {b:?} must not tie");
+            }
+        }
+    }
+    // transitivity, exhaustively over the triple space
+    for &a in &keys {
+        for &b in &keys {
+            for &c in &keys {
+                if event_order(a, b).is_le() && event_order(b, c).is_le() {
+                    assert!(
+                        event_order(a, c).is_le(),
+                        "transitivity broke on {a:?} ≤ {b:?} ≤ {c:?}"
+                    );
+                }
+            }
+        }
+    }
+    // NaN times sort deterministically: a sort under this order is
+    // stable-by-key and never panics
+    let mut v = keys.to_vec();
+    v.sort_by(|a, b| event_order(*a, *b));
+    let seqs: Vec<u64> = v.iter().map(|k| k.1).collect();
+    // IEEE 754 totalOrder: -NaN < -inf < … < +inf < +NaN; seq breaks the NaN tie
+    assert_eq!(seqs, vec![7, 0, 1, 2, 3, 4, 5, 6]);
+}
+
 #[test]
 fn clear_and_reset() {
     let mut sim = Simulator::new();
@@ -126,7 +181,7 @@ fn prop_run_until_equals_filtered_pop() {
         let drained: Vec<usize> = sim_a.run_until(deadline).into_iter().map(|e| e.payload).collect();
         let mut expected: Vec<(f64, usize)> =
             times.iter().copied().enumerate().filter(|&(_, t)| t <= deadline).map(|(i, t)| (t, i)).collect();
-        expected.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        expected.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let expected: Vec<usize> = expected.into_iter().map(|(_, i)| i).collect();
         assert_that(drained == expected, format!("{drained:?} != {expected:?}"))?;
         assert_that(sim_a.now() == deadline, "clock must land on deadline")?;

@@ -53,6 +53,7 @@
 //! tolerances. See `docs/ARCHITECTURE.md` for the crate map, the wire
 //! format, and the paper-equation index.
 
+pub mod analysis;
 pub mod cli;
 pub mod coding;
 pub mod config;

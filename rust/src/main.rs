@@ -29,6 +29,10 @@
 //!   fault-injection matrix. `--full` adds the medium fixtures, a TCP
 //!   leg per fixture, and the whole fault matrix; failures print a
 //!   one-command replay line (`--only <id> --seed <s>`).
+//! * `lint` — repo-native static analysis (docs/ANALYSIS.md): wall-clock
+//!   discipline, obs-routed printing, panic-free fleet paths, total
+//!   float ordering, seeded RNG, audited atomics. Exits nonzero on any
+//!   finding, including stale suppressions.
 //!
 //! Configuration: paper-scale defaults (`--paper`) or test-scale
 //! (`--small`, default), overridable by an INI file (`--config`) and then
@@ -53,6 +57,7 @@ fn parser() -> Parser {
         .subcommand("device", "TCP device worker: join a cfl serve coordinator")
         .subcommand("bench-check", "compare a bench report against a committed baseline")
         .subcommand("conformance", "run the sim/live/tcp conformance suite (fixtures, invariants, faults)")
+        .subcommand("lint", "repo-native static analysis (determinism, panic-freedom, atomics)")
         .opt("config", "file.ini", "INI config file ([experiment] + [sweep] sections)")
         .opt("seed", "u64", "root seed (default from config)")
         .opt("delta", "f64|auto", "coding redundancy δ = c/m (default: optimizer)")
@@ -86,6 +91,7 @@ fn parser() -> Parser {
             "bench-check: allowed fractional epochs/s drop (default 0.5; off = gain-only)",
         )
         .opt("only", "substr", "conformance: run only checks whose id contains this substring")
+        .opt("rule", "id", "lint: run a single rule (ids in docs/ANALYSIS.md)")
         .opt("log-level", "error|warn|info|debug|trace", "stderr log level (default info; CFL_LOG env var works too)")
         .opt(
             "events-out",
@@ -94,6 +100,7 @@ fn parser() -> Parser {
         )
         .opt("trace-decimate", "N", "sweep --traces-dir: keep every Nth trace row (first and last always kept)")
         .flag("full", "conformance: run the full tier (tcp everywhere, medium fixtures, whole fault matrix)")
+        .flag("json", "lint: emit JSONL findings and a summary line instead of text")
         .flag("retry", "device: reconnect with backoff after a lost link (rejoin the fleet)")
         .flag("live", "sweep: run scenarios through the live coordinator")
         .flag("probe", "serve: just test that the address can be bound, then exit")
@@ -633,7 +640,6 @@ fn cmd_conformance(args: &cfl::cli::Args) -> Result<()> {
         only: args.get("only").map(String::from),
         seed,
         out_dir: Some(args.get_or("out", "results".to_string())?),
-        progress: !args.has_flag("quiet"),
     };
     let report = conformance::run(&opts)?;
     println!("{}", conformance::render(&report));
@@ -644,6 +650,30 @@ fn cmd_conformance(args: &cfl::cli::Args) -> Result<()> {
         println!("  FAIL {} — replay: {}", c.id, c.replay);
     }
     anyhow::ensure!(report.passed(), "{fail} conformance check(s) failed");
+    Ok(())
+}
+
+/// `cfl lint [--json] [--rule <id>] [paths…]` — walk the tree (or the
+/// given files/dirs), run every rule, print findings, and exit nonzero
+/// if any survive their suppressions (stale allows included).
+fn cmd_lint(args: &cfl::cli::Args) -> Result<()> {
+    use cfl::analysis;
+    let roots: Vec<std::path::PathBuf> = if args.positional().is_empty() {
+        analysis::default_roots()
+    } else {
+        args.positional().iter().map(std::path::PathBuf::from).collect()
+    };
+    let report = analysis::run_paths(&roots, args.get("rule"))?;
+    if args.has_flag("json") {
+        print!("{}", analysis::render_json(&report));
+    } else {
+        print!("{}", analysis::render_text(&report));
+    }
+    anyhow::ensure!(
+        report.clean(),
+        "lint found {} problem(s) — fix them or allow with a reason",
+        report.findings.len()
+    );
     Ok(())
 }
 
@@ -667,6 +697,7 @@ fn main() -> Result<()> {
         Some("device") => cmd_device(&args),
         Some("bench-check") => cmd_bench_check(&args),
         Some("conformance") => cmd_conformance(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             println!("{}", parser().help("cfl"));
             Ok(())

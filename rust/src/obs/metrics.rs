@@ -24,10 +24,12 @@ impl Counter {
     }
 
     pub fn add(&self, n: u64) {
+        // Relaxed: counters tolerate reordering; totals are read at rest
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // Relaxed: snapshot read, no other state depends on it
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -38,10 +40,12 @@ pub struct Gauge(Arc<AtomicU64>);
 
 impl Gauge {
     pub fn set(&self, v: f64) {
+        // Relaxed: last-write-wins gauge, torn updates are impossible on u64
         self.0.store(v.to_bits(), Ordering::Relaxed);
     }
 
     pub fn get(&self) -> f64 {
+        // Relaxed: snapshot read, no other state depends on it
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
 }

@@ -52,7 +52,7 @@ mod phase;
 mod sink;
 
 pub use metrics::{registry, Counter, Gauge, Histo, Registry};
-pub use phase::{Phase, PhaseBook, PhaseSummary, PHASES};
+pub use phase::{Phase, PhaseBook, PhaseSummary, Stopwatch, PHASES};
 pub use sink::{EventRecord, JsonlDirSink, JsonlFileSink, MemorySink, Sink, StderrSink};
 
 use anyhow::{bail, Result};
@@ -221,6 +221,7 @@ thread_local! {
 /// guard the macros evaluate before touching field expressions.
 #[inline]
 pub fn enabled(level: Level) -> bool {
+    // Relaxed: the gate is advisory — a stale read only defers one event
     level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 
@@ -230,12 +231,14 @@ pub fn install(sinks: Vec<(Arc<dyn Sink>, Level)>) {
     let max = sinks.iter().map(|(_, l)| *l as u8).max().unwrap_or(0);
     let mut w = SINKS.write().unwrap_or_else(|p| p.into_inner());
     *w = sinks;
+    // Relaxed: sink installation happens-before use via the SINKS lock
     MAX_LEVEL.store(max, Ordering::Relaxed);
 }
 
 /// Flush and remove every sink; observability returns to the disabled
 /// (zero-cost) state.
 pub fn shutdown() {
+    // Relaxed: racing emitters still see live sinks through the lock below
     MAX_LEVEL.store(0, Ordering::Relaxed);
     let mut w = SINKS.write().unwrap_or_else(|p| p.into_inner());
     for (sink, _) in w.iter() {
@@ -260,6 +263,7 @@ fn dispatch(level: Level, name: &str, dur_us: Option<u64>, fields: &[(&str, Valu
     }
     let scope = SCOPE.with(|s| s.borrow().clone());
     let rec = EventRecord {
+        // Relaxed: seq only needs uniqueness, not cross-thread ordering
         seq: SEQ.fetch_add(1, Ordering::Relaxed),
         t_us: clock().elapsed().as_micros() as u64,
         level,

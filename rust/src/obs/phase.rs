@@ -12,6 +12,7 @@
 //! no locks, no allocation, ~4 `Instant::now()` calls per epoch.
 
 use crate::stats::quantile;
+use std::time::Instant;
 
 /// The phases of one training epoch (plus one-off setup phases). These
 /// names are the keys of the bench JSON `phases` object.
@@ -107,6 +108,47 @@ impl PhaseBook {
                 }
             })
             .collect()
+    }
+}
+
+/// A wall-clock stopwatch for phase timing — the one sanctioned way
+/// for training code to read the host clock (the `no-wall-clock` lint
+/// rule bans `Instant::now()` outside obs and the live modules, so
+/// simulated-time code measures *itself* through this seam instead of
+/// coupling to `std::time` directly).
+///
+/// [`Stopwatch::lap_s`] advances a lap marker, which is exactly the
+/// `t_epoch → t_gather → t_grad` delta chain the coordinators feed into
+/// [`PhaseBook::record`].
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now }
+    }
+
+    /// Seconds since the stopwatch started.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous lap (or start), advancing the marker.
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+
+    /// Reset the lap marker without taking a reading (start a new
+    /// measured region after unmeasured work).
+    pub fn mark(&mut self) {
+        self.last = Instant::now();
     }
 }
 

@@ -158,7 +158,7 @@ fn expected_return_is_concave_shaped_fig1() {
     let peak_idx = returns
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .unwrap()
         .0;
     assert!(peak_idx > 0, "peak should not be at zero load");
@@ -176,10 +176,10 @@ fn fleet_ladders_match_paper() {
 
     // the set of per-point compute times must equal {d/(base·0.8^i)}
     let mut got: Vec<f64> = fleet.devices.iter().map(|p| p.compute.secs_per_point).collect();
-    got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    got.sort_by(f64::total_cmp);
     let mut want: Vec<f64> =
         (0..24).map(|i| 500.0 / (0.8f64.powi(i) * 1536e3)).collect();
-    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    want.sort_by(f64::total_cmp);
     for (g, w) in got.iter().zip(&want) {
         assert!((g - w).abs() / w < 1e-12);
     }
@@ -214,14 +214,14 @@ fn fleet_shuffles_are_seed_reproducible_and_independent() {
         .devices
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.compute.secs_per_point.partial_cmp(&b.1.compute.secs_per_point).unwrap())
+        .min_by(|a, b| a.1.compute.secs_per_point.total_cmp(&b.1.compute.secs_per_point))
         .unwrap()
         .0;
     let fastest_link = f1
         .devices
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.link.secs_per_packet.partial_cmp(&b.1.link.secs_per_packet).unwrap())
+        .min_by(|a, b| a.1.link.secs_per_packet.total_cmp(&b.1.link.secs_per_packet))
         .unwrap()
         .0;
     // not a hard guarantee per seed, but seed 1 is checked here explicitly
@@ -239,10 +239,10 @@ fn ladder_tiers_tile_the_ladder() {
     cfg.ladder_tiers = 24;
     let fleet = Fleet::from_config(&cfg, &mut Rng::new(9));
     let mut got: Vec<f64> = fleet.devices.iter().map(|p| p.compute.secs_per_point).collect();
-    got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    got.sort_by(f64::total_cmp);
     let mut want: Vec<f64> =
         (0..48).map(|i| 500.0 / (0.8f64.powi((i % 24) as i32) * 1536e3)).collect();
-    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    want.sort_by(f64::total_cmp);
     for (g, w) in got.iter().zip(&want) {
         assert_eq!(g.to_bits(), w.to_bits(), "tiled rung must be bit-exact");
     }

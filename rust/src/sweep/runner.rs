@@ -216,7 +216,11 @@ where
     let work_rx = Mutex::new(work_rx);
     let (result_tx, result_rx) = mpsc::channel::<(usize, Result<O>)>();
     for job in items.into_iter().enumerate() {
-        work_tx.send(job).expect("queue send on fresh channel");
+        // the receiver is alive until the scope below ends, so this only
+        // fails if something truly exotic tore the channel down early
+        if work_tx.send(job).is_err() {
+            bail!("work queue receiver dropped before the pool started");
+        }
     }
     drop(work_tx);
 
@@ -262,18 +266,20 @@ where
             // first failure — which, because we walk positions in order,
             // is the first failure in input order
             while next < n {
-                match &slots[next] {
+                // take the slot to bind its value by move (no panicking
+                // re-match); Ok values go back in for the final collection
+                match slots[next].take() {
                     None => break,
-                    Some(Ok(_)) => {
-                        let Some(Ok(output)) = &slots[next] else { unreachable!() };
-                        if let Err(e) = sink(next, output) {
+                    Some(Ok(output)) => {
+                        let delivered = sink(next, &output);
+                        slots[next] = Some(Ok(output));
+                        if let Err(e) = delivered {
                             first_err = Some(e);
                             break 'collect;
                         }
                         next += 1;
                     }
-                    Some(Err(_)) => {
-                        let Some(Err(e)) = slots[next].take() else { unreachable!() };
+                    Some(Err(e)) => {
                         first_err = Some(e);
                         break 'collect;
                     }

@@ -201,14 +201,22 @@ impl<'a> Dec<'a> {
         self.buf = rest;
         Ok(head)
     }
+    /// Like [`Dec::take`], but with the length in the type: the slice →
+    /// array conversion cannot fail, so fixed-width readers stay panic-free.
+    fn take_arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let head = self.take(N)?;
+        let mut arr = [0u8; N];
+        arr.copy_from_slice(head);
+        Ok(arr)
+    }
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_arr()?))
     }
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_arr()?))
     }
     fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.take_arr()?))
     }
     fn mat(&mut self) -> Result<Mat> {
         let rows = self.u32()? as usize;
@@ -225,6 +233,7 @@ impl<'a> Dec<'a> {
                 )
             })?;
         let bytes = self.take(bytes_needed)?;
+        // cfl-lint: allow(no-panic-paths) — chunks_exact(4) yields exactly-4-byte slices
         let data = bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap()));
         Ok(Mat::from_vec(rows, cols, data.collect()))
     }

@@ -330,6 +330,7 @@ impl Transport for TcpTransport {
 
 impl Drop for TcpTransport {
     fn drop(&mut self) {
+        // cfl-lint: allow(atomic-ordering-audit) — lone stop flag, no data published through it
         self.stop.store(true, Ordering::Relaxed);
         for slot in 0..self.links.len() {
             let _ = self.send(slot, &ToDevice::Shutdown);
@@ -451,6 +452,7 @@ fn acceptor_loop(
     stop: Arc<AtomicBool>,
     tx: mpsc::Sender<(usize, u64, TcpUp)>,
 ) {
+    // cfl-lint: allow(atomic-ordering-audit) — stop flag read guards no shared state
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, peer)) => match handshake(stream, n) {

@@ -388,3 +388,53 @@ fn bench_check_gates_on_the_baseline() {
     assert!(err.contains("regression"), "{err}");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn lint_subcommand_flags_violations_and_emits_json() {
+    let bin = require_bin!();
+    let dir = std::env::temp_dir().join("cfl_cli_lint");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    // paths outside the repo layout classify as production source (the
+    // strictest class), so this fixture trips both no-wall-clock and
+    // no-raw-print
+    let bad = dir.join("bad.rs");
+    std::fs::write(
+        &bad,
+        "fn f() {\n    let t = std::time::Instant::now();\n    println!(\"{t:?}\");\n}\n",
+    )
+    .unwrap();
+
+    let out = Command::new(&bin).args(["lint", bad.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success(), "lint must exit nonzero on a violating file");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("no-wall-clock"), "{text}");
+    assert!(text.contains("no-raw-print"), "{text}");
+    assert!(text.contains(":2:"), "span for Instant::now must point at line 2: {text}");
+
+    let out =
+        Command::new(&bin).args(["lint", "--json", bad.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+    assert!(lines.len() >= 3, "two findings + summary expected: {text}");
+    assert!(
+        lines.iter().all(|l| l.starts_with('{') && l.ends_with('}')),
+        "every line must be a JSON object: {text}"
+    );
+    assert!(lines[0].contains("\"kind\":\"finding\"") && lines[0].contains("\"line\":2"), "{text}");
+    let last = lines.last().unwrap();
+    assert!(last.contains("\"kind\":\"summary\"") && last.contains("\"files\":1"), "{text}");
+
+    // --rule narrows the run to one rule's findings
+    let out = Command::new(&bin)
+        .args(["lint", "--rule", "no-raw-print", bad.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("no-raw-print"), "{text}");
+    assert!(!text.contains("no-wall-clock"), "--rule must filter other rules: {text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -28,6 +28,11 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "== cargo test -q (unit + integration + doctests)"
 cargo test -q
 
+# repo-native static analysis (docs/ANALYSIS.md): any finding or stale
+# allow fails; also validates the `cfl lint --json` JSONL schema. The
+# test run above built the debug binary lint_check.sh picks up.
+./scripts/lint_check.sh
+
 # sockets permitting (the script probes bind and skips with a notice in
 # sandboxes that deny it), exercise the real-process TCP path too.
 # CFL_SKIP_SMOKE=1 skips it here (CI runs it as its own workflow step).

@@ -1,0 +1,81 @@
+#!/usr/bin/env bash
+# CI lint gate: run the repo-native static analyzer (`cfl lint`, rules in
+# docs/ANALYSIS.md) over the tree — any finding or stale allow fails the
+# run — then validate the machine surface: `cfl lint --json` must emit
+# line-oriented JSONL where every record is a `finding` with its full
+# span (rule/file/line/col/message) or the single trailing `summary`.
+#
+# Env: CFL_BIN overrides the binary (default: target/{release,debug}/cfl).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${CFL_BIN:-}
+if [[ -z "$BIN" ]]; then
+    for candidate in target/release/cfl target/debug/cfl; do
+        if [[ -x "$candidate" ]]; then
+            BIN=$candidate
+            break
+        fi
+    done
+fi
+if [[ -z "${BIN:-}" || ! -x "$BIN" ]]; then
+    echo "lint_check: cfl binary not built (run cargo build first)" >&2
+    exit 1
+fi
+
+echo "== cfl lint"
+"$BIN" lint
+
+# --- JSONL schema validation ------------------------------------------
+# the text pass above already proved the tree is clean, so the JSON pass
+# must agree: parseable lines, exactly one summary (the last line), and
+# zero findings / stale allows reported in it
+json=$("$BIN" lint --json)
+if command -v python3 >/dev/null 2>&1; then
+    LINT_JSON="$json" python3 - <<'PY'
+import json, os, sys
+
+finding_keys = {"kind", "rule", "file", "line", "col", "message"}
+summary_keys = {"kind", "files", "rules", "findings", "stale_allows"}
+lines = [l for l in os.environ["LINT_JSON"].splitlines() if l.strip()]
+if not lines:
+    sys.exit("lint_check: --json emitted no lines")
+summaries = 0
+for lineno, line in enumerate(lines, 1):
+    try:
+        rec = json.loads(line)
+    except json.JSONDecodeError as exc:
+        sys.exit(f"lint --json line {lineno}: not valid JSON: {exc}")
+    if rec.get("kind") == "summary":
+        summaries += 1
+        missing = summary_keys - rec.keys()
+        if missing:
+            sys.exit(f"lint --json line {lineno}: summary missing {sorted(missing)}")
+        if lineno != len(lines):
+            sys.exit("lint_check: summary must be the final line")
+        if rec["findings"] != 0 or rec["stale_allows"] != 0:
+            sys.exit(f"lint_check: summary reports problems: {rec}")
+        if rec["files"] <= 0 or rec["rules"] <= 0:
+            sys.exit(f"lint_check: implausible summary counts: {rec}")
+    elif rec.get("kind") == "finding":
+        missing = finding_keys - rec.keys()
+        if missing:
+            sys.exit(f"lint --json line {lineno}: finding missing {sorted(missing)}")
+    else:
+        sys.exit(f"lint --json line {lineno}: unknown kind {rec.get('kind')!r}")
+if summaries != 1:
+    sys.exit(f"lint_check: expected exactly 1 summary line, got {summaries}")
+print(f"lint_check: {len(lines)} JSONL line(s) validated")
+PY
+else
+    # minimal fallback (no python3): the output must be exactly one
+    # summary object declaring a clean tree
+    last=$(printf '%s\n' "$json" | tail -n 1)
+    for key in '"kind":"summary"' '"findings":0' '"stale_allows":0'; do
+        if [[ "$last" != *"$key"* ]]; then
+            echo "lint_check: summary line missing $key: $last" >&2
+            exit 1
+        fi
+    done
+    echo "lint_check: JSONL summary spot-checked (python3 unavailable)"
+fi
