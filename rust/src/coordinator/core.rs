@@ -526,6 +526,11 @@ pub enum CoordinatorKind {
         /// (default), or TCP loopback subprocesses spawned per scenario
         /// (`cfl sweep --live --transport tcp`).
         transport: TransportKind,
+        /// Cross-host slot manifest (`--placement <file>`, TCP only):
+        /// bind the manifest's address, host its `local` slots in one
+        /// child process, await its remote slots. `None` keeps the
+        /// self-contained loopback fleet.
+        placement: Option<crate::transport::Placement>,
     },
 }
 
@@ -543,14 +548,22 @@ impl CoordinatorKind {
     pub fn build(&self, cfg: &ExperimentConfig) -> Result<Box<dyn Coordinator>> {
         Ok(match self {
             CoordinatorKind::Sim => Box::new(SimCoordinator::new(cfg)?),
-            CoordinatorKind::Live { time_scale, transport: TransportKind::Channel } => {
+            CoordinatorKind::Live { time_scale, transport: TransportKind::Channel, placement } => {
+                anyhow::ensure!(
+                    placement.is_none(),
+                    "--placement requires --transport tcp (a channel fleet has no hosts to place)"
+                );
                 Box::new(LiveCoordinator::new(cfg, *time_scale)?)
             }
-            CoordinatorKind::Live { time_scale, transport: TransportKind::Tcp } => {
-                // one subprocess fleet per scenario: bind a loopback
-                // port, spawn `cfl device` children, accept them
+            CoordinatorKind::Live { time_scale, transport: TransportKind::Tcp, placement } => {
+                // one fleet per scenario: placement-described when a
+                // manifest is given, else a self-contained loopback fleet
+                // (bind an ephemeral port, spawn `cfl device` children)
                 let bin = crate::transport::local_device_bin()?;
-                let tcp = TcpTransport::spawn_local(&bin, cfg.n_devices)?;
+                let tcp = match placement {
+                    Some(p) => TcpTransport::spawn_placed(&bin, cfg.n_devices, p)?,
+                    None => TcpTransport::spawn_local(&bin, cfg.n_devices)?,
+                };
                 Box::new(LiveCoordinator::with_transport(cfg, *time_scale, Box::new(tcp))?)
             }
         })

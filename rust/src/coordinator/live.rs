@@ -72,7 +72,9 @@ const WAIT_ALL_TIMEOUT: Duration = Duration::from_secs(30);
 /// Ping/echo round trips per device in the calibration handshake.
 const CALIBRATION_ROUNDS: usize = 3;
 
-/// Wait cap on a single calibration pong.
+/// Cap on fleet-wide calibration silence: the handshake gives up on
+/// every still-unanswered probe once this long passes without *any*
+/// pong landing (the clock resets on each one).
 const CALIBRATION_TIMEOUT: Duration = Duration::from_millis(500);
 
 /// Calibrated grace = worst observed RTT × this headroom factor …
@@ -577,19 +579,24 @@ impl LiveCoordinator {
 /// current load — times a headroom factor becomes the grace budget,
 /// clamped to a sane band.
 ///
-/// The handshake doubles as the run's liveness probe, and a dying device
-/// must cost the run at most one wait cap: an endpoint that dies
-/// mid-ping (a `Gone` arrives, or its send fails) is excluded
-/// immediately, and one that never answers a single ping (a
-/// silently-partitioned socket whose writes still land in the kernel
-/// buffer) is abandoned after its *first* silent round instead of being
-/// pinged again — `CALIBRATION_ROUNDS` × the cap was a real stall on
-/// every run with one quiet corpse in the fleet. Either way the endpoint
-/// is marked dead in `alive` so the epoch loop degrades it rather than
-/// stalling on it. Lifecycle events that land mid-handshake are honored:
-/// a `Gone` for any slot kills it, a `Rejoined` marks the slot for
-/// re-arming at the first epoch boundary (rejoined incarnations are not
-/// pinged — the surviving fleet's worst RTT already prices the host).
+/// The handshake is *pipelined*: every endpoint's probe sequence runs
+/// concurrently (each is `CALIBRATION_ROUNDS` strictly sequential
+/// ping→pong exchanges, re-armed as its pong lands), so fleet
+/// calibration costs the slowest endpoint's round trips, not the sum of
+/// everyone's — the shape a readiness-driven transport makes natural.
+///
+/// The handshake doubles as the run's liveness probe, and dying devices
+/// must cost the run at most ~one wait cap *total*: the silence clock is
+/// shared, resetting on every pong, so the cap prices consecutive
+/// fleet-wide silence — when it expires, everything still probing is a
+/// mute corpse (a silently-partitioned socket whose writes still land in
+/// the kernel buffer), marked dead and severed in one sweep so restarted
+/// devices can re-claim the slots. An endpoint that dies mid-probe (a
+/// `Gone` arrives, or its re-arm send fails) is excluded immediately.
+/// Lifecycle events that land mid-handshake are honored: a `Gone` for
+/// any slot kills it, a `Rejoined` marks the slot for re-arming at the
+/// first epoch boundary (rejoined incarnations are not pinged — the
+/// surviving fleet's worst RTT already prices the host).
 fn calibrate_grace(
     transport: &mut dyn Transport,
     active: &[usize],
@@ -598,6 +605,14 @@ fn calibrate_grace(
     disconnects: &mut u64,
     rejoins: &mut u64,
 ) -> Duration {
+    /// One endpoint's in-flight probe.
+    struct Probe {
+        /// Exchanges still to run after the in-flight one.
+        rounds_left: usize,
+        /// Nonce of the in-flight ping.
+        nonce: u64,
+        sent_at: Instant,
+    }
     let mut max_rtt = Duration::ZERO;
     let mut mark_gone = |s: usize, alive: &mut [bool], needs_setup: &mut [bool]| {
         if let Some(flag) = alive.get_mut(s) {
@@ -610,74 +625,118 @@ fn calibrate_grace(
             *flag = false;
         }
     };
+    // launch: one ping per live active endpoint, all at once. Nonces are
+    // partitioned per slot (slot j uses j·ROUNDS‥(j+1)·ROUNDS), so a
+    // straggling pong can never satisfy another slot's probe.
+    let mut probes: Vec<Option<Probe>> = (0..alive.len()).map(|_| None).collect();
+    let mut outstanding = 0usize;
     for (j, &slot) in active.iter().enumerate() {
-        'rounds: for round in 0..CALIBRATION_ROUNDS {
-            if !alive[slot] {
-                break;
+        if !alive.get(slot).copied().unwrap_or(false) {
+            continue;
+        }
+        let nonce = (j * CALIBRATION_ROUNDS) as u64;
+        let sent_at = Instant::now();
+        if matches!(transport.send(slot, &ToDevice::Ping { nonce }), Ok(true)) {
+            if let Some(p) = probes.get_mut(slot) {
+                *p = Some(Probe { rounds_left: CALIBRATION_ROUNDS - 1, nonce, sent_at });
+                outstanding += 1;
             }
-            let nonce = (j * CALIBRATION_ROUNDS + round) as u64;
-            let sent_at = Instant::now();
-            match transport.send(slot, &ToDevice::Ping { nonce }) {
-                Ok(true) => {}
-                _ => {
+        } else {
+            mark_gone(slot, alive, needs_setup);
+        }
+    }
+    let mut quiet_since = Instant::now();
+    while outstanding > 0 {
+        let deadline = quiet_since + CALIBRATION_TIMEOUT;
+        let now = Instant::now();
+        if now >= deadline {
+            // nobody has spoken for a whole cap: every endpoint still
+            // probing is a mute corpse — mark it dead and sever the
+            // half-open link so a restarted device can re-claim the slot
+            // instead of being refused as a duplicate of the corpse
+            for (slot, probe) in probes.iter_mut().enumerate() {
+                if probe.take().is_some() {
                     mark_gone(slot, alive, needs_setup);
-                    break;
+                    transport.disconnect(slot);
                 }
             }
-            let deadline = sent_at + CALIBRATION_TIMEOUT;
-            let mut ponged = false;
-            loop {
-                let t = Instant::now();
-                if t >= deadline {
-                    break;
-                }
-                match transport.recv_timeout(deadline - t) {
-                    Event::Msg(s, FromDevice::Pong { nonce: n }) if s == slot && n == nonce => {
-                        max_rtt = max_rtt.max(sent_at.elapsed());
-                        ponged = true;
-                        break;
-                    }
-                    // stale replies from an earlier run: discard
-                    Event::Msg(_, _) => {}
-                    Event::Gone(s) => {
-                        mark_gone(s, alive, needs_setup);
-                        if s == slot {
-                            break 'rounds;
+            break;
+        }
+        match transport.recv_timeout(deadline - now) {
+            Event::Msg(s, FromDevice::Pong { nonce: n }) => {
+                // judge the pong against s's in-flight probe first, then
+                // apply the verdict (None = stale, ignore; Some(None) =
+                // probe finished; Some(Some(nonce)) = re-arm and ping)
+                let verdict = match probes.get_mut(s).and_then(|p| p.as_mut()) {
+                    Some(probe) if probe.nonce == n => {
+                        max_rtt = max_rtt.max(probe.sent_at.elapsed());
+                        quiet_since = Instant::now();
+                        if probe.rounds_left == 0 {
+                            Some(None)
+                        } else {
+                            probe.rounds_left -= 1;
+                            probe.nonce += 1;
+                            probe.sent_at = Instant::now();
+                            Some(Some(probe.nonce))
                         }
                     }
-                    Event::Rejoined(s) => {
-                        // a suppressed death notice (kill + rejoin
-                        // back-to-back) surfaces as a rejoin for a slot
-                        // still thought alive: account the implicit
-                        // disconnect, then mark the fresh incarnation
-                        // for re-arming at the first epoch boundary
-                        mark_gone(s, alive, needs_setup);
-                        if let Some(flag) = needs_setup.get_mut(s) {
-                            *flag = true;
-                            *rejoins += 1;
+                    // a stale pong (an earlier run's straggler, or a
+                    // probe this slot no longer runs)
+                    _ => None,
+                };
+                match verdict {
+                    None => {}
+                    Some(None) => {
+                        if let Some(p) = probes.get_mut(s) {
+                            *p = None;
                         }
-                        if s == slot {
-                            // the incarnation this ping went to is gone
-                            // and can never pong — end this slot's rounds
-                            // now, or the no-pong path below would sever
-                            // the freshly admitted replacement and cancel
-                            // its re-arm
-                            break 'rounds;
+                        outstanding -= 1;
+                    }
+                    Some(Some(nonce)) => {
+                        if !matches!(transport.send(s, &ToDevice::Ping { nonce }), Ok(true)) {
+                            if let Some(p) = probes.get_mut(s) {
+                                *p = None;
+                            }
+                            outstanding -= 1;
+                            mark_gone(s, alive, needs_setup);
                         }
                     }
-                    Event::Timeout | Event::Closed => break,
                 }
             }
-            if !ponged {
-                // a healthy endpoint answers a ping in far less than the
-                // round timeout; total silence means the link is gone
-                // even if writes still "succeed" (no FIN/RST arrived) —
-                // stop pinging it so it charges the run exactly one cap,
-                // and sever the half-open link so a restarted device can
-                // re-claim the slot instead of being refused as a
-                // duplicate of the corpse
-                mark_gone(slot, alive, needs_setup);
-                transport.disconnect(slot);
+            // stale replies from an earlier run: discard
+            Event::Msg(_, _) => {}
+            Event::Gone(s) => {
+                mark_gone(s, alive, needs_setup);
+                if probes.get_mut(s).and_then(Option::take).is_some() {
+                    outstanding -= 1;
+                }
+            }
+            Event::Rejoined(s) => {
+                // a suppressed death notice (kill + rejoin back-to-back)
+                // surfaces as a rejoin for a slot still thought alive:
+                // account the implicit disconnect, then mark the fresh
+                // incarnation for re-arming at the first epoch boundary.
+                // The incarnation this slot's probe went to is gone and
+                // can never pong — retire the probe, or the quiet-clock
+                // sweep would sever the freshly admitted replacement and
+                // cancel its re-arm.
+                mark_gone(s, alive, needs_setup);
+                if let Some(flag) = needs_setup.get_mut(s) {
+                    *flag = true;
+                    *rejoins += 1;
+                }
+                if probes.get_mut(s).and_then(Option::take).is_some() {
+                    outstanding -= 1;
+                }
+            }
+            // Timeout: the loop head re-checks the shared quiet deadline
+            Event::Timeout => {}
+            Event::Closed => {
+                for (slot, probe) in probes.iter_mut().enumerate() {
+                    if probe.take().is_some() {
+                        mark_gone(slot, alive, needs_setup);
+                    }
+                }
                 break;
             }
         }

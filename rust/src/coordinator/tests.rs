@@ -224,6 +224,7 @@ fn coordinator_kind_builds_both_backends() {
     let live = CoordinatorKind::Live {
         time_scale: 1e-4,
         transport: crate::transport::TransportKind::Channel,
+        placement: None,
     };
     for kind in [CoordinatorKind::Sim, live] {
         let mut coord = kind.build(&cfg).unwrap();

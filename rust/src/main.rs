@@ -15,12 +15,16 @@
 //!   exports each scenario's per-epoch NMSE trace. `--live` drives
 //!   every scenario through the live coordinator instead of the DES
 //!   backend (`--transport tcp` spawns real device subprocesses per
-//!   scenario); `--bench-out` adds the compact CI bench report.
+//!   scenario; `--placement file.ini` spreads the fleet across hosts);
+//!   `--bench-out` adds the compact CI bench report.
 //! * `live`     — run the threaded live-cluster demo.
 //! * `serve`    — TCP coordinator: bind, wait for `cfl device` processes
 //!   to connect, train, report.
 //! * `device`   — TCP device worker: connect to a `cfl serve` master and
-//!   compute partial gradients until the session shuts down.
+//!   compute partial gradients until the session shuts down. `--slots
+//!   a,b,c` hosts several fleet slots over one connection; `--retry`
+//!   rejoins after a lost link; `--persist` outlives Shutdown and waits
+//!   for the next session.
 //! * `bench-check` — compare a bench/sweep JSON report against a
 //!   committed baseline and fail on coding-gain regressions (CI).
 //! * `conformance` — run the cross-backend conformance suite: fixture
@@ -44,7 +48,10 @@ use cfl::config::{ExperimentConfig, Ini};
 use cfl::coordinator::{CoordinatorKind, LiveCoordinator, SimCoordinator};
 use cfl::metrics::Table;
 use cfl::sweep::{self, ScenarioGrid, SweepOptions};
-use cfl::transport::{run_device, run_device_retry, TcpTransport, TransportKind};
+use cfl::transport::{
+    run_device, run_device_multi, run_device_multi_retry, run_device_retry, Placement, RetrySlots,
+    TcpTransport, TransportKind,
+};
 use std::time::Duration;
 
 fn parser() -> Parser {
@@ -76,12 +83,18 @@ fn parser() -> Parser {
         .opt("traces-dir", "dir", "sweep: write one per-epoch NMSE trace CSV per scenario")
         .opt("workers", "usize", "sweep: worker threads (default: all cores)")
         .opt("transport", "chan|tcp", "sweep --live: device transport (default chan)")
+        .opt(
+            "placement",
+            "file.ini",
+            "sweep --live --transport tcp / serve: cross-host slot manifest (docs/ARCHITECTURE.md)",
+        )
         .opt("bench-out", "file.json", "sweep: also write the compact CI bench report")
         .opt("bind", "addr", "serve: listen address (default 127.0.0.1:7070; :0 = any port)")
         .opt("port-file", "path", "serve: write the bound address to this file")
         .opt("check-nmse", "f64", "serve: exit nonzero unless the final CFL NMSE ≤ this")
         .opt("connect", "addr", "device: coordinator address to join")
         .opt("id", "usize", "device: fleet slot to claim (default 0)")
+        .opt("slots", "a,b,c", "device: claim several fleet slots over one connection")
         .opt("report", "file.json", "bench-check: current report (default BENCH_ci.json)")
         .opt("baseline", "file.json", "bench-check: baseline (default bench/baseline.json)")
         .opt("tolerance", "f64", "bench-check: allowed fractional gain drop (default 0.2)")
@@ -102,6 +115,10 @@ fn parser() -> Parser {
         .flag("full", "conformance: run the full tier (tcp everywhere, medium fixtures, whole fault matrix)")
         .flag("json", "lint: emit JSONL findings and a summary line instead of text")
         .flag("retry", "device: reconnect with backoff after a lost link (rejoin the fleet)")
+        .flag(
+            "persist",
+            "device: outlive Shutdown and await the next session (multi-scenario placement hosts)",
+        )
         .flag("live", "sweep: run scenarios through the live coordinator")
         .flag("probe", "serve: just test that the address can be bound, then exit")
         .flag("paper", "use the paper's §IV scale (24 devices, d=500)")
@@ -301,8 +318,22 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
         }
         None => TransportKind::Channel,
     };
+    let placement = match args.get("placement") {
+        Some(path) => {
+            anyhow::ensure!(
+                args.has_flag("live") && transport == TransportKind::Tcp,
+                "--placement requires --live --transport tcp (it maps fleet slots onto hosts)"
+            );
+            Some(Placement::load(path)?)
+        }
+        None => None,
+    };
     let backend = if args.has_flag("live") {
-        CoordinatorKind::Live { time_scale: args.get_or("time-scale", 1e-3)?, transport }
+        CoordinatorKind::Live {
+            time_scale: args.get_or("time-scale", 1e-3)?,
+            transport,
+            placement,
+        }
     } else {
         CoordinatorKind::Sim
     };
@@ -347,6 +378,10 @@ fn cmd_sweep(args: &cfl::cli::Args) -> Result<()> {
             "transport.frames_recv",
             "transport.bytes_sent",
             "transport.bytes_recv",
+            "transport.reactor.wakeups",
+            "transport.reactor.readable",
+            "transport.reactor.writable",
+            "transport.reactor.backpressure_closes",
         ] {
             reg.counter(name);
         }
@@ -524,7 +559,13 @@ fn cmd_live(args: &cfl::cli::Args) -> Result<()> {
 
 fn cmd_serve(args: &cfl::cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let bind = args.get("bind").unwrap_or("127.0.0.1:7070");
+    let placement = args.get("placement").map(Placement::load).transpose()?;
+    // bind precedence: explicit --bind, else the manifest's bind, else
+    // the loopback default
+    let bind = args
+        .get("bind")
+        .or_else(|| placement.as_ref().and_then(Placement::explicit_bind))
+        .unwrap_or("127.0.0.1:7070");
     let listener =
         std::net::TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
     let addr = listener.local_addr().context("reading the bound address")?;
@@ -548,7 +589,15 @@ fn cmd_serve(args: &cfl::cli::Args) -> Result<()> {
          --id K)",
         cfg.n_devices
     );
-    let transport = TcpTransport::serve(listener, cfg.n_devices, Duration::from_secs(60))?;
+    let transport = match &placement {
+        Some(p) => {
+            // the manifest's local slots become one child process; its
+            // remote slots are announced and awaited
+            let bin = cfl::transport::local_device_bin()?;
+            TcpTransport::serve_placed(listener, cfg.n_devices, p, &bin)?
+        }
+        None => TcpTransport::serve(listener, cfg.n_devices, Duration::from_secs(60))?,
+    };
     let mut live = LiveCoordinator::with_transport(&cfg, scale, Box::new(transport))?;
 
     let coded = live.train_cfl()?;
@@ -594,18 +643,54 @@ fn cmd_device(args: &cfl::cli::Args) -> Result<()> {
     let addr = args
         .get("connect")
         .ok_or_else(|| anyhow::anyhow!("cfl device needs --connect HOST:PORT"))?;
-    let id = args.get_or("id", 0usize)?;
     let quiet = args.has_flag("quiet");
+    let retry = args.has_flag("retry");
+    let persist = args.has_flag("persist");
+    let connect_timeout = Duration::from_secs(10);
+    // --slots: one process, one connection, several fleet slots (the
+    // placement-manifest host invocation)
+    if let Some(spec) = args.get("slots") {
+        anyhow::ensure!(
+            args.get("id").is_none(),
+            "--id and --slots are mutually exclusive (slots already name the claims)"
+        );
+        let slots = parse_slots(spec)?;
+        let rep = slots.first().copied().unwrap_or(0);
+        cfl::obs_event!(Info, "device_connecting", device = rep, addr = addr, slots = spec);
+        if retry || persist {
+            run_device_multi_retry(addr, RetrySlots::Multi(slots), connect_timeout, quiet, persist)?;
+        } else {
+            run_device_multi(addr, &slots, connect_timeout)?;
+        }
+        cfl::obs_event!(Info, "device_session_over", device = rep);
+        return Ok(());
+    }
+    let id = args.get_or("id", 0usize)?;
     cfl::obs_event!(Info, "device_connecting", device = id, addr = addr);
-    if args.has_flag("retry") {
+    if persist {
+        // outliving Shutdown implies the reconnect loop
+        run_device_multi_retry(addr, RetrySlots::Single(id), connect_timeout, quiet, true)?;
+    } else if retry {
         // survive a lost link: reconnect with backoff and re-claim the
         // slot until the coordinator sends an explicit Shutdown
-        run_device_retry(addr, id, Duration::from_secs(10), quiet)?;
+        run_device_retry(addr, id, connect_timeout, quiet)?;
     } else {
-        run_device(addr, id, Duration::from_secs(10))?;
+        run_device(addr, id, connect_timeout)?;
     }
     cfl::obs_event!(Info, "device_session_over", device = id);
     Ok(())
+}
+
+/// Parse a `--slots a,b,c` list.
+fn parse_slots(spec: &str) -> Result<Vec<usize>> {
+    let slots: Vec<usize> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().with_context(|| format!("--slots '{spec}'")))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!slots.is_empty(), "--slots '{spec}' names no slots");
+    Ok(slots)
 }
 
 fn cmd_bench_check(args: &cfl::cli::Args) -> Result<()> {

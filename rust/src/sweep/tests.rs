@@ -322,6 +322,7 @@ fn live_backend_runs_the_grid() {
         backend: CoordinatorKind::Live {
             time_scale: 1e-4,
             transport: crate::transport::TransportKind::Channel,
+            placement: None,
         },
     };
     let outcomes = run_grid(&grid, &opts).unwrap();

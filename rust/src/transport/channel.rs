@@ -16,13 +16,15 @@
 //! newer incarnation holds the slot, exactly like the TCP transport.
 
 use super::{
-    run_device_loop, stale_discard, DeviceInit, DeviceLink, Event, FromDevice, ToDevice, Transport,
+    note_gone, note_rejoin, run_device_loop, stale_discard, DeviceInit, DeviceLink, Event,
+    FromDevice, ToDevice, Transport,
 };
 use crate::obs::Counter;
 use anyhow::Result;
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Everything that can land on the transport's single event queue: a
 /// worker upstream message (tagged with the incarnation that sent it) or
@@ -90,6 +92,9 @@ pub struct ChannelTransport {
     up_rx: mpsc::Receiver<ChanEvent>,
     up_tx: mpsc::Sender<ChanEvent>,
     handles: Vec<thread::JoinHandle<()>>,
+    /// Public events decoded from the queue but not yet handed to the
+    /// caller.
+    pending: VecDeque<Event>,
     /// Fleet-traffic counters (message counts only — the in-process wire
     /// never serializes, so there are no byte totals to report). Shared
     /// names with the TCP transport, resolved once so the epoch hot path
@@ -138,6 +143,7 @@ impl ChannelTransport {
             up_rx,
             up_tx,
             handles,
+            pending: VecDeque::new(),
             frames_sent: reg.counter("transport.frames_sent"),
             frames_recv: reg.counter("transport.frames_recv"),
         }
@@ -147,58 +153,66 @@ impl ChannelTransport {
     pub fn controller(&self) -> ChannelCtl {
         ChannelCtl { tx: self.up_tx.clone() }
     }
+}
 
-    /// Process one queued control/upstream event. Returns the public
-    /// event to surface, or `None` when the event was internal (a kill
-    /// command, a stale-incarnation notice to discard).
-    fn process(&mut self, ev: ChanEvent) -> Option<Event> {
-        match ev {
-            ChanEvent::Msg(slot, gen, msg) => {
-                // a reply from a dead incarnation must not be attributed
-                // to its replacement
-                if gen != self.gens[slot] {
-                    stale_discard(slot, gen);
-                    return None;
-                }
-                self.frames_recv.incr();
-                Some(Event::Msg(slot, msg))
+/// Apply one queued control/upstream event, buffering any public events
+/// in `pending` (none for an internal event — a kill command, a
+/// stale-incarnation notice to discard). A free function over the
+/// transport's split fields so [`super::drive_queue`] can borrow the
+/// receiver and this state simultaneously.
+#[allow(clippy::too_many_arguments)]
+fn process_event(
+    ev: ChanEvent,
+    to_devices: &mut [Option<mpsc::Sender<ToDevice>>],
+    gens: &mut [u64],
+    up_tx: &mpsc::Sender<ChanEvent>,
+    handles: &mut Vec<thread::JoinHandle<()>>,
+    frames_recv: &Counter,
+    pending: &mut VecDeque<Event>,
+) {
+    match ev {
+        ChanEvent::Msg(slot, gen, msg) => {
+            // a reply from a dead incarnation must not be attributed
+            // to its replacement
+            if gens.get(slot).copied() != Some(gen) {
+                stale_discard(slot, gen);
+                return;
             }
-            ChanEvent::Gone(slot, gen) => {
-                if gen != self.gens[slot] {
-                    stale_discard(slot, gen);
-                    return None; // stale death notice: the slot respawned
-                }
-                // a death notice is one-shot: record it at the transport
-                // level too, so the endpoint stays dead across runs until
-                // a respawn re-claims the slot
-                self.to_devices[slot] = None;
-                crate::obs::registry()
-                    .counter(&format!("transport.slot{slot}.disconnects"))
-                    .incr();
-                crate::obs_event!(Debug, "endpoint_gone", slot = slot, gen = gen);
-                Some(Event::Gone(slot))
+            frames_recv.incr();
+            pending.push_back(Event::Msg(slot, msg));
+        }
+        ChanEvent::Gone(slot, gen) => {
+            if gens.get(slot).copied() != Some(gen) {
+                stale_discard(slot, gen);
+                return; // stale death notice: the slot respawned
             }
-            ChanEvent::Kill(slot) => {
-                // close the command channel; the worker exits and its own
-                // Gone notice is the observable death
-                if let Some(tx) = self.to_devices.get_mut(slot) {
-                    *tx = None;
-                }
-                None
+            // a death notice is one-shot: record it at the transport
+            // level too, so the endpoint stays dead across runs until
+            // a respawn re-claims the slot
+            if let Some(tx) = to_devices.get_mut(slot) {
+                *tx = None;
             }
-            ChanEvent::Respawn(slot) => {
-                if slot >= self.to_devices.len() || self.to_devices[slot].is_some() {
-                    return None; // out of range, or the slot is still live
-                }
-                self.gens[slot] += 1;
-                let tx = spawn_worker(slot, self.gens[slot], &self.up_tx, &mut self.handles);
-                self.to_devices[slot] = Some(tx);
-                crate::obs::registry()
-                    .counter(&format!("transport.slot{slot}.rejoins"))
-                    .incr();
-                crate::obs_event!(Debug, "endpoint_rejoined", slot = slot, gen = self.gens[slot]);
-                Some(Event::Rejoined(slot))
+            note_gone(slot, gen);
+            pending.push_back(Event::Gone(slot));
+        }
+        ChanEvent::Kill(slot) => {
+            // close the command channel; the worker exits and its own
+            // Gone notice is the observable death
+            if let Some(tx) = to_devices.get_mut(slot) {
+                *tx = None;
             }
+        }
+        ChanEvent::Respawn(slot) => {
+            let (Some(tx_slot), Some(gen)) = (to_devices.get_mut(slot), gens.get_mut(slot)) else {
+                return; // out of range
+            };
+            if tx_slot.is_some() {
+                return; // the slot is still live
+            }
+            *gen += 1;
+            *tx_slot = Some(spawn_worker(slot, *gen, up_tx, handles));
+            note_rejoin(slot, *gen);
+            pending.push_back(Event::Rejoined(slot));
         }
     }
 }
@@ -263,27 +277,11 @@ impl Transport for ChannelTransport {
         }
     }
 
-    // NB: this deadline-drain loop is intentionally mirrored in
-    // tcp.rs::recv_timeout — a generic helper would need a split-borrow
-    // closure over half the struct; keep the two in sync instead.
     fn recv_timeout(&mut self, timeout: Duration) -> Event {
-        let deadline = Instant::now() + timeout;
-        loop {
-            let now = Instant::now();
-            let wait = deadline.saturating_duration_since(now);
-            match self.up_rx.recv_timeout(wait) {
-                Ok(ev) => {
-                    if let Some(public) = self.process(ev) {
-                        return public;
-                    }
-                    // internal event consumed: keep draining within the
-                    // caller's original deadline (a zero remaining wait
-                    // still picks up already-queued events)
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => return Event::Timeout,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return Event::Closed,
-            }
-        }
+        let Self { up_rx, to_devices, gens, up_tx, handles, pending, frames_recv, .. } = self;
+        super::drive_queue(up_rx, timeout, pending, |ev, pending| {
+            process_event(ev, to_devices, gens, up_tx, handles, frames_recv, pending)
+        })
     }
 
     fn end_run(&mut self) {
@@ -293,13 +291,17 @@ impl Transport for ChannelTransport {
         // drop stale in-flight replies (a worker still sleeping out a
         // delay may reply after Stop; run tagging makes these inert, but
         // there is no reason to queue them into the next run) — while
-        // still honoring lifecycle events: a death notice must outlive
-        // the drain or a dead worker would be re-entered into the next
-        // run's fleet, and a respawn admitted here is simply live for the
-        // next run (its Setup arrives with the next begin_run).
+        // still honoring lifecycle *side effects*: a death notice must
+        // stick or a dead worker would be re-entered into the next run's
+        // fleet, and a respawn admitted here is simply live for the next
+        // run (its Setup arrives with the next begin_run). The public
+        // events themselves are discarded — begin_run's per-slot delivery
+        // flags carry that information into the next run instead.
         while let Ok(ev) = self.up_rx.try_recv() {
-            let _ = self.process(ev);
+            let Self { to_devices, gens, up_tx, handles, pending, frames_recv, .. } = self;
+            process_event(ev, to_devices, gens, up_tx, handles, frames_recv, pending);
         }
+        self.pending.clear();
     }
 }
 

@@ -22,9 +22,16 @@
 //! | 64  | Hello    | device:u32 protocol:u32 |
 //! | 65  | Pong     | nonce:u64 |
 //! | 66  | Grad     | run:u64 epoch:u64 delay:f64 grad:mat |
+//! | 67  | HelloMulti | protocol:u32 count:u32 device:u32×count |
+//! | 68  | Wrap     | slot:u32 inner-payload |
 //!
 //! (a device profile is `secs_per_point:f64 mem_rate:f64
 //! secs_per_packet:f64 erasure_prob:f64 points:u32`.)
+//!
+//! `Wrap` is an envelope, not a message: on a multi-slot connection
+//! (one `cfl device --slots a,b,c` process hosting several fleet
+//! slots) every payload in both directions is wrapped so the two ends
+//! can demultiplex by slot. Single-slot connections never wrap.
 //!
 //! Decoding is defensive: an oversized length prefix, a truncated frame,
 //! an unknown tag, or matrix dimensions that don't fit the payload are
@@ -42,7 +49,9 @@ use std::io::{Read, Write};
 /// `cfl device --retry` re-claims its slot with the same `Hello`
 /// handshake; there is no separate reconnect message, so version
 /// checking covers both paths for free).
-pub const PROTOCOL_VERSION: u32 = 1;
+///
+/// v2: multi-slot connections (`HelloMulti`, the `Wrap` envelope).
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Ceiling on one frame's payload (a paper-scale β is ~2 KB; 64 MiB is
 /// orders of magnitude of headroom while still rejecting garbage length
@@ -57,6 +66,8 @@ const TAG_SHUTDOWN: u8 = 5;
 const TAG_HELLO: u8 = 64;
 const TAG_PONG: u8 = 65;
 const TAG_GRAD: u8 = 66;
+const TAG_HELLO_MULTI: u8 = 67;
+const TAG_WRAP: u8 = 68;
 
 // --- frame I/O -------------------------------------------------------
 
@@ -73,27 +84,152 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Incremental frame reassembly: feed it byte chunks as they arrive
+/// (in any split — one byte at a time, mid-prefix, mid-payload) and it
+/// emits completed frame payloads. This is the single decode path for
+/// both the blocking [`read_frame`] reader and the non-blocking
+/// reactor, so partial-read behaviour cannot drift between them.
+///
+/// The decoder is a two-phase state machine: accumulating the 4-byte
+/// length prefix, then accumulating `want` payload bytes. An oversized
+/// length prefix is a hard error and poisons nothing beyond the value
+/// returned — callers treat it as the peer dying, exactly like
+/// [`read_frame`] always has.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    head: [u8; 4],
+    head_len: usize,
+    want: usize,
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True between frames: no prefix bytes buffered, no payload owed.
+    /// EOF is only clean when the decoder is idle.
+    pub fn is_idle(&self) -> bool {
+        self.head_len == 0 && self.buf.is_empty()
+    }
+
+    /// True once the length prefix is complete but the payload is not:
+    /// the peer has committed to a frame it has not finished sending.
+    pub fn mid_payload(&self) -> bool {
+        self.head_len == 4 && self.buf.len() < self.want
+    }
+
+    /// How many bytes the decoder needs before it can make progress on
+    /// the *current* frame: the rest of the prefix, or the rest of the
+    /// payload. Blocking readers use this to read exactly one frame and
+    /// never consume bytes belonging to the next one.
+    pub fn bytes_needed(&self) -> usize {
+        if self.head_len < 4 {
+            4 - self.head_len
+        } else {
+            self.want - self.buf.len()
+        }
+    }
+
+    /// Consume a chunk, returning every frame payload it completed (zero
+    /// or more — a big chunk can carry several small frames).
+    pub fn push(&mut self, mut chunk: &[u8]) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::new();
+        loop {
+            if self.head_len < 4 {
+                if chunk.is_empty() {
+                    break;
+                }
+                let take = (4 - self.head_len).min(chunk.len());
+                let (head, rest) = chunk.split_at(take);
+                self.head[self.head_len..self.head_len + take].copy_from_slice(head);
+                self.head_len += take;
+                chunk = rest;
+                if self.head_len < 4 {
+                    break;
+                }
+                let len = u32::from_le_bytes(self.head) as usize;
+                ensure!(
+                    len <= MAX_FRAME_BYTES,
+                    "oversized frame: length prefix {len} > {MAX_FRAME_BYTES}"
+                );
+                self.want = len;
+                self.buf = Vec::with_capacity(len);
+            }
+            // payload phase (want == 0 falls straight through to emit)
+            let take = (self.want - self.buf.len()).min(chunk.len());
+            let (body, rest) = chunk.split_at(take);
+            self.buf.extend_from_slice(body);
+            chunk = rest;
+            if self.buf.len() == self.want {
+                out.push(std::mem::take(&mut self.buf));
+                self.head_len = 0;
+                self.want = 0;
+            } else {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
 /// Read one frame's payload. `Ok(None)` is a clean end-of-stream (EOF
 /// exactly at a frame boundary); EOF anywhere else is an error, as are
 /// oversized length prefixes.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
-    let mut len_buf = [0u8; 4];
-    let mut got = 0usize;
-    while got < 4 {
-        match r.read(&mut len_buf[got..]) {
-            Ok(0) if got == 0 => return Ok(None),
+    let mut dec = FrameDecoder::new();
+    let mut tmp = [0u8; 8 * 1024];
+    loop {
+        // never ask for more than the current frame still needs, so a
+        // following frame's bytes are left unread for the next call
+        let want = dec.bytes_needed().min(tmp.len());
+        match r.read(&mut tmp[..want]) {
+            Ok(0) if dec.is_idle() => return Ok(None),
+            Ok(0) if dec.mid_payload() => {
+                bail!("truncated frame: stream ended inside the payload")
+            }
             Ok(0) => bail!("truncated frame: stream ended inside the length prefix"),
-            Ok(n) => got += n,
+            Ok(n) => {
+                if let Some(payload) = dec.push(&tmp[..n])?.into_iter().next() {
+                    return Ok(Some(payload));
+                }
+            }
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(anyhow::anyhow!("reading frame length: {e}")),
+            Err(e) => return Err(anyhow::anyhow!("reading frame: {e}")),
         }
     }
-    let len = u32::from_le_bytes(len_buf) as usize;
-    ensure!(len <= MAX_FRAME_BYTES, "oversized frame: length prefix {len} > {MAX_FRAME_BYTES}");
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)
-        .map_err(|e| anyhow::anyhow!("truncated frame: stream ended inside the payload: {e}"))?;
-    Ok(Some(payload))
+}
+
+// --- the multi-slot envelope -----------------------------------------
+
+/// Wrap a payload for one slot of a multi-slot connection:
+/// `TAG_WRAP slot:u32le inner`. The envelope nests *inside* the normal
+/// length-prefixed frame, so framing and reassembly are identical for
+/// wrapped and bare traffic.
+pub fn wrap_slot(slot: usize, inner: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + inner.len());
+    out.push(TAG_WRAP);
+    out.extend_from_slice(&(slot as u32).to_le_bytes());
+    out.extend_from_slice(inner);
+    out
+}
+
+/// Peel the multi-slot envelope off a frame payload. `Ok(None)` means
+/// the payload is bare (single-slot traffic); `Ok(Some((slot, inner)))`
+/// is a wrapped payload; a wrapped payload too short to carry its slot
+/// header is a hard error.
+pub fn unwrap_slot(payload: &[u8]) -> Result<Option<(usize, &[u8])>> {
+    match payload.split_first() {
+        Some((&TAG_WRAP, rest)) => {
+            ensure!(rest.len() >= 4, "truncated wrap envelope: {} bytes", rest.len());
+            let (slot_bytes, inner) = rest.split_at(4);
+            let mut arr = [0u8; 4];
+            arr.copy_from_slice(slot_bytes);
+            Ok(Some((u32::from_le_bytes(arr) as usize, inner)))
+        }
+        _ => Ok(None),
+    }
 }
 
 // --- encoding --------------------------------------------------------
@@ -183,6 +319,15 @@ pub fn encode_from_device(msg: &FromDevice) -> Vec<u8> {
             e.u64(*epoch as u64);
             e.f64(*delay);
             e.mat(grad);
+            e.buf
+        }
+        FromDevice::HelloMulti { device_ids, protocol } => {
+            let mut e = Enc::new(TAG_HELLO_MULTI);
+            e.u32(*protocol);
+            e.u32(device_ids.len() as u32);
+            for &id in device_ids {
+                e.u32(id as u32);
+            }
             e.buf
         }
     }
@@ -289,6 +434,15 @@ pub fn decode_from_device(payload: &[u8]) -> Result<FromDevice> {
             delay: d.f64()?,
             grad: d.mat()?,
         },
+        TAG_HELLO_MULTI => {
+            let protocol = d.u32()?;
+            let count = d.u32()? as usize;
+            let mut device_ids = Vec::with_capacity(count.min(1024));
+            for _ in 0..count {
+                device_ids.push(d.u32()? as usize);
+            }
+            FromDevice::HelloMulti { device_ids, protocol }
+        }
         t => bail!("unknown device message tag {t}"),
     };
     d.done()?;

@@ -24,10 +24,14 @@
 //!   factored out). [`ChannelCtl`] injects kill/respawn, mirroring a
 //!   real process dying and reconnecting.
 //! * [`TcpTransport`] — TCP with the [`frame`] wire format: `cfl serve`
-//!   accepts one socket per device, `cfl device` joins from another
-//!   process (or another machine on a trusted network). The listener
-//!   keeps accepting after fleet formation, so `cfl device --retry`
-//!   ([`run_device_retry`]) survives being killed mid-run.
+//!   accepts one socket per device (or per multi-slot `cfl device
+//!   --slots` process), `cfl device` joins from another process or
+//!   another machine on a trusted network. All endpoint I/O runs on one
+//!   readiness-driven event-loop thread ([`reactor`]) — O(1) threads in
+//!   the fleet size. The listener keeps accepting after fleet formation,
+//!   so `cfl device --retry` ([`run_device_retry`]) survives being
+//!   killed mid-run. [`Placement`] maps fleet slots onto hosts for the
+//!   cross-host case.
 //!
 //! Both transports drive the *same* device-side state machine,
 //! [`run_device_loop`]: a device is Setup-configured, computes a partial
@@ -44,12 +48,18 @@ use std::thread;
 use std::time::Duration;
 
 pub mod frame;
+pub mod placement;
 
 mod channel;
+mod reactor;
 mod tcp;
 
 pub use channel::{ChannelCtl, ChannelTransport};
-pub use tcp::{run_device, run_device_retry, TcpTransport};
+pub use placement::Placement;
+pub use tcp::{
+    run_device, run_device_multi, run_device_multi_retry, run_device_retry, RetrySlots,
+    TcpTransport,
+};
 
 /// Account one discarded stale-incarnation event (a reply or death
 /// notice from a generation that no longer holds its slot) — shared by
@@ -57,6 +67,54 @@ pub use tcp::{run_device, run_device_retry, TcpTransport};
 fn stale_discard(slot: usize, gen: u64) {
     crate::obs::registry().counter(&format!("transport.slot{slot}.stale_discards")).incr();
     crate::obs_event!(Trace, "stale_discard", slot = slot, gen = gen);
+}
+
+/// Account an endpoint death at the transport level — shared by both
+/// transports so the per-slot counters and events stay identical.
+fn note_gone(slot: usize, gen: u64) {
+    crate::obs::registry().counter(&format!("transport.slot{slot}.disconnects")).incr();
+    crate::obs_event!(Debug, "endpoint_gone", slot = slot, gen = gen);
+}
+
+/// Account a re-admission (a fresh incarnation claiming a slot).
+fn note_rejoin(slot: usize, gen: u64) {
+    crate::obs::registry().counter(&format!("transport.slot{slot}.rejoins")).incr();
+    crate::obs_event!(Info, "endpoint_rejoined", slot = slot, gen = gen);
+}
+
+/// The shared receive loop both transports' `recv_timeout` converge on:
+/// surface buffered public events first, then pump the upstream queue
+/// until one event becomes public or the deadline passes. `process`
+/// applies one queue item's side effects and pushes any public events
+/// it produces onto `pending` (possibly none — a stale-generation item
+/// is swallowed, so the loop keeps draining).
+fn drive_queue<T>(
+    rx: &std::sync::mpsc::Receiver<T>,
+    timeout: Duration,
+    pending: &mut std::collections::VecDeque<Event>,
+    mut process: impl FnMut(T, &mut std::collections::VecDeque<Event>),
+) -> Event {
+    use std::sync::mpsc::RecvTimeoutError;
+    if let Some(ev) = pending.pop_front() {
+        return ev;
+    }
+    let deadline = std::time::Instant::now() + timeout;
+    loop {
+        let now = std::time::Instant::now();
+        let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero()) else {
+            return Event::Timeout;
+        };
+        match rx.recv_timeout(left) {
+            Ok(item) => {
+                process(item, pending);
+                if let Some(ev) = pending.pop_front() {
+                    return ev;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => return Event::Timeout,
+            Err(RecvTimeoutError::Disconnected) => return Event::Closed,
+        }
+    }
 }
 
 /// Which wire a live fleet speaks — the `--transport` CLI knob.
@@ -140,6 +198,11 @@ pub enum FromDevice {
     /// A partial gradient, tagged with the run/epoch it belongs to and
     /// the §II-A delay (uncapped, simulated seconds) it emulated.
     Grad { run: u64, epoch: usize, grad: Mat, delay: f64 },
+    /// First message on a fresh multi-slot TCP connection: one `cfl
+    /// device --slots a,b,c` process claims several fleet slots at once.
+    /// All subsequent traffic on the connection is slot-wrapped (see
+    /// [`frame::wrap_slot`]).
+    HelloMulti { device_ids: Vec<usize>, protocol: u32 },
 }
 
 /// What the coordinator's gather loop observes on one receive call.

@@ -1,0 +1,151 @@
+//! Cross-host placement manifests: which host runs which fleet slot.
+//!
+//! A placement file is the small INI document behind
+//! `cfl sweep --live --transport tcp --placement <file>` and
+//! `cfl serve --placement <file>`:
+//!
+//! ```ini
+//! [placement]
+//! bind = 0.0.0.0:7070       # where the coordinator listens
+//! accept_timeout_secs = 120 # how long to wait for the fleet to form
+//! device.0 = local          # slots the coordinator hosts itself
+//! device.1 = hostB          # slots some other machine contributes
+//! device.2 = hostB
+//! ```
+//!
+//! Slots not listed default to `local`. The host *labels* are
+//! documentation, not addresses: devices dial the coordinator (never the
+//! reverse), so a label only groups slots into the one `cfl device
+//! --slots a,b,c` invocation its host must run — the coordinator prints
+//! that exact command for every remote label at startup and then waits
+//! for the connections. A manifest with remote slots must therefore bind
+//! a fixed, reachable address (`0.0.0.0:7070`, not the `127.0.0.1:0`
+//! default that only loopback fleets can use).
+
+use crate::config::Ini;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Default formation window: remote hosts are started by a human.
+const DEFAULT_ACCEPT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A parsed placement manifest. Constructed by [`Placement::load`] /
+/// [`Placement::from_ini`]; consumed by `TcpTransport::spawn_placed`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    bind: Option<String>,
+    accept_timeout: Duration,
+    /// Explicit `device.K = <label>` assignments; `local` is stored
+    /// verbatim. Unlisted slots are implicitly local.
+    hosts: BTreeMap<usize, String>,
+}
+
+impl Placement {
+    /// Load a manifest file.
+    pub fn load(path: &str) -> Result<Self> {
+        Self::from_ini(&Ini::load(path)?).with_context(|| format!("placement manifest {path}"))
+    }
+
+    /// Parse an already-loaded INI document's `[placement]` section.
+    pub fn from_ini(ini: &Ini) -> Result<Self> {
+        let mut hosts = BTreeMap::new();
+        for key in ini.keys("placement") {
+            if let Some(slot) = key.strip_prefix("device.") {
+                let slot: usize = slot
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("[placement] {key}: bad slot number: {e}"))?;
+                let label = ini.get("placement", key).unwrap_or("local").trim();
+                if label.is_empty() {
+                    bail!("[placement] {key}: empty host label");
+                }
+                hosts.insert(slot, label.to_string());
+            } else if !matches!(key, "bind" | "accept_timeout_secs") {
+                bail!("[placement] unknown key '{key}' (expected bind, accept_timeout_secs, or device.K)");
+            }
+        }
+        let secs: u64 = ini.get_or(
+            "placement",
+            "accept_timeout_secs",
+            DEFAULT_ACCEPT_TIMEOUT.as_secs(),
+        )?;
+        if secs == 0 {
+            bail!("[placement] accept_timeout_secs must be positive");
+        }
+        Ok(Self {
+            bind: ini.get("placement", "bind").map(str::to_string),
+            accept_timeout: Duration::from_secs(secs),
+            hosts,
+        })
+    }
+
+    /// Where the coordinator should listen. Defaults to an ephemeral
+    /// loopback port, which [`Placement::validate`] rejects whenever any
+    /// slot is remote.
+    pub fn bind_addr(&self) -> &str {
+        self.bind.as_deref().unwrap_or("127.0.0.1:0")
+    }
+
+    /// The manifest's `bind`, only if it set one — `cfl serve` lets an
+    /// explicit `--bind` override it and falls back to its own default
+    /// otherwise.
+    pub fn explicit_bind(&self) -> Option<&str> {
+        self.bind.as_deref()
+    }
+
+    /// How long fleet formation may take.
+    pub fn accept_timeout(&self) -> Duration {
+        self.accept_timeout
+    }
+
+    /// Whether `slot` is assigned to a remote host label.
+    pub fn is_remote(&self, slot: usize) -> bool {
+        self.hosts.get(&slot).is_some_and(|h| h != "local")
+    }
+
+    /// Full validation for the path that also binds: slot range plus the
+    /// remote-requires-reachable-bind rule.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        self.validate_slots(n)?;
+        let any_remote = (0..n).any(|s| self.is_remote(s));
+        if any_remote {
+            let bind = self.bind_addr();
+            if self.bind.is_none() || bind.ends_with(":0") {
+                bail!(
+                    "placement assigns remote hosts but binds '{bind}': remote devices need a \
+                     fixed, reachable address (e.g. bind = 0.0.0.0:7070)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Range-check the explicit slot assignments against the fleet size
+    /// (the serve path, where the caller already owns the listener).
+    pub fn validate_slots(&self, n: usize) -> Result<()> {
+        for (&slot, label) in &self.hosts {
+            if slot >= n {
+                bail!("[placement] device.{slot} = {label}: slot outside the {n}-device fleet");
+            }
+        }
+        Ok(())
+    }
+
+    /// The slots the coordinator's own machine hosts (explicitly `local`
+    /// or unlisted), in order.
+    pub fn local_slots(&self, n: usize) -> Vec<usize> {
+        (0..n).filter(|&s| !self.is_remote(s)).collect()
+    }
+
+    /// Remote label → its slots, in order — one `cfl device --slots`
+    /// invocation per label.
+    pub fn remote_hosts(&self, n: usize) -> BTreeMap<String, Vec<usize>> {
+        let mut out: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (&slot, label) in &self.hosts {
+            if slot < n && label != "local" {
+                out.entry(label.clone()).or_default().push(slot);
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,692 @@
+//! The readiness-driven I/O core of [`super::TcpTransport`]: one event
+//! loop thread owns every endpoint socket, multiplexing them with
+//! `poll(2)` through a thin FFI shim (the build is offline — no tokio,
+//! no mio, no libc crate).
+//!
+//! Design in one paragraph: the transport thread talks to the reactor
+//! over a command channel ([`Cmd`]) paired with a one-byte self-wakeup
+//! pipe (a `UnixStream` pair the poll set always watches), and the
+//! reactor reports upward on the same `(slot, generation, TcpUp)` queue
+//! the acceptor uses, so the transport's event ordering and
+//! generation-tag filtering are unchanged from the thread-per-socket
+//! era. Each connection carries a per-endpoint state machine
+//! ([`EndpointState`]): a resumable [`FrameDecoder`] for partial-frame
+//! reassembly on the read side, and a bounded write queue with explicit
+//! backpressure on the write side — a peer that stops draining its
+//! socket accumulates queued frames until [`WRITE_QUEUE_MAX_BYTES`], at
+//! which point the reactor severs the connection (a slow-to-death peer
+//! degrades to the paper's erasure case rather than blocking the gather
+//! loop or growing without bound).
+//!
+//! Thread census: one reactor + one acceptor per fleet, regardless of
+//! fleet size — O(1) where the old model was O(n) reader threads.
+
+use super::frame::{self, FrameDecoder};
+use super::tcp::TcpUp;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+// --- poll(2) FFI shim ------------------------------------------------
+
+/// `struct pollfd` from `<poll.h>` — identical layout on every libc the
+/// repo targets (Linux and the BSD family, macOS included).
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: RawFd,
+    events: i16,
+    revents: i16,
+}
+
+#[cfg(target_os = "linux")]
+type NfdsT = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = std::os::raw::c_uint;
+
+// event bits share their values across Linux and the BSDs
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: std::os::raw::c_int) -> std::os::raw::c_int;
+}
+
+/// Block until a registered fd is ready. `timeout_ms < 0` waits
+/// forever. Returns the number of ready fds (0 on timeout).
+fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+    loop {
+        // SAFETY: `fds` is a valid exclusively-borrowed slice of
+        // `#[repr(C)]` pollfd records; the kernel writes only `revents`.
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() != ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+// --- per-endpoint state machine --------------------------------------
+
+/// Bound on one endpoint's queued-but-unsent bytes. Two maximum frames
+/// of headroom: a model broadcast plus a re-sent `Setup` can sit queued
+/// behind a stalled socket without tripping the breaker, but a peer
+/// that stops reading for good cannot grow the queue without bound.
+pub(crate) const WRITE_QUEUE_MAX_BYTES: usize = 2 * frame::MAX_FRAME_BYTES;
+
+/// The pure per-connection state machine: resumable frame reassembly on
+/// the read side, a bounded byte-accounted write queue on the write
+/// side. It owns no socket — the reactor drives it with whatever bytes
+/// `poll` says can move — which is what makes it unit-testable.
+pub(crate) struct EndpointState {
+    decoder: FrameDecoder,
+    /// Fully composed wire frames (length prefix included), oldest first.
+    wq: VecDeque<Vec<u8>>,
+    /// Total bytes across `wq` (the partially-written front frame counts
+    /// in full; `front_off` tracks how much of it already left).
+    wq_bytes: usize,
+    front_off: usize,
+    write_cap: usize,
+}
+
+impl EndpointState {
+    pub fn new() -> Self {
+        Self::with_write_cap(WRITE_QUEUE_MAX_BYTES)
+    }
+
+    /// Test hook: a tiny cap makes overflow reachable without queueing
+    /// hundreds of megabytes.
+    pub fn with_write_cap(write_cap: usize) -> Self {
+        Self {
+            decoder: FrameDecoder::new(),
+            wq: VecDeque::new(),
+            wq_bytes: 0,
+            front_off: 0,
+            write_cap,
+        }
+    }
+
+    /// Feed received bytes through the frame decoder; returns completed
+    /// frame payloads. An error (oversized prefix) means the peer is
+    /// garbage-framing and the connection must die.
+    pub fn ingest(&mut self, bytes: &[u8]) -> Result<Vec<Vec<u8>>> {
+        self.decoder.push(bytes)
+    }
+
+    /// True when the read side is mid-frame (reassembly state buffered):
+    /// an EOF here is a truncation, not a clean close.
+    pub fn mid_frame(&self) -> bool {
+        !self.decoder.is_idle()
+    }
+
+    /// Queue one composed frame for writing. `false` means the bounded
+    /// queue is full — the backpressure breaker — and the frame was NOT
+    /// queued; the caller severs the connection.
+    pub fn enqueue(&mut self, frame_bytes: Vec<u8>) -> bool {
+        if self.wq_bytes.saturating_add(frame_bytes.len()) > self.write_cap {
+            return false;
+        }
+        self.wq_bytes += frame_bytes.len();
+        self.wq.push_back(frame_bytes);
+        true
+    }
+
+    /// Bytes still owed to the socket.
+    pub fn queued_bytes(&self) -> usize {
+        self.wq_bytes - self.front_off
+    }
+
+    pub fn wants_write(&self) -> bool {
+        !self.wq.is_empty()
+    }
+
+    /// The unwritten tail of the oldest queued frame.
+    pub fn next_chunk(&self) -> Option<&[u8]> {
+        self.wq.front().map(|f| &f[self.front_off..])
+    }
+
+    /// Record `n` bytes of the front frame as written.
+    pub fn advance(&mut self, n: usize) {
+        self.front_off += n;
+        if let Some(front_len) = self.wq.front().map(Vec::len) {
+            if self.front_off >= front_len {
+                self.wq_bytes -= front_len;
+                self.front_off = 0;
+                self.wq.pop_front();
+            }
+        }
+    }
+}
+
+// --- reactor commands ------------------------------------------------
+
+/// Transport → reactor instructions, paired with a wakeup byte so the
+/// event loop notices them even while parked in `poll`.
+pub(crate) enum Cmd {
+    /// Adopt a connection serving these `(slot, generation)` claims.
+    /// Any existing connection overlapping the claimed slots is severed
+    /// first (newest wins — same re-admission rule as the acceptor).
+    /// `wrapped` records the handshake the peer spoke: a `HelloMulti`
+    /// connection envelopes every frame in the slot wrapper, even when
+    /// it claims a single slot.
+    Register { stream: TcpStream, slots: Vec<(usize, u64)>, wrapped: bool },
+    /// Queue one message payload for `slot`'s connection. The payload is
+    /// the *bare* message payload; the reactor composes the wire frame
+    /// (and the multi-slot envelope where the connection needs one).
+    Send { slot: usize, payload: Arc<Vec<u8>> },
+    /// Sever `slot`'s connection (half-open corpse eviction).
+    Disconnect { slot: usize },
+    /// Flush what can be flushed (bounded), close everything, exit.
+    Shutdown,
+}
+
+/// How long the reactor keeps flushing write queues on shutdown before
+/// closing sockets anyway — long enough for a `Shutdown` frame to reach
+/// every live device over loopback or a LAN, short enough that a wedged
+/// peer cannot hold process exit hostage.
+const SHUTDOWN_FLUSH: Duration = Duration::from_secs(2);
+
+/// After the write-side half-close, how long the reactor keeps draining
+/// incoming bytes: closing a socket with unread data in its receive
+/// buffer RSTs the peer, which could destroy the flushed `Shutdown`
+/// frame still in flight toward it.
+const SHUTDOWN_DRAIN: Duration = Duration::from_secs(1);
+
+/// Cap on bytes pulled from one connection per readiness wakeup, so a
+/// firehosing endpoint cannot starve the rest of the fleet (poll is
+/// level-triggered: leftover bytes re-arm readability immediately).
+const READ_BUDGET: usize = 1 << 20;
+
+// --- the reactor handle ----------------------------------------------
+
+/// Owner handle for the event-loop thread. Dropping it shuts the loop
+/// down (bounded flush, then close).
+pub(crate) struct Reactor {
+    cmd_tx: Sender<Cmd>,
+    wake_tx: UnixStream,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Spawn the event loop. `up_tx` is the transport's upstream event
+    /// queue — the same one the acceptor feeds, so ordering between
+    /// reactor events and re-admissions is whatever the queue says.
+    pub fn spawn(up_tx: Sender<(usize, u64, TcpUp)>) -> Result<Self> {
+        let (wake_tx, wake_rx) = UnixStream::pair()
+            .map_err(|e| anyhow::anyhow!("creating the reactor wakeup pipe: {e}"))?;
+        wake_tx
+            .set_nonblocking(true)
+            .and_then(|_| wake_rx.set_nonblocking(true))
+            .map_err(|e| anyhow::anyhow!("arming the reactor wakeup pipe: {e}"))?;
+        let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
+        let handle = thread::Builder::new()
+            .name("cfl-reactor".into())
+            .spawn(move || EventLoop::new(wake_rx, cmd_rx, up_tx).run())
+            .map_err(|e| anyhow::anyhow!("spawning the reactor thread: {e}"))?;
+        Ok(Self { cmd_tx, wake_tx, handle: Some(handle) })
+    }
+
+    pub fn register(&self, stream: TcpStream, slots: Vec<(usize, u64)>, wrapped: bool) {
+        self.cmd(Cmd::Register { stream, slots, wrapped });
+    }
+
+    pub fn send(&self, slot: usize, payload: Arc<Vec<u8>>) {
+        self.cmd(Cmd::Send { slot, payload });
+    }
+
+    pub fn disconnect(&self, slot: usize) {
+        self.cmd(Cmd::Disconnect { slot });
+    }
+
+    /// Idempotent orderly shutdown: flush, close, join.
+    pub fn stop(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.cmd(Cmd::Shutdown);
+            let _ = handle.join();
+        }
+    }
+
+    fn cmd(&self, c: Cmd) {
+        // send-then-wake: the loop always drains the whole command queue
+        // after a wakeup byte, and a WouldBlock on the pipe means a
+        // wakeup is already pending, which is just as good
+        let _ = self.cmd_tx.send(c);
+        let _ = (&self.wake_tx).write(&[1u8]);
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// --- the event loop --------------------------------------------------
+
+/// One registered connection: the socket, its state machine, and the
+/// slot claims (with generation tags) it serves. `multi` connections
+/// wrap every frame in the slot envelope.
+struct Conn {
+    stream: TcpStream,
+    ep: EndpointState,
+    slots: Vec<(usize, u64)>,
+    multi: bool,
+}
+
+struct Counters {
+    wakeups: crate::obs::Counter,
+    readable: crate::obs::Counter,
+    writable: crate::obs::Counter,
+    backpressure_closes: crate::obs::Counter,
+    frames_recv: crate::obs::Counter,
+    bytes_recv: crate::obs::Counter,
+}
+
+struct EventLoop {
+    wake_rx: UnixStream,
+    cmd_rx: Receiver<Cmd>,
+    up_tx: Sender<(usize, u64, TcpUp)>,
+    /// Token-indexed connection table; `None` entries are free tokens.
+    conns: Vec<Option<Conn>>,
+    ctr: Counters,
+}
+
+impl EventLoop {
+    fn new(wake_rx: UnixStream, cmd_rx: Receiver<Cmd>, up_tx: Sender<(usize, u64, TcpUp)>) -> Self {
+        let reg = crate::obs::registry();
+        Self {
+            wake_rx,
+            cmd_rx,
+            up_tx,
+            conns: Vec::new(),
+            ctr: Counters {
+                wakeups: reg.counter("transport.reactor.wakeups"),
+                readable: reg.counter("transport.reactor.readable"),
+                writable: reg.counter("transport.reactor.writable"),
+                backpressure_closes: reg.counter("transport.reactor.backpressure_closes"),
+                frames_recv: reg.counter("transport.frames_recv"),
+                bytes_recv: reg.counter("transport.bytes_recv"),
+            },
+        }
+    }
+
+    fn run(mut self) {
+        let mut fds: Vec<PollFd> = Vec::new();
+        // fds[i] pairs with tokens[i]; usize::MAX marks the wakeup pipe
+        let mut tokens: Vec<usize> = Vec::new();
+        loop {
+            fds.clear();
+            tokens.clear();
+            fds.push(PollFd { fd: self.wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+            tokens.push(usize::MAX);
+            for (token, conn) in self.conns.iter().enumerate() {
+                if let Some(c) = conn {
+                    let mut events = POLLIN;
+                    if c.ep.wants_write() {
+                        events |= POLLOUT;
+                    }
+                    fds.push(PollFd { fd: c.stream.as_raw_fd(), events, revents: 0 });
+                    tokens.push(token);
+                }
+            }
+            match poll_fds(&mut fds, -1) {
+                Ok(0) => continue,
+                Ok(_) => {}
+                Err(e) => {
+                    // a failing poll(2) on our own fd set is unrecoverable;
+                    // dropping up_tx surfaces Closed upstream
+                    crate::obs_event!(Error, "reactor_poll_failed", error = format!("{e}"));
+                    return;
+                }
+            }
+            let ready: Vec<(usize, i16)> = fds
+                .iter()
+                .zip(tokens.iter())
+                .skip(1)
+                .filter(|(fd, _)| fd.revents != 0)
+                .map(|(fd, &token)| (token, fd.revents))
+                .collect();
+            if fds.first().is_some_and(|f| f.revents != 0) {
+                self.ctr.wakeups.incr();
+                self.drain_wakeups();
+                if !self.drain_commands() {
+                    return; // Shutdown
+                }
+            }
+            for (token, revents) in ready {
+                if revents & POLLNVAL != 0 {
+                    self.sever(token, "pollnval");
+                    continue;
+                }
+                if revents & (POLLIN | POLLHUP | POLLERR) != 0 {
+                    self.ctr.readable.incr();
+                    self.pump_read(token);
+                }
+                if revents & POLLOUT != 0 {
+                    self.ctr.writable.incr();
+                    self.pump_write(token);
+                }
+            }
+        }
+    }
+
+    /// Swallow pending wakeup bytes (each command writes at most one).
+    fn drain_wakeups(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut buf) {
+                Ok(0) => return, // transport handle gone entirely
+                Ok(_) => continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return, // WouldBlock: drained
+            }
+        }
+    }
+
+    /// Apply queued commands; `false` means Shutdown was received.
+    fn drain_commands(&mut self) -> bool {
+        loop {
+            match self.cmd_rx.try_recv() {
+                Ok(Cmd::Register { stream, slots, wrapped }) => {
+                    self.register(stream, slots, wrapped)
+                }
+                Ok(Cmd::Send { slot, payload }) => self.send_to_slot(slot, payload),
+                Ok(Cmd::Disconnect { slot }) => {
+                    if let Some(token) = self.token_of(slot) {
+                        self.sever(token, "disconnect");
+                    }
+                }
+                Ok(Cmd::Shutdown) => {
+                    self.shutdown();
+                    return false;
+                }
+                Err(TryRecvError::Empty) => return true,
+                Err(TryRecvError::Disconnected) => {
+                    // the transport died without an orderly Shutdown
+                    // (shouldn't happen — Drop sends one); don't spin
+                    self.shutdown();
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn token_of(&self, slot: usize) -> Option<usize> {
+        self.conns
+            .iter()
+            .position(|c| c.as_ref().is_some_and(|c| c.slots.iter().any(|&(s, _)| s == slot)))
+    }
+
+    fn register(&mut self, stream: TcpStream, slots: Vec<(usize, u64)>, wrapped: bool) {
+        // newest wins: sever any connection overlapping the new claims
+        // (its Gone notices carry the old generations, so the transport
+        // discards them as stale for the re-admitted slots)
+        let overlapping: Vec<usize> = self
+            .conns
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| {
+                c.as_ref().is_some_and(|c| {
+                    c.slots.iter().any(|&(s, _)| slots.iter().any(|&(ns, _)| ns == s))
+                })
+            })
+            .map(|(t, _)| t)
+            .collect();
+        for token in overlapping {
+            self.sever(token, "superseded");
+        }
+        if stream.set_nonblocking(true).is_err() {
+            for &(slot, gen) in &slots {
+                let _ = self.up_tx.send((slot, gen, TcpUp::Gone));
+            }
+            return;
+        }
+        let conn = Conn { stream, ep: EndpointState::new(), slots, multi: wrapped };
+        match self.conns.iter().position(Option::is_none) {
+            Some(token) => self.conns[token] = Some(conn),
+            None => self.conns.push(Some(conn)),
+        }
+    }
+
+    fn send_to_slot(&mut self, slot: usize, payload: Arc<Vec<u8>>) {
+        let Some(token) = self.token_of(slot) else {
+            return; // racing a death the transport hasn't seen yet
+        };
+        let Some(conn) = self.conns.get_mut(token).and_then(|c| c.as_mut()) else {
+            return;
+        };
+        let wire = if conn.multi {
+            compose_frame(&frame::wrap_slot(slot, &payload))
+        } else {
+            compose_frame(&payload)
+        };
+        let queued = conn.ep.queued_bytes();
+        if !conn.ep.enqueue(wire) {
+            self.ctr.backpressure_closes.incr();
+            crate::obs_event!(Warn, "reactor_backpressure_close", slot = slot, queued = queued);
+            self.sever(token, "write queue overflow");
+            return;
+        }
+        // eager write: most frames fit the socket buffer whole, so the
+        // common case never waits for a POLLOUT round-trip
+        self.pump_write(token);
+    }
+
+    /// Close a connection and report Gone for every slot it served, at
+    /// the generations it held (stale ones are filtered upstream).
+    fn sever(&mut self, token: usize, why: &str) {
+        let Some(conn) = self.conns.get_mut(token).and_then(Option::take) else {
+            return;
+        };
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        for &(slot, gen) in &conn.slots {
+            crate::obs_event!(Trace, "reactor_sever", slot = slot, gen = gen, why = why);
+            let _ = self.up_tx.send((slot, gen, TcpUp::Gone));
+        }
+    }
+
+    fn pump_read(&mut self, token: usize) {
+        let mut buf = [0u8; 64 * 1024];
+        let mut budget = READ_BUDGET;
+        loop {
+            let Some(conn) = self.conns.get_mut(token).and_then(|c| c.as_mut()) else {
+                return;
+            };
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    let why = if conn.ep.mid_frame() { "eof mid-frame" } else { "eof" };
+                    self.sever(token, why);
+                    return;
+                }
+                Ok(n) => {
+                    self.ctr.bytes_recv.add(n as u64);
+                    let (multi, slots) = (conn.multi, conn.slots.clone());
+                    match conn.ep.ingest(&buf[..n]) {
+                        Ok(payloads) => {
+                            for payload in payloads {
+                                self.ctr.frames_recv.incr();
+                                if !self.route(token, multi, &slots, &payload) {
+                                    return; // severed while routing
+                                }
+                            }
+                        }
+                        Err(_) => {
+                            self.sever(token, "garbage framing");
+                            return;
+                        }
+                    }
+                    budget = budget.saturating_sub(n);
+                    if budget == 0 {
+                        return; // level-triggered poll re-arms readability
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.sever(token, "read error");
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Decode one frame payload and ship it upstream. Returns `false`
+    /// if the connection had to be severed (protocol violation).
+    fn route(&mut self, token: usize, multi: bool, slots: &[(usize, u64)], payload: &[u8]) -> bool {
+        let (envelope_slot, inner) = match frame::unwrap_slot(payload) {
+            Ok(Some((slot, inner))) => (Some(slot), inner),
+            Ok(None) => (None, payload),
+            Err(_) => {
+                self.sever(token, "truncated wrap envelope");
+                return false;
+            }
+        };
+        let claim = match (multi, envelope_slot) {
+            // multi connections must wrap, and the envelope slot must be
+            // one of the connection's own claims (no cross-slot spoofing)
+            (true, Some(s)) => slots.iter().find(|&&(cs, _)| cs == s).copied(),
+            (false, None) => slots.first().copied(),
+            _ => None,
+        };
+        let Some((slot, gen)) = claim else {
+            self.sever(token, "wrap envelope mismatch");
+            return false;
+        };
+        match frame::decode_from_device(inner) {
+            Ok(msg) => {
+                let _ = self.up_tx.send((slot, gen, TcpUp::Msg(msg)));
+                true
+            }
+            Err(_) => {
+                self.sever(token, "undecodable message");
+                false
+            }
+        }
+    }
+
+    fn pump_write(&mut self, token: usize) {
+        loop {
+            let Some(conn) = self.conns.get_mut(token).and_then(|c| c.as_mut()) else {
+                return;
+            };
+            let Some(chunk) = conn.ep.next_chunk() else {
+                return; // queue drained
+            };
+            match conn.stream.write(chunk) {
+                Ok(0) => {
+                    self.sever(token, "write returned 0");
+                    return;
+                }
+                Ok(n) => conn.ep.advance(n),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.sever(token, "write error");
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Orderly exit: flush write queues (bounded), half-close so peers
+    /// see a clean EOF after the final frames, then briefly drain
+    /// incoming bytes so unread data cannot RST the flushed frames away.
+    fn shutdown(&mut self) {
+        let deadline = Instant::now() + SHUTDOWN_FLUSH;
+        loop {
+            let backlog: Vec<usize> = self
+                .conns
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.as_ref().is_some_and(|c| c.ep.wants_write()))
+                .map(|(t, _)| t)
+                .collect();
+            if backlog.is_empty() || Instant::now() >= deadline {
+                break;
+            }
+            let mut fds: Vec<PollFd> = backlog
+                .iter()
+                .filter_map(|&t| self.conns.get(t).and_then(|c| c.as_ref()))
+                .map(|c| PollFd { fd: c.stream.as_raw_fd(), events: POLLOUT, revents: 0 })
+                .collect();
+            if poll_fds(&mut fds, 50).is_err() {
+                break;
+            }
+            for token in backlog {
+                self.pump_write(token);
+            }
+        }
+        for conn in self.conns.iter().flatten() {
+            let _ = conn.stream.shutdown(Shutdown::Write);
+        }
+        let deadline = Instant::now() + SHUTDOWN_DRAIN;
+        let mut buf = [0u8; 64 * 1024];
+        while Instant::now() < deadline {
+            let mut fds: Vec<PollFd> = self
+                .conns
+                .iter()
+                .flatten()
+                .map(|c| PollFd { fd: c.stream.as_raw_fd(), events: POLLIN, revents: 0 })
+                .collect();
+            if fds.is_empty() {
+                break;
+            }
+            match poll_fds(&mut fds, 50) {
+                Ok(0) => continue,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+            let mut eofed = Vec::new();
+            for (i, conn) in self.conns.iter_mut().flatten().enumerate() {
+                if !fds.get(i).is_some_and(|f| f.revents != 0) {
+                    continue;
+                }
+                loop {
+                    match conn.stream.read(&mut buf) {
+                        Ok(0) => {
+                            eofed.push(i);
+                            break;
+                        }
+                        Ok(_) => continue,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => break, // WouldBlock or a real error: move on
+                    }
+                }
+            }
+            if !eofed.is_empty() {
+                // EOF'd peers are finished; drop them from the drain set
+                let mut live_idx = 0usize;
+                for c in self.conns.iter_mut() {
+                    if c.is_some() {
+                        if eofed.contains(&live_idx) {
+                            *c = None;
+                        }
+                        live_idx += 1;
+                    }
+                }
+            }
+        }
+        self.conns.clear();
+    }
+}
+
+/// Compose the wire bytes of one frame: length prefix + payload.
+fn compose_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}

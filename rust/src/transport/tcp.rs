@@ -1,51 +1,63 @@
 //! TCP loopback/network transport: real processes on real sockets.
 //!
 //! Coordinator side ([`TcpTransport`]): accept one connection per fleet
-//! slot (each opened by a `cfl device` process announcing itself with
-//! `Hello`), then speak the [`frame`] wire format — a reader thread per
-//! socket feeds replies into one queue, and socket EOF/corruption is
-//! surfaced as [`Event::Gone`] so the epoch loop degrades that device to
-//! parity-only instead of stalling.
+//! slot — or one connection per *group* of slots, when a multi-slot
+//! `cfl device --slots a,b,c` process claims several with one
+//! `HelloMulti` — then hand every accepted socket to the readiness
+//! reactor ([`super::reactor`]). A single event-loop thread owns all
+//! endpoint I/O: non-blocking sockets multiplexed with `poll(2)`,
+//! per-endpoint partial-frame reassembly, bounded write queues with
+//! backpressure. Socket EOF/corruption surfaces as [`Event::Gone`] so
+//! the epoch loop degrades that device to parity-only instead of
+//! stalling. I/O thread count is O(1) in the fleet size: one reactor +
+//! one acceptor, however many devices join.
 //!
 //! Death is not a one-way door: after fleet formation the listener stays
 //! open on a background acceptor thread, and a fresh connection whose
-//! `Hello{id}` names a currently-dead slot is **re-admitted** — new
-//! reader thread, new writer half, and an [`Event::Rejoined`] so the
-//! coordinator re-arms the device with `Setup`. Every incarnation of a
-//! slot carries a generation tag; events from a previous incarnation (a
-//! straggling reply, a late death notice from a silently-partitioned
-//! socket) are discarded at the transport level, so they can neither be
-//! attributed to nor kill the replacement. A valid `Hello` for a slot
-//! whose old link is still open takes the slot over (*newest wins*): a
-//! half-open socket whose death notice never landed — a silent network
-//! partition — must not block the genuine device from reconnecting, so
-//! the corpse is severed and the newcomer admitted. (During initial
-//! fleet formation a duplicate claim is still dropped.)
+//! `Hello{id}` (or `HelloMulti`) names currently-dead slots is
+//! **re-admitted** — the reactor adopts the socket and an
+//! [`Event::Rejoined`] per slot tells the coordinator to re-arm the
+//! device with `Setup`. Every incarnation of a slot carries a generation
+//! tag; events from a previous incarnation (a straggling reply, a late
+//! death notice from a silently-partitioned socket) are discarded at the
+//! transport level, so they can neither be attributed to nor kill the
+//! replacement. A valid `Hello` for a slot whose old link is still open
+//! takes the slot over (*newest wins*): a half-open socket whose death
+//! notice never landed — a silent network partition — must not block the
+//! genuine device from reconnecting, so the corpse is severed and the
+//! newcomer admitted.
 //!
 //! Device side ([`run_device`]): connect (with retry while the
 //! coordinator is still starting), `Hello`, then hand the socket to the
 //! shared [`run_device_loop`] state machine. [`run_device_retry`]
-//! (`cfl device --retry`) wraps that in a reconnect/backoff loop: a
-//! session that ends in anything but an explicit `Shutdown` — the socket
-//! broke, the process was restarted after a crash, the coordinator
-//! dropped an unadmitted duplicate — dials again and re-claims its slot.
+//! (`cfl device --retry`) wraps that in a reconnect loop whose backoff
+//! carries deterministic per-slot jitter (seeded off the slot id), so a
+//! mass-kill does not redial in lockstep. [`run_device_multi`] hosts
+//! several slots over one connection: a demux reader fans wrapped
+//! frames out to per-slot worker threads that each run the same state
+//! machine.
 //!
 //! [`TcpTransport::spawn_local`] packages the loopback case the sweep
-//! engine uses (`cfl sweep --live --transport tcp`): bind an ephemeral
-//! port, spawn `cfl device` subprocesses, accept them, and reap the
-//! children when the transport drops.
+//! engine uses (`cfl sweep --live --transport tcp`);
+//! [`TcpTransport::spawn_placed`] is its cross-host sibling, driven by a
+//! [`Placement`] manifest: local slots become one multi-slot child,
+//! remote slots are announced and awaited.
 
+use super::placement::Placement;
+use super::reactor::Reactor;
 use super::{
-    frame, run_device_loop, stale_discard, DeviceInit, DeviceLink, Event, FromDevice, SessionEnd,
-    ToDevice, Transport,
+    frame, note_gone, note_rejoin, run_device_loop, stale_discard, DeviceInit, DeviceLink, Event,
+    FromDevice, SessionEnd, ToDevice, Transport,
 };
 use crate::obs::Counter;
+use crate::rng::{mix_seed, Rng};
 use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -59,23 +71,26 @@ const SPAWN_ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
 /// Accept-poll interval of the post-formation acceptor thread.
 const ACCEPT_POLL: Duration = Duration::from_millis(20);
 
-/// Everything the coordinator-side event queue carries: reader upstream
-/// traffic tagged `(slot, generation)`, plus rejoin candidates from the
-/// acceptor thread. One queue keeps a reader's EOF notice ordered before
-/// the reconnection that follows it.
-enum TcpUp {
+/// Everything the coordinator-side event queue carries: reactor
+/// upstream traffic tagged `(slot, generation)`, plus rejoin candidates
+/// from the acceptor thread. One queue keeps a connection's EOF notice
+/// ordered against the reconnection that follows it (and the generation
+/// tags settle the races the queue cannot).
+pub(crate) enum TcpUp {
     Msg(FromDevice),
     Gone,
-    /// A fresh connection presented a valid `Hello` for this slot; the
-    /// stream is shipped to the transport, which admits it only if the
-    /// slot is currently dead.
-    Rejoin(TcpStream),
+    /// A fresh connection presented a valid `Hello`/`HelloMulti` for
+    /// these slots; the stream is shipped to the transport, which bumps
+    /// the slots' generations and registers it with the reactor.
+    /// `wrapped` records which handshake was spoken (multi-slot
+    /// connections envelope every frame).
+    Rejoin(TcpStream, Vec<usize>, bool),
 }
 
 /// Downstream fleet-traffic counters (wire bytes include the 4-byte
 /// length prefix), resolved once so the per-frame accounting on the
 /// broadcast hot path is a pair of relaxed atomic adds. The upstream
-/// counterparts live in each [`reader_loop`] thread.
+/// counterparts live in the reactor's event loop.
 struct WireCounters {
     frames_sent: Counter,
     bytes_sent: Counter,
@@ -91,21 +106,35 @@ impl WireCounters {
     }
 }
 
-/// Coordinator-side TCP fleet: one framed socket per device slot.
+/// Coordinator-side TCP fleet: every endpoint socket lives inside the
+/// reactor; this struct holds the slot table (liveness + generation),
+/// the upstream event queue, and the buffered public events.
 pub struct TcpTransport {
-    /// Write halves, slot-indexed; `None` = endpoint gone.
-    links: Vec<Option<TcpStream>>,
+    /// Slot liveness; `false` = endpoint gone (awaiting rejoin).
+    live: Vec<bool>,
     /// Current incarnation per slot; bumped on rejoin so stale events
     /// from an earlier incarnation can be recognized and dropped.
     gens: Vec<u64>,
     up_rx: mpsc::Receiver<(usize, u64, TcpUp)>,
     up_tx: mpsc::Sender<(usize, u64, TcpUp)>,
+    /// The readiness event loop owning every endpoint socket.
+    reactor: Reactor,
+    /// Public events decoded from the queue but not yet handed to the
+    /// caller (the queue can complete several at once).
+    pending: VecDeque<Event>,
     /// Post-formation acceptor thread (owns the listener) + its stop flag.
     acceptor: Option<thread::JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     /// Locally-spawned `cfl device` subprocesses (empty under `serve`).
     children: Vec<Child>,
     ctr: WireCounters,
+}
+
+/// One formed connection out of [`accept_fleet`].
+struct Formed {
+    stream: TcpStream,
+    slots: Vec<usize>,
+    wrapped: bool,
 }
 
 impl TcpTransport {
@@ -115,7 +144,13 @@ impl TcpTransport {
     /// devices can rejoin.
     pub fn serve(listener: TcpListener, n: usize, accept_timeout: Duration) -> Result<Self> {
         let (up_tx, up_rx) = mpsc::channel::<(usize, u64, TcpUp)>();
-        let (links, gens) = accept_fleet(&listener, n, accept_timeout, &up_tx)?;
+        let (formed, gens) = accept_fleet(&listener, n, accept_timeout)?;
+        let reactor = Reactor::spawn(up_tx.clone())?;
+        for f in formed {
+            let claims: Vec<(usize, u64)> =
+                f.slots.iter().map(|&s| (s, gens.get(s).copied().unwrap_or(0))).collect();
+            reactor.register(f.stream, claims, f.wrapped);
+        }
         let stop = Arc::new(AtomicBool::new(false));
         let acceptor = {
             let tx = up_tx.clone();
@@ -123,31 +158,17 @@ impl TcpTransport {
             thread::spawn(move || acceptor_loop(listener, n, stop, tx))
         };
         Ok(Self {
-            links,
+            live: vec![true; n],
             gens,
             up_rx,
             up_tx,
+            reactor,
+            pending: VecDeque::new(),
             acceptor: Some(acceptor),
             stop,
             children: Vec::new(),
             ctr: WireCounters::new(),
         })
-    }
-
-    /// Write one already-encoded frame to a slot; `false` marks the
-    /// endpoint dead (shared by [`Transport::send`] and the
-    /// encode-once [`Transport::broadcast`]).
-    fn write_payload(&mut self, slot: usize, payload: &[u8]) -> bool {
-        let Some(stream) = self.links.get_mut(slot).and_then(|l| l.as_mut()) else {
-            return false;
-        };
-        if frame::write_frame(stream, payload).is_err() {
-            self.links[slot] = None;
-            return false;
-        }
-        self.ctr.frames_sent.incr();
-        self.ctr.bytes_sent.add(payload.len() as u64 + 4);
-        true
     }
 
     /// Bind an ephemeral loopback port, spawn `n` `cfl device`
@@ -188,58 +209,141 @@ impl TcpTransport {
         }
     }
 
-    /// Process one queued event. Returns the public event to surface, or
-    /// `None` when the event was internal (stale-incarnation traffic to
-    /// discard, a rejoin candidate for a still-live slot).
-    fn process(&mut self, slot: usize, gen: u64, up: TcpUp) -> Option<Event> {
-        match up {
-            // a reply from a dead incarnation must not be attributed to
-            // its replacement
-            TcpUp::Msg(msg) => {
-                if gen != self.gens[slot] {
-                    stale_discard(slot, gen);
-                    return None;
-                }
-                Some(Event::Msg(slot, msg))
+    /// Bind the manifest's address and serve a placement-described
+    /// fleet: local slots become one multi-slot child process, remote
+    /// slots are announced (with the exact `cfl device` invocation each
+    /// host must run) and awaited — the fleet behind
+    /// `cfl sweep --live --transport tcp --placement <file>`.
+    pub fn spawn_placed(bin: &std::path::Path, n: usize, placement: &Placement) -> Result<Self> {
+        ensure!(n > 0, "a TCP fleet needs at least one device");
+        placement.validate(n)?;
+        let listener = bind_retrying(placement.bind_addr(), placement.accept_timeout())?;
+        Self::serve_placed(listener, n, placement, bin)
+    }
+
+    /// [`TcpTransport::spawn_placed`] minus the bind: serve a placement
+    /// fleet on a listener the caller already bound (the
+    /// `cfl serve --placement` path, where `--bind`/`--port-file` own
+    /// the socket).
+    pub fn serve_placed(
+        listener: TcpListener,
+        n: usize,
+        placement: &Placement,
+        bin: &std::path::Path,
+    ) -> Result<Self> {
+        placement.validate_slots(n)?;
+        let addr = listener.local_addr().context("reading the bound address")?.to_string();
+        let locals = placement.local_slots(n);
+        let mut children: Vec<Child> = Vec::new();
+        if !locals.is_empty() {
+            let csv = slots_csv(&locals);
+            let child = Command::new(bin)
+                .args(["device", "--connect", &addr, "--slots", &csv, "--retry", "--quiet"])
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .spawn()
+                .with_context(|| {
+                    format!("spawning {} local slots {csv}", bin.display())
+                })?;
+            children.push(child);
+        }
+        for (host, slots) in placement.remote_hosts(n) {
+            let csv = slots_csv(&slots);
+            crate::obs_event!(
+                Info,
+                "placement_waiting",
+                host = host.clone(),
+                slots = csv.clone(),
+                join = format!(
+                    "cfl device --connect {addr} --slots {csv} --retry --persist --quiet"
+                ),
+            );
+        }
+        match Self::serve(listener, n, placement.accept_timeout()) {
+            Ok(mut t) => {
+                t.children = children;
+                Ok(t)
             }
-            TcpUp::Gone => {
-                if gen != self.gens[slot] {
-                    stale_discard(slot, gen);
-                    return None; // stale death notice: the slot rejoined
-                }
-                // a death notice is one-shot (the reader thread is gone):
-                // record it at the transport level too, so the endpoint
-                // stays dead across runs until a rejoin re-claims it
-                self.links[slot] = None;
-                crate::obs::registry()
-                    .counter(&format!("transport.slot{slot}.disconnects"))
-                    .incr();
-                crate::obs_event!(Debug, "endpoint_gone", slot = slot, gen = gen);
-                Some(Event::Gone(slot))
+            Err(e) => {
+                reap(&mut children, Duration::ZERO);
+                Err(e)
             }
-            TcpUp::Rejoin(stream) => {
-                // newest wins: if the slot's old link is still open, it
-                // is a half-open socket whose death notice never landed
-                // (silent partition, kernel buffers swallowing writes) —
-                // on a trusted network a valid Hello for the slot is
-                // overwhelmingly the genuine device reconnecting, so
-                // sever the corpse and admit the newcomer. The old
-                // incarnation's eventual death notice is filtered by the
-                // generation bump below.
-                if let Some(old) = self.links.get_mut(slot).and_then(|l| l.take()) {
-                    let _ = old.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Apply every event already sitting in the upstream queue (public
+    /// ones buffer in `pending`): sends consult slot liveness, so they
+    /// must observe deaths the reactor has already reported.
+    fn drain(&mut self) {
+        while let Ok((slot, gen, up)) = self.up_rx.try_recv() {
+            let Self { gens, live, reactor, pending, .. } = self;
+            process_up(slot, gen, up, gens, live, reactor, pending);
+        }
+    }
+
+    /// Queue one message for a slot; `false` marks the endpoint dead.
+    fn push_payload(&mut self, slot: usize, payload: Arc<Vec<u8>>) -> bool {
+        if !self.live.get(slot).copied().unwrap_or(false) {
+            return false;
+        }
+        self.ctr.frames_sent.incr();
+        self.ctr.bytes_sent.add(payload.len() as u64 + 4);
+        self.reactor.send(slot, payload);
+        true
+    }
+}
+
+/// Apply one upstream queue item to the slot table, buffering any
+/// public events in `pending`. A free function over the transport's
+/// split fields so [`super::drive_queue`] can borrow the receiver and
+/// this state simultaneously.
+fn process_up(
+    slot: usize,
+    gen: u64,
+    up: TcpUp,
+    gens: &mut [u64],
+    live: &mut [bool],
+    reactor: &Reactor,
+    pending: &mut VecDeque<Event>,
+) {
+    match up {
+        // a reply from a dead incarnation must not be attributed to its
+        // replacement
+        TcpUp::Msg(msg) => {
+            if gens.get(slot).copied() != Some(gen) {
+                stale_discard(slot, gen);
+                return;
+            }
+            pending.push_back(Event::Msg(slot, msg));
+        }
+        TcpUp::Gone => {
+            if gens.get(slot).copied() != Some(gen) {
+                stale_discard(slot, gen);
+                return; // stale death notice: the slot rejoined
+            }
+            if let Some(l) = live.get_mut(slot) {
+                *l = false;
+            }
+            note_gone(slot, gen);
+            pending.push_back(Event::Gone(slot));
+        }
+        TcpUp::Rejoin(stream, slots, wrapped) => {
+            // newest wins: admission bumps each claimed slot's
+            // generation, so the corpse connection the reactor severs on
+            // register reports deaths that are already stale
+            let mut claims: Vec<(usize, u64)> = Vec::with_capacity(slots.len());
+            for &s in &slots {
+                let Some(g) = gens.get_mut(s) else { continue };
+                *g += 1;
+                if let Some(l) = live.get_mut(s) {
+                    *l = true;
                 }
-                let Ok(writer) = stream.try_clone() else { return None };
-                self.gens[slot] += 1;
-                let gen = self.gens[slot];
-                let tx = self.up_tx.clone();
-                thread::spawn(move || reader_loop(slot, gen, stream, tx));
-                self.links[slot] = Some(writer);
-                crate::obs::registry()
-                    .counter(&format!("transport.slot{slot}.rejoins"))
-                    .incr();
-                crate::obs_event!(Info, "endpoint_rejoined", slot = slot, gen = gen);
-                Some(Event::Rejoined(slot))
+                claims.push((s, *g));
+                note_rejoin(s, *g);
+                pending.push_back(Event::Rejoined(s));
+            }
+            if !claims.is_empty() {
+                reactor.register(stream, claims, wrapped);
             }
         }
     }
@@ -251,7 +355,7 @@ impl Transport for TcpTransport {
     }
 
     fn n_endpoints(&self) -> usize {
-        self.links.len()
+        self.live.len()
     }
 
     fn begin_run(&mut self, inits: Vec<DeviceInit>) -> Result<Vec<bool>> {
@@ -259,9 +363,9 @@ impl Transport for TcpTransport {
         for init in inits {
             let slot = init.device_index;
             ensure!(
-                slot < self.links.len(),
+                slot < self.live.len(),
                 "device index {slot} outside the {}-endpoint fleet",
-                self.links.len()
+                self.live.len()
             );
             // a dead endpoint is skipped, not fatal: the coordinator
             // sees `false` here and treats the slot as awaiting rejoin
@@ -271,60 +375,47 @@ impl Transport for TcpTransport {
     }
 
     fn send(&mut self, slot: usize, msg: &ToDevice) -> Result<bool> {
-        Ok(self.write_payload(slot, &frame::encode_to_device(msg)))
+        self.drain();
+        let payload = Arc::new(frame::encode_to_device(msg));
+        Ok(self.push_payload(slot, payload))
     }
 
     fn broadcast(&mut self, slots: &[usize], msg: &ToDevice) -> Result<Vec<bool>> {
         // serialize once for the whole fleet — the epoch hot path sends
         // the same β to every device
-        let payload = frame::encode_to_device(msg);
-        Ok(slots.iter().map(|&slot| self.write_payload(slot, &payload)).collect())
+        self.drain();
+        let payload = Arc::new(frame::encode_to_device(msg));
+        Ok(slots.iter().map(|&slot| self.push_payload(slot, Arc::clone(&payload))).collect())
     }
 
     fn disconnect(&mut self, slot: usize) {
-        // drop the write half and shut the socket both ways: the reader
-        // thread unblocks into its death notice (same generation, so it
-        // is deduplicated or — after a rejoin — discarded), and the slot
-        // becomes immediately re-admittable
-        if let Some(s) = self.links.get_mut(slot).and_then(|l| l.take()) {
-            let _ = s.shutdown(std::net::Shutdown::Both);
+        // mark the slot dead immediately (sends stop landing) and have
+        // the reactor sever the socket: its death notice comes back at
+        // the same generation, so it is deduplicated or — after a
+        // rejoin — discarded, and the slot is immediately re-admittable
+        if let Some(l) = self.live.get_mut(slot) {
+            *l = false;
         }
+        self.reactor.disconnect(slot);
     }
 
-    // NB: this deadline-drain loop is intentionally mirrored in
-    // channel.rs::recv_timeout — a generic helper would need a
-    // split-borrow closure over half the struct; keep the two in sync.
     fn recv_timeout(&mut self, timeout: Duration) -> Event {
-        let deadline = Instant::now() + timeout;
-        loop {
-            let wait = deadline.saturating_duration_since(Instant::now());
-            match self.up_rx.recv_timeout(wait) {
-                Ok((slot, gen, up)) => {
-                    if let Some(public) = self.process(slot, gen, up) {
-                        return public;
-                    }
-                    // internal event consumed: keep draining within the
-                    // caller's original deadline (a zero remaining wait
-                    // still picks up already-queued events)
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => return Event::Timeout,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return Event::Closed,
-            }
-        }
+        let Self { up_rx, gens, live, reactor, pending, .. } = self;
+        super::drive_queue(up_rx, timeout, pending, |(slot, gen, up), pending| {
+            process_up(slot, gen, up, gens, live, reactor, pending)
+        })
     }
 
     fn end_run(&mut self) {
-        for slot in 0..self.links.len() {
+        for slot in 0..self.live.len() {
             let _ = self.send(slot, &ToDevice::Stop);
         }
-        // discard stale replies, but keep lifecycle events: a Gone
-        // drained here must still kill the link (its reader thread is
-        // gone, so the notice would never repeat), and a rejoin admitted
-        // here is simply live for the next run (its Setup arrives with
-        // the next begin_run).
-        while let Ok((slot, gen, up)) = self.up_rx.try_recv() {
-            let _ = self.process(slot, gen, up);
-        }
+        // apply lifecycle side effects (a death stays a death, a rejoin
+        // is live for the next run), but do not replay between-run
+        // events into the next run's gather — begin_run's per-slot
+        // delivery flags carry that information instead
+        self.drain();
+        self.pending.clear();
     }
 }
 
@@ -332,18 +423,38 @@ impl Drop for TcpTransport {
     fn drop(&mut self) {
         // cfl-lint: allow(atomic-ordering-audit) — lone stop flag, no data published through it
         self.stop.store(true, Ordering::Relaxed);
-        for slot in 0..self.links.len() {
+        for slot in 0..self.live.len() {
             let _ = self.send(slot, &ToDevice::Shutdown);
         }
-        for link in self.links.iter_mut() {
-            if let Some(s) = link.take() {
-                let _ = s.shutdown(std::net::Shutdown::Write);
-            }
-        }
+        // orderly reactor exit: flush the queued Shutdown frames
+        // (bounded), half-close every socket so devices see EOF after
+        // them, drain, join
+        self.reactor.stop();
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
         reap(&mut self.children, Duration::from_secs(10));
+    }
+}
+
+/// `3,1,4` — the `--slots` argument format.
+fn slots_csv(slots: &[usize]) -> String {
+    slots.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Bind, retrying `AddrInUse` for up to `patience`: successive sweep
+/// scenarios re-bind the manifest's fixed port while the previous
+/// scenario's connections sit in TIME_WAIT.
+fn bind_retrying(addr: &str, patience: Duration) -> Result<TcpListener> {
+    let deadline = Instant::now() + patience;
+    loop {
+        match TcpListener::bind(addr) {
+            Ok(l) => return Ok(l),
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse && Instant::now() < deadline => {
+                thread::sleep(Duration::from_millis(250));
+            }
+            Err(e) => return Err(anyhow::anyhow!("binding {addr}: {e}")),
+        }
     }
 }
 
@@ -367,48 +478,57 @@ fn reap(children: &mut Vec<Child>, patience: Duration) {
     children.clear();
 }
 
-/// Accept `n` devices: each must `Hello` with a distinct in-range id and
-/// a matching protocol version; each then gets a reader thread feeding
-/// the shared event queue. A re-claim of an already-filled slot follows
-/// the same *newest wins* rule as post-formation rejoins — a device that
-/// crashed right after its Hello and reconnected must not be stranded by
-/// its own corpse (formation never reads the event queue, so the old
-/// incarnation's death notice cannot land here); the per-slot generation
-/// counter keeps the corpse's queued events attributable, and is
-/// returned so the transport continues the numbering.
-#[allow(clippy::type_complexity)]
+/// Accept connections until all `n` slots are claimed: each connection
+/// must `Hello` (one slot) or `HelloMulti` (several) with distinct
+/// in-range ids and a matching protocol version. A re-claim of an
+/// already-filled slot follows the same *newest wins* rule as
+/// post-formation rejoins — a device that crashed right after its Hello
+/// and reconnected must not be stranded by its own corpse; evicting a
+/// multi-slot connection un-claims *all* its slots (they died together)
+/// and bumps each one's generation, which is returned so the transport
+/// continues the numbering.
 fn accept_fleet(
     listener: &TcpListener,
     n: usize,
     accept_timeout: Duration,
-    up_tx: &mpsc::Sender<(usize, u64, TcpUp)>,
-) -> Result<(Vec<Option<TcpStream>>, Vec<u64>)> {
+) -> Result<(Vec<Formed>, Vec<u64>)> {
     listener.set_nonblocking(true).context("making the listener pollable")?;
     let deadline = Instant::now() + accept_timeout;
-    let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-    let mut gens: Vec<u64> = vec![0; n];
+    let mut conns: Vec<Option<Formed>> = Vec::new();
+    // slot → index into `conns`
+    let mut claimed: Vec<Option<usize>> = vec![None; n];
+    let mut gens = vec![0u64; n];
     let mut connected = 0usize;
     while connected < n {
         match listener.accept() {
             Ok((stream, peer)) => match handshake(stream, n) {
-                Handshake::Candidate(slot, stream) => {
-                    if let Some(old) = links[slot].take() {
-                        crate::obs_event!(
-                            Warn,
-                            "slot_reclaimed",
-                            slot = slot,
-                            peer = peer.to_string(),
-                        );
-                        let _ = old.shutdown(std::net::Shutdown::Both);
-                        gens[slot] += 1;
-                    } else {
-                        connected += 1;
+                Handshake::Candidate { slots, wrapped, stream } => {
+                    let mut evict: Vec<usize> = slots.iter().filter_map(|&s| claimed[s]).collect();
+                    evict.sort_unstable();
+                    evict.dedup();
+                    for token in evict {
+                        let Some(old) = conns.get_mut(token).and_then(Option::take) else {
+                            continue;
+                        };
+                        let _ = old.stream.shutdown(std::net::Shutdown::Both);
+                        for s in old.slots {
+                            crate::obs_event!(
+                                Warn,
+                                "slot_reclaimed",
+                                slot = s,
+                                peer = peer.to_string(),
+                            );
+                            claimed[s] = None;
+                            gens[s] += 1;
+                            connected -= 1;
+                        }
                     }
-                    let writer = stream.try_clone().context("splitting the device socket")?;
-                    let tx = up_tx.clone();
-                    let gen = gens[slot];
-                    thread::spawn(move || reader_loop(slot, gen, stream, tx));
-                    links[slot] = Some(writer);
+                    let token = conns.len();
+                    for &s in &slots {
+                        claimed[s] = Some(token);
+                    }
+                    connected += slots.len();
+                    conns.push(Some(Formed { stream, slots, wrapped }));
                 }
                 // during formation a protocol mismatch means a real device
                 // of the wrong version: fail fast and loudly
@@ -438,14 +558,15 @@ fn accept_fleet(
             Err(e) => return Err(anyhow::anyhow!("accepting a device connection: {e}")),
         }
     }
-    Ok((links, gens))
+    Ok((conns.into_iter().flatten().collect(), gens))
 }
 
-/// The post-formation accept loop: validate each newcomer's `Hello` and
-/// ship it to the transport as a rejoin candidate. Admission (is the
-/// slot actually dead?) happens on the transport's own thread, which
-/// owns the link table — the acceptor never races it. Version mismatches
-/// can't fail the session here; they are logged and dropped.
+/// The post-formation accept loop: validate each newcomer's handshake
+/// and ship it to the transport as a rejoin candidate. Admission
+/// (generation bumps, reactor registration) happens on the transport's
+/// own thread, which owns the slot table — the acceptor never races it.
+/// Version mismatches can't fail the session here; they are logged and
+/// dropped.
 fn acceptor_loop(
     listener: TcpListener,
     n: usize,
@@ -456,9 +577,10 @@ fn acceptor_loop(
     while !stop.load(Ordering::Relaxed) {
         match listener.accept() {
             Ok((stream, peer)) => match handshake(stream, n) {
-                Handshake::Candidate(slot, stream) => {
+                Handshake::Candidate { slots, wrapped, stream } => {
                     // generation is assigned at admission; 0 here is inert
-                    if tx.send((slot, 0, TcpUp::Rejoin(stream))).is_err() {
+                    let rep = slots.first().copied().unwrap_or(0);
+                    if tx.send((rep, 0, TcpUp::Rejoin(stream, slots, wrapped))).is_err() {
                         return; // transport dropped; nobody is listening
                     }
                 }
@@ -488,18 +610,20 @@ fn acceptor_loop(
 
 /// Outcome of one connection handshake.
 enum Handshake {
-    /// A valid in-range `Hello`: the slot it claims and the configured
-    /// stream (read timeout disarmed, nodelay set).
-    Candidate(usize, TcpStream),
+    /// A valid in-range `Hello`/`HelloMulti`: the slots it claims, the
+    /// framing it committed to (`wrapped` = slot envelopes), and the
+    /// configured stream (read timeout disarmed, nodelay set).
+    Candidate { slots: Vec<usize>, wrapped: bool, stream: TcpStream },
     /// The peer speaks a different wire version.
     VersionMismatch(u32),
     /// Garbage, timeout, or an out-of-range id — drop the connection.
     Rejected(String),
 }
 
-/// Handshake one fresh connection: read `Hello` within [`HELLO_TIMEOUT`]
-/// and validate it. Shared by initial fleet formation and the
-/// post-formation acceptor (which differ only in how they react).
+/// Handshake one fresh connection: read `Hello` or `HelloMulti` within
+/// [`HELLO_TIMEOUT`] and validate it. Shared by initial fleet formation
+/// and the post-formation acceptor (which differ only in how they
+/// react).
 fn handshake(mut stream: TcpStream, n: usize) -> Handshake {
     let reject = Handshake::Rejected;
     let configured = stream.set_nonblocking(false).is_ok()
@@ -517,46 +641,43 @@ fn handshake(mut stream: TcpStream, n: usize) -> Handshake {
         Ok(h) => h,
         Err(e) => return reject(format!("corrupt Hello frame: {e}")),
     };
-    let FromDevice::Hello { device_id, protocol } = hello else {
-        return reject(format!("expected Hello as the first message, got {hello:?}"));
+    let (slots, wrapped) = match hello {
+        FromDevice::Hello { device_id, protocol } => {
+            if protocol != frame::PROTOCOL_VERSION {
+                return Handshake::VersionMismatch(protocol);
+            }
+            (vec![device_id], false)
+        }
+        FromDevice::HelloMulti { device_ids, protocol } => {
+            if protocol != frame::PROTOCOL_VERSION {
+                return Handshake::VersionMismatch(protocol);
+            }
+            (device_ids, true)
+        }
+        other => {
+            return reject(format!("expected Hello as the first message, got {other:?}"));
+        }
     };
-    if protocol != frame::PROTOCOL_VERSION {
-        return Handshake::VersionMismatch(protocol);
+    if slots.is_empty() {
+        return reject("multi-slot Hello claiming no slots".into());
     }
-    if device_id >= n {
-        return reject(format!("device id {device_id} outside the {n}-device fleet"));
+    let mut seen = vec![false; n];
+    for &s in &slots {
+        if s >= n {
+            return reject(format!("device id {s} outside the {n}-device fleet"));
+        }
+        if seen[s] {
+            return reject(format!("duplicate slot {s} in a multi-slot Hello"));
+        }
+        seen[s] = true;
     }
     if stream.set_read_timeout(None).is_err() {
         return reject("disarming the Hello timeout".into());
     }
-    Handshake::Candidate(device_id, stream)
+    Handshake::Candidate { slots, wrapped, stream }
 }
 
-/// Per-socket reader: frames in, events out; any EOF or framing fault
-/// ends the endpoint with a `Gone` carrying this incarnation's tag.
-fn reader_loop(slot: usize, gen: u64, stream: TcpStream, tx: mpsc::Sender<(usize, u64, TcpUp)>) {
-    // upstream counters resolved once per incarnation, then lock-free
-    let reg = crate::obs::registry();
-    let frames_recv = reg.counter("transport.frames_recv");
-    let bytes_recv = reg.counter("transport.bytes_recv");
-    let mut reader = BufReader::new(stream);
-    loop {
-        match frame::read_frame(&mut reader) {
-            Ok(Some(payload)) => match frame::decode_from_device(&payload) {
-                Ok(msg) => {
-                    frames_recv.incr();
-                    bytes_recv.add(payload.len() as u64 + 4);
-                    if tx.send((slot, gen, TcpUp::Msg(msg))).is_err() {
-                        return; // transport dropped; nobody is listening
-                    }
-                }
-                Err(_) => break, // corrupt frame: treat the peer as dead
-            },
-            Ok(None) | Err(_) => break,
-        }
-    }
-    let _ = tx.send((slot, gen, TcpUp::Gone));
-}
+// --- device side -----------------------------------------------------
 
 /// A device process's end of the socket.
 struct TcpLink {
@@ -590,6 +711,28 @@ impl DeviceLink for TcpLink {
 
     fn send(&mut self, msg: FromDevice) -> Result<()> {
         frame::write_frame(&mut self.writer, &frame::encode_from_device(&msg))
+    }
+}
+
+/// One slot's end of a *multi-slot* connection: coordinator messages
+/// arrive demultiplexed through a channel (the session's reader thread
+/// peels the slot envelopes), replies go out slot-wrapped through the
+/// shared writer.
+struct MuxLink {
+    slot: usize,
+    rx: mpsc::Receiver<ToDevice>,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+impl DeviceLink for MuxLink {
+    fn recv(&mut self) -> Result<Option<ToDevice>> {
+        Ok(self.rx.recv().ok())
+    }
+
+    fn send(&mut self, msg: FromDevice) -> Result<()> {
+        let payload = frame::wrap_slot(self.slot, &frame::encode_from_device(&msg));
+        let mut w = self.writer.lock().unwrap_or_else(|p| p.into_inner());
+        frame::write_frame(&mut *w, &payload)
     }
 }
 
@@ -627,12 +770,102 @@ fn device_session(stream: TcpStream, device_id: usize) -> (Result<SessionEnd>, b
     (end, link.got_any)
 }
 
+/// One multi-slot session over one connection: `HelloMulti`, then a
+/// per-slot worker thread each running the shared state machine while
+/// this thread demultiplexes incoming slot-wrapped frames. The session
+/// ends `Shutdown` only when *every* slot was explicitly shut down.
+fn multi_device_session(stream: TcpStream, slots: &[usize]) -> (Result<SessionEnd>, bool) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => {
+            return (Err(anyhow::anyhow!("splitting the coordinator socket: {e}")), false);
+        }
+    };
+    {
+        let hello =
+            FromDevice::HelloMulti { device_ids: slots.to_vec(), protocol: frame::PROTOCOL_VERSION };
+        let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+        if let Err(e) = frame::write_frame(&mut *w, &frame::encode_from_device(&hello)) {
+            return (Err(e), false);
+        }
+    }
+    let mut workers: Vec<(usize, mpsc::Sender<ToDevice>, thread::JoinHandle<Result<SessionEnd>>)> =
+        Vec::with_capacity(slots.len());
+    for &slot in slots {
+        let (tx, rx) = mpsc::channel::<ToDevice>();
+        let writer = Arc::clone(&writer);
+        let handle = thread::spawn(move || {
+            let mut link = MuxLink { slot, rx, writer };
+            run_device_loop(&mut link)
+        });
+        workers.push((slot, tx, handle));
+    }
+    // demultiplex on this thread until the connection ends
+    let mut reader = BufReader::new(stream);
+    let mut got_any = false;
+    let fault: Option<anyhow::Error> = loop {
+        match frame::read_frame(&mut reader) {
+            Ok(Some(payload)) => {
+                got_any = true;
+                match frame::unwrap_slot(&payload) {
+                    Ok(Some((slot, inner))) => match frame::decode_to_device(inner) {
+                        Ok(msg) => {
+                            // a send error just means that worker already
+                            // exited (it saw Shutdown); keep demuxing for
+                            // the others
+                            if let Some((_, tx, _)) = workers.iter().find(|(s, _, _)| *s == slot) {
+                                let _ = tx.send(msg);
+                            }
+                        }
+                        Err(e) => break Some(e),
+                    },
+                    Ok(None) => {
+                        break Some(anyhow::anyhow!(
+                            "protocol violation: bare frame on a multi-slot connection"
+                        ));
+                    }
+                    Err(e) => break Some(e),
+                }
+            }
+            Ok(None) => break None, // clean EOF
+            Err(e) => break Some(e),
+        }
+    };
+    // dropping the senders ends each worker's recv stream; a worker that
+    // already saw Shutdown reports it, the rest report HangUp
+    let mut ends: Vec<Result<SessionEnd>> = Vec::with_capacity(workers.len());
+    for (_, tx, handle) in workers {
+        drop(tx);
+        ends.push(handle.join().unwrap_or(Ok(SessionEnd::HangUp)));
+    }
+    if let Some(e) = fault {
+        return (Err(e), got_any);
+    }
+    let mut end = SessionEnd::Shutdown;
+    for r in ends {
+        match r {
+            Ok(SessionEnd::Shutdown) => {}
+            Ok(SessionEnd::HangUp) => end = SessionEnd::HangUp,
+            Err(e) => return (Err(e), got_any),
+        }
+    }
+    (Ok(end), got_any)
+}
+
 /// The `cfl device` entry point: connect to a coordinator (retrying while
 /// it finishes starting up), claim fleet slot `device_id`, and serve
 /// [`run_device_loop`] until the session ends one way or the other.
 pub fn run_device(addr: &str, device_id: usize, connect_timeout: Duration) -> Result<()> {
     let stream = connect_stream(addr, connect_timeout)?;
     device_session(stream, device_id).0.map(|_| ())
+}
+
+/// The `cfl device --slots a,b,c` entry point: one process, one
+/// connection, several fleet slots.
+pub fn run_device_multi(addr: &str, slots: &[usize], connect_timeout: Duration) -> Result<()> {
+    ensure!(!slots.is_empty(), "--slots needs at least one slot");
+    let stream = connect_stream(addr, connect_timeout)?;
+    multi_device_session(stream, slots).0.map(|_| ())
 }
 
 /// Consecutive never-admitted connections after which a retrying device
@@ -642,30 +875,96 @@ pub fn run_device(addr: &str, device_id: usize, connect_timeout: Duration) -> Re
 /// redialing it forever would just fill both logs.
 const MAX_SILENT_REJECTIONS: u32 = 5;
 
+/// Reconnect backoff with deterministic per-slot jitter: a mass-kill
+/// restarts many devices at once, and identical backoff schedules would
+/// redial (and collide at the acceptor) in lockstep. The jitter stream
+/// is seeded off the slot id and attempt counter — fully reproducible,
+/// no wall-clock entropy — and spreads each sleep over [0.5×, 1.5×].
+fn jittered(backoff: Duration, slot: usize, attempt: u32) -> Duration {
+    let mut rng = Rng::new(mix_seed(slot as u64, u64::from(attempt)));
+    backoff.mul_f64(rng.uniform(0.5, 1.5))
+}
+
 /// The `cfl device --retry` entry point: like [`run_device`], but a
 /// session that ends in anything other than an explicit `Shutdown` — the
 /// socket broke mid-run, the coordinator dropped this connection as a
 /// duplicate while the old incarnation's death was still propagating —
-/// reconnects with exponential backoff and re-claims the slot. Exits
-/// `Ok` on `Shutdown`; errors when the coordinator stays unreachable for
-/// a whole `connect_timeout` window, or after
-/// [`MAX_SILENT_REJECTIONS`] consecutive connections the coordinator
-/// dropped without ever speaking to us (a deterministic rejection, not a
-/// transient rejoin race).
+/// reconnects with jittered exponential backoff (see [`jittered`]) and
+/// re-claims the slot. Exits `Ok` on `Shutdown`; errors when the
+/// coordinator stays unreachable for a whole `connect_timeout` window,
+/// or after [`MAX_SILENT_REJECTIONS`] consecutive connections the
+/// coordinator dropped without ever speaking to us (a deterministic
+/// rejection, not a transient rejoin race).
 pub fn run_device_retry(
     addr: &str,
     device_id: usize,
     connect_timeout: Duration,
     quiet: bool,
 ) -> Result<()> {
+    run_device_multi_retry(addr, RetrySlots::Single(device_id), connect_timeout, quiet, false)
+}
+
+/// Which handshake a retrying device speaks each time it reconnects.
+pub enum RetrySlots {
+    /// Plain `Hello{id}` — bare frames.
+    Single(usize),
+    /// `HelloMulti` — slot-enveloped frames, even for one slot.
+    Multi(Vec<usize>),
+}
+
+impl RetrySlots {
+    /// The jitter/backoff identity: the first (or only) slot.
+    fn rep(&self) -> usize {
+        match self {
+            RetrySlots::Single(id) => *id,
+            RetrySlots::Multi(slots) => slots.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+/// The retry/persist loop shared by `cfl device --retry` (single slot)
+/// and `cfl device --slots a,b,c --retry [--persist]`. With `persist`,
+/// an explicit `Shutdown` does not end the process either: the device
+/// redials and waits for the *next* session (successive sweep scenarios
+/// re-bind the same placement port), and only exits — cleanly — once
+/// the coordinator stays unreachable for a whole `connect_timeout`
+/// window after at least one completed session.
+pub fn run_device_multi_retry(
+    addr: &str,
+    slots: RetrySlots,
+    connect_timeout: Duration,
+    quiet: bool,
+    persist: bool,
+) -> Result<()> {
+    if let RetrySlots::Multi(s) = &slots {
+        ensure!(!s.is_empty(), "--slots needs at least one slot");
+    }
+    let rep = slots.rep();
     let mut backoff = Duration::from_millis(50);
+    let mut attempt = 0u32;
     let mut silent_rejections = 0u32;
+    let mut had_session = false;
     loop {
-        let stream = connect_stream(addr, connect_timeout)?;
-        let (end, admitted) = device_session(stream, device_id);
+        let stream = match connect_stream(addr, connect_timeout) {
+            Ok(s) => s,
+            Err(e) => {
+                // a persisting device that already served a session and
+                // now finds the coordinator gone for a whole connect
+                // window is done, not broken
+                if persist && had_session {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+        };
+        let (end, admitted) = match &slots {
+            RetrySlots::Single(id) => device_session(stream, *id),
+            RetrySlots::Multi(s) => multi_device_session(stream, s),
+        };
         if admitted {
             // a real session happened: this is churn, not rejection —
             // start the next episode from a fresh, fast backoff
+            had_session = true;
             silent_rejections = 0;
             backoff = Duration::from_millis(50);
         } else {
@@ -673,18 +972,28 @@ pub fn run_device_retry(
             ensure!(
                 silent_rejections < MAX_SILENT_REJECTIONS,
                 "coordinator at {addr} dropped {silent_rejections} consecutive connections \
-                 for device {device_id} without speaking (wrong --id, protocol mismatch, \
+                 for device {rep} without speaking (wrong --id/--slots, protocol mismatch, \
                  or the slot is claimed); giving up"
             );
         }
         match end {
-            Ok(SessionEnd::Shutdown) => return Ok(()),
+            Ok(SessionEnd::Shutdown) if !persist => return Ok(()),
+            Ok(SessionEnd::Shutdown) => {
+                if !quiet {
+                    crate::obs_event!(
+                        Info,
+                        "device_persisting",
+                        device = rep,
+                        reason = "session shut down; awaiting the next one",
+                    );
+                }
+            }
             Ok(SessionEnd::HangUp) => {
                 if !quiet {
                     crate::obs_event!(
                         Info,
                         "device_rejoining",
-                        device = device_id,
+                        device = rep,
                         reason = "link closed without Shutdown",
                     );
                 }
@@ -694,13 +1003,14 @@ pub fn run_device_retry(
                     crate::obs_event!(
                         Info,
                         "device_rejoining",
-                        device = device_id,
+                        device = rep,
                         reason = format!("session error: {e}"),
                     );
                 }
             }
         }
-        thread::sleep(backoff);
+        attempt = attempt.wrapping_add(1);
+        thread::sleep(jittered(backoff, rep, attempt));
         backoff = (backoff * 2).min(Duration::from_secs(1));
     }
 }

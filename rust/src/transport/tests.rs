@@ -452,12 +452,16 @@ fn arb_to_device(g: &mut prop::Gen) -> ToDevice {
 }
 
 fn arb_from_device(g: &mut prop::Gen) -> FromDevice {
-    match g.int_in(0, 2) {
+    match g.int_in(0, 3) {
         0 => FromDevice::Hello {
             device_id: g.size_in(0, 1 << 20),
             protocol: g.int_in(0, u32::MAX as i64) as u32,
         },
         1 => FromDevice::Pong { nonce: g.int_in(0, i64::MAX - 1) as u64 },
+        2 => FromDevice::HelloMulti {
+            device_ids: (0..g.size_in(0, 6)).map(|_| g.size_in(0, 1 << 20)).collect(),
+            protocol: g.int_in(0, u32::MAX as i64) as u32,
+        },
         _ => FromDevice::Grad {
             run: g.int_in(0, 1 << 40) as u64,
             epoch: g.size_in(0, 100_000),
@@ -563,4 +567,373 @@ fn prop_frame_streams_round_trip() {
         }
         assert_that(count == n, "clean EOF must come after the last frame")
     });
+}
+
+// ---------------------------------------------------------------------
+// resumable frame decoder: the reactor's read-side state machine. The
+// stream tests above cover whole-frame reads; these fuzz the *chunking*
+// — a readiness loop receives frames in whatever pieces the kernel
+// hands it, so reassembly must be byte-for-byte insensitive to splits.
+
+use super::frame::FrameDecoder;
+
+#[test]
+fn decoder_reassembles_byte_at_a_time() {
+    let msgs = [
+        encode_to_device(&ToDevice::Ping { nonce: 7 }),
+        encode_to_device(&ToDevice::Model { epoch: 3, beta: Mat::zeros(4, 2) }),
+        encode_to_device(&ToDevice::Stop),
+    ];
+    let mut wire = Vec::new();
+    for m in &msgs {
+        write_frame(&mut wire, m).unwrap();
+    }
+    let mut dec = FrameDecoder::new();
+    let mut out = Vec::new();
+    for &b in &wire {
+        out.extend(dec.push(&[b]).unwrap());
+    }
+    assert!(dec.is_idle(), "decoder must be idle after the last complete frame");
+    assert_eq!(out, msgs);
+}
+
+#[test]
+fn decoder_reassembles_across_every_split_offset() {
+    let msgs = [
+        encode_from_device(&FromDevice::Pong { nonce: 1 }),
+        encode_from_device(&FromDevice::Grad {
+            run: 2,
+            epoch: 9,
+            grad: Mat::from_vec(2, 1, vec![0.5, -0.5]),
+            delay: 1.5,
+        }),
+    ];
+    let mut wire = Vec::new();
+    for m in &msgs {
+        write_frame(&mut wire, m).unwrap();
+    }
+    for cut in 0..=wire.len() {
+        let mut dec = FrameDecoder::new();
+        let mut out = dec.push(&wire[..cut]).unwrap();
+        out.extend(dec.push(&wire[cut..]).unwrap());
+        assert_eq!(out, msgs, "split at byte {cut}");
+        assert!(dec.is_idle());
+    }
+}
+
+#[test]
+fn decoder_tracks_mid_frame_state() {
+    let payload = encode_to_device(&ToDevice::Ping { nonce: 1 });
+    let mut wire = Vec::new();
+    write_frame(&mut wire, &payload).unwrap();
+    let mut dec = FrameDecoder::new();
+    assert!(dec.is_idle());
+    assert!(!dec.mid_payload());
+    // two bytes of length prefix: busy but not yet inside the payload
+    assert!(dec.push(&wire[..2]).unwrap().is_empty());
+    assert!(!dec.is_idle());
+    assert!(!dec.mid_payload());
+    // prefix complete plus a couple of payload bytes: mid-payload
+    assert!(dec.push(&wire[2..6]).unwrap().is_empty());
+    assert!(dec.mid_payload());
+    let out = dec.push(&wire[6..]).unwrap();
+    assert_eq!(out, vec![payload]);
+    assert!(dec.is_idle());
+}
+
+#[test]
+fn decoder_rejects_an_oversized_prefix_mid_stream() {
+    let mut dec = FrameDecoder::new();
+    let mut wire = Vec::new();
+    write_frame(&mut wire, &encode_to_device(&ToDevice::Stop)).unwrap();
+    wire.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+    // the poisoned prefix behind the valid frame fails the whole push:
+    // callers treat it as the peer dying, so nothing else matters
+    let err = dec.push(&wire).unwrap_err().to_string();
+    assert!(err.contains("oversized"), "{err}");
+}
+
+#[test]
+fn prop_decoder_is_chunking_insensitive() {
+    prop::check("frame decoder chunking-insensitive", prop::cfg_cases(32), |g| {
+        let n = g.size_in(0, 4);
+        let msgs: Vec<ToDevice> = (0..n).map(|_| arb_to_device(g)).collect();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_frame(&mut wire, &encode_to_device(m)).map_err(|e| e.to_string())?;
+        }
+        let mut dec = FrameDecoder::new();
+        let mut out: Vec<Vec<u8>> = Vec::new();
+        let mut off = 0usize;
+        while off < wire.len() {
+            let take = g.size_in(1, (wire.len() - off).min(64));
+            out.extend(dec.push(&wire[off..off + take]).map_err(|e| e.to_string())?);
+            off += take;
+        }
+        assert_that(dec.is_idle(), "decoder not idle after a whole stream")?;
+        assert_that(out.len() == n, format!("{} frames out of {n}", out.len()))?;
+        for (i, (payload, msg)) in out.iter().zip(&msgs).enumerate() {
+            let decoded = decode_to_device(payload).map_err(|e| e.to_string())?;
+            assert_that(decoded == *msg, format!("chunked frame {i} mismatch"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wrap_envelope_roundtrips_and_rejects_truncation() {
+    use super::frame::{unwrap_slot, wrap_slot};
+    let inner = encode_from_device(&FromDevice::Pong { nonce: 5 });
+    let wrapped = wrap_slot(3, &inner);
+    match unwrap_slot(&wrapped).unwrap() {
+        Some((slot, body)) => {
+            assert_eq!(slot, 3);
+            assert_eq!(body, &inner[..]);
+        }
+        None => panic!("a wrapped frame must unwrap"),
+    }
+    // a bare (unwrapped) frame passes through as None
+    assert!(unwrap_slot(&inner).unwrap().is_none());
+    // a wrap tag with a chopped slot header is an error
+    let err = unwrap_slot(&wrapped[..3]).unwrap_err().to_string();
+    assert!(err.contains("truncated wrap"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// reactor endpoint state machine (pure: no sockets involved)
+
+use super::reactor::EndpointState;
+
+#[test]
+fn endpoint_write_overflow_is_backpressure_not_queueing() {
+    let mut ep = EndpointState::with_write_cap(64);
+    assert!(ep.enqueue(vec![0u8; 40]));
+    assert_eq!(ep.queued_bytes(), 40);
+    // the second frame would blow the cap: refused, NOT queued
+    assert!(!ep.enqueue(vec![0u8; 40]));
+    assert_eq!(ep.queued_bytes(), 40);
+    // small frames still fit under the cap
+    assert!(ep.enqueue(vec![0u8; 24]));
+    assert_eq!(ep.queued_bytes(), 64);
+}
+
+#[test]
+fn endpoint_advance_accounts_partial_writes() {
+    let mut ep = EndpointState::new();
+    assert!(!ep.wants_write());
+    assert!(ep.next_chunk().is_none());
+    assert!(ep.enqueue(vec![1u8; 10]));
+    assert!(ep.enqueue(vec![2u8; 6]));
+    assert_eq!(ep.queued_bytes(), 16);
+    // partial write of the front frame
+    ep.advance(4);
+    assert_eq!(ep.next_chunk().map(<[u8]>::len), Some(6));
+    assert_eq!(ep.queued_bytes(), 12);
+    // finishing the front frame pops it; the next one is whole
+    ep.advance(6);
+    assert_eq!(ep.next_chunk().map(<[u8]>::len), Some(6));
+    assert_eq!(ep.queued_bytes(), 6);
+    ep.advance(6);
+    assert!(!ep.wants_write());
+    assert_eq!(ep.queued_bytes(), 0);
+}
+
+#[test]
+fn endpoint_read_side_flags_mid_frame() {
+    let mut ep = EndpointState::new();
+    let mut wire = Vec::new();
+    write_frame(&mut wire, &encode_to_device(&ToDevice::Ping { nonce: 3 })).unwrap();
+    assert!(!ep.mid_frame());
+    assert!(ep.ingest(&wire[..5]).unwrap().is_empty());
+    assert!(ep.mid_frame(), "an EOF here would be a truncation");
+    let frames = ep.ingest(&wire[5..]).unwrap();
+    assert_eq!(frames.len(), 1);
+    assert!(!ep.mid_frame());
+}
+
+// ---------------------------------------------------------------------
+// multi-slot connections and thread census
+
+#[test]
+fn tcp_multi_slot_device_serves_several_slots() {
+    let Some(listener) = loopback() else { return };
+    let addr = listener.local_addr().unwrap().to_string();
+    let dev = std::thread::spawn(move || {
+        run_device_multi(&addr, &[0, 1, 2], Duration::from_secs(5))
+    });
+    let mut t = TcpTransport::serve(listener, 3, Duration::from_secs(5)).unwrap();
+    t.begin_run(vec![init(0), init(1), init(2)]).unwrap();
+    // each slot answers on its own envelope, through one connection
+    for slot in 0..3 {
+        assert!(t.send(slot, &ToDevice::Ping { nonce: 40 + slot as u64 }).unwrap());
+        loop {
+            match t.recv_timeout(Duration::from_secs(5)) {
+                Event::Msg(s, FromDevice::Pong { nonce }) => {
+                    assert_eq!((s, nonce), (slot, 40 + slot as u64));
+                    break;
+                }
+                Event::Msg(_, _) => continue,
+                other => panic!("expected pong from slot {slot}, got {other:?}"),
+            }
+        }
+    }
+    let FromDevice::Grad { run, epoch, .. } = one_cycle(&mut t, 1, 4) else { unreachable!() };
+    assert_eq!((run, epoch), (7, 4));
+    drop(t); // Shutdown reaches every slot; the one process exits clean
+    dev.join().unwrap().unwrap();
+}
+
+#[test]
+fn tcp_half_open_write_close_surfaces_as_gone() {
+    let Some(listener) = loopback() else { return };
+    let addr = listener.local_addr().unwrap().to_string();
+    let sock = TcpStream::connect(&addr).unwrap();
+    let mut w = sock.try_clone().unwrap();
+    let hello = encode_from_device(&FromDevice::Hello { device_id: 0, protocol: PROTOCOL_VERSION });
+    write_frame(&mut w, &hello).unwrap();
+    let mut t = TcpTransport::serve(listener, 1, Duration::from_secs(5)).unwrap();
+    // half-close: our write side sends FIN but the socket stays open for
+    // reads — the coordinator must treat the EOF as a death, not hang
+    sock.shutdown(std::net::Shutdown::Write).unwrap();
+    match t.recv_timeout(Duration::from_secs(5)) {
+        Event::Gone(0) => {}
+        other => panic!("expected Gone(0) on half-open close, got {other:?}"),
+    }
+}
+
+#[test]
+fn tcp_rejoin_supersedes_a_connection_stuck_mid_frame() {
+    let Some(listener) = loopback() else { return };
+    let addr = listener.local_addr().unwrap().to_string();
+    // incarnation A: Hello, then a *partial* frame (a length prefix
+    // promising 100 bytes, with only a few delivered) — then it stalls,
+    // socket open: the worst kind of corpse
+    let mut a = TcpStream::connect(&addr).unwrap();
+    let hello = encode_from_device(&FromDevice::Hello { device_id: 0, protocol: PROTOCOL_VERSION });
+    write_frame(&mut a, &hello).unwrap();
+    let mut t = TcpTransport::serve(listener, 1, Duration::from_secs(5)).unwrap();
+    use std::io::Write as _;
+    a.write_all(&100u32.to_le_bytes()).unwrap();
+    a.write_all(&[65u8; 7]).unwrap(); // tag + 6 of 100 promised bytes
+    // incarnation B: a genuine device re-claims the slot; newest wins,
+    // A is severed mid-reassembly and its buffered bytes discarded
+    let addr2 = addr.clone();
+    let dev = std::thread::spawn(move || run_device(&addr2, 0, Duration::from_secs(5)));
+    match t.recv_timeout(Duration::from_secs(5)) {
+        Event::Rejoined(0) => {}
+        other => panic!("expected Rejoined(0), got {other:?}"),
+    }
+    assert_eq!(t.begin_run(vec![init(0)]).unwrap(), vec![true]);
+    let FromDevice::Grad { run, epoch, .. } = one_cycle(&mut t, 0, 6) else { unreachable!() };
+    assert_eq!((run, epoch), (7, 6));
+    drop(a);
+    drop(t);
+    dev.join().unwrap().unwrap();
+}
+
+/// Thread count of this process, per /proc (the reactor's O(1)-threads
+/// contract is only cheaply observable on Linux).
+#[cfg(target_os = "linux")]
+fn process_threads() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap_or_default();
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn tcp_coordinator_io_threads_are_constant_in_fleet_size() {
+    // forms an n-device fleet (devices run on n in-process threads) and
+    // reports the process thread count at steady state
+    fn fleet_threads(n: usize) -> Option<usize> {
+        let listener = loopback()?;
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut devices = Vec::new();
+        for id in 0..n {
+            let addr = addr.clone();
+            devices.push(std::thread::spawn(move || {
+                run_device(&addr, id, Duration::from_secs(5))
+            }));
+        }
+        let t = TcpTransport::serve(listener, n, Duration::from_secs(5)).unwrap();
+        let count = process_threads();
+        drop(t);
+        for h in devices {
+            h.join().unwrap().unwrap();
+        }
+        Some(count)
+    }
+    let Some(small) = fleet_threads(2) else { return };
+    let Some(big) = fleet_threads(8) else { return };
+    // 6 extra *device* threads are expected (they live in-process here);
+    // the coordinator side must add none — under the old thread-per-
+    // socket model the delta would be 12
+    let delta = big.saturating_sub(small);
+    assert!(
+        delta <= 7,
+        "coordinator I/O threads scale with the fleet: {small} threads at n=2, {big} at n=8"
+    );
+}
+
+// ---------------------------------------------------------------------
+// placement manifests
+
+#[test]
+fn placement_parses_hosts_and_defaults() {
+    let ini = crate::config::Ini::parse(
+        "[placement]\n\
+         bind = 0.0.0.0:7070\n\
+         accept_timeout_secs = 120\n\
+         device.0 = local\n\
+         device.1 = hostB\n\
+         device.2 = hostB\n",
+    )
+    .unwrap();
+    let p = Placement::from_ini(&ini).unwrap();
+    assert_eq!(p.bind_addr(), "0.0.0.0:7070");
+    assert_eq!(p.accept_timeout(), Duration::from_secs(120));
+    assert!(!p.is_remote(0));
+    assert!(p.is_remote(1));
+    assert!(!p.is_remote(3)); // unlisted slots default to local
+    assert_eq!(p.local_slots(4), vec![0, 3]);
+    let remote = p.remote_hosts(4);
+    assert_eq!(remote.len(), 1);
+    assert_eq!(remote["hostB"], [1, 2]);
+    p.validate(4).unwrap();
+}
+
+#[test]
+fn placement_defaults_are_all_local() {
+    let p = Placement::from_ini(&crate::config::Ini::parse("").unwrap()).unwrap();
+    assert_eq!(p.bind_addr(), "127.0.0.1:0");
+    assert!(p.explicit_bind().is_none());
+    assert_eq!(p.local_slots(3), vec![0, 1, 2]);
+    assert!(p.remote_hosts(3).is_empty());
+    p.validate(3).unwrap();
+}
+
+#[test]
+fn placement_rejects_bad_manifests() {
+    let parse = |text: &str| Placement::from_ini(&crate::config::Ini::parse(text).unwrap());
+    // unknown key
+    let err = parse("[placement]\ngadget.0 = x\n").unwrap_err().to_string();
+    assert!(err.contains("unknown key"), "{err}");
+    // unparsable slot number
+    assert!(parse("[placement]\ndevice.x = local\n").is_err());
+    // zero formation window
+    assert!(parse("[placement]\naccept_timeout_secs = 0\n").is_err());
+    // remote slots demand a fixed, reachable bind
+    let remote = parse("[placement]\ndevice.1 = hostB\n").unwrap();
+    let err = remote.validate(2).unwrap_err().to_string();
+    assert!(err.contains("reachable"), "{err}");
+    let ephemeral =
+        parse("[placement]\nbind = 0.0.0.0:0\ndevice.1 = hostB\n").unwrap();
+    assert!(ephemeral.validate(2).is_err());
+    // out-of-range assignment
+    let oob = parse("[placement]\ndevice.9 = hostB\n").unwrap();
+    let err = oob.validate_slots(2).unwrap_err().to_string();
+    assert!(err.contains("outside"), "{err}");
 }

@@ -1,0 +1,155 @@
+#!/usr/bin/env bash
+# Placement smoke test: the cross-host fleet path, on one machine.
+#
+# Leg 1 — `cfl sweep --live --transport tcp --placement` with an
+# all-local manifest: the sweep must form its fleet through the
+# placement machinery (one multi-slot child process) and complete.
+#
+# Leg 2 — `cfl serve --placement` with a manifest that marks two slots
+# remote. The script itself plays the remote host: one
+# `cfl device --slots 1,2 --retry` process claiming both slots over a
+# single connection. It is SIGKILLed mid-run and restarted; the serve
+# report must show the disconnects, the rejoins, full final membership,
+# and a converged model (--check-nmse makes serve exit nonzero
+# otherwise).
+#
+# Sandboxes that deny socket bind are detected with `cfl serve --probe`
+# and skipped with a notice — the test needs real sockets or nothing.
+#
+# Env: CFL_BIN overrides the binary (default: target/{release,debug}/cfl).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${CFL_BIN:-}
+if [[ -z "$BIN" ]]; then
+    for candidate in target/release/cfl target/debug/cfl; do
+        if [[ -x "$candidate" ]]; then
+            BIN=$candidate
+            break
+        fi
+    done
+fi
+if [[ -z "${BIN:-}" || ! -x "$BIN" ]]; then
+    echo "placement_smoke: cfl binary not built (run cargo build first)" >&2
+    exit 1
+fi
+
+if ! "$BIN" serve --probe --bind 127.0.0.1:0 >/dev/null 2>&1; then
+    echo "placement_smoke: sandbox denies loopback bind; skipping the placement smoke test"
+    exit 0
+fi
+
+tmp=$(mktemp -d)
+device_pids=()
+cleanup() {
+    for pid in "${device_pids[@]:-}"; do
+        kill "$pid" 2>/dev/null || true
+    done
+    rm -rf "$tmp"
+}
+trap cleanup EXIT
+
+# ---------------------------------------------------------------- leg 1
+# an all-local manifest: every slot on this machine, formed through the
+# placement path (one multi-slot child) rather than one child per slot
+cat >"$tmp/local.ini" <<'EOF'
+[placement]
+device.0 = local
+device.1 = local
+EOF
+
+if ! "$BIN" sweep --live --transport tcp --placement "$tmp/local.ini" \
+    --devices 4 --epochs 25 --time-scale 1e-4 --axis nu=0 \
+    --skip-uncoded --out "$tmp/sweepout" --quiet >"$tmp/sweep.log" 2>&1; then
+    echo "placement_smoke: placed sweep failed" >&2
+    cat "$tmp/sweep.log" >&2
+    exit 1
+fi
+echo "placement_smoke: all-local placed sweep completed"
+
+# ---------------------------------------------------------------- leg 2
+# a mixed manifest: slot 0 local, slots 1+2 on "hostB" — played by this
+# script as one multi-slot device process
+cat >"$tmp/mixed.ini" <<'EOF'
+[placement]
+device.1 = hostB
+device.2 = hostB
+EOF
+
+# target-nmse 0 disables early stop so the run reliably spans the kill +
+# restart below; time-scale 0.2 paces epochs with real slept delay so
+# "mid-run" is wall-clock reachable (see rejoin_smoke.sh)
+port_file="$tmp/addr"
+"$BIN" serve --bind 127.0.0.1:0 --port-file "$port_file" --devices 3 \
+    --placement "$tmp/mixed.ini" \
+    --epochs 2000 --seed 11 --time-scale 0.2 --target-nmse 0 \
+    --skip-uncoded --check-nmse 0.05 --quiet >"$tmp/serve.log" 2>&1 &
+serve_pid=$!
+
+for _ in $(seq 100); do
+    [[ -s "$port_file" ]] && break
+    sleep 0.1
+done
+if [[ ! -s "$port_file" ]]; then
+    echo "placement_smoke: serve never published its address" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+addr=$(tr -d '[:space:]' <"$port_file")
+
+# "hostB": both of its slots over one connection
+"$BIN" device --connect "$addr" --slots 1,2 --retry --quiet &
+victim_pid=$!
+device_pids+=($victim_pid)
+
+# let training get underway, then SIGKILL the whole remote host
+sleep 2
+if ! kill -0 "$serve_pid" 2>/dev/null; then
+    echo "placement_smoke: serve exited before the kill — run too short for the smoke" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+kill -9 "$victim_pid"
+echo "placement_smoke: SIGKILLed the 2-slot host process (pid $victim_pid) mid-run"
+sleep 0.5
+
+# restart it: --retry re-claims both slots over a fresh connection
+"$BIN" device --connect "$addr" --slots 1,2 --retry --quiet &
+device_pids+=($!)
+echo "placement_smoke: restarted the 2-slot host with --retry"
+
+if ! wait "$serve_pid"; then
+    echo "placement_smoke: serve failed (final NMSE gate or transport fault)" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+
+report=$(grep "live cfl" "$tmp/serve.log" || true)
+if [[ -z "$report" ]]; then
+    echo "placement_smoke: no coded run report in the serve log" >&2
+    cat "$tmp/serve.log" >&2
+    exit 1
+fi
+echo "placement_smoke: $report"
+
+# killing the host loses two slots at once; both must come back and the
+# final gather set must be whole — coded coverage, not parity-only
+if ! grep -Eq "disconnects=[2-9]" <<<"$report"; then
+    echo "placement_smoke: the SIGKILL was not observed as two slot disconnects" >&2
+    exit 1
+fi
+if ! grep -Eq "rejoins=[2-9]" <<<"$report"; then
+    echo "placement_smoke: the restarted host never rejoined both slots" >&2
+    exit 1
+fi
+if ! grep -q "members=3/3" <<<"$report"; then
+    echo "placement_smoke: full coded coverage was not restored" >&2
+    exit 1
+fi
+
+# surviving processes exit on the coordinator's Shutdown
+for pid in "${device_pids[@]}"; do
+    wait "$pid" 2>/dev/null || true
+done
+device_pids=()
+echo "placement_smoke ok: a 2-slot host was killed, rejoined, and the fleet finished coded"
